@@ -1,0 +1,38 @@
+//! Sweep: compress every zoo model at every bit setting, print the memory /
+//! PPL landscape (a condensed Table-2/4 view).
+//!
+//! ```bash
+//! cargo run --release --example compress_zoo
+//! ```
+
+use eac_moe::coordinator::{load_or_init_model, ExperimentContext};
+use eac_moe::model::ZooModel;
+use eac_moe::report::exp_common::{compress, BitSetting, QuantMethod};
+use eac_moe::report::Table;
+
+fn main() -> eac_moe::Result<()> {
+    let ctx = ExperimentContext::new(13, 0.25);
+    let mut table = Table::new(
+        "compression landscape (QESC)",
+        &["model", "bits", "MB", "ratio", "PPL fp", "PPL q", "avg expert bits"],
+    );
+    for zoo in ZooModel::ALL {
+        let (fp, _) = load_or_init_model(zoo);
+        let ppl_fp = eac_moe::eval::perplexity(&fp, &ctx.ppl_eval);
+        for bits in BitSetting::ALL {
+            let (q, report) = compress(&fp, zoo, QuantMethod::Qesc, bits, &ctx);
+            let ppl_q = eac_moe::eval::perplexity(&q, &ctx.ppl_eval);
+            table.row(vec![
+                zoo.key().into(),
+                bits.label().into(),
+                format!("{:.2}", report.compressed_bytes as f64 / 1e6),
+                format!("{:.2}x", report.compression_ratio()),
+                format!("{ppl_fp:.2}"),
+                format!("{ppl_q:.2}"),
+                format!("{:.2}", report.avg_expert_bits),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! END-TO-END DRIVER (DESIGN.md §5): the full system on a real workload.
+//!
+//! Loads the pretrained deepseek-mini, then runs every layer of the stack:
+//!   1. baseline eval (PPL + zero-shot + serving latency),
+//!   2. QESC compression (GPTQ 3-bit experts + router calibration),
+//!   3. PESF(0.3) serving of batched requests through the engine,
+//!   4. PJRT runtime check: executes the AOT expert-FFN artifact and
+//!      cross-validates it against the native path (when artifacts exist),
+//! and prints paper-style before/after rows. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use eac_moe::calib::qesc::{qesc_compress, QescConfig};
+use eac_moe::coordinator::{load_or_init_model, ExperimentContext};
+use eac_moe::data::tasks::zero_shot_suite;
+use eac_moe::model::hooks::Hooks;
+use eac_moe::model::{Model, ZooModel};
+use eac_moe::prune::pesf::PesfConfig;
+use eac_moe::report::Table;
+use eac_moe::runtime::{ArtifactManifest, RuntimeClient};
+use eac_moe::serve::{Engine, EngineConfig, PrunePolicy, Request};
+use eac_moe::tensor::Mat;
+
+fn serve_latency(model: Model, prune: PrunePolicy, n: usize, len: usize) -> f64 {
+    let engine = Engine::new(model, EngineConfig { workers: 1, prune, ..Default::default() });
+    let mut mix = eac_moe::data::corpus::WikiMixture::new(77);
+    let reqs: Vec<Request> =
+        (0..n as u64).map(|i| Request::new(i, mix.sequence(len))).collect();
+    let (_, m) = engine.serve(reqs);
+    m.prefill.mean_ms()
+}
+
+fn main() -> eac_moe::Result<()> {
+    let scale: f64 = std::env::var("E2E_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let zoo = ZooModel::DeepseekMini;
+    let (fp, pretrained) = load_or_init_model(zoo);
+    println!(
+        "== EAC-MoE end-to-end on {} ({}) ==",
+        zoo.display(),
+        if pretrained { "pretrained" } else { "RANDOM INIT — run `make artifacts` first" }
+    );
+    let ctx = ExperimentContext::new(3, scale);
+    let suite = zero_shot_suite((16.0 * scale) as usize + 4, 3);
+
+    // ---- 1. Baseline.
+    let t = std::time::Instant::now();
+    let ppl_fp = eac_moe::eval::perplexity(&fp, &ctx.ppl_eval);
+    let acc_fp = eac_moe::eval::eval_suite(&fp, &suite, Hooks::none);
+    let lat_fp = serve_latency(Model::new(fp.weights.clone()), PrunePolicy::None, 4, 256);
+    println!("[1] baseline measured in {:.1}s", t.elapsed().as_secs_f64());
+
+    // ---- 2. QESC compression.
+    let t = std::time::Instant::now();
+    let k = QescConfig::default_k(fp.cfg());
+    let (q, report) = qesc_compress(&fp, &ctx.calib, &QescConfig::qesc(3, k));
+    println!(
+        "[2] QESC in {:.1}s: {:.2} MB -> {:.2} MB ({:.2}x), router calib {:.1}%",
+        t.elapsed().as_secs_f64(),
+        report.fp_bytes as f64 / 1e6,
+        report.compressed_bytes as f64 / 1e6,
+        report.compression_ratio(),
+        100.0 * report.router_calib_secs
+            / (report.gptq_secs + report.router_calib_secs).max(1e-9),
+    );
+    let ppl_q = eac_moe::eval::perplexity(&q, &ctx.ppl_eval);
+    let acc_q = eac_moe::eval::eval_suite(&q, &suite, Hooks::none);
+
+    // ---- 3. PESF serving.
+    let alpha = 0.3f32;
+    let acc_qp = eac_moe::eval::eval_suite(&q, &suite, || Hooks {
+        pesf_alpha: Some(alpha),
+        ..Default::default()
+    });
+    let ppl_qp = eac_moe::eval::ppl::perplexity_with_hooks(&q, &ctx.ppl_eval, || Hooks {
+        pesf_alpha: Some(alpha),
+        ..Default::default()
+    });
+    let lat_qp = serve_latency(
+        Model::new(q.weights.clone()),
+        PrunePolicy::Pesf(PesfConfig { alpha }),
+        4,
+        256,
+    );
+    println!("[3] PESF(α={alpha}) served");
+
+    // ---- 4. PJRT runtime round-trip (artifacts permitting).
+    let root = ArtifactManifest::default_root();
+    if ArtifactManifest::present(&root) {
+        let client = RuntimeClient::new(ArtifactManifest::load(&root)?)?;
+        let kind = format!("{}/expert_ffn", zoo.key());
+        let exe = client.executable_for(&kind, 16)?;
+        let bucket = exe.spec.bucket_m;
+        let d = fp.cfg().d_model;
+        let mut rng = eac_moe::tensor::Pcg64::seeded(9);
+        let x = Mat::randn(bucket, d, 1.0, &mut rng);
+        let e0 = &q.weights.layers[0].experts[0];
+        let out = exe.run(&[&x, &e0.w1, &e0.w2, &e0.w3])?[0].clone();
+        let native = eac_moe::model::expert_forward(&x, e0);
+        let max_err = out
+            .data
+            .iter()
+            .zip(&native.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!(
+            "[4] PJRT expert_ffn (bucket {bucket}) vs native: max err {max_err:.2e} on {}",
+            client.platform()
+        );
+        assert!(max_err < 1e-3, "PJRT and native paths disagree");
+    } else {
+        println!("[4] artifacts/ absent — skipping PJRT check (run `make artifacts`)");
+    }
+
+    // ---- Summary.
+    let mut table = Table::new(
+        "EAC-MoE end-to-end summary (deepseek-mini)",
+        &["stage", "Params(MB)", "PPL", "0-shot avg", "prefill ms", "speedup"],
+    );
+    let fp_mb = (fp.weights.param_count() * 2) as f64 / 1e6;
+    let q_mb = report.compressed_bytes as f64 / 1e6;
+    table.row(vec![
+        "baseline (fp16)".into(),
+        format!("{fp_mb:.2}"),
+        format!("{ppl_fp:.2}"),
+        format!("{:.2}", acc_fp.mean_accuracy()),
+        format!("{lat_fp:.0}"),
+        "1.00x".into(),
+    ]);
+    table.row(vec![
+        "QESC 3-bit".into(),
+        format!("{q_mb:.2}"),
+        format!("{ppl_q:.2}"),
+        format!("{:.2}", acc_q.mean_accuracy()),
+        "-".into(),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "QESC + PESF(0.3)".into(),
+        format!("{q_mb:.2}"),
+        format!("{ppl_qp:.2}"),
+        format!("{:.2}", acc_qp.mean_accuracy()),
+        format!("{lat_qp:.0}"),
+        format!("{:.2}x", lat_fp / lat_qp),
+    ]);
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig-2-style expert-selection study: task-typed routing preferences.
+//!
+//! Records expert-selection frequencies for a pretrained model over the 19
+//! synthetic datasets, prints the intra/inter-family similarity summary and
+//! the most/least used experts per task family (the Appendix A.11 view).
+//!
+//! ```bash
+//! cargo run --release --example es_analysis [-- <model-key>]
+//! ```
+
+use eac_moe::coordinator::load_or_init_model;
+use eac_moe::data::corpus::{TaskFamily, DATASETS};
+use eac_moe::eval::es_analysis::{
+    es_frequencies, es_similarity_matrix, intra_inter_summary, EsProfile,
+};
+use eac_moe::model::ZooModel;
+use eac_moe::report::Table;
+
+fn main() -> eac_moe::Result<()> {
+    let key = std::env::args().nth(1).unwrap_or_else(|| "phi-mini".into());
+    let zoo = ZooModel::from_key(&key).expect("unknown model key");
+    let (model, pretrained) = load_or_init_model(zoo);
+    if !pretrained {
+        eprintln!("warning: random-init weights — run `make artifacts` for real structure");
+    }
+    let profiles: Vec<EsProfile> =
+        DATASETS.iter().map(|d| es_frequencies(&model, d, 4, 96, 19)).collect();
+    let sim = es_similarity_matrix(&profiles);
+    let (intra, inter) = intra_inter_summary(&profiles, &sim);
+    println!(
+        "{}: intra-family mean cosine {intra:.3}, inter-family {inter:.3}\n",
+        zoo.display()
+    );
+
+    // Per-family favorite experts (layer 1).
+    let mut table = Table::new(
+        "layer-1 expert preferences by task family",
+        &["family", "top expert (freq)", "least expert (freq)", "balanced"],
+    );
+    for fam in TaskFamily::ALL {
+        // Average the family's dataset profiles.
+        let members: Vec<&EsProfile> =
+            profiles.iter().filter(|p| p.family == fam.name()).collect();
+        let n = model.cfg().n_experts;
+        let mut avg = vec![0f32; n];
+        for p in &members {
+            for (a, &v) in avg.iter_mut().zip(&p.per_layer[1]) {
+                *a += v / members.len() as f32;
+            }
+        }
+        let top = eac_moe::tensor::ops::topk_indices(&avg, 1)[0];
+        let neg: Vec<f32> = avg.iter().map(|&v| -v).collect();
+        let least = eac_moe::tensor::ops::topk_indices(&neg, 1)[0];
+        table.row(vec![
+            fam.name().into(),
+            format!("E{top} ({:.1}%)", avg[top] * 100.0),
+            format!("E{least} ({:.2}%)", avg[least] * 100.0),
+            format!("{:.2}%", 100.0 / n as f32),
+        ]);
+    }
+    table.print();
+
+    // The headline similarity pairs.
+    let idx = |name: &str| profiles.iter().position(|p| p.dataset == name).unwrap();
+    for (a, b) in [
+        ("gsm8k", "mathqa"),
+        ("gsm8k", "humaneval"),
+        ("piqa", "hellaswag"),
+        ("piqa", "lambada-fr"),
+    ] {
+        println!("sim({a}, {b}) = {:.3}", sim[idx(a)][idx(b)]);
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: load a model, compress it with QESC, evaluate before/after.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use eac_moe::calib::qesc::{qesc_compress, QescConfig};
+use eac_moe::coordinator::{load_or_init_model, ExperimentContext};
+use eac_moe::model::ZooModel;
+
+fn main() -> eac_moe::Result<()> {
+    // 1. Load a pretrained mini model (falls back to random init if
+    //    `make artifacts` hasn't been run).
+    let (model, pretrained) = load_or_init_model(ZooModel::MixtralMini);
+    println!(
+        "loaded {} ({} params, {})",
+        model.cfg().name,
+        model.weights.param_count(),
+        if pretrained { "pretrained" } else { "random-init" }
+    );
+
+    // 2. Calibration + eval data (the WikiText2 stand-in).
+    let ctx = ExperimentContext::new(1, 0.3);
+
+    // 3. Compress: GPTQ 3-bit experts + 4-bit MHSA + router calibration.
+    let k = QescConfig::default_k(model.cfg());
+    let (compressed, report) = qesc_compress(&model, &ctx.calib, &QescConfig::qesc(3, k));
+    println!(
+        "compressed {:.2} MB -> {:.2} MB ({:.2}x); router calib was {:.1}% of the time",
+        report.fp_bytes as f64 / 1e6,
+        report.compressed_bytes as f64 / 1e6,
+        report.compression_ratio(),
+        100.0 * report.router_calib_secs / (report.gptq_secs + report.router_calib_secs)
+    );
+
+    // 4. Evaluate.
+    let ppl_fp = eac_moe::eval::perplexity(&model, &ctx.ppl_eval);
+    let ppl_q = eac_moe::eval::perplexity(&compressed, &ctx.ppl_eval);
+    println!("perplexity: fp {ppl_fp:.2} -> compressed {ppl_q:.2}");
+
+    // 5. PESF dynamic pruning at serve time (α = 0.3, the conservative
+    //    sweet spot): just set one hook field.
+    let (logits, stats) = eac_moe::prune::pesf::pesf_prefill(
+        &compressed,
+        &ctx.ppl_eval[0],
+        eac_moe::prune::pesf::PesfConfig::conservative(),
+    );
+    println!(
+        "PESF prefill: {} tokens, {:.1}% of experts pruned, logits {}x{}",
+        ctx.ppl_eval[0].len(),
+        stats.prune_rate() * 100.0,
+        logits.rows,
+        logits.cols
+    );
+    Ok(())
+}

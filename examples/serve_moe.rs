@@ -1,0 +1,72 @@
+//! Serving-engine demo: batched requests through the PESF-aware engine
+//! with live metrics, comparing pruning policies side by side.
+//!
+//! ```bash
+//! cargo run --release --example serve_moe [-- <alpha>]
+//! ```
+
+use eac_moe::coordinator::load_or_init_model;
+use eac_moe::model::{Model, ZooModel};
+use eac_moe::prune::ees::{calibrate_ees_threshold, EesPruner};
+use eac_moe::prune::odp::OdpPruner;
+use eac_moe::prune::pesf::PesfConfig;
+use eac_moe::report::Table;
+use eac_moe::serve::{BatchPolicy, Engine, EngineConfig, PrunePolicy, Request};
+
+fn main() -> eac_moe::Result<()> {
+    let alpha: f32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let zoo = ZooModel::QwenMini;
+    let (model, _) = load_or_init_model(zoo);
+    println!("serving {} with policies: none / EES / ODP / PESF(α={alpha})", zoo.display());
+
+    // Calibrate the token-level pruners on a small stream.
+    let mut mix = eac_moe::data::corpus::WikiMixture::new(8);
+    let calib = mix.sequences(4, 96);
+    let ees = EesPruner { threshold: calibrate_ees_threshold(&model, &calib) };
+    let odp = OdpPruner::calibrate(&model, &calib, 0.8);
+
+    let policies: Vec<(&str, PrunePolicy)> = vec![
+        ("none", PrunePolicy::None),
+        ("EES", PrunePolicy::Ees(ees)),
+        ("ODP", PrunePolicy::Odp(odp)),
+        ("PESF", PrunePolicy::Pesf(PesfConfig { alpha })),
+    ];
+    let mut table = Table::new(
+        "serving metrics (16 requests x 192 tokens, batch<=4, 1 worker)",
+        &["policy", "thpt tok/s", "prefill p50 ms", "p95 ms", "prune rate"],
+    );
+    let mut base_thpt = 0.0;
+    for (name, policy) in policies {
+        let engine = Engine::new(
+            Model::new(model.weights.clone()),
+            EngineConfig {
+                batch: BatchPolicy::default(),
+                workers: 1,
+                prune: policy,
+            },
+        );
+        let mut mix = eac_moe::data::corpus::WikiMixture::new(9);
+        let reqs: Vec<Request> =
+            (0..16u64).map(|i| Request::new(i, mix.sequence(192))).collect();
+        let (_, m) = engine.serve(reqs);
+        if name == "none" {
+            base_thpt = m.throughput_tokens_per_sec();
+        }
+        table.row(vec![
+            format!(
+                "{name}{}",
+                if name == "none" {
+                    String::new()
+                } else {
+                    format!(" ({:.2}x)", m.throughput_tokens_per_sec() / base_thpt)
+                }
+            ),
+            format!("{:.0}", m.throughput_tokens_per_sec()),
+            format!("{:.1}", m.prefill.percentile_ms(0.5)),
+            format!("{:.1}", m.prefill.percentile_ms(0.95)),
+            format!("{:.1}%", m.mean_prune_rate * 100.0),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT export: lower the L1/L2 kernel ops to HLO **text** for the Rust
+PJRT runtime, and write artifacts/manifest.json.
+
+HLO text — NOT `lowered.compile()` / `.serialize()` — is the interchange
+format: the xla crate's xla_extension 0.5.1 rejects jax>=0.5 serialized
+HloModuleProtos (64-bit instruction ids); the text parser reassigns ids
+(see /opt/xla-example/README.md and aot_recipe.md).
+
+Artifacts, per zoo model:
+  attention.m{B}    x(B,d) wq wk wv wo -> ctx(B,d)      B in SEQ_BUCKETS
+  expert_ffn.m{B}   x(B,d) w1 w2 w3 -> y(B,d)           B in TOK_BUCKETS
+  expert_ffn_q.m{B} x(B,d) codes+scales+zeros x3 -> y   B in TOK_BUCKETS
+  router.m{B}       x(B,d) w -> logits, scores          B in SEQ_BUCKETS
+  lm_head.m{B}      x(B,d) embed -> logits(B,V)         B in SEQ_BUCKETS
+
+Rust pads token counts up to the next bucket (runtime::client::executable_for).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import ZOO
+from .model import (attention_op, expert_ffn_op, expert_ffn_q_op, lm_head_op,
+                    router_op)
+
+SEQ_BUCKETS = [32, 128, 512]
+TOK_BUCKETS = [16, 64, 256, 1024]
+GROUP_SIZE = 128
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jax fn to HLO text via stablehlo -> XlaComputation."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_u8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint8)
+
+
+def export_model(cfg, hlo_dir, rel_dir, entries):
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    g_d = (d + GROUP_SIZE - 1) // GROUP_SIZE
+    gs_ff = min(GROUP_SIZE, ff)
+    g_ff = (ff + gs_ff - 1) // gs_ff
+
+    def emit(name, kind, bucket, fn, args, outputs):
+        text = to_hlo_text(fn, args)
+        fname = f"{cfg.name}_{kind}_m{bucket}.hlo.txt"
+        with open(os.path.join(hlo_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "path": f"{rel_dir}/{fname}",
+            "kind": f"{cfg.name}/{kind}",
+            "bucket_m": bucket,
+            "inputs": [list(a.shape) for a in args],
+            "outputs": [list(o) for o in outputs],
+        })
+
+    for b in SEQ_BUCKETS:
+        if b > cfg.max_seq:
+            continue
+        emit(f"{cfg.name}.attention.m{b}", "attention", b,
+             lambda x, wq, wk, wv, wo: attention_op(x, wq, wk, wv, wo, cfg.n_heads),
+             (spec(b, d), spec(d, d), spec(d, d), spec(d, d), spec(d, d)),
+             [(b, d)])
+        emit(f"{cfg.name}.router.m{b}", "router", b,
+             router_op,
+             (spec(b, d), spec(d, cfg.n_experts)),
+             [(b, cfg.n_experts), (b, cfg.n_experts)])
+        emit(f"{cfg.name}.lm_head.m{b}", "lm_head", b,
+             lm_head_op,
+             (spec(b, d), spec(v, d)),
+             [(b, v)])
+    for b in TOK_BUCKETS:
+        emit(f"{cfg.name}.expert_ffn.m{b}", "expert_ffn", b,
+             expert_ffn_op,
+             (spec(b, d), spec(d, ff), spec(ff, d), spec(d, ff)),
+             [(b, d)])
+        emit(f"{cfg.name}.expert_ffn_q.m{b}", "expert_ffn_q", b,
+             lambda x, c1, s1, z1, c2, s2, z2, c3, s3, z3: expert_ffn_q_op(
+                 x, c1, s1, z1, c2, s2, z2, c3, s3, z3, GROUP_SIZE),
+             (spec(b, d),
+              spec_u8(d, ff), spec(g_d, ff), spec(g_d, ff),
+              spec_u8(ff, d), spec(g_ff, d), spec(g_ff, d),
+              spec_u8(d, ff), spec(g_d, ff), spec(g_d, ff)),
+             [(b, d)])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(ZOO))
+    args = ap.parse_args()
+    hlo_dir = os.path.join(args.out, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    entries = []
+    for name in args.models.split(","):
+        cfg = ZOO[name.strip()]
+        print(f"lowering {cfg.name} ...", flush=True)
+        export_model(cfg, hlo_dir, "hlo", entries)
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

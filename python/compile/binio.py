@@ -1,0 +1,53 @@
+"""TensorFile binary format — the Python half of rust `util::binio`.
+
+Layout (little-endian):
+  magic(u32=0x454d4f45) version(u32=1) n_entries(u32)
+  entry := name_len(u32) name dtype(u32: 0=f32,1=u32,2=u8) ndim(u32)
+           dims(u64*ndim) payload
+Entries are written sorted by name (rust reads into a BTreeMap; sorting
+keeps byte-identical round-trips).
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x454D4F45
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.uint32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.uint32): 1, np.dtype(np.uint8): 2}
+
+
+def save(path, tensors):
+    """tensors: dict name -> np.ndarray (f32/u32/u8)."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC, VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    """Returns dict name -> np.ndarray."""
+    out = {}
+    with open(path, "rb") as f:
+        magic, version, n = struct.unpack("<III", f.read(12))
+        assert magic == MAGIC, "bad magic"
+        assert version == VERSION, f"unsupported version {version}"
+        for _ in range(n):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<II", f.read(8))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(ndim)]
+            dt = _DTYPES[code]
+            count = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(count * np.dtype(dt).itemsize), dtype=dt)
+            out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,29 @@
+"""Model-zoo configurations — must mirror rust `model::config::ZooModel`."""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    n_shared: int
+    n_heads: int
+    vocab: int
+    max_seq: int
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+ZOO = {
+    "mixtral-mini": ModelConfig("mixtral-mini", 4, 128, 256, 8, 2, 0, 4, 512, 512),
+    "phi-mini": ModelConfig("phi-mini", 4, 128, 224, 16, 2, 0, 4, 512, 512),
+    "deepseek-mini": ModelConfig("deepseek-mini", 4, 128, 64, 64, 6, 2, 4, 512, 512),
+    "qwen-mini": ModelConfig("qwen-mini", 4, 128, 64, 60, 4, 4, 4, 512, 512),
+}

@@ -1,0 +1,140 @@
+"""Synthetic task-typed corpus — Python port of rust `data::corpus`.
+
+Same construction, same constants, same PCG64 streams: four task families
+own disjoint content-token regions with family-specific Markov dynamics;
+datasets within a family share the family prior. The port matches the Rust
+implementation at the *distribution* level (cross-language golden tests
+compare token histograms, not exact streams: the Rust transition weights
+are computed in f32, Python in f64, so individual draws may diverge after
+many steps; the pretraining only needs the distribution).
+"""
+
+import numpy as np
+
+VOCAB = 512
+SHARED_TOKENS = 64
+FAMILY_SPAN = 112
+N_STATES = 12
+P_SHARED = 0.25
+
+FAMILIES = ["QA/CR", "Math", "Code", "French"]
+
+# (name, family_index, variant) — mirrors rust data::corpus::DATASETS.
+DATASETS = [
+    ("winogrande", 0, 0), ("piqa", 0, 1), ("arc-challenge", 0, 2),
+    ("boolq", 0, 3), ("hellaswag", 0, 4), ("social-iqa", 0, 5),
+    ("openbookqa", 0, 6),
+    ("gsm8k", 1, 0), ("mathqa", 1, 1), ("minerva-math", 1, 2),
+    ("hendrycks-math", 1, 3),
+    ("humaneval", 2, 0), ("mbpp", 2, 1), ("apps", 2, 2), ("conala", 2, 3),
+    ("lambada-fr", 3, 0), ("xnli-fr", 3, 1), ("paws-fr", 3, 2),
+    ("arc-fr", 3, 3),
+]
+
+_PCG_MULT = 0x2360ED051FC65DA44385DF649FCCF645
+_MASK128 = (1 << 128) - 1
+_MASK64 = (1 << 64) - 1
+
+
+class Pcg64:
+    """PCG-XSL-RR 128/64 — bit-exact port of rust tensor::rng::Pcg64."""
+
+    def __init__(self, seed, stream):
+        self.inc = ((((stream << 64) | 0xDA3E39CB94B95BDB) << 1) | 1) & _MASK128
+        self.state = 0
+        self.state = (self.state * _PCG_MULT + self.inc) & _MASK128
+        self.state = (self.state + seed) & _MASK128
+        self.state = (self.state * _PCG_MULT + self.inc) & _MASK128
+
+    def next_u64(self):
+        self.state = (self.state * _PCG_MULT + self.inc) & _MASK128
+        rot = self.state >> 122
+        xored = ((self.state >> 64) ^ self.state) & _MASK64
+        if rot == 0:
+            return xored
+        return ((xored >> rot) | (xored << (64 - rot))) & _MASK64
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_f32(self):
+        return np.float32((self.next_u64() >> 40) * np.float32(1.0 / (1 << 24)))
+
+    def below(self, n):
+        # Lemire's method, matching the rust implementation.
+        x = self.next_u64()
+        m = x * n
+        l = m & _MASK64
+        if l < n:
+            t = (-n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & _MASK64
+        return m >> 64
+
+    def sample_weighted(self, weights):
+        total = float(np.sum(np.maximum(weights, 0.0), dtype=np.float64))
+        if total <= 0.0:
+            return int(self.below(max(len(weights), 1)))
+        t = self.next_f64() * total
+        for i, w in enumerate(weights):
+            t -= max(float(w), 0.0)
+            if t <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+class CorpusGen:
+    """Port of rust data::corpus::CorpusGen (same seeding scheme)."""
+
+    def __init__(self, name, seed):
+        spec = next(d for d in DATASETS if d[0] == name)
+        _, f, variant = spec
+        family_rng = Pcg64(9000 + f, 1)
+        self.family_base = SHARED_TOKENS + f * FAMILY_SPAN
+        centers = [int(family_rng.below(FAMILY_SPAN)) for _ in range(N_STATES)]
+        ds_rng = Pcg64(9100 + f * 97 + variant, 2)
+        for _ in range(2):
+            i = int(ds_rng.below(N_STATES))
+            centers[i] = int(ds_rng.below(FAMILY_SPAN))
+        trans = np.zeros((N_STATES, N_STATES), dtype=np.float32)
+        for i in range(N_STATES):
+            for j in range(N_STATES):
+                base = family_rng.next_f32()
+                noise = np.float32(0.3) * ds_rng.next_f32()
+                sticky = np.float32(1.5) if i == j else np.float32(0.0)
+                trans[i, j] = max(base + noise + sticky, np.float32(1e-3))
+            trans[i] /= trans[i].sum()
+        self.centers = centers
+        self.trans = trans
+        self.state = 0
+        self.rng = Pcg64(seed, 1000 + f * 31 + variant)
+
+    def next_token(self):
+        self.state = self.rng.sample_weighted(self.trans[self.state])
+        if self.rng.next_f64() < P_SHARED:
+            return int(self.rng.below(SHARED_TOKENS))
+        center = self.centers[self.state]
+        jitter = int(self.rng.below(9)) - 4
+        pos = (center + jitter) % FAMILY_SPAN
+        return self.family_base + pos
+
+    def sequence(self, length):
+        return np.array([self.next_token() for _ in range(length)], dtype=np.uint32)
+
+
+class WikiMixture:
+    """Balanced rotation through all 19 datasets (WikiText2's role)."""
+
+    def __init__(self, seed):
+        self.gens = [CorpusGen(d[0], seed) for d in DATASETS]
+        self.next_idx = 0
+
+    def sequence(self, length):
+        g = self.gens[self.next_idx]
+        self.next_idx = (self.next_idx + 1) % len(self.gens)
+        return g.sequence(length)
+
+    def batch(self, n, length):
+        return np.stack([self.sequence(length) for _ in range(n)])

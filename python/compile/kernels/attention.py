@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: causal multi-head self-attention.
+
+Grid over heads; each step stages the full (seq × head_dim) Q/K/V panels in
+VMEM (512 × 32 × 4B = 64 KB per panel) plus the (seq × seq) score tile
+(512² × 4B = 1 MB) — comfortably inside VMEM for the mini models, so the
+whole softmax(QKᵀ)·V runs on-chip without HBM spill. For longer sequences
+this would become a flash-style K-block loop; at our max_seq the single
+tile is both simpler and faster (no rescaling passes).
+
+The causal mask uses broadcasted iotas (TPU needs ≥2-D iota).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[...][0]  # (seq, hd): leading head axis blocked to 1
+    k = k_ref[...][0]
+    v = v_ref[...][0]
+    seq = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
+    scores = jnp.where(cols <= rows, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_ref[...] = jnp.dot(probs, v, preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads",))
+def attention(x, wq, wk, wv, wo, *, n_heads):
+    """Causal MHSA over (seq, d_model); matches ref.attention_ref."""
+    seq, d = x.shape
+    hd = d // n_heads
+    q = (x @ wq).reshape(seq, n_heads, hd).transpose(1, 0, 2)  # (h, seq, hd)
+    k = (x @ wk).reshape(seq, n_heads, hd).transpose(1, 0, 2)
+    v = (x @ wv).reshape(seq, n_heads, hd).transpose(1, 0, 2)
+    ctx = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=1.0 / (hd ** 0.5)),
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((1, seq, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, seq, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, seq, hd), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, seq, hd), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, seq, hd), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+    return ctx.transpose(1, 0, 2).reshape(seq, d) @ wo

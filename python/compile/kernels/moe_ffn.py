@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: fused SwiGLU expert FFN, fp and quantized variants.
+
+One expert's whole weight set (d_model × d_ff × 3) fits in VMEM for the
+mini models (128×256×3×4B = 384 KB ≪ 16 MB), so the kernel tiles only over
+tokens (M): each grid step stages an (bm × d_model) activation tile and
+computes (silu(x@w1) * (x@w3)) @ w2 entirely on-chip — one HBM round-trip
+per token tile instead of three (the fusion BitBLAS/Ladder would do with
+three separate GEMM launches).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _moe_ffn_kernel(x_ref, w1_ref, w2_ref, w3_ref, o_ref):
+    x = x_ref[...]
+    a = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    b = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    h = _silu(a) * b
+    o_ref[...] = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def moe_ffn(x, w1, w2, w3, *, bm=128):
+    """(M, d) SwiGLU through one expert; grid over M tiles."""
+    m, d = x.shape
+    d_ff = w1.shape[1]
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, d_ff), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, w1, w2, w3)
+
+
+def _moe_ffn_q_kernel(x_ref, c1_ref, s1_ref, z1_ref, c2_ref, s2_ref, z2_ref,
+                      c3_ref, s3_ref, z3_ref, o_ref, *, gs_d, gs_ff):
+    """Quantized variant: dequantize all three weight tiles in VMEM, then
+    the same fused SwiGLU. This is the serving-path kernel: packed codes
+    stream from HBM at `bits`/8 the bandwidth of f32 weights."""
+    x = x_ref[...]
+
+    def dq(c_ref, s_ref, z_ref, gs):
+        codes = c_ref[...].astype(jnp.float32)
+        gidx = jnp.arange(codes.shape[0]) // gs
+        return (codes - z_ref[...][gidx]) * s_ref[...][gidx]
+
+    w1 = dq(c1_ref, s1_ref, z1_ref, gs_d)   # rows = d_model
+    w2 = dq(c2_ref, s2_ref, z2_ref, gs_ff)  # rows = d_ff
+    w3 = dq(c3_ref, s3_ref, z3_ref, gs_d)
+    a = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    b = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    h = _silu(a) * b
+    o_ref[...] = jnp.dot(h, w2, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "bm"))
+def moe_ffn_q(x, c1, s1, z1, c2, s2, z2, c3, s3, z3, *, group_size=128, bm=128):
+    """Quantized SwiGLU expert: codes (K, N) u8 + per-group scales/zeros."""
+    m, d = x.shape
+    d_ff = c1.shape[1]
+    bm = min(bm, m)
+    assert m % bm == 0
+    gs_d = min(group_size, d)
+    gs_ff = min(group_size, d_ff)
+    g_d = (d + gs_d - 1) // gs_d
+    g_ff = (d_ff + gs_ff - 1) // gs_ff
+    grid = (m // bm,)
+    full = lambda r, c: pl.BlockSpec((r, c), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_moe_ffn_q_kernel, gs_d=gs_d, gs_ff=gs_ff),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            full(d, d_ff), full(g_d, d_ff), full(g_d, d_ff),
+            full(d_ff, d), full(g_ff, d), full(g_ff, d),
+            full(d, d_ff), full(g_d, d_ff), full(g_d, d_ff),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, c1, s1, z1, c2, s2, z2, c3, s3, z3)

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: fused group-wise dequantize + matmul.
+
+This is the paper's BitBLAS role (§6.4 "Memory Saving and Inference
+Efficiency") rethought for TPU (DESIGN.md §Hardware-Adaptation):
+
+* CUDA BitBLAS stages packed weights through shared memory with warp-level
+  `ldmatrix` fragments and dequantizes into tensor-core WMMA fragments.
+* Here the HBM→VMEM schedule is expressed with `BlockSpec`s: each grid step
+  owns an (bm × bk) X-tile and a (bk × bn) code-tile; the VPU dequantizes
+  the code tile into a VMEM f32 tile ((code − zero) · scale) and the MXU
+  consumes it via `jnp.dot(..., preferred_element_type=f32)`.
+* Codes are packed along K (the reduction axis) exactly like rust
+  `quant::pack::PackedMat`, so one VMEM tile unpacks from one contiguous
+  byte run — the TPU analogue of BitBLAS packing along the warp-contiguous
+  axis.
+
+Two variants:
+* `quant_matmul` — one byte per code (any bit-width ≤ 8). The storage
+  compression happens at rest (rust PackedMat); this kernel fuses the
+  dequant arithmetic with the GEMM.
+* `quant_matmul4` — genuinely sub-byte: two 4-bit codes per byte, unpacked
+  in-kernel with shift/mask on the VPU.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated from the VMEM/MXU model in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: bm×bn accumulator (128×128×4B = 64 KB) + X tile
+# (128×256×4B = 128 KB) + dequantized W tile (256×128×4B = 128 KB) stay far
+# under the ~16 MB VMEM budget; bk=256 keeps the MXU fed in long runs.
+BM, BK, BN = 128, 256, 128
+
+
+def _cdiv(a, b):
+    return (a + b - 1) // b
+
+
+def _quant_matmul_kernel(x_ref, codes_ref, scales_ref, zeros_ref, o_ref, *,
+                         group_size):
+    """Grid: (m_tiles, n_tiles, k_tiles); k innermost, accumulating into the
+    revisited output tile (the standard Pallas k-loop accumulation)."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bm, bk)
+    codes = codes_ref[...].astype(jnp.float32)  # (bk, bn)
+    # Per-row group index within this K tile (group_size divides bk).
+    gidx = jnp.arange(codes.shape[0]) // group_size
+    scale = scales_ref[...][gidx]  # (bk, bn)
+    zero = zeros_ref[...][gidx]
+    w = (codes - zero) * scale  # VPU dequant into VMEM
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)  # MXU
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "bm", "bk", "bn"))
+def quant_matmul(x, codes, scales, zeros, *, group_size=128, bm=BM, bk=BK, bn=BN):
+    """x (M, K) @ dequant(codes (K, N), scales/zeros (G, N)) -> (M, N).
+
+    Requires group_size | bk | K and bm | M, bn | N (aot.py pads to buckets).
+    """
+    m, k = x.shape
+    _, n = codes.shape
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    gs = min(group_size, bk)
+    assert k % bk == 0 and m % bm == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    assert bk % gs == 0
+    nk = k // bk
+    groups_per_bk = bk // gs
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_quant_matmul_kernel, group_size=gs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((groups_per_bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((groups_per_bk, bn), lambda i, j, ki: (ki, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, codes, scales, zeros)
+
+
+def _quant_matmul4_kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, *, group_size):
+    """Single-tile variant with in-kernel 4-bit unpack (two codes/byte)."""
+    x = x_ref[...]  # (m, k)
+    packed = packed_ref[...]  # (k//2, n) uint8
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = (packed >> 4).astype(jnp.float32)
+    k = x.shape[1]
+    n = packed.shape[1]
+    codes = jnp.zeros((k, n), dtype=jnp.float32)
+    codes = codes.at[0::2].set(lo).at[1::2].set(hi)
+    gidx = jnp.arange(k) // group_size
+    w = (codes - zeros_ref[...][gidx]) * scales_ref[...][gidx]
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def quant_matmul4(x, packed, scales, zeros, *, group_size=128):
+    """x (M, K) @ dequant(unpack4(packed (K//2, N))) -> (M, N), single tile."""
+    m, k = x.shape
+    n = packed.shape[1]
+    gs = min(group_size, k)
+    return pl.pallas_call(
+        functools.partial(_quant_matmul4_kernel, group_size=gs),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, scales, zeros)

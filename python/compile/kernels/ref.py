@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for every Pallas kernel (the correctness
+ground truth pytest checks kernels against)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_ref(codes, scales, zeros, group_size):
+    """Group-wise asymmetric dequantization.
+
+    codes:  (K, N) uint8 integer codes
+    scales: (G, N) f32 per-(group, column) scales, G = ceil(K / group_size)
+    zeros:  (G, N) f32 zero points
+    returns (K, N) f32 weights: (code - zero) * scale
+    """
+    k = codes.shape[0]
+    gidx = jnp.arange(k) // group_size
+    return (codes.astype(jnp.float32) - zeros[gidx]) * scales[gidx]
+
+
+def quant_matmul_ref(x, codes, scales, zeros, group_size):
+    """x @ dequant(codes): the fused dequant-matmul oracle."""
+    w = dequant_ref(codes, scales, zeros, group_size)
+    return x @ w
+
+
+def pack4_ref(codes):
+    """Pack 4-bit codes (K, N) into (K//2, N) bytes: two codes per byte,
+    low nibble = even row (K-axis packing, matching rust PackedMat)."""
+    lo = codes[0::2].astype(jnp.uint8)
+    hi = codes[1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def quant_matmul4_ref(x, packed, scales, zeros, group_size):
+    """x @ dequant(unpack4(packed))."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    k2 = packed.shape[0]
+    codes = jnp.zeros((k2 * 2, packed.shape[1]), dtype=jnp.uint8)
+    codes = codes.at[0::2].set(lo).at[1::2].set(hi)
+    return quant_matmul_ref(x, codes, scales, zeros, group_size)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def moe_ffn_ref(x, w1, w2, w3):
+    """SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2."""
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def attention_ref(x, wq, wk, wv, wo, n_heads):
+    """Causal multi-head self-attention (matches rust model::forward)."""
+    seq, d = x.shape
+    hd = d // n_heads
+    q = (x @ wq).reshape(seq, n_heads, hd)
+    k = (x @ wk).reshape(seq, n_heads, hd)
+    v = (x @ wv).reshape(seq, n_heads, hd)
+    scores = jnp.einsum("ihd,jhd->hij", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hij,jhd->ihd", probs, v).reshape(seq, d)
+    return ctx @ wo
+
+
+def router_ref(x, w):
+    """Router logits + softmax scores."""
+    logits = x @ w
+    return logits, jax.nn.softmax(logits, axis=-1)
+
+
+def rmsnorm_ref(x, gain, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * gain

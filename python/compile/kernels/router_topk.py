@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: MoE router — logits + softmax scores.
+
+The router matmul is tiny (d_model × n_experts ≤ 128×64) but it sits on
+the critical path of *every* MoE layer and, after PESF, of the pruning
+decision itself, so it gets a fused kernel: one VMEM round-trip produces
+both the logits (QESC's calibration target) and the softmax scores (the
+selection distribution). Top-k itself stays in XLA (`jax.lax.top_k`) —
+sorting networks are not MXU work.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, w_ref, logits_ref, scores_ref):
+    x = x_ref[...]
+    logits = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    logits_ref[...] = logits
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    scores_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def router(x, w):
+    """(tokens, d) @ (d, n_experts) -> (logits, softmax scores)."""
+    t, d = x.shape
+    n = w.shape[1]
+    return pl.pallas_call(
+        _router_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, n), jnp.float32),
+            jax.ShapeDtypeStruct((t, n), jnp.float32),
+        ),
+        interpret=True,
+    )(x, w)
+
+
+def router_topk(x, w, k):
+    """Convenience: logits, scores, and the top-k (scores, indices)."""
+    logits, scores = router(x, w)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return logits, scores, top_s, top_i

@@ -1,0 +1,209 @@
+"""L2 — the MoE transformer in JAX.
+
+Two forward paths over the same parameters:
+
+* `forward` — the *training/eval* path: pure-jnp ops (dense expert compute,
+  differentiable top-k routing via renormalized softmax weights). Used by
+  `pretrain.py`.
+* kernel ops (`attention_op`, `expert_ffn_op`, `expert_ffn_q_op`,
+  `router_op`, `lm_head_op`) — the *AOT* path: thin wrappers over the L1
+  Pallas kernels, lowered per-bucket by `aot.py` into the HLO artifacts the
+  Rust runtime executes. pytest asserts both paths agree.
+
+Parameter naming matches rust `model::weights` (layer{i}.wq, .expert{e}.w1,
+…) so TensorFiles round-trip between the two stacks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import binio
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import attention as attention_kernel
+from .kernels.moe_ffn import moe_ffn as moe_ffn_kernel
+from .kernels.moe_ffn import moe_ffn_q as moe_ffn_q_kernel
+from .kernels.router_topk import router as router_kernel
+
+
+# ---------------------------------------------------------------- params
+
+def init_params(cfg: ModelConfig, seed: int):
+    """Random init, stacked expert weights: experts_w1 (E, d, ff) etc."""
+    k = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(k, 2 + cfg.n_layers * 12))
+    sd = 1.0 / np.sqrt(cfg.d_model)
+    sf = np.sqrt(2.0 / cfg.d_model)
+    sb = np.sqrt(2.0 / cfg.d_ff)
+    p = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * sd,
+        "final_norm": jnp.ones(cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        p[f"l{i}.attn_norm"] = jnp.ones(cfg.d_model)
+        p[f"l{i}.ffn_norm"] = jnp.ones(cfg.d_model)
+        for nm in ("wq", "wk", "wv", "wo"):
+            p[f"l{i}.{nm}"] = jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)) * sd
+        p[f"l{i}.router"] = jax.random.normal(next(keys), (cfg.d_model, cfg.n_experts)) * sd
+        e = cfg.n_experts
+        p[f"l{i}.experts_w1"] = jax.random.normal(next(keys), (e, cfg.d_model, cfg.d_ff)) * sf
+        p[f"l{i}.experts_w2"] = jax.random.normal(next(keys), (e, cfg.d_ff, cfg.d_model)) * sb
+        p[f"l{i}.experts_w3"] = jax.random.normal(next(keys), (e, cfg.d_model, cfg.d_ff)) * sf
+        if cfg.n_shared:
+            s = cfg.n_shared
+            p[f"l{i}.shared_w1"] = jax.random.normal(next(keys), (s, cfg.d_model, cfg.d_ff)) * sf
+            p[f"l{i}.shared_w2"] = jax.random.normal(next(keys), (s, cfg.d_ff, cfg.d_model)) * sb
+            p[f"l{i}.shared_w3"] = jax.random.normal(next(keys), (s, cfg.d_model, cfg.d_ff)) * sf
+    return p
+
+
+# ---------------------------------------------------------------- training forward
+
+def moe_block(x, router_w, w1, w2, w3, shared, top_k):
+    """Dense-compute MoE with renormalized top-k mixing (differentiable).
+
+    x: (T, d); w1/w3: (E, d, ff); w2: (E, ff, d).
+    Returns (out (T, d), aux) where aux carries load-balance statistics.
+    """
+    logits = x @ router_w  # (T, E)
+    scores = jax.nn.softmax(logits, axis=-1)
+    top_s, top_i = jax.lax.top_k(scores, top_k)  # (T, k)
+    denom = jnp.sum(top_s, axis=-1, keepdims=True)
+    mix = top_s / jnp.maximum(denom, 1e-9)  # renormalized weights (Eq. 2)
+    # Dense expert outputs: (T, E, d). Fine at mini scale; the serving path
+    # (rust) does the sparse gather/scatter version.
+    h = ref.silu(jnp.einsum("td,edf->tef", x, w1)) * jnp.einsum("td,edf->tef", x, w3)
+    outs = jnp.einsum("tef,efd->ted", h, w2)
+    mask = jax.nn.one_hot(top_i, scores.shape[-1])  # (T, k, E)
+    weights = jnp.einsum("tk,tke->te", mix, mask)  # (T, E)
+    out = jnp.einsum("te,ted->td", weights, outs)
+    if shared is not None:
+        sw1, sw2, sw3 = shared
+        hs = ref.silu(jnp.einsum("td,sdf->tsf", x, sw1)) * jnp.einsum("td,sdf->tsf", x, sw3)
+        out = out + jnp.einsum("tsf,sfd->td", hs, sw2)
+    # Load-balance aux (Switch-style): mean prob * mean dispatch per expert.
+    me = jnp.mean(scores, axis=0)
+    de = jnp.mean(jnp.sum(mask, axis=1), axis=0)
+    aux = jnp.sum(me * de) * scores.shape[-1]
+    return out, aux
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    """Training/eval forward for one sequence (T,) -> logits (T, vocab)."""
+    x = params["embed"][tokens]
+    aux_total = 0.0
+    for i in range(cfg.n_layers):
+        xn = ref.rmsnorm_ref(x, params[f"l{i}.attn_norm"])
+        x = x + ref.attention_ref(
+            xn, params[f"l{i}.wq"], params[f"l{i}.wk"], params[f"l{i}.wv"],
+            params[f"l{i}.wo"], cfg.n_heads,
+        )
+        xn = ref.rmsnorm_ref(x, params[f"l{i}.ffn_norm"])
+        shared = (
+            (params[f"l{i}.shared_w1"], params[f"l{i}.shared_w2"], params[f"l{i}.shared_w3"])
+            if cfg.n_shared
+            else None
+        )
+        moe, aux = moe_block(
+            xn, params[f"l{i}.router"], params[f"l{i}.experts_w1"],
+            params[f"l{i}.experts_w2"], params[f"l{i}.experts_w3"], shared, cfg.top_k,
+        )
+        x = x + moe
+        aux_total = aux_total + aux
+    xn = ref.rmsnorm_ref(x, params["final_norm"])
+    return xn @ params["embed"].T, aux_total / cfg.n_layers
+
+
+def lm_loss(params, cfg: ModelConfig, batch, aux_weight=0.01):
+    """Mean next-token NLL + load-balance aux over a (B, T) batch."""
+
+    def one(tokens):
+        logits, aux = forward(params, cfg, tokens)
+        lp = jax.nn.log_softmax(logits[:-1], axis=-1)
+        nll = -jnp.take_along_axis(lp, tokens[1:, None].astype(jnp.int32), axis=-1).mean()
+        return nll, aux
+
+    nll, aux = jax.vmap(one)(batch)
+    return nll.mean() + aux_weight * aux.mean()
+
+
+# ---------------------------------------------------------------- AOT kernel ops
+
+def attention_op(x, wq, wk, wv, wo, n_heads):
+    """Bucketed causal attention op (L1 kernel) — lowered by aot.py."""
+    return (attention_kernel(x, wq, wk, wv, wo, n_heads=n_heads),)
+
+
+def expert_ffn_op(x, w1, w2, w3):
+    """One expert over a token bucket (L1 kernel)."""
+    return (moe_ffn_kernel(x, w1, w2, w3),)
+
+
+def expert_ffn_q_op(x, c1, s1, z1, c2, s2, z2, c3, s3, z3, group_size):
+    """Quantized expert over a token bucket (L1 kernel, u8 codes)."""
+    return (moe_ffn_q_kernel(x, c1, s1, z1, c2, s2, z2, c3, s3, z3,
+                             group_size=group_size),)
+
+
+def router_op(x, w):
+    """Router logits + scores (L1 kernel)."""
+    logits, scores = router_kernel(x, w)
+    return logits, scores
+
+
+def lm_head_op(x, embed):
+    """Tied-embedding output head (plain XLA GEMM: MXU-bound already)."""
+    return (x @ embed.T,)
+
+
+# ---------------------------------------------------------------- weight IO
+
+def tensorfile_to_params(path, cfg: ModelConfig):
+    """Inverse of params_to_tensorfile (restacks experts)."""
+    t = binio.load(path)
+    p = {
+        "embed": jnp.asarray(t["embed"]),
+        "final_norm": jnp.asarray(t["final_norm"]),
+    }
+    for i in range(cfg.n_layers):
+        p[f"l{i}.attn_norm"] = jnp.asarray(t[f"layer{i}.attn_norm"])
+        p[f"l{i}.ffn_norm"] = jnp.asarray(t[f"layer{i}.ffn_norm"])
+        for nm in ("wq", "wk", "wv", "wo", "router"):
+            p[f"l{i}.{nm}"] = jnp.asarray(t[f"layer{i}.{nm}"])
+        for w in ("w1", "w2", "w3"):
+            p[f"l{i}.experts_{w}"] = jnp.stack(
+                [jnp.asarray(t[f"layer{i}.expert{e}.{w}"]) for e in range(cfg.n_experts)]
+            )
+            if cfg.n_shared:
+                p[f"l{i}.shared_{w}"] = jnp.stack(
+                    [jnp.asarray(t[f"layer{i}.shared{s}.{w}"]) for s in range(cfg.n_shared)]
+                )
+    return p
+
+
+def params_to_tensorfile(params, cfg: ModelConfig, path):
+    """Save in the rust `model::weights` layout (unstacked experts)."""
+    t = {
+        "config": np.array(
+            [cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k,
+             cfg.n_shared, cfg.n_heads, cfg.vocab, cfg.max_seq],
+            dtype=np.uint32,
+        ),
+        "embed": np.asarray(params["embed"], dtype=np.float32),
+        "final_norm": np.asarray(params["final_norm"], dtype=np.float32),
+    }
+    for i in range(cfg.n_layers):
+        t[f"layer{i}.attn_norm"] = np.asarray(params[f"l{i}.attn_norm"], np.float32)
+        t[f"layer{i}.ffn_norm"] = np.asarray(params[f"l{i}.ffn_norm"], np.float32)
+        for nm in ("wq", "wk", "wv", "wo", "router"):
+            t[f"layer{i}.{nm}"] = np.asarray(params[f"l{i}.{nm}"], np.float32)
+        for e in range(cfg.n_experts):
+            t[f"layer{i}.expert{e}.w1"] = np.asarray(params[f"l{i}.experts_w1"][e], np.float32)
+            t[f"layer{i}.expert{e}.w2"] = np.asarray(params[f"l{i}.experts_w2"][e], np.float32)
+            t[f"layer{i}.expert{e}.w3"] = np.asarray(params[f"l{i}.experts_w3"][e], np.float32)
+        for s in range(cfg.n_shared):
+            t[f"layer{i}.shared{s}.w1"] = np.asarray(params[f"l{i}.shared_w1"][s], np.float32)
+            t[f"layer{i}.shared{s}.w2"] = np.asarray(params[f"l{i}.shared_w2"][s], np.float32)
+            t[f"layer{i}.shared{s}.w3"] = np.asarray(params[f"l{i}.shared_w3"][s], np.float32)
+    binio.save(path, t)

@@ -1,0 +1,49 @@
+"""AOT export: HLO text generation and manifest structure. Exports a small
+subset (one model, small buckets) into a temp dir — the full export is
+`make artifacts`."""
+
+import json
+import os
+import tempfile
+
+from compile import aot
+from compile.configs import ModelConfig
+
+
+def test_export_writes_hlo_and_manifest(monkeypatch):
+    tiny = ModelConfig("tiny", 2, 16, 8, 4, 2, 1, 2, 64, 64)
+    monkeypatch.setattr(aot, "SEQ_BUCKETS", [8])
+    monkeypatch.setattr(aot, "TOK_BUCKETS", [8])
+    with tempfile.TemporaryDirectory() as td:
+        hlo_dir = os.path.join(td, "hlo")
+        os.makedirs(hlo_dir)
+        entries = []
+        aot.export_model(tiny, hlo_dir, "hlo", entries)
+        # 3 seq-bucket kinds + 2 tok-bucket kinds.
+        kinds = sorted(e["kind"] for e in entries)
+        assert kinds == sorted([
+            "tiny/attention", "tiny/router", "tiny/lm_head",
+            "tiny/expert_ffn", "tiny/expert_ffn_q",
+        ])
+        for e in entries:
+            path = os.path.join(td, e["path"])
+            assert os.path.exists(path)
+            text = open(path).read()
+            assert "HloModule" in text, "must be HLO text, not a proto"
+            assert e["bucket_m"] == 8
+        manifest = {"version": 1, "entries": entries}
+        mpath = os.path.join(td, "manifest.json")
+        json.dump(manifest, open(mpath, "w"))
+        back = json.load(open(mpath))
+        assert back["version"] == 1
+        assert len(back["entries"]) == 5
+
+
+def test_hlo_text_has_expected_shapes():
+    tiny = ModelConfig("tiny", 2, 16, 8, 4, 2, 1, 2, 64, 64)
+    text = aot.to_hlo_text(
+        lambda x, w1, w2, w3: aot.expert_ffn_op(x, w1, w2, w3),
+        (aot.spec(8, 16), aot.spec(16, 8), aot.spec(8, 16), aot.spec(16, 8)),
+    )
+    assert "f32[8,16]" in text
+    assert "HloModule" in text

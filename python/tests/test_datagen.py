@@ -1,0 +1,59 @@
+"""Datagen: determinism, region structure, and the Fig-2 premise
+(intra-family similarity > inter-family) at the token-distribution level.
+Includes the PCG64 cross-language golden values (verified against the rust
+implementation — see rust/src/tensor/rng.rs)."""
+
+import numpy as np
+
+from compile.datagen import (DATASETS, FAMILY_SPAN, SHARED_TOKENS, VOCAB,
+                             CorpusGen, Pcg64, WikiMixture)
+
+# Golden values from rust: Pcg64::new(42, 7).next_u64() x3.
+RUST_GOLDEN = [4550322480638507292, 14374554680213026787, 10648956799161994513]
+
+
+def test_pcg_matches_rust_golden():
+    r = Pcg64(42, 7)
+    assert [r.next_u64() for _ in range(3)] == RUST_GOLDEN
+
+
+def test_tokens_in_region():
+    for name, fam, _ in DATASETS[:6]:
+        seq = CorpusGen(name, 1).sequence(300)
+        lo = SHARED_TOKENS + fam * FAMILY_SPAN
+        hi = lo + FAMILY_SPAN
+        for t in seq:
+            assert t < VOCAB
+            assert t < SHARED_TOKENS or (lo <= t < hi)
+
+
+def test_deterministic():
+    a = CorpusGen("piqa", 9).sequence(64)
+    b = CorpusGen("piqa", 9).sequence(64)
+    assert (a == b).all()
+    c = CorpusGen("piqa", 10).sequence(64)
+    assert not (a == c).all()
+
+
+def _hist(tokens):
+    h = np.bincount(tokens, minlength=VOCAB).astype(float)
+    return h / h.sum()
+
+
+def test_intra_vs_inter_family_similarity():
+    cos = lambda a, b: float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+    hm = _hist(CorpusGen("gsm8k", 3).sequence(3000))
+    hm2 = _hist(CorpusGen("mathqa", 4).sequence(3000))
+    hc = _hist(CorpusGen("humaneval", 3).sequence(3000))
+    assert cos(hm, hm2) > cos(hm, hc) + 0.2
+
+
+def test_wiki_mixture_rotates_all_families():
+    w = WikiMixture(2)
+    seqs = [w.sequence(48) for _ in range(19)]
+    fams = set()
+    for s in seqs:
+        for t in s:
+            if t >= SHARED_TOKENS:
+                fams.add((int(t) - SHARED_TOKENS) // FAMILY_SPAN)
+    assert fams == {0, 1, 2, 3}

@@ -1,0 +1,174 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes/bit-widths with hypothesis. This is the CORE correctness
+signal for the compile path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.moe_ffn import moe_ffn, moe_ffn_q
+from compile.kernels.quant_matmul import quant_matmul, quant_matmul4
+from compile.kernels.router_topk import router, router_topk
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape, scale=1.0):
+    return jnp.array(RNG.normal(size=shape) * scale, dtype=jnp.float32)
+
+
+def quantize_np(w, bits, group_size):
+    """Group-wise asymmetric RTN (mirrors rust quant::quantizer)."""
+    w = np.asarray(w)
+    k, n = w.shape
+    gs = min(group_size, k)
+    ng = (k + gs - 1) // gs
+    qmax = (1 << bits) - 1
+    codes = np.zeros((k, n), np.uint8)
+    scales = np.zeros((ng, n), np.float32)
+    zeros = np.zeros((ng, n), np.float32)
+    for g in range(ng):
+        r0, r1 = g * gs, min((g + 1) * gs, k)
+        mn = np.minimum(w[r0:r1].min(axis=0), 0)
+        mx = np.maximum(w[r0:r1].max(axis=0), 0)
+        s = np.maximum((mx - mn) / qmax, 1e-10)
+        z = np.clip(np.round(-mn / s), 0, qmax)
+        codes[r0:r1] = np.clip(np.round(w[r0:r1] / s + z), 0, qmax).astype(np.uint8)
+        scales[g], zeros[g] = s, z
+    return jnp.array(codes), jnp.array(scales), jnp.array(zeros)
+
+
+# ---------------------------------------------------------------- quant_matmul
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([32, 64, 128]),
+    n=st.sampled_from([16, 32]),
+    bits=st.sampled_from([2, 3, 4, 8]),
+)
+def test_quant_matmul_matches_ref(m, k, n, bits):
+    x = rand(m, k)
+    w = rand(k, n, scale=0.5)
+    gs = 32
+    codes, scales, zeros = quantize_np(w, bits, gs)
+    out = quant_matmul(x, codes, scales, zeros, group_size=gs, bm=8, bk=32, bn=16)
+    want = ref.quant_matmul_ref(x, codes, scales, zeros, gs)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_multi_k_tiles():
+    # K spanning several tiles exercises the k-loop accumulation.
+    x = rand(16, 256)
+    codes, scales, zeros = quantize_np(rand(256, 32, scale=0.3), 4, 64)
+    out = quant_matmul(x, codes, scales, zeros, group_size=64, bm=16, bk=64, bn=32)
+    want = ref.quant_matmul_ref(x, codes, scales, zeros, 64)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(k=st.sampled_from([32, 64]), n=st.sampled_from([8, 16]))
+def test_quant_matmul4_packed(k, n):
+    x = rand(8, k)
+    codes, scales, zeros = quantize_np(rand(k, n, scale=0.5), 4, 16)
+    packed = ref.pack4_ref(codes)
+    out = quant_matmul4(x, packed, scales, zeros, group_size=16)
+    want = ref.quant_matmul_ref(x, codes, scales, zeros, 16)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_zero_code_is_min():
+    # code 0 dequantizes to -zero*scale = group min (asymmetric property).
+    w = rand(32, 4, scale=1.0)
+    codes, scales, zeros = quantize_np(w, 3, 32)
+    dq = ref.dequant_ref(codes, scales, zeros, 32)
+    err = np.abs(np.asarray(dq) - np.asarray(w)).max()
+    step = float(np.asarray(scales).max())
+    assert err <= 0.5 * step + 1e-5
+
+
+# ---------------------------------------------------------------- moe_ffn
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([16, 32, 128]),
+    ff=st.sampled_from([8, 64]),
+)
+def test_moe_ffn_matches_ref(m, d, ff):
+    x = rand(m, d)
+    w1, w2, w3 = rand(d, ff, scale=0.2), rand(ff, d, scale=0.2), rand(d, ff, scale=0.2)
+    out = moe_ffn(x, w1, w2, w3, bm=8)
+    want = ref.moe_ffn_ref(x, w1, w2, w3)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4]), ff=st.sampled_from([24, 64]))
+def test_moe_ffn_q_matches_dequantized_ref(bits, ff):
+    d, m, gs = 32, 16, 16
+    x = rand(m, d)
+    w1, w2, w3 = rand(d, ff, scale=0.2), rand(ff, d, scale=0.2), rand(d, ff, scale=0.2)
+    c1, s1, z1 = quantize_np(w1, bits, gs)
+    c2, s2, z2 = quantize_np(w2, bits, gs)
+    c3, s3, z3 = quantize_np(w3, bits, gs)
+    out = moe_ffn_q(x, c1, s1, z1, c2, s2, z2, c3, s3, z3, group_size=gs, bm=8)
+    want = ref.moe_ffn_ref(
+        x,
+        ref.dequant_ref(c1, s1, z1, gs),
+        ref.dequant_ref(c2, s2, z2, gs),
+        ref.dequant_ref(c3, s3, z3, gs),
+    )
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=8, deadline=None)
+@given(seq=st.sampled_from([4, 16, 64]), heads=st.sampled_from([1, 2, 4]))
+def test_attention_matches_ref(seq, heads):
+    d = 32
+    x = rand(seq, d)
+    ws = [rand(d, d, scale=0.2) for _ in range(4)]
+    out = attention(x, *ws, n_heads=heads)
+    want = ref.attention_ref(x, *ws, heads)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-4)
+
+
+def test_attention_causality():
+    d = 16
+    x1 = rand(8, d)
+    x2 = jnp.concatenate([x1[:4], rand(4, d)])
+    ws = [rand(d, d, scale=0.2) for _ in range(4)]
+    a = attention(x1, *ws, n_heads=2)
+    b = attention(x2, *ws, n_heads=2)
+    np.testing.assert_allclose(a[:4], b[:4], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- router
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([1, 8, 32]), e=st.sampled_from([8, 16, 64]))
+def test_router_matches_ref(t, e):
+    d = 32
+    x = rand(t, d)
+    w = rand(d, e, scale=0.3)
+    logits, scores = router(x, w)
+    lw, sw = ref.router_ref(x, w)
+    np.testing.assert_allclose(logits, lw, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(scores, sw, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(scores).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_router_topk_selects_max():
+    x = rand(16, 32)
+    w = rand(32, 8, scale=0.3)
+    _, scores, top_s, top_i = router_topk(x, w, 2)
+    s = np.asarray(scores)
+    for t in range(16):
+        want = np.argsort(-s[t])[:2]
+        assert set(np.asarray(top_i)[t].tolist()) == set(want.tolist())
+        assert np.asarray(top_s)[t, 0] >= np.asarray(top_s)[t, 1]

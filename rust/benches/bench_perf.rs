@@ -1,0 +1,93 @@
+//! Performance micro-benches for the hot paths (EXPERIMENTS.md §Perf):
+//! native GEMM, fused packed dequant-matmul, GPTQ per-layer, model prefill,
+//! PESF overhead. `harness = false` — uses the in-crate timing harness
+//! (criterion is not in the offline registry).
+
+use eac_moe::model::{Model, ModelConfig, Weights};
+use eac_moe::quant::gptq::{gptq_quantize_mat, GptqConfig, Hessian};
+use eac_moe::quant::pack::PackedMat;
+use eac_moe::quant::quantizer::{GroupQuant, QuantConfig};
+use eac_moe::tensor::{matmul, Mat, Pcg64};
+use eac_moe::util::timing::bench;
+
+fn main() {
+    println!("== bench_perf (EAC_MOE_BENCH_MS={}ms/case) ==",
+        std::env::var("EAC_MOE_BENCH_MS").unwrap_or_else(|_| "2000".into()));
+    let mut rng = Pcg64::seeded(1);
+
+    // --- GEMM: the prefill workhorse (tokens x d_model @ d_model x d_ff).
+    for &(m, k, n) in &[(512usize, 128usize, 256usize), (128, 128, 512), (1, 128, 512)] {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        let r = bench(&format!("matmul {m}x{k}x{n}"), || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("    -> {:.2} GFLOP/s", flops / r.mean_ns);
+    }
+
+    // --- Fused packed dequant-matmul vs dequant-then-GEMM (2-bit).
+    let w = Mat::randn(128, 512, 1.0, &mut rng);
+    let gq = GroupQuant::quantize(&w, QuantConfig::new(2, 128));
+    let packed = PackedMat::pack(&gq);
+    for &m in &[1usize, 16, 512] {
+        let x = Mat::randn(m, 128, 1.0, &mut rng);
+        bench(&format!("packed2 fused dequant-matmul m={m}"), || {
+            std::hint::black_box(packed.matmul_dequant(&x));
+        });
+        bench(&format!("dequant-then-matmul      m={m}"), || {
+            let dq = gq.dequantize();
+            std::hint::black_box(matmul(&x, &dq));
+        });
+    }
+
+    // --- GPTQ one expert matrix (the Table-7 dominant cost).
+    let x = Mat::randn(512, 128, 1.0, &mut rng);
+    let mut h = Hessian::new(128);
+    h.update(&x);
+    let w = Mat::randn(128, 256, 1.0, &mut rng);
+    bench("gptq 128x256 @3bit g128", || {
+        std::hint::black_box(gptq_quantize_mat(&w, &h, GptqConfig::new(3, 128)));
+    });
+
+    // --- Model prefill (mixtral-mini shape) with and without PESF.
+    let cfg = ModelConfig {
+        name: "bench".into(),
+        n_layers: 4,
+        d_model: 128,
+        d_ff: 256,
+        n_experts: 8,
+        top_k: 2,
+        n_shared: 0,
+        n_heads: 4,
+        vocab: 512,
+        max_seq: 512,
+    };
+    let model = Model::new(Weights::init(&cfg, 2));
+    let tokens: Vec<u32> = (0..256u32).map(|i| (i * 7) % 512).collect();
+    bench("prefill 256 tok (mixtral-mini shape)", || {
+        std::hint::black_box(model.forward(&tokens));
+    });
+    bench("prefill 256 tok + PESF(0.5)", || {
+        let hooks = eac_moe::model::hooks::Hooks {
+            pesf_alpha: Some(0.5),
+            ..Default::default()
+        };
+        std::hint::black_box(model.forward_with_hooks(&tokens, &hooks));
+    });
+
+    // --- Decode step (kv-cache path; quantization's bandwidth-bound case).
+    let mut cache = eac_moe::model::KvCache::new(model.cfg());
+    for &t in tokens.iter().take(64) {
+        model.decode_step(t, &mut cache, &eac_moe::model::hooks::Hooks::none());
+    }
+    bench("decode step @ctx64", || {
+        let mut c2 = eac_moe::model::KvCache::new(model.cfg());
+        c2.len = cache.len;
+        for li in 0..cfg.n_layers {
+            c2.k[li] = cache.k[li].clone();
+            c2.v[li] = cache.v[li].clone();
+        }
+        std::hint::black_box(model.decode_step(1, &mut c2, &eac_moe::model::hooks::Hooks::none()));
+    });
+}

@@ -1,0 +1,68 @@
+//! Serving-engine benchmarks: batcher overhead, engine throughput scaling
+//! with batch policy and worker count, and PESF's serve-time effect
+//! (the L3 §Perf targets).
+
+use eac_moe::model::{Model, ModelConfig, Weights};
+use eac_moe::prune::pesf::PesfConfig;
+use eac_moe::serve::{BatchPolicy, Batcher, Engine, EngineConfig, PrunePolicy, Request};
+use eac_moe::util::timing::bench;
+use std::time::Duration;
+
+fn model() -> Model {
+    let cfg = ModelConfig {
+        name: "bench".into(),
+        n_layers: 4,
+        d_model: 128,
+        d_ff: 64,
+        n_experts: 64,
+        top_k: 6,
+        n_shared: 2,
+        n_heads: 4,
+        vocab: 512,
+        max_seq: 512,
+    };
+    Model::new(Weights::init(&cfg, 3))
+}
+
+fn reqs(n: u64, len: usize) -> Vec<Request> {
+    let mut mix = eac_moe::data::corpus::WikiMixture::new(55);
+    (0..n).map(|i| Request::new(i, mix.sequence(len).to_vec())).collect()
+}
+
+fn main() {
+    println!("== bench_serving ==");
+
+    // Batcher overhead: push+drain 1k requests, no model work.
+    bench("batcher push+drain 1000 reqs", || {
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(1) });
+        for i in 0..1000 {
+            b.push(Request::new(i, vec![1, 2, 3]));
+        }
+        b.close();
+        let mut n = 0;
+        while let Some(batch) = b.next_batch() {
+            n += batch.len();
+        }
+        assert_eq!(n, 1000);
+    });
+
+    // Engine throughput: deepseek-mini shape, 8 requests x 128 tokens.
+    let m = model();
+    for (name, prune) in [
+        ("engine 8x128 dense", PrunePolicy::None),
+        ("engine 8x128 PESF(0.3)", PrunePolicy::Pesf(PesfConfig { alpha: 0.3 })),
+        ("engine 8x128 PESF(0.7)", PrunePolicy::Pesf(PesfConfig { alpha: 0.7 })),
+    ] {
+        let weights = m.weights.clone();
+        let r = bench(name, || {
+            let engine = Engine::new(
+                Model::new(weights.clone()),
+                EngineConfig { workers: 1, prune, ..Default::default() },
+            );
+            let (resps, _) = engine.serve(reqs(8, 128));
+            assert_eq!(resps.len(), 8);
+        });
+        let toks = 8.0 * 128.0;
+        println!("    -> {:.0} tok/s", toks / (r.mean_ns / 1e9));
+    }
+}

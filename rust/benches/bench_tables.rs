@@ -1,0 +1,34 @@
+//! Regenerates every paper table/figure (deliverable (d)). Each experiment
+//! prints its paper-shaped rows and writes results/<id>.json.
+//!
+//! Scale via EAC_MOE_BENCH_SCALE (default 0.25 — the single-core CI
+//! setting; use 1.0 for the full data volumes).
+//!
+//! ```bash
+//! cargo bench --bench bench_tables                 # all
+//! cargo bench --bench bench_tables -- table2 fig7  # subset
+//! ```
+
+fn main() {
+    let scale: f64 = std::env::var("EAC_MOE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let ids: Vec<&str> = if args.is_empty() {
+        vec![
+            "fig2", "fig10", "table1", "fig4", "fig6", "table2", "fig7", "table3",
+            "table4", "table5", "table6", "table7", "table8", "table9", "fig8", "fig9",
+        ]
+    } else {
+        args.iter().map(|s| s.as_str()).collect()
+    };
+    println!("== bench_tables (scale {scale}) ==");
+    for id in ids {
+        println!("\n################ {id} ################");
+        if let Err(e) = eac_moe::report::experiments::run(id, scale) {
+            eprintln!("experiment {id} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal Adam optimizer for router calibration (the routers are tiny —
+//! d_model × n_experts — so a dependency-free implementation is plenty).
+
+/// Adam state over a flat parameter vector.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
+    }
+
+    /// One update step: params -= lr * mhat / (sqrt(vhat) + eps).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = ||x - target||^2
+        let target = [3.0f32, -2.0, 0.5];
+        let mut x = [0.0f32; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().zip(&target).map(|(xi, ti)| 2.0 * (xi - ti)).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ti) in x.iter().zip(&target) {
+            assert!((xi - ti).abs() < 1e-2, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn zero_grad_no_move() {
+        let mut x = [1.0f32, 2.0];
+        let mut opt = Adam::new(2, 0.1);
+        opt.step(&mut x, &[0.0, 0.0]);
+        assert_eq!(x, [1.0, 2.0]);
+    }
+}

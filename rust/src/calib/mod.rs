@@ -1,0 +1,19 @@
+//! QESC — Quantization with Expert-Selection Calibration (paper §4).
+//!
+//! * [`loss`] — TopK-MSE (Eq. 5) and plain MSE router-calibration losses.
+//! * [`adam`] — the small Adam optimizer used to fit router weights.
+//! * [`shift`] — expert-shift metrics: change-rates 1/2/3 (Fig 6) and the
+//!   shifted-expert rank / loss-mass analysis behind Fig 4.
+//! * [`qesc`] — the layer-by-layer pipeline (Fig 3): quantize MHSA →
+//!   calibrate router → quantize experts, per layer, so selection shift
+//!   never accumulates across layers.
+
+pub mod adam;
+pub mod loss;
+pub mod qesc;
+pub mod shift;
+
+pub use adam::Adam;
+pub use loss::{mse_loss_grad, topk_mse_loss_grad, LossType};
+pub use qesc::{qesc_compress, CompressReport, QescConfig};
+pub use shift::{change_rates, shift_rank_analysis, ChangeRates};

@@ -1,0 +1,211 @@
+//! Expert-shift metrics.
+//!
+//! * [`change_rates`] — the three per-layer metrics plotted in Fig 6:
+//!   change-rate 1 = all of a token's selections changed, change-rate 2 =
+//!   at least one changed, change-rate 3 = half or more changed.
+//! * [`shift_rank_analysis`] — Fig 4: of the experts that were selected at
+//!   full precision but not after quantization ("shifted experts"), what
+//!   fraction still sits within the quantized model's top-R probability
+//!   ranks, and what fraction of the total MSE loss those ranks carry.
+
+use crate::model::hooks::SelectionRecord;
+use crate::tensor::ops::topk_indices;
+use crate::tensor::Mat;
+
+/// Expert-selection change rates relative to a reference (FP) record.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChangeRates {
+    /// Fraction of tokens where ALL selected experts changed.
+    pub all_changed: f32,
+    /// Fraction of tokens where AT LEAST ONE selection changed.
+    pub any_changed: f32,
+    /// Fraction of tokens where HALF OR MORE selections changed.
+    pub half_changed: f32,
+}
+
+/// Compute change rates for one layer between two selection records taken
+/// on the same token stream.
+pub fn change_rates(reference: &SelectionRecord, other: &SelectionRecord, layer: usize) -> ChangeRates {
+    let ref_toks = &reference.layers[layer];
+    let oth_toks = &other.layers[layer];
+    assert_eq!(ref_toks.len(), oth_toks.len(), "records cover different token streams");
+    let n = ref_toks.len();
+    if n == 0 {
+        return ChangeRates::default();
+    }
+    let (mut all_c, mut any_c, mut half_c) = (0usize, 0usize, 0usize);
+    for (a, b) in ref_toks.iter().zip(oth_toks) {
+        let k = a.experts.len();
+        let changed = a
+            .experts
+            .iter()
+            .filter(|e| !b.experts.contains(e))
+            .count();
+        if changed == k {
+            all_c += 1;
+        }
+        if changed > 0 {
+            any_c += 1;
+        }
+        if 2 * changed >= k {
+            half_c += 1;
+        }
+    }
+    ChangeRates {
+        all_changed: all_c as f32 / n as f32,
+        any_changed: any_c as f32 / n as f32,
+        half_changed: half_c as f32 / n as f32,
+    }
+}
+
+/// Averaged change rates across all layers.
+pub fn mean_change_rates(reference: &SelectionRecord, other: &SelectionRecord) -> ChangeRates {
+    let l = reference.layers.len();
+    let mut acc = ChangeRates::default();
+    for i in 0..l {
+        let c = change_rates(reference, other, i);
+        acc.all_changed += c.all_changed;
+        acc.any_changed += c.any_changed;
+        acc.half_changed += c.half_changed;
+    }
+    ChangeRates {
+        all_changed: acc.all_changed / l as f32,
+        any_changed: acc.any_changed / l as f32,
+        half_changed: acc.half_changed / l as f32,
+    }
+}
+
+/// One point of the Fig-4 curves at rank cutoff R.
+#[derive(Clone, Debug)]
+pub struct ShiftRankPoint {
+    pub rank: usize,
+    /// Cumulative fraction of shifted experts whose quantized-model rank < R.
+    pub shifted_within: f32,
+    /// Cumulative fraction of total MSE logit loss carried by ranks < R.
+    pub loss_within: f32,
+}
+
+/// Fig-4 analysis. `fp_logits` / `q_logits`: (tokens × n_experts) router
+/// logits of the FP and quantized models on the same tokens; `k` = experts
+/// selected per token. Returns one point per rank cutoff 1..=n.
+pub fn shift_rank_analysis(fp_logits: &Mat, q_logits: &Mat, k: usize) -> Vec<ShiftRankPoint> {
+    assert_eq!(fp_logits.rows, q_logits.rows);
+    assert_eq!(fp_logits.cols, q_logits.cols);
+    let n = fp_logits.cols;
+    let tokens = fp_logits.rows;
+    let mut shifted_at_rank = vec![0u64; n]; // rank position in q model
+    let mut total_shifted = 0u64;
+    let mut loss_at_rank = vec![0f64; n];
+    let mut total_loss = 0f64;
+    for t in 0..tokens {
+        let fp_top = topk_indices(fp_logits.row(t), k);
+        let q_order = topk_indices(q_logits.row(t), n); // full ranking
+        let q_top: &[usize] = &q_order[..k];
+        // Shifted experts: in fp_top but not q_top. Record their q-rank.
+        for &e in &fp_top {
+            if !q_top.contains(&e) {
+                let rank = q_order.iter().position(|&x| x == e).unwrap();
+                shifted_at_rank[rank] += 1;
+                total_shifted += 1;
+            }
+        }
+        // Loss mass per q-rank position.
+        for (rank, &e) in q_order.iter().enumerate() {
+            let d = (fp_logits.at(t, e) - q_logits.at(t, e)) as f64;
+            loss_at_rank[rank] += d * d;
+            total_loss += d * d;
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut cum_shift = 0u64;
+    let mut cum_loss = 0f64;
+    for r in 0..n {
+        cum_shift += shifted_at_rank[r];
+        cum_loss += loss_at_rank[r];
+        out.push(ShiftRankPoint {
+            rank: r + 1,
+            shifted_within: if total_shifted == 0 {
+                0.0
+            } else {
+                cum_shift as f32 / total_shifted as f32
+            },
+            loss_within: if total_loss == 0.0 { 0.0 } else { (cum_loss / total_loss) as f32 },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::hooks::TokenSelection;
+
+    fn rec(selections: Vec<Vec<u16>>) -> SelectionRecord {
+        let mut r = SelectionRecord::with_layers(1);
+        for e in selections {
+            let scores = vec![0.5; e.len()];
+            r.layers[0].push(TokenSelection { experts: e, scores });
+        }
+        r
+    }
+
+    #[test]
+    fn change_rates_basics() {
+        let a = rec(vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]]);
+        let b = rec(vec![
+            vec![0, 1], // unchanged
+            vec![2, 4], // one changed (half)
+            vec![6, 7], // all changed
+            vec![7, 6], // order differs but same set -> unchanged
+        ]);
+        let c = change_rates(&a, &b, 0);
+        assert!((c.any_changed - 0.5).abs() < 1e-6);
+        assert!((c.all_changed - 0.25).abs() < 1e-6);
+        assert!((c.half_changed - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn identical_records_zero_rates() {
+        let a = rec(vec![vec![0, 1], vec![2, 3]]);
+        let c = change_rates(&a, &a.clone(), 0);
+        assert_eq!(c, ChangeRates::default());
+    }
+
+    #[test]
+    fn shift_rank_monotone_and_bounded() {
+        let mut rng = crate::tensor::Pcg64::seeded(61);
+        let fp = Mat::randn(50, 16, 1.0, &mut rng);
+        // Quantized logits = fp + noise.
+        let mut q = fp.clone();
+        for v in q.data.iter_mut() {
+            *v += rng.gaussian() * 0.3;
+        }
+        let pts = shift_rank_analysis(&fp, &q, 2);
+        assert_eq!(pts.len(), 16);
+        for w in pts.windows(2) {
+            assert!(w[1].shifted_within >= w[0].shifted_within);
+            assert!(w[1].loss_within >= w[0].loss_within - 1e-6);
+        }
+        assert!((pts[15].shifted_within - 1.0).abs() < 1e-6);
+        assert!((pts[15].loss_within - 1.0).abs() < 1e-6);
+        // No expert can shift into rank < k (ranks 0..k are the selected set).
+        assert_eq!(pts[1].shifted_within, 0.0);
+    }
+
+    #[test]
+    fn fig4_premise_shifted_concentrate_near_topk() {
+        // With small perturbations, shifted experts should overwhelmingly be
+        // near the top of the distribution — the paper's Fig-4 observation.
+        let mut rng = crate::tensor::Pcg64::seeded(62);
+        let fp = Mat::randn(200, 64, 1.0, &mut rng);
+        let mut q = fp.clone();
+        for v in q.data.iter_mut() {
+            *v += rng.gaussian() * 0.15;
+        }
+        let pts = shift_rank_analysis(&fp, &q, 6);
+        // >90% of shifted experts within top-16 of 64 ...
+        assert!(pts[15].shifted_within > 0.9, "{}", pts[15].shifted_within);
+        // ... while top-16 carries well under 80% of the loss mass.
+        assert!(pts[15].loss_within < 0.8, "{}", pts[15].loss_within);
+    }
+}

@@ -1,0 +1,91 @@
+//! Shared experiment context: loads pretrained zoo weights from
+//! `artifacts/models/` (written by `python/compile/pretrain.py`), falling
+//! back to seeded random initialization when artifacts are absent (tests,
+//! artifact-free CI), and provides the standard calibration/eval streams.
+
+use crate::data::corpus::WikiMixture;
+use crate::model::{Model, Weights, ZooModel};
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Where pretrained weights live.
+pub fn models_dir() -> PathBuf {
+    crate::runtime::artifacts::ArtifactManifest::default_root().join("models")
+}
+
+/// Load a pretrained zoo model if present, else initialize randomly.
+/// Returns (model, pretrained?).
+pub fn load_or_init_model(zoo: ZooModel) -> (Model, bool) {
+    let path = models_dir().join(format!("{}.bin", zoo.key()));
+    match Weights::load(&path, zoo.key()) {
+        Ok(w) => (Model::new(w), true),
+        Err(_) => (Model::new(Weights::init(&zoo.config(), zoo_seed(zoo))), false),
+    }
+}
+
+/// Load strictly from a path (used by the CLI with --model-path).
+pub fn load_model_from(path: &Path, name: &str) -> Result<Model> {
+    Ok(Model::new(Weights::load(path, name)?))
+}
+
+fn zoo_seed(zoo: ZooModel) -> u64 {
+    match zoo {
+        ZooModel::MixtralMini => 101,
+        ZooModel::PhiMini => 102,
+        ZooModel::DeepseekMini => 103,
+        ZooModel::QwenMini => 104,
+    }
+}
+
+/// Standard data plumbing shared by experiments: the wiki mixture used for
+/// calibration + PPL (WikiText2's role in the paper) and the eval suites.
+pub struct ExperimentContext {
+    /// GPTQ/QESC calibration sequences (paper: 128 × 2048 WikiText2; here
+    /// scaled to the mini models).
+    pub calib: Vec<Vec<u32>>,
+    /// Held-out PPL sequences.
+    pub ppl_eval: Vec<Vec<u32>>,
+    pub seed: u64,
+}
+
+impl ExperimentContext {
+    /// `scale` in (0, 1] shrinks data volumes for quick runs.
+    pub fn new(seed: u64, scale: f64) -> Self {
+        let scale = scale.clamp(0.05, 4.0);
+        let n_calib = ((16.0 * scale).round() as usize).max(2);
+        let n_eval = ((12.0 * scale).round() as usize).max(2);
+        let len = ((128.0 * scale.sqrt()).round() as usize).clamp(32, 512);
+        let mut calib_mix = WikiMixture::new(seed);
+        let mut eval_mix = WikiMixture::new(seed + 5000);
+        ExperimentContext {
+            calib: calib_mix.sequences(n_calib, len),
+            ppl_eval: eval_mix.sequences(n_eval, len),
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_init_when_no_artifacts() {
+        // With a bogus artifacts root, load falls back to random init.
+        std::env::set_var("EAC_MOE_ARTIFACTS", "/nonexistent-eac-moe");
+        let (m, pretrained) = load_or_init_model(ZooModel::MixtralMini);
+        std::env::remove_var("EAC_MOE_ARTIFACTS");
+        assert!(!pretrained);
+        assert_eq!(m.cfg().n_experts, 8);
+    }
+
+    #[test]
+    fn context_scales() {
+        let small = ExperimentContext::new(1, 0.1);
+        let big = ExperimentContext::new(1, 1.0);
+        assert!(small.calib.len() < big.calib.len());
+        assert!(!small.calib.is_empty());
+        // Calibration and eval streams differ.
+        assert_ne!(small.calib[0], small.ppl_eval[0]);
+    }
+}

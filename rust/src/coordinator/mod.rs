@@ -1,0 +1,6 @@
+//! Top-level coordination: model loading, the compression pipeline driver,
+//! and shared experiment context (calibration/eval data plumbing).
+
+pub mod context;
+
+pub use context::{load_or_init_model, ExperimentContext};

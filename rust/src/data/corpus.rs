@@ -1,0 +1,290 @@
+//! Synthetic task-typed token corpora.
+//!
+//! The paper's §3.3 analysis spans 19 datasets in four task families
+//! (QA/CR, Math, Code, French). We reproduce the *statistical structure*
+//! that analysis depends on: each task family owns a distinct region of the
+//! token space plus family-specific bigram dynamics, so a trained MoE
+//! router develops family-specific expert preferences; datasets within a
+//! family are near-identical distributions with different seeds/mixtures,
+//! so intra-family expert-selection similarity is high and inter-family
+//! similarity low (Fig 2).
+//!
+//! The generator is a seeded mixture of Markov chains over a 512-token
+//! vocabulary:
+//!
+//! * tokens [0, 64)    — shared "function words" used by every family;
+//! * tokens [64+112*f, 64+112*(f+1)) — family f's content region;
+//! * each dataset d in family f uses a dataset-specific transition matrix
+//!   drawn from the family prior (seeded by (f, d)).
+//!
+//! The same construction (same constants, same PCG64 streams) is
+//! implemented in `python/compile/datagen.py`; `tests/` cross-checks via
+//! golden token dumps in `artifacts/data/` when present.
+
+use crate::tensor::Pcg64;
+
+/// The four task families of §3.3 / Fig 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskFamily {
+    QaCr,
+    Math,
+    Code,
+    French,
+}
+
+impl TaskFamily {
+    pub const ALL: [TaskFamily; 4] =
+        [TaskFamily::QaCr, TaskFamily::Math, TaskFamily::Code, TaskFamily::French];
+
+    pub fn index(&self) -> usize {
+        match self {
+            TaskFamily::QaCr => 0,
+            TaskFamily::Math => 1,
+            TaskFamily::Code => 2,
+            TaskFamily::French => 3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskFamily::QaCr => "QA/CR",
+            TaskFamily::Math => "Math",
+            TaskFamily::Code => "Code",
+            TaskFamily::French => "French",
+        }
+    }
+}
+
+/// One synthetic dataset: a named stream source in a family.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub family: TaskFamily,
+    /// Dataset id within the family (selects the transition-matrix draw).
+    pub variant: u64,
+}
+
+/// The 19 datasets of §3.3 (names mirror the paper's Appendix A.13) plus
+/// the balanced "wiki" mixture used for calibration and PPL.
+pub const DATASETS: &[DatasetSpec] = &[
+    // QA / Commonsense-Reasoning (7)
+    DatasetSpec { name: "winogrande", family: TaskFamily::QaCr, variant: 0 },
+    DatasetSpec { name: "piqa", family: TaskFamily::QaCr, variant: 1 },
+    DatasetSpec { name: "arc-challenge", family: TaskFamily::QaCr, variant: 2 },
+    DatasetSpec { name: "boolq", family: TaskFamily::QaCr, variant: 3 },
+    DatasetSpec { name: "hellaswag", family: TaskFamily::QaCr, variant: 4 },
+    DatasetSpec { name: "social-iqa", family: TaskFamily::QaCr, variant: 5 },
+    DatasetSpec { name: "openbookqa", family: TaskFamily::QaCr, variant: 6 },
+    // Math (4)
+    DatasetSpec { name: "gsm8k", family: TaskFamily::Math, variant: 0 },
+    DatasetSpec { name: "mathqa", family: TaskFamily::Math, variant: 1 },
+    DatasetSpec { name: "minerva-math", family: TaskFamily::Math, variant: 2 },
+    DatasetSpec { name: "hendrycks-math", family: TaskFamily::Math, variant: 3 },
+    // Code (4)
+    DatasetSpec { name: "humaneval", family: TaskFamily::Code, variant: 0 },
+    DatasetSpec { name: "mbpp", family: TaskFamily::Code, variant: 1 },
+    DatasetSpec { name: "apps", family: TaskFamily::Code, variant: 2 },
+    DatasetSpec { name: "conala", family: TaskFamily::Code, variant: 3 },
+    // French (4)
+    DatasetSpec { name: "lambada-fr", family: TaskFamily::French, variant: 0 },
+    DatasetSpec { name: "xnli-fr", family: TaskFamily::French, variant: 1 },
+    DatasetSpec { name: "paws-fr", family: TaskFamily::French, variant: 2 },
+    DatasetSpec { name: "arc-fr", family: TaskFamily::French, variant: 3 },
+];
+
+pub const VOCAB: usize = 512;
+pub const SHARED_TOKENS: usize = 64;
+pub const FAMILY_SPAN: usize = 112;
+/// Number of latent "topic" states per dataset chain.
+const N_STATES: usize = 12;
+/// Probability of emitting from the shared region.
+const P_SHARED: f64 = 0.25;
+
+/// Find a dataset by name.
+pub fn dataset(name: &str) -> Option<&'static DatasetSpec> {
+    DATASETS.iter().find(|d| d.name == name)
+}
+
+/// Seeded generator for one dataset's token stream.
+pub struct CorpusGen {
+    rng: Pcg64,
+    /// Per-state emission center in the family region.
+    centers: Vec<usize>,
+    /// State transition matrix (N_STATES x N_STATES), row-stochastic.
+    trans: Vec<f32>,
+    state: usize,
+    family_base: usize,
+}
+
+impl CorpusGen {
+    /// Build the generator for (family, variant) with a reproducible seed.
+    pub fn new(spec: &DatasetSpec, seed: u64) -> Self {
+        let f = spec.family.index() as u64;
+        // Family prior stream: shared across the family's datasets.
+        let mut family_rng = Pcg64::new(9000 + f, 1);
+        // Family-level state centers: datasets in a family share most
+        // centers (high intra-family similarity) ...
+        let family_base = SHARED_TOKENS + spec.family.index() * FAMILY_SPAN;
+        let mut centers: Vec<usize> =
+            (0..N_STATES).map(|_| family_rng.below_usize(FAMILY_SPAN)).collect();
+        // ... with a small dataset-specific twist (2 of 12 states move).
+        let mut ds_rng = Pcg64::new(9100 + f * 97 + spec.variant, 2);
+        for _ in 0..2 {
+            let i = ds_rng.below_usize(N_STATES);
+            centers[i] = ds_rng.below_usize(FAMILY_SPAN);
+        }
+        // Transition matrix: family prior + dataset noise.
+        let mut trans = vec![0f32; N_STATES * N_STATES];
+        for i in 0..N_STATES {
+            let mut row_sum = 0f32;
+            for j in 0..N_STATES {
+                let base = family_rng.next_f32();
+                let noise = 0.3 * ds_rng.next_f32();
+                let sticky = if i == j { 1.5 } else { 0.0 };
+                let v = (base + noise + sticky).max(1e-3);
+                trans[i * N_STATES + j] = v;
+                row_sum += v;
+            }
+            for j in 0..N_STATES {
+                trans[i * N_STATES + j] /= row_sum;
+            }
+        }
+        CorpusGen {
+            rng: Pcg64::new(seed, 1000 + f * 31 + spec.variant),
+            centers,
+            trans,
+            state: 0,
+            family_base,
+        }
+    }
+
+    /// Next token.
+    pub fn next_token(&mut self) -> u32 {
+        // Transition.
+        let row = &self.trans[self.state * N_STATES..(self.state + 1) * N_STATES];
+        self.state = self.rng.sample_weighted(row);
+        // Emit.
+        if self.rng.next_f64() < P_SHARED {
+            self.rng.below(SHARED_TOKENS as u64) as u32
+        } else {
+            let center = self.centers[self.state];
+            // Emission: center + small jitter, wrapped within the family span.
+            let jitter = self.rng.below(9) as i64 - 4;
+            let pos = (center as i64 + jitter).rem_euclid(FAMILY_SPAN as i64) as usize;
+            (self.family_base + pos) as u32
+        }
+    }
+
+    /// Generate a sequence of `len` tokens.
+    pub fn sequence(&mut self, len: usize) -> Vec<u32> {
+        (0..len).map(|_| self.next_token()).collect()
+    }
+
+    /// Generate `n` sequences.
+    pub fn sequences(&mut self, n: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..n).map(|_| self.sequence(len)).collect()
+    }
+}
+
+/// The balanced "wiki" mixture: rotates through all 19 datasets —
+/// the calibration / perplexity stream (WikiText2's role).
+pub struct WikiMixture {
+    gens: Vec<CorpusGen>,
+    next: usize,
+}
+
+impl WikiMixture {
+    pub fn new(seed: u64) -> Self {
+        WikiMixture {
+            gens: DATASETS.iter().map(|d| CorpusGen::new(d, seed)).collect(),
+            next: 0,
+        }
+    }
+
+    pub fn sequence(&mut self, len: usize) -> Vec<u32> {
+        let i = self.next;
+        self.next = (self.next + 1) % self.gens.len();
+        self.gens[i].sequence(len)
+    }
+
+    pub fn sequences(&mut self, n: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..n).map(|_| self.sequence(len)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn histogram(tokens: &[u32]) -> Vec<f32> {
+        let mut h = vec![0f32; VOCAB];
+        for &t in tokens {
+            h[t as usize] += 1.0;
+        }
+        let total: f32 = h.iter().sum();
+        h.iter().map(|x| x / total).collect()
+    }
+
+    #[test]
+    fn tokens_in_vocab_and_region() {
+        for spec in DATASETS {
+            let mut g = CorpusGen::new(spec, 1);
+            let seq = g.sequence(500);
+            let lo = SHARED_TOKENS + spec.family.index() * FAMILY_SPAN;
+            let hi = lo + FAMILY_SPAN;
+            for &t in &seq {
+                let t = t as usize;
+                assert!(t < VOCAB);
+                assert!(t < SHARED_TOKENS || (t >= lo && t < hi), "{}: token {t}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = dataset("gsm8k").unwrap();
+        let a = CorpusGen::new(spec, 7).sequence(100);
+        let b = CorpusGen::new(spec, 7).sequence(100);
+        assert_eq!(a, b);
+        let c = CorpusGen::new(spec, 8).sequence(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn intra_family_similarity_exceeds_inter() {
+        // The Fig-2 premise at the token-distribution level.
+        let sim = |a: &str, b: &str| {
+            let ha = histogram(&CorpusGen::new(dataset(a).unwrap(), 3).sequence(4000));
+            let hb = histogram(&CorpusGen::new(dataset(b).unwrap(), 4).sequence(4000));
+            crate::tensor::ops::cosine(&ha, &hb)
+        };
+        let intra = sim("gsm8k", "mathqa");
+        let inter = sim("gsm8k", "humaneval");
+        assert!(intra > inter + 0.2, "intra={intra} inter={inter}");
+        let intra2 = sim("piqa", "boolq");
+        let inter2 = sim("piqa", "lambada-fr");
+        assert!(intra2 > inter2 + 0.2, "intra={intra2} inter={inter2}");
+    }
+
+    #[test]
+    fn wiki_mixture_covers_all_families() {
+        let mut w = WikiMixture::new(5);
+        let seqs = w.sequences(19, 64);
+        let mut seen = [false; 4];
+        for s in &seqs {
+            for &t in s {
+                if (t as usize) >= SHARED_TOKENS {
+                    seen[(t as usize - SHARED_TOKENS) / FAMILY_SPAN] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn dataset_lookup() {
+        assert!(dataset("hellaswag").is_some());
+        assert!(dataset("nope").is_none());
+        assert_eq!(DATASETS.len(), 19);
+    }
+}

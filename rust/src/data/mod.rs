@@ -1,0 +1,8 @@
+//! Synthetic task-typed corpora (DESIGN.md §2 substitution for the paper's
+//! 19 evaluation datasets) and dataset IO shared with the Python pretrainer.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::{CorpusGen, TaskFamily, DATASETS};
+pub use tasks::{ZeroShotTask, zero_shot_suite};

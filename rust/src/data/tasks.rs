@@ -1,0 +1,159 @@
+//! Synthetic zero-shot task suite — the LM-Harness substitution
+//! (DESIGN.md §2): multiple-choice items scored by LM likelihood, exactly
+//! the harness protocol (accuracy = argmax over per-choice log-likelihood).
+//!
+//! Each item is a context drawn from one dataset's generator, a *correct*
+//! continuation produced by continuing the same chain, and distractors
+//! drawn from other datasets (same family → hard negatives; other family →
+//! easy negatives). A model that has learned the corpus statistics scores
+//! well above chance; compression that damages the experts a task family
+//! relies on damages that task's accuracy — the degradation signal every
+//! accuracy table in the paper measures.
+
+use super::corpus::{dataset, CorpusGen, DatasetSpec, TaskFamily, DATASETS};
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub context: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+/// A named task: a bag of items plus its family attribution.
+#[derive(Clone, Debug)]
+pub struct ZeroShotTask {
+    pub name: &'static str,
+    pub family: TaskFamily,
+    pub items: Vec<TaskItem>,
+}
+
+impl ZeroShotTask {
+    pub fn chance_accuracy(&self) -> f32 {
+        if self.items.is_empty() {
+            return 0.0;
+        }
+        let k: usize = self.items.iter().map(|i| i.choices.len()).sum();
+        self.items.len() as f32 / k as f32
+    }
+}
+
+/// Build one task over a primary dataset.
+fn build_task(
+    name: &'static str,
+    primary: &DatasetSpec,
+    n_items: usize,
+    ctx_len: usize,
+    cont_len: usize,
+    seed: u64,
+) -> ZeroShotTask {
+    let mut items = Vec::with_capacity(n_items);
+    // Distractors: one continuation from each *other* family. A model that
+    // has learned the corpus assigns the in-family continuation a far
+    // higher likelihood — and that judgement routes through the family's
+    // experts, so compression damage to those experts damages exactly this
+    // task (the paper's task/expert coupling). Within-family negatives are
+    // statistically near-ties by construction (the emission distributions
+    // overlap), so they carry no usable signal and are not used.
+    let foreign: Vec<&DatasetSpec> = crate::data::corpus::TaskFamily::ALL
+        .iter()
+        .filter(|f| **f != primary.family)
+        .map(|f| DATASETS.iter().find(|d| d.family == *f).unwrap())
+        .collect();
+    for i in 0..n_items {
+        let mut g = CorpusGen::new(primary, seed * 1000 + i as u64);
+        let context = g.sequence(ctx_len);
+        let correct_cont = g.sequence(cont_len); // same chain state: in-distribution
+        let mut choices = vec![correct_cont];
+        for (fi, spec) in foreign.iter().enumerate() {
+            choices.push(
+                CorpusGen::new(spec, seed * 2000 + i as u64 * 7 + fi as u64).sequence(cont_len),
+            );
+        }
+        // Deterministically rotate the correct answer's position.
+        let correct = i % choices.len();
+        choices.swap(0, correct);
+        items.push(TaskItem { context, choices, correct });
+    }
+    ZeroShotTask { name, family: primary.family, items }
+}
+
+/// The 8 zero-shot tasks of Table 2/3 (names mirror the paper's suite).
+pub fn zero_shot_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
+    let d = |n: &str| dataset(n).unwrap();
+    vec![
+        build_task("winogrande", d("winogrande"), n_items, 24, 8, seed + 1),
+        build_task("piqa", d("piqa"), n_items, 24, 8, seed + 2),
+        build_task("arc-easy", d("arc-challenge"), n_items, 20, 6, seed + 3),
+        build_task("arc-challenge", d("arc-challenge"), n_items, 28, 10, seed + 4),
+        build_task("boolq", d("boolq"), n_items, 24, 8, seed + 5),
+        build_task("hellaswag", d("hellaswag"), n_items, 24, 8, seed + 6),
+        build_task("mathqa", d("mathqa"), n_items, 24, 8, seed + 7),
+        build_task("mmlu", d("social-iqa"), n_items, 24, 8, seed + 8),
+    ]
+}
+
+/// The "challenging tasks" of Appendix A.2: longer dependency chains,
+/// content-token heavy (GSM8K / HumanEval roles).
+pub fn challenging_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
+    let d = |n: &str| dataset(n).unwrap();
+    vec![
+        build_task("gsm8k", d("gsm8k"), n_items, 48, 16, seed + 11),
+        build_task("humaneval", d("humaneval"), n_items, 48, 16, seed + 12),
+    ]
+}
+
+/// Per-family probe tasks for the Table-9 overfitting experiment:
+/// (hellaswag: QA/CR, mathqa: Math, lambada-fr: French, conala: Code).
+pub fn table9_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
+    let d = |n: &str| dataset(n).unwrap();
+    vec![
+        build_task("hellaswag", d("hellaswag"), n_items, 24, 8, seed + 21),
+        build_task("mathqa", d("mathqa"), n_items, 24, 8, seed + 22),
+        build_task("lambada-fr", d("lambada-fr"), n_items, 24, 8, seed + 23),
+        build_task("conala", d("conala"), n_items, 24, 8, seed + 24),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_shapes() {
+        let suite = zero_shot_suite(5, 1);
+        assert_eq!(suite.len(), 8);
+        for t in &suite {
+            assert_eq!(t.items.len(), 5);
+            for item in &t.items {
+                assert_eq!(item.choices.len(), 4);
+                assert!(item.correct < 4);
+                assert!(!item.context.is_empty());
+            }
+            assert!((t.chance_accuracy() - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = zero_shot_suite(3, 9);
+        let b = zero_shot_suite(3, 9);
+        assert_eq!(a[0].items[0].context, b[0].items[0].context);
+        assert_eq!(a[0].items[2].correct, b[0].items[2].correct);
+    }
+
+    #[test]
+    fn correct_positions_rotate() {
+        let suite = zero_shot_suite(8, 2);
+        let positions: std::collections::BTreeSet<usize> =
+            suite[0].items.iter().map(|i| i.correct).collect();
+        assert!(positions.len() > 1, "correct answer position must vary");
+    }
+
+    #[test]
+    fn challenging_items_are_longer() {
+        let z = zero_shot_suite(2, 3);
+        let c = challenging_suite(2, 3);
+        assert!(c[0].items[0].context.len() > z[0].items[0].context.len());
+    }
+}

@@ -1,0 +1,130 @@
+//! Expert-selection analysis (paper §3.3, Fig 2, Appendix A.11):
+//! per-dataset ES frequency profiles, pairwise cosine similarity, and
+//! sparsity statistics.
+
+use crate::data::corpus::{CorpusGen, DatasetSpec};
+use crate::model::hooks::Hooks;
+use crate::model::Model;
+use crate::tensor::ops::cosine;
+
+/// The flattened ES frequency profile P(d) of one dataset (Eq. 3).
+#[derive(Clone, Debug)]
+pub struct EsProfile {
+    pub dataset: String,
+    pub family: &'static str,
+    /// Flattened per-layer frequencies, length n_layers * n_experts.
+    pub profile: Vec<f32>,
+    /// Per-layer frequencies (kept for the Fig 10/11 dumps).
+    pub per_layer: Vec<Vec<f32>>,
+}
+
+/// Record ES frequencies for a model over one dataset generator.
+pub fn es_frequencies(
+    model: &Model,
+    spec: &DatasetSpec,
+    n_seqs: usize,
+    seq_len: usize,
+    seed: u64,
+) -> EsProfile {
+    let cfg = model.cfg();
+    let mut gen = CorpusGen::new(spec, seed);
+    let hooks = Hooks::recording(cfg.n_layers);
+    for _ in 0..n_seqs {
+        let seq = gen.sequence(seq_len);
+        model.forward_with_hooks(&seq, &hooks);
+    }
+    let rec = hooks.take_selections().unwrap();
+    EsProfile {
+        dataset: spec.name.to_string(),
+        family: spec.family.name(),
+        profile: rec.flat_frequency(cfg.n_experts),
+        per_layer: (0..cfg.n_layers).map(|l| rec.frequency(l, cfg.n_experts)).collect(),
+    }
+}
+
+/// Pairwise cosine similarity matrix over profiles (Eq. 4 / Fig 2).
+pub fn es_similarity_matrix(profiles: &[EsProfile]) -> Vec<Vec<f32>> {
+    let n = profiles.len();
+    let mut m = vec![vec![0f32; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            m[i][j] = cosine(&profiles[i].profile, &profiles[j].profile);
+        }
+    }
+    m
+}
+
+/// Sparsity diagnostic (Appendix A.11): per layer, the max and min expert
+/// frequency; sparse routing shows max >> balanced (1/N) >> min.
+pub fn sparsity_stats(profile: &EsProfile) -> Vec<(f32, f32)> {
+    profile
+        .per_layer
+        .iter()
+        .map(|f| {
+            let mx = f.iter().cloned().fold(0.0f32, f32::max);
+            let mn = f.iter().cloned().fold(1.0f32, f32::min);
+            (mx, mn)
+        })
+        .collect()
+}
+
+/// Mean intra-family vs inter-family similarity from a similarity matrix.
+pub fn intra_inter_summary(profiles: &[EsProfile], sim: &[Vec<f32>]) -> (f32, f32) {
+    let mut intra = (0f64, 0usize);
+    let mut inter = (0f64, 0usize);
+    for i in 0..profiles.len() {
+        for j in 0..i {
+            if profiles[i].family == profiles[j].family {
+                intra.0 += sim[i][j] as f64;
+                intra.1 += 1;
+            } else {
+                inter.0 += sim[i][j] as f64;
+                inter.1 += 1;
+            }
+        }
+    }
+    (
+        (intra.0 / intra.1.max(1) as f64) as f32,
+        (inter.0 / inter.1.max(1) as f64) as f32,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::DATASETS;
+    use crate::model::{ModelConfig, Weights};
+
+    #[test]
+    fn profiles_and_similarity_shapes() {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 8,
+            top_k: 2,
+            n_shared: 0,
+            n_heads: 2,
+            vocab: 512,
+            max_seq: 64,
+        };
+        let m = Model::new(Weights::init(&cfg, 41));
+        let profiles: Vec<EsProfile> =
+            DATASETS[..4].iter().map(|d| es_frequencies(&m, d, 2, 24, 3)).collect();
+        assert_eq!(profiles[0].profile.len(), 2 * 8);
+        let sim = es_similarity_matrix(&profiles);
+        for i in 0..4 {
+            assert!((sim[i][i] - 1.0).abs() < 1e-5);
+            for j in 0..4 {
+                assert!(sim[i][j] >= -1.0 - 1e-5 && sim[i][j] <= 1.0 + 1e-5);
+                assert!((sim[i][j] - sim[j][i]).abs() < 1e-5);
+            }
+        }
+        let stats = sparsity_stats(&profiles[0]);
+        assert_eq!(stats.len(), 2);
+        for (mx, mn) in stats {
+            assert!(mx >= mn);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation stack: perplexity, zero-shot likelihood scoring, and
+//! expert-selection analysis (Fig 2 / Fig 10-13).
+
+pub mod es_analysis;
+pub mod ppl;
+pub mod zeroshot;
+
+pub use es_analysis::{es_frequencies, es_similarity_matrix, EsProfile};
+pub use ppl::{perplexity, perplexity_with_hooks};
+pub use zeroshot::{eval_task, eval_suite, SuiteResult, TaskResult};

@@ -1,0 +1,69 @@
+//! Perplexity evaluation (the paper's WikiText2 PPL column).
+
+use crate::model::hooks::Hooks;
+use crate::model::Model;
+use crate::tensor::ops::log_softmax_into;
+
+/// Perplexity of the model over token sequences: exp(mean NLL) where the
+/// NLL is over next-token predictions within each sequence.
+pub fn perplexity(model: &Model, seqs: &[Vec<u32>]) -> f64 {
+    perplexity_with_hooks(model, seqs, || Hooks::none())
+}
+
+/// Perplexity with per-sequence hooks (PESF passes a fresh mask factory).
+pub fn perplexity_with_hooks<F: Fn() -> Hooks>(model: &Model, seqs: &[Vec<u32>], hooks: F) -> f64 {
+    let mut total_nll = 0f64;
+    let mut count = 0usize;
+    let vocab = model.cfg().vocab;
+    let mut scratch = vec![0f32; vocab];
+    for seq in seqs {
+        if seq.len() < 2 {
+            continue;
+        }
+        let logits = model.forward_with_hooks(seq, &hooks());
+        for t in 0..seq.len() - 1 {
+            log_softmax_into(logits.row(t), &mut scratch);
+            total_nll -= scratch[seq[t + 1] as usize] as f64;
+            count += 1;
+        }
+    }
+    (total_nll / count.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Weights};
+
+    fn tiny() -> Model {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 4,
+            top_k: 2,
+            n_shared: 0,
+            n_heads: 2,
+            vocab: 32,
+            max_seq: 64,
+        };
+        Model::new(Weights::init(&cfg, 31))
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // An untrained model ~ uniform predictions: PPL ≈ vocab size.
+        let m = tiny();
+        let seqs: Vec<Vec<u32>> = vec![(0..30).map(|i| (i * 5) % 32).collect()];
+        let ppl = perplexity(&m, &seqs);
+        assert!(ppl > 8.0 && ppl < 80.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn short_sequences_skipped() {
+        let m = tiny();
+        let ppl = perplexity(&m, &[vec![1], vec![2, 3, 4, 5]]);
+        assert!(ppl.is_finite());
+    }
+}

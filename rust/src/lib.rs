@@ -1,0 +1,33 @@
+//! # EAC-MoE — Expert-Selection Aware Compressor for MoE LLMs
+//!
+//! Rust + JAX + Pallas reproduction of *EAC-MoE* (ACL 2025): compression of
+//! Mixture-of-Experts language models via
+//!
+//! * **QESC** — Quantization with Expert-Selection Calibration: layer-by-layer
+//!   GPTQ weight quantization interleaved with router calibration (TopK-MSE)
+//!   that undoes quantization-induced *expert-shift* (see [`calib`]).
+//! * **PESF** — Pruning based on Expert-Selection Frequency: dynamic,
+//!   per-sequence expert pruning during prefill (see [`prune`]).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack: Pallas
+//! kernels (L1) and a JAX model (L2) are AOT-compiled to HLO artifacts at
+//! build time (`make artifacts`) and executed from Rust through PJRT
+//! ([`runtime`]); Python never runs on the request path. A fully native
+//! forward path ([`model`]) mirrors the AOT graph for compression-time
+//! activation capture and artifact-free testing.
+
+pub mod calib;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod prune;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,281 @@
+//! `eac-moe` CLI — the leader entrypoint.
+//!
+//! Subcommands (no clap in the offline registry; args are parsed by hand):
+//!
+//! ```text
+//! eac-moe info                          environment + artifact status
+//! eac-moe compress  --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]
+//! eac-moe eval      --model <key> [--alpha A] [--scale S]
+//! eac-moe serve     --model <key> [--alpha A] [--requests N] [--len L]
+//! eac-moe analyze-es --model <key> [--scale S]
+//! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|all
+//! ```
+
+use eac_moe::coordinator::{load_or_init_model, ExperimentContext};
+use eac_moe::model::ZooModel;
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = args[0].as_str();
+    let opts = parse_opts(&args[1..]);
+    let result = match cmd {
+        "info" => cmd_info(),
+        "compress" => cmd_compress(&opts),
+        "eval" => cmd_eval(&opts),
+        "serve" => cmd_serve(&opts),
+        "analyze-es" => cmd_analyze_es(&opts),
+        "experiment" => {
+            let id = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let opts = parse_opts(&args[2..]);
+            eac_moe::report::experiments::run(id, scale(&opts))
+        }
+        "--help" | "-h" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "eac-moe — Expert-Selection Aware Compressor for MoE LLMs (ACL 2025 reproduction)\n\
+         \n\
+         USAGE: eac-moe <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 info                         environment + artifact status\n\
+         \x20 compress   --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]\n\
+         \x20 eval       --model <key> [--alpha A] [--scale S]\n\
+         \x20 serve      --model <key> [--alpha A] [--requests N] [--len L] [--workers W]\n\
+         \x20 analyze-es --model <key> [--scale S]\n\
+         \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
+         \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|all)\n\
+         \n\
+         MODELS: mixtral-mini | phi-mini | deepseek-mini | qwen-mini\n\
+         SCALE:  data-volume multiplier for experiments (default 1.0; use 0.2 for quick runs)"
+    );
+}
+
+fn parse_opts(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn model_key(opts: &HashMap<String, String>) -> ZooModel {
+    let key = opts.get("model").map(|s| s.as_str()).unwrap_or("deepseek-mini");
+    ZooModel::from_key(key).unwrap_or_else(|| {
+        eprintln!("unknown model '{key}' (use mixtral-mini|phi-mini|deepseek-mini|qwen-mini)");
+        std::process::exit(2);
+    })
+}
+
+fn scale(opts: &HashMap<String, String>) -> f64 {
+    opts.get("scale").and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+fn cmd_info() -> eac_moe::Result<()> {
+    println!("eac-moe v{}", env!("CARGO_PKG_VERSION"));
+    let root = eac_moe::runtime::ArtifactManifest::default_root();
+    println!("artifacts root: {}", root.display());
+    if eac_moe::runtime::ArtifactManifest::present(&root) {
+        let m = eac_moe::runtime::ArtifactManifest::load(&root)?;
+        println!("manifest: {} entries", m.entries.len());
+    } else {
+        println!("manifest: ABSENT (run `make artifacts`; native fallback paths active)");
+    }
+    for z in ZooModel::ALL {
+        let (model, pretrained) = load_or_init_model(z);
+        println!(
+            "model {:<16} params={:>9}  experts={}x{} top{}+{}shared  weights={}",
+            z.key(),
+            model.weights.param_count(),
+            model.cfg().n_layers,
+            model.cfg().n_experts,
+            model.cfg().top_k,
+            model.cfg().n_shared,
+            if pretrained { "pretrained" } else { "random-init (pretrain artifacts missing)" }
+        );
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt: platform={} devices={}", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt: UNAVAILABLE ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_compress(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
+    use eac_moe::calib::qesc::{qesc_compress, QescConfig};
+    use eac_moe::quant::alloc::Allocator;
+    let zoo = model_key(opts);
+    let (model, pretrained) = load_or_init_model(zoo);
+    if !pretrained {
+        eprintln!("warning: using random-init weights (run `make artifacts` for pretrained)");
+    }
+    let ctx = ExperimentContext::new(7, scale(opts));
+    let bits = opts.get("bits").map(|s| s.as_str()).unwrap_or("3");
+    let k = QescConfig::default_k(model.cfg());
+    let mut cfg = match bits {
+        "2" => QescConfig::qesc(2, k),
+        "2.5" => QescConfig {
+            expert_alloc: Allocator::HalfSplit { hi: 3, lo: 2 },
+            ..QescConfig::qesc(3, k)
+        },
+        "3" => QescConfig::qesc(3, k),
+        other => anyhow::bail!("--bits must be 2, 2.5 or 3 (got {other})"),
+    };
+    if opts.contains_key("no-calib") {
+        cfg.calib_router = false;
+    }
+    println!("compressing {} at expert-bits={} calib_router={}", zoo.key(), bits, cfg.calib_router);
+    let t0 = std::time::Instant::now();
+    let (qmodel, report) = qesc_compress(&model, &ctx.calib, &cfg);
+    println!(
+        "done in {:.1}s (gptq {:.1}s, router-calib {:.1}s = {:.1}%)",
+        t0.elapsed().as_secs_f64(),
+        report.gptq_secs,
+        report.router_calib_secs,
+        100.0 * report.router_calib_secs / (report.gptq_secs + report.router_calib_secs).max(1e-9)
+    );
+    println!(
+        "storage: fp32 {:.2} MB -> packed {:.2} MB ({:.2}x)",
+        report.fp_bytes as f64 / 1e6,
+        report.compressed_bytes as f64 / 1e6,
+        report.compression_ratio()
+    );
+    let ppl_fp = eac_moe::eval::perplexity(&model, &ctx.ppl_eval);
+    let ppl_q = eac_moe::eval::perplexity(&qmodel, &ctx.ppl_eval);
+    println!("ppl: fp {ppl_fp:.3} -> quantized {ppl_q:.3}");
+    if let Some(out) = opts.get("out") {
+        qmodel.weights.save(std::path::Path::new(out))?;
+        println!("saved compressed weights to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
+    use eac_moe::data::tasks::zero_shot_suite;
+    use eac_moe::model::hooks::Hooks;
+    let zoo = model_key(opts);
+    let (model, _) = load_or_init_model(zoo);
+    let ctx = ExperimentContext::new(11, scale(opts));
+    let alpha: f32 = opts.get("alpha").and_then(|s| s.parse().ok()).unwrap_or(0.0);
+    let n_items = ((24.0 * scale(opts)) as usize).max(4);
+    let suite = zero_shot_suite(n_items, 13);
+    println!("evaluating {} (alpha={alpha})", zoo.key());
+    let ppl = if alpha > 0.0 {
+        let cfg = eac_moe::prune::pesf::PesfConfig { alpha };
+        let mcfg = model.cfg().clone();
+        eac_moe::eval::ppl::perplexity_with_hooks(&model, &ctx.ppl_eval, || {
+            let _ = &cfg;
+            Hooks::none()
+        });
+        // PESF PPL path: use pesf_prefill per sequence.
+        let mut nll = 0f64;
+        let mut cnt = 0usize;
+        let mut scratch = vec![0f32; mcfg.vocab];
+        for seq in &ctx.ppl_eval {
+            let (logits, _) = eac_moe::prune::pesf::pesf_prefill(&model, seq, cfg);
+            for t in 0..seq.len() - 1 {
+                eac_moe::tensor::ops::log_softmax_into(logits.row(t), &mut scratch);
+                nll -= scratch[seq[t + 1] as usize] as f64;
+                cnt += 1;
+            }
+        }
+        (nll / cnt as f64).exp()
+    } else {
+        eac_moe::eval::perplexity(&model, &ctx.ppl_eval)
+    };
+    println!("ppl: {ppl:.3}");
+    let hooks_factory = || Hooks::none();
+    let res = eac_moe::eval::eval_suite(&model, &suite, hooks_factory);
+    let mut table = eac_moe::report::Table::new("zero-shot", &["task", "acc%", "secs"]);
+    for t in &res.tasks {
+        table.row(vec![t.name.clone(), format!("{:.2}", t.accuracy), format!("{:.2}", t.wall_secs)]);
+    }
+    table.row(vec!["MEAN".into(), format!("{:.2}", res.mean_accuracy()), format!("{:.2}", res.total_secs())]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
+    use eac_moe::serve::{Engine, EngineConfig, PrunePolicy, Request};
+    let zoo = model_key(opts);
+    let (model, _) = load_or_init_model(zoo);
+    let alpha: f32 = opts.get("alpha").and_then(|s| s.parse().ok()).unwrap_or(0.0);
+    let n: u64 = opts.get("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let len: usize = opts.get("len").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let workers: usize = opts.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let prune = if alpha > 0.0 {
+        PrunePolicy::Pesf(eac_moe::prune::pesf::PesfConfig { alpha })
+    } else {
+        PrunePolicy::None
+    };
+    let cfg = EngineConfig { workers, prune, ..Default::default() };
+    let engine = Engine::new(model, cfg);
+    let mut mix = eac_moe::data::corpus::WikiMixture::new(21);
+    let reqs: Vec<Request> = (0..n).map(|i| Request::new(i, mix.sequence(len))).collect();
+    println!("serving {n} requests of len {len} on {} (alpha={alpha}, workers={workers})", zoo.key());
+    let (_resps, metrics) = engine.serve(reqs);
+    println!("{}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_analyze_es(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
+    use eac_moe::data::corpus::DATASETS;
+    use eac_moe::eval::es_analysis::*;
+    let zoo = model_key(opts);
+    let (model, pretrained) = load_or_init_model(zoo);
+    if !pretrained {
+        eprintln!("warning: ES analysis on random-init weights shows no task structure");
+    }
+    let s = scale(opts);
+    let n_seqs = ((6.0 * s) as usize).max(2);
+    let profiles: Vec<EsProfile> =
+        DATASETS.iter().map(|d| es_frequencies(&model, d, n_seqs, 96, 17)).collect();
+    let sim = es_similarity_matrix(&profiles);
+    let (intra, inter) = intra_inter_summary(&profiles, &sim);
+    println!("ES similarity on {} ({} datasets):", zoo.key(), profiles.len());
+    println!("  intra-family mean cosine: {intra:.3}");
+    println!("  inter-family mean cosine: {inter:.3}");
+    let mut table = eac_moe::report::Table::new(
+        "pairwise cosine (first 8 datasets)",
+        &["dataset", "w.grande", "piqa", "arc-c", "boolq", "hswag", "s-iqa", "obqa", "gsm8k"],
+    );
+    for i in 0..8.min(profiles.len()) {
+        let mut row = vec![profiles[i].dataset.clone()];
+        for j in 0..8.min(profiles.len()) {
+            row.push(format!("{:.2}", sim[i][j]));
+        }
+        table.row(row);
+    }
+    table.print();
+    Ok(())
+}

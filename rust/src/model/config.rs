@@ -1,0 +1,192 @@
+//! Model-zoo configurations: architecture-faithful miniatures of the four
+//! MoE LLMs evaluated in the paper (DESIGN.md §2).
+
+/// Architecture of one MoE transformer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// Number of routed experts per MoE layer.
+    pub n_experts: usize,
+    /// Experts selected per token.
+    pub top_k: usize,
+    /// Always-active shared experts (DeepSeek/Qwen style); 0 for Mixtral/Phi.
+    pub n_shared: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + attention + routers + experts).
+    pub fn param_count(&self) -> usize {
+        let emb = self.vocab * self.d_model; // tied in/out embedding
+        let attn = 4 * self.d_model * self.d_model; // q,k,v,o
+        let norms = 2 * self.d_model;
+        let router = self.d_model * self.n_experts;
+        let expert = 3 * self.d_model * self.d_ff; // w1, w2, w3 (SwiGLU)
+        let per_layer = attn + norms + router + (self.n_experts + self.n_shared) * expert;
+        emb + self.n_layers * per_layer + self.d_model // final norm
+    }
+
+    /// Parameter count of all experts only (what QESC quantizes at low bit).
+    pub fn expert_param_count(&self) -> usize {
+        self.n_layers * (self.n_experts + self.n_shared) * 3 * self.d_model * self.d_ff
+    }
+
+    /// Parameter count of MHSA (quantized at 4 bit in the paper).
+    pub fn mhsa_param_count(&self) -> usize {
+        self.n_layers * 4 * self.d_model * self.d_model
+    }
+
+    /// Router parameters (kept full-precision, ~0.03% of total — Table 11).
+    pub fn router_param_count(&self) -> usize {
+        self.n_layers * self.d_model * self.n_experts
+    }
+}
+
+/// The four miniature models mirroring the paper's zoo (Table/DESIGN §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ZooModel {
+    /// Mixtral-8x7B proxy: 8 experts, top-2, no shared.
+    MixtralMini,
+    /// Phi3.5-moe proxy: 16 experts, top-2.
+    PhiMini,
+    /// Deepseek-moe-16b proxy: 64 experts, top-6, 2 shared.
+    DeepseekMini,
+    /// Qwen1.5-MoE-A2.7B proxy: 60 experts, top-4, 4 shared.
+    QwenMini,
+}
+
+impl ZooModel {
+    pub const ALL: [ZooModel; 4] =
+        [ZooModel::MixtralMini, ZooModel::PhiMini, ZooModel::DeepseekMini, ZooModel::QwenMini];
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            ZooModel::MixtralMini => "mixtral-mini",
+            ZooModel::PhiMini => "phi-mini",
+            ZooModel::DeepseekMini => "deepseek-mini",
+            ZooModel::QwenMini => "qwen-mini",
+        }
+    }
+
+    /// Display name used in paper-style tables.
+    pub fn display(&self) -> &'static str {
+        match self {
+            ZooModel::MixtralMini => "Mixtral-8x7B (mini)",
+            ZooModel::PhiMini => "Phi3.5-moe (mini)",
+            ZooModel::DeepseekMini => "Deepseek-moe-16b (mini)",
+            ZooModel::QwenMini => "Qwen1.5-MoE-A2.7B (mini)",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<ZooModel> {
+        ZooModel::ALL.iter().copied().find(|m| m.key() == key)
+    }
+
+    pub fn config(&self) -> ModelConfig {
+        match self {
+            ZooModel::MixtralMini => ModelConfig {
+                name: self.key().into(),
+                n_layers: 4,
+                d_model: 128,
+                d_ff: 256,
+                n_experts: 8,
+                top_k: 2,
+                n_shared: 0,
+                n_heads: 4,
+                vocab: 512,
+                max_seq: 512,
+            },
+            ZooModel::PhiMini => ModelConfig {
+                name: self.key().into(),
+                n_layers: 4,
+                d_model: 128,
+                d_ff: 224,
+                n_experts: 16,
+                top_k: 2,
+                n_shared: 0,
+                n_heads: 4,
+                vocab: 512,
+                max_seq: 512,
+            },
+            ZooModel::DeepseekMini => ModelConfig {
+                name: self.key().into(),
+                n_layers: 4,
+                d_model: 128,
+                d_ff: 64,
+                n_experts: 64,
+                top_k: 6,
+                n_shared: 2,
+                n_heads: 4,
+                vocab: 512,
+                max_seq: 512,
+            },
+            ZooModel::QwenMini => ModelConfig {
+                name: self.key().into(),
+                n_layers: 4,
+                d_model: 128,
+                d_ff: 64,
+                n_experts: 60,
+                top_k: 4,
+                n_shared: 4,
+                n_heads: 4,
+                vocab: 512,
+                max_seq: 512,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_shapes_match_paper_ratios() {
+        let ds = ZooModel::DeepseekMini.config();
+        assert_eq!(ds.n_experts, 64);
+        assert_eq!(ds.top_k, 6);
+        assert_eq!(ds.n_shared, 2);
+        let qw = ZooModel::QwenMini.config();
+        assert_eq!(qw.n_experts, 60);
+        assert_eq!(qw.n_shared, 4);
+    }
+
+    #[test]
+    fn experts_dominate_params() {
+        // Paper Table 11: experts are ~97% of non-embedding params. Our minis
+        // are smaller so the ratio is lower, but experts must still dominate.
+        for m in ZooModel::ALL {
+            let c = m.config();
+            let non_emb = c.param_count() - c.vocab * c.d_model;
+            let frac = c.expert_param_count() as f64 / non_emb as f64;
+            assert!(frac > 0.65, "{}: expert frac {frac}", c.name);
+            let router_frac = c.router_param_count() as f64 / non_emb as f64;
+            assert!(router_frac < 0.02, "{}: router frac {router_frac}", c.name);
+        }
+    }
+
+    #[test]
+    fn key_roundtrip() {
+        for m in ZooModel::ALL {
+            assert_eq!(ZooModel::from_key(m.key()), Some(m));
+        }
+        assert_eq!(ZooModel::from_key("nope"), None);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in ZooModel::ALL {
+            let c = m.config();
+            assert_eq!(c.head_dim() * c.n_heads, c.d_model);
+        }
+    }
+}

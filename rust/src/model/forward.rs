@@ -1,0 +1,459 @@
+//! Native forward pass of the MoE transformer (prefill + kv-cache decode).
+//!
+//! This mirrors the AOT-compiled JAX graph (L2) exactly — pre-norm blocks,
+//! causal MHSA, SwiGLU experts, softmax-then-top-k routing with top-k score
+//! renormalization (paper Eq. 2) — and adds the hooks the compression
+//! pipeline needs. Expert execution is grouped: tokens routed to the same
+//! expert are gathered and run through the expert FFN as one GEMM, so
+//! skipping an expert (PESF) skips real work, which is exactly the latency
+//! model the paper's speedup numbers rely on.
+
+use super::config::ModelConfig;
+use super::hooks::{Hooks, TokenSelection};
+use super::weights::{ExpertWeights, LayerWeights, Weights};
+use crate::tensor::ops::{rmsnorm, silu, softmax_inplace, topk_indices};
+use crate::tensor::{matmul, Mat};
+
+/// Diagnostic output of one MoE layer (used by tests/analysis).
+#[derive(Clone, Debug)]
+pub struct MoeLayerOut {
+    /// Per-expert token counts after any pruning.
+    pub expert_tokens: Vec<usize>,
+}
+
+/// A runnable model: weights + forward implementations.
+pub struct Model {
+    pub weights: Weights,
+}
+
+/// KV cache for incremental decode: per layer, (seq, d_model) K and V.
+pub struct KvCache {
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            len: 0,
+        }
+    }
+}
+
+impl Model {
+    pub fn new(weights: Weights) -> Self {
+        Model { weights }
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.weights.cfg
+    }
+
+    /// Full-sequence (prefill) forward. Returns logits (seq, vocab).
+    pub fn forward(&self, tokens: &[u32]) -> Mat {
+        self.forward_with_hooks(tokens, &Hooks::none())
+    }
+
+    /// Prefill forward with hooks.
+    pub fn forward_with_hooks(&self, tokens: &[u32], hooks: &Hooks) -> Mat {
+        let cfg = &self.weights.cfg;
+        assert!(tokens.len() <= cfg.max_seq, "sequence too long");
+        // Embed.
+        let mut x = Mat::zeros(tokens.len(), cfg.d_model);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.weights.embed.row(t as usize));
+        }
+        // Transformer layers.
+        for (li, layer) in self.weights.layers.iter().enumerate() {
+            // --- MHSA block (pre-norm, residual) ---
+            let normed = rmsnorm(&x, &layer.attn_norm, 1e-6);
+            if let Some(cap) = &hooks.capture_mhsa_inputs {
+                cap.borrow_mut()[li] = Some(normed.clone());
+            }
+            let attn = self.attention(&normed, layer, li, hooks);
+            for r in 0..x.rows {
+                crate::tensor::ops::add_inplace(x.row_mut(r), attn.row(r));
+            }
+            // --- MoE block (pre-norm, residual) ---
+            let normed = rmsnorm(&x, &layer.ffn_norm, 1e-6);
+            if let Some(cap) = &hooks.capture_moe_inputs {
+                cap.borrow_mut()[li] = Some(normed.clone());
+            }
+            let (moe, _diag) = self.moe_layer(&normed, layer, li, hooks);
+            for r in 0..x.rows {
+                crate::tensor::ops::add_inplace(x.row_mut(r), moe.row(r));
+            }
+        }
+        // Final norm + tied output head.
+        let normed = rmsnorm(&x, &self.weights.final_norm, 1e-6);
+        crate::tensor::matmul_transb(&normed, &self.weights.embed)
+    }
+
+    /// Causal multi-head self-attention over the full sequence.
+    ///
+    /// GEMM-formulated (per head: S = Q Kᵀ, causal-masked row softmax,
+    /// C = P V) so it rides the blocked matmul instead of scalar loops —
+    /// the §Perf attention optimization (EXPERIMENTS.md §Perf).
+    fn attention(&self, x: &Mat, layer: &LayerWeights, li: usize, hooks: &Hooks) -> Mat {
+        let cfg = &self.weights.cfg;
+        let (seq, d) = (x.rows, cfg.d_model);
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let q = matmul(x, &layer.wq);
+        let k = matmul(x, &layer.wk);
+        let v = matmul(x, &layer.wv);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = Mat::zeros(seq, d);
+        let mut qh = Mat::zeros(seq, hd);
+        let mut kh = Mat::zeros(seq, hd);
+        let mut vh = Mat::zeros(seq, hd);
+        for head in 0..h {
+            let off = head * hd;
+            for r in 0..seq {
+                qh.row_mut(r).copy_from_slice(&q.row(r)[off..off + hd]);
+                kh.row_mut(r).copy_from_slice(&k.row(r)[off..off + hd]);
+                vh.row_mut(r).copy_from_slice(&v.row(r)[off..off + hd]);
+            }
+            // S = Q Kᵀ (scaled), causal mask, row softmax over j <= i.
+            let mut scores = crate::tensor::matmul_transb(&qh, &kh);
+            for i in 0..seq {
+                let row = scores.row_mut(i);
+                for s in row[..=i].iter_mut() {
+                    *s *= scale;
+                }
+                softmax_inplace(&mut row[..=i]);
+                for s in row[i + 1..].iter_mut() {
+                    *s = 0.0; // masked out: contributes nothing to P V
+                }
+            }
+            let ctx_h = matmul(&scores, &vh);
+            for r in 0..seq {
+                ctx.row_mut(r)[off..off + hd].copy_from_slice(ctx_h.row(r));
+            }
+        }
+        if let Some(cap) = &hooks.capture_wo_inputs {
+            cap.borrow_mut()[li] = Some(ctx.clone());
+        }
+        matmul(&ctx, &layer.wo)
+    }
+
+    /// Route tokens, execute (unpruned) experts grouped by expert, and add
+    /// shared experts. Returns (output, diagnostics).
+    pub fn moe_layer(
+        &self,
+        x: &Mat,
+        layer: &LayerWeights,
+        li: usize,
+        hooks: &Hooks,
+    ) -> (Mat, MoeLayerOut) {
+        let cfg = &self.weights.cfg;
+        let seq = x.rows;
+        let n = cfg.n_experts;
+        let k = cfg.top_k;
+
+        // Router logits + softmax scores.
+        let logits = matmul(x, &layer.router);
+        if let Some(cap) = &hooks.capture_router_logits {
+            cap.borrow_mut()[li] = Some(logits.clone());
+        }
+        let mut scores = logits.clone();
+        for r in 0..seq {
+            softmax_inplace(scores.row_mut(r));
+        }
+
+        // Per-token selections (or forced replay).
+        let mut selections: Vec<TokenSelection> = Vec::with_capacity(seq);
+        for t in 0..seq {
+            let mut sel = if let Some(forced) = &hooks.force_selections {
+                forced.record.layers[li][t].clone()
+            } else {
+                let idx = topk_indices(scores.row(t), k);
+                TokenSelection {
+                    experts: idx.iter().map(|&e| e as u16).collect(),
+                    scores: idx.iter().map(|&e| scores.at(t, e)).collect(),
+                }
+            };
+            if let Some(filter) = &hooks.selection_filter {
+                filter(li, t, x.row(t), &mut sel);
+            }
+            selections.push(sel);
+        }
+        if let Some(rec) = &hooks.record_selections {
+            let mut rec = rec.borrow_mut();
+            rec.layers[li].extend(selections.iter().cloned());
+        }
+
+        // PESF (Eq. 6): derive this layer's prune mask from this sequence's
+        // own selection counts — a single counting pass between routing and
+        // expert dispatch.
+        let pesf_mask: Option<Vec<bool>> = hooks.pesf_alpha.map(|alpha| {
+            let mut counts = vec![0u64; n];
+            for sel in &selections {
+                for &e in &sel.experts {
+                    counts[e as usize] += 1;
+                }
+            }
+            let thr = (seq * k) as f32 / n as f32 * alpha;
+            counts.iter().map(|&c| alpha > 0.0 && (c as f32) < thr).collect()
+        });
+        if let (Some(stats), Some(mask)) = (&hooks.pesf_pruned, &pesf_mask) {
+            stats.borrow_mut()[li] = mask.iter().filter(|&&m| m).count();
+        }
+
+        // Group token-slots by expert, applying the prune masks.
+        let masked = |e: usize| {
+            hooks.expert_mask.as_ref().map(|m| m[li][e]).unwrap_or(false)
+                || pesf_mask.as_ref().map(|m| m[e]).unwrap_or(false)
+        };
+        // For each token: surviving (expert, score) pairs, renormalized.
+        let mut out = Mat::zeros(seq, cfg.d_model);
+        let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n]; // expert -> (token, weight)
+        for (t, sel) in selections.iter().enumerate() {
+            let survivors: Vec<(usize, f32)> = sel
+                .experts
+                .iter()
+                .zip(&sel.scores)
+                .filter(|(e, _)| !masked(**e as usize))
+                .map(|(&e, &s)| (e as usize, s))
+                .collect();
+            let denom: f32 = survivors.iter().map(|(_, s)| *s).sum();
+            if denom <= 0.0 {
+                continue; // all selected experts pruned: MoE contributes 0
+            }
+            for (e, s) in survivors {
+                groups[e].push((t, s / denom));
+            }
+        }
+
+        // Execute each expert on its gathered tokens as one GEMM.
+        let mut expert_tokens = vec![0usize; n];
+        for (e, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            expert_tokens[e] = group.len();
+            let token_ids: Vec<usize> = group.iter().map(|(t, _)| *t).collect();
+            let gathered = x.gather_rows(&token_ids);
+            let y = expert_forward(&gathered, &layer.experts[e]);
+            for (row, &(t, w)) in group.iter().enumerate() {
+                crate::tensor::ops::axpy(out.row_mut(t), w, y.row(row));
+            }
+        }
+
+        // Shared experts: always-on, added with weight 1 (DeepSeek-MoE style).
+        for sh in &layer.shared {
+            let y = expert_forward(x, sh);
+            for t in 0..seq {
+                crate::tensor::ops::add_inplace(out.row_mut(t), y.row(t));
+            }
+        }
+
+        (out, MoeLayerOut { expert_tokens })
+    }
+
+    /// Single-token decode step with kv cache (generate stage; PESF is
+    /// prefill-only per the paper's Limitations, but masks still apply if
+    /// provided).
+    pub fn decode_step(&self, token: u32, cache: &mut KvCache, hooks: &Hooks) -> Vec<f32> {
+        let cfg = &self.weights.cfg;
+        assert!(cache.len < cfg.max_seq, "kv cache full");
+        let pos = cache.len;
+        let mut x = self.weights.embed.row(token as usize).to_vec();
+        for (li, layer) in self.weights.layers.iter().enumerate() {
+            let xm = Mat::from_vec(1, cfg.d_model, x.clone());
+            let normed = rmsnorm(&xm, &layer.attn_norm, 1e-6);
+            // Project this position's q/k/v; append k/v to cache.
+            let q = matmul(&normed, &layer.wq);
+            let knew = matmul(&normed, &layer.wk);
+            let vnew = matmul(&normed, &layer.wv);
+            cache.k[li].row_mut(pos).copy_from_slice(knew.row(0));
+            cache.v[li].row_mut(pos).copy_from_slice(vnew.row(0));
+            let (h, hd) = (cfg.n_heads, cfg.head_dim());
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut ctx = vec![0.0f32; cfg.d_model];
+            let mut scores = vec![0.0f32; pos + 1];
+            for head in 0..h {
+                let off = head * hd;
+                for (j, s) in scores.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    let kj = &cache.k[li].row(j)[off..off + hd];
+                    let qh = &q.row(0)[off..off + hd];
+                    for t in 0..hd {
+                        acc += qh[t] * kj[t];
+                    }
+                    *s = acc * scale;
+                }
+                softmax_inplace(&mut scores);
+                for (j, &w) in scores.iter().enumerate() {
+                    let vj = &cache.v[li].row(j)[off..off + hd];
+                    for t in 0..hd {
+                        ctx[off + t] += w * vj[t];
+                    }
+                }
+            }
+            let attn = matmul(&Mat::from_vec(1, cfg.d_model, ctx), &layer.wo);
+            for (xi, a) in x.iter_mut().zip(attn.row(0)) {
+                *xi += a;
+            }
+            // MoE block on the single token.
+            let xm = Mat::from_vec(1, cfg.d_model, x.clone());
+            let normed = rmsnorm(&xm, &layer.ffn_norm, 1e-6);
+            let (moe, _) = self.moe_layer(&normed, layer, li, hooks);
+            for (xi, m) in x.iter_mut().zip(moe.row(0)) {
+                *xi += m;
+            }
+        }
+        cache.len += 1;
+        let xm = Mat::from_vec(1, cfg.d_model, x);
+        let normed = rmsnorm(&xm, &self.weights.final_norm, 1e-6);
+        crate::tensor::matmul_transb(&normed, &self.weights.embed).data
+    }
+}
+
+/// SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2.
+pub fn expert_forward(x: &Mat, e: &ExpertWeights) -> Mat {
+    let mut a = matmul(x, &e.w1);
+    let b = matmul(x, &e.w3);
+    for (av, &bv) in a.data.iter_mut().zip(&b.data) {
+        *av = silu(*av) * bv;
+    }
+    matmul(&a, &e.w2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::hooks::SelectionRecord;
+
+    fn tiny_model() -> Model {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 4,
+            top_k: 2,
+            n_shared: 1,
+            n_heads: 2,
+            vocab: 32,
+            max_seq: 64,
+        };
+        Model::new(Weights::init(&cfg, 3))
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = tiny_model();
+        let logits = m.forward(&[1, 5, 9, 2]);
+        assert_eq!(logits.rows, 4);
+        assert_eq!(logits.cols, 32);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Logits at position i must not depend on tokens after i.
+        let m = tiny_model();
+        let a = m.forward(&[1, 2, 3, 4]);
+        let b = m.forward(&[1, 2, 3, 30]);
+        for j in 0..a.cols {
+            assert!((a.at(0, j) - b.at(0, j)).abs() < 1e-5);
+            assert!((a.at(2, j) - b.at(2, j)).abs() < 1e-5);
+        }
+        // ...and position 3 should differ.
+        let differs = (0..a.cols).any(|j| (a.at(3, j) - b.at(3, j)).abs() > 1e-4);
+        assert!(differs);
+    }
+
+    #[test]
+    fn recording_then_forcing_reproduces_output() {
+        let m = tiny_model();
+        let tokens = [3u32, 7, 11, 13, 17];
+        let hooks = Hooks::recording(2);
+        let base = m.forward_with_hooks(&tokens, &hooks);
+        let rec = hooks.take_selections().unwrap();
+        assert_eq!(rec.layers[0].len(), tokens.len());
+        let forced = Hooks::forcing(rec);
+        let replay = m.forward_with_hooks(&tokens, &forced);
+        for (x, y) in base.data.iter().zip(&replay.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn masking_all_selected_experts_zeroes_moe_path() {
+        let m = tiny_model();
+        let tokens = [3u32, 7, 11];
+        // Mask every routed expert in both layers: MoE contributes only the
+        // shared expert. Output must still be finite and differ from base.
+        let mask = vec![vec![true; 4]; 2];
+        let hooks = Hooks { expert_mask: Some(mask), ..Default::default() };
+        let out = m.forward_with_hooks(&tokens, &hooks);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+        let base = m.forward(&tokens);
+        let differs = out.data.iter().zip(&base.data).any(|(a, b)| (a - b).abs() > 1e-4);
+        assert!(differs);
+    }
+
+    #[test]
+    fn pruned_expert_renormalizes_weights() {
+        // With one of the two selected experts masked, the other gets weight
+        // 1.0 — check via diagnostics that masked experts run zero tokens.
+        let m = tiny_model();
+        let tokens = [1u32, 2, 3, 4, 5, 6];
+        let x = Mat::randn(6, 16, 1.0, &mut crate::tensor::Pcg64::seeded(9));
+        let mask = vec![vec![true, false, false, false]; 2];
+        let hooks = Hooks { expert_mask: Some(mask), ..Default::default() };
+        let (_, diag) = m.moe_layer(&x, &m.weights.layers[0], 0, &hooks);
+        assert_eq!(diag.expert_tokens[0], 0);
+        let _ = tokens;
+    }
+
+    #[test]
+    fn decode_matches_prefill() {
+        let m = tiny_model();
+        let tokens = [4u32, 9, 14, 19];
+        let prefill = m.forward(&tokens);
+        let mut cache = KvCache::new(m.cfg());
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = m.decode_step(t, &mut cache, &Hooks::none());
+        }
+        let want = prefill.row(tokens.len() - 1);
+        for (x, y) in last.iter().zip(want) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn selection_scores_are_descending() {
+        let m = tiny_model();
+        let hooks = Hooks::recording(2);
+        m.forward_with_hooks(&[1, 2, 3, 4, 5, 6, 7, 8], &hooks);
+        let rec = hooks.take_selections().unwrap();
+        for layer in &rec.layers {
+            for sel in layer {
+                for w in sel.scores.windows(2) {
+                    assert!(w[0] >= w[1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_experts_always_contribute() {
+        // deepseek-style config has shared experts; removing them changes out.
+        let m = tiny_model();
+        let x = Mat::randn(3, 16, 1.0, &mut crate::tensor::Pcg64::seeded(10));
+        let (with_shared, _) = m.moe_layer(&x, &m.weights.layers[0], 0, &Hooks::none());
+        let mut m2 = Model::new(m.weights.clone());
+        m2.weights.layers[0].shared.clear();
+        let (without, _) = m2.moe_layer(&x, &m2.weights.layers[0], 0, &Hooks::none());
+        let differs =
+            with_shared.data.iter().zip(&without.data).any(|(a, b)| (a - b).abs() > 1e-5);
+        assert!(differs);
+    }
+}

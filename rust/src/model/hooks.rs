@@ -1,0 +1,179 @@
+//! Forward-pass hooks used by the compression pipeline and the paper's
+//! analysis experiments:
+//!
+//! * [`SelectionRecord`] — record which experts the router selected for each
+//!   token (ES-frequency analysis, Fig 2/10/11/13; PESF statistics).
+//! * [`ForcedSelections`] — override the router's selection with a recorded
+//!   one (the Table-1 "quantized but without expert-shift" 2×2 experiment).
+//! * activation capture — stash per-layer MHSA/expert inputs for GPTQ's
+//!   Hessian accumulation and router-calibration targets.
+
+use crate::tensor::Mat;
+use std::cell::RefCell;
+
+/// One token's routing decision in one layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenSelection {
+    /// Chosen expert ids (descending score order), length top_k.
+    pub experts: Vec<u16>,
+    /// Softmax scores of the chosen experts (same order, unnormalized by
+    /// the top-k renormalization).
+    pub scores: Vec<f32>,
+}
+
+/// All routing decisions for a forward pass: `records[layer][token]`.
+#[derive(Clone, Debug, Default)]
+pub struct SelectionRecord {
+    pub layers: Vec<Vec<TokenSelection>>,
+}
+
+impl SelectionRecord {
+    pub fn with_layers(n: usize) -> Self {
+        SelectionRecord { layers: vec![Vec::new(); n] }
+    }
+
+    /// Per-expert selection counts for one layer.
+    pub fn counts(&self, layer: usize, n_experts: usize) -> Vec<u64> {
+        let mut c = vec![0u64; n_experts];
+        for t in &self.layers[layer] {
+            for &e in &t.experts {
+                c[e as usize] += 1;
+            }
+        }
+        c
+    }
+
+    /// Normalized selection frequency P(m, d) for one layer (paper Eq. 3).
+    pub fn frequency(&self, layer: usize, n_experts: usize) -> Vec<f32> {
+        let c = self.counts(layer, n_experts);
+        let total: u64 = c.iter().sum();
+        if total == 0 {
+            return vec![0.0; n_experts];
+        }
+        c.iter().map(|&x| x as f32 / total as f32).collect()
+    }
+
+    /// All layers' frequencies flattened into one vector P(d) (Eq. 3/4).
+    pub fn flat_frequency(&self, n_experts: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.layers.len() * n_experts);
+        for l in 0..self.layers.len() {
+            out.extend(self.frequency(l, n_experts));
+        }
+        out
+    }
+
+    pub fn n_tokens(&self, layer: usize) -> usize {
+        self.layers[layer].len()
+    }
+}
+
+/// Forced routing: replay `records[layer][token]` instead of computing
+/// the router's own top-k. Built from a [`SelectionRecord`].
+#[derive(Clone, Debug)]
+pub struct ForcedSelections {
+    pub record: SelectionRecord,
+}
+
+/// What to capture during a forward pass. All fields are optional; the
+/// default captures nothing and adds no overhead.
+#[derive(Default)]
+pub struct Hooks {
+    /// If set, fill with routing decisions per layer.
+    pub record_selections: Option<RefCell<SelectionRecord>>,
+    /// If set, use these selections instead of the router's.
+    pub force_selections: Option<ForcedSelections>,
+    /// If set, capture the (normed) input to each layer's MHSA block:
+    /// `mhsa_inputs[layer]` has one row per token.
+    pub capture_mhsa_inputs: Option<RefCell<Vec<Option<Mat>>>>,
+    /// If set, capture the attention context fed to each layer's `wo`
+    /// projection (GPTQ needs wo's own input distribution).
+    pub capture_wo_inputs: Option<RefCell<Vec<Option<Mat>>>>,
+    /// If set, capture the (normed) input to each layer's MoE block.
+    pub capture_moe_inputs: Option<RefCell<Vec<Option<Mat>>>>,
+    /// If set, capture full router logits per layer (rows = tokens).
+    pub capture_router_logits: Option<RefCell<Vec<Option<Mat>>>>,
+    /// If set (layer -> mask of experts to SKIP), prune at inference
+    /// (PESF applies this per-sequence; see `prune::pesf`).
+    pub expert_mask: Option<Vec<Vec<bool>>>,
+    /// If set, invoked per token after top-k selection and before expert
+    /// dispatch; may drop entries from the selection (EES/ODP pruning).
+    /// Arguments: layer index, token index, token's MoE-input row.
+    pub selection_filter: Option<SelectionFilter>,
+    /// PESF (paper Eq. 6), single-pass: within each MoE layer, after the
+    /// router has scored every token but before expert dispatch, prune
+    /// experts selected fewer than `(l*K/N) * alpha` times for this
+    /// sequence. This is why PESF costs one counting pass and no extra
+    /// forward (Appendix A.1).
+    pub pesf_alpha: Option<f32>,
+    /// If set alongside `pesf_alpha`, records per-layer pruned-expert
+    /// counts for reporting.
+    pub pesf_pruned: Option<RefCell<Vec<usize>>>,
+}
+
+/// Per-token selection rewriter (see [`Hooks::selection_filter`]).
+pub type SelectionFilter = Box<dyn Fn(usize, usize, &[f32], &mut TokenSelection)>;
+
+impl Hooks {
+    pub fn none() -> Self {
+        Hooks::default()
+    }
+
+    /// Hooks that record selections for `n_layers`.
+    pub fn recording(n_layers: usize) -> Self {
+        Hooks {
+            record_selections: Some(RefCell::new(SelectionRecord::with_layers(n_layers))),
+            ..Default::default()
+        }
+    }
+
+    /// Hooks that force the given selections.
+    pub fn forcing(record: SelectionRecord) -> Self {
+        Hooks { force_selections: Some(ForcedSelections { record }), ..Default::default() }
+    }
+
+    /// Hooks that capture all calibration activations.
+    pub fn capturing(n_layers: usize) -> Self {
+        Hooks {
+            capture_mhsa_inputs: Some(RefCell::new(vec![None; n_layers])),
+            capture_wo_inputs: Some(RefCell::new(vec![None; n_layers])),
+            capture_moe_inputs: Some(RefCell::new(vec![None; n_layers])),
+            capture_router_logits: Some(RefCell::new(vec![None; n_layers])),
+            ..Default::default()
+        }
+    }
+
+    /// Take the recorded selections out of the hook.
+    pub fn take_selections(self) -> Option<SelectionRecord> {
+        self.record_selections.map(|r| r.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequency_normalizes() {
+        let mut rec = SelectionRecord::with_layers(1);
+        rec.layers[0].push(TokenSelection { experts: vec![0, 2], scores: vec![0.6, 0.3] });
+        rec.layers[0].push(TokenSelection { experts: vec![2, 3], scores: vec![0.5, 0.2] });
+        let f = rec.frequency(0, 4);
+        assert_eq!(f, vec![0.25, 0.0, 0.5, 0.25]);
+        assert!((f.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flat_frequency_concatenates() {
+        let mut rec = SelectionRecord::with_layers(2);
+        rec.layers[0].push(TokenSelection { experts: vec![0], scores: vec![1.0] });
+        rec.layers[1].push(TokenSelection { experts: vec![1], scores: vec![1.0] });
+        let f = rec.flat_frequency(2);
+        assert_eq!(f, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_layer_frequency_is_zero() {
+        let rec = SelectionRecord::with_layers(1);
+        assert_eq!(rec.frequency(0, 3), vec![0.0; 3]);
+    }
+}

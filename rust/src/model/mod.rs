@@ -1,0 +1,15 @@
+//! Native MoE transformer: model-zoo configs, weight containers with binary
+//! IO shared with the Python pretraining path, and a forward pass with the
+//! hooks the compression pipeline needs (expert-selection recording, forced
+//! selection for the Table-1 expert-shift experiment, per-layer activation
+//! capture for GPTQ).
+
+pub mod config;
+pub mod forward;
+pub mod hooks;
+pub mod weights;
+
+pub use config::{ModelConfig, ZooModel};
+pub use forward::{expert_forward, KvCache, Model, MoeLayerOut};
+pub use hooks::{ForcedSelections, Hooks, SelectionRecord};
+pub use weights::{ExpertWeights, LayerWeights, Weights};

@@ -1,0 +1,272 @@
+//! Weight containers + initialization + binary IO.
+//!
+//! Layout matches `python/compile/pretrain.py`, which trains the miniature
+//! models in JAX and saves them through the same `TensorFile` format
+//! (see `util::binio` for the byte layout). Naming convention:
+//!
+//! ```text
+//! embed                                (vocab, d_model)
+//! final_norm                           (d_model,)
+//! layer{i}.attn_norm / ffn_norm        (d_model,)
+//! layer{i}.wq / wk / wv / wo           (d_model, d_model)
+//! layer{i}.router                      (d_model, n_experts)
+//! layer{i}.expert{e}.w1 / w3           (d_model, d_ff)
+//! layer{i}.expert{e}.w2                (d_ff, d_model)
+//! layer{i}.shared{s}.w1 / w2 / w3      same shapes
+//! ```
+
+use super::config::ModelConfig;
+use crate::tensor::{Mat, Pcg64};
+use crate::util::binio::TensorFile;
+use anyhow::Result;
+use std::path::Path;
+
+/// One SwiGLU expert: out = (silu(x@w1) * (x@w3)) @ w2.
+#[derive(Clone, Debug)]
+pub struct ExpertWeights {
+    pub w1: Mat, // (d_model, d_ff)
+    pub w2: Mat, // (d_ff, d_model)
+    pub w3: Mat, // (d_model, d_ff)
+}
+
+impl ExpertWeights {
+    pub fn randn(cfg: &ModelConfig, rng: &mut Pcg64) -> Self {
+        let s1 = (2.0 / cfg.d_model as f32).sqrt();
+        let s2 = (2.0 / cfg.d_ff as f32).sqrt();
+        ExpertWeights {
+            w1: Mat::randn(cfg.d_model, cfg.d_ff, s1, rng),
+            w2: Mat::randn(cfg.d_ff, cfg.d_model, s2, rng),
+            w3: Mat::randn(cfg.d_model, cfg.d_ff, s1, rng),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w1.data.len() + self.w2.data.len() + self.w3.data.len()
+    }
+}
+
+/// One transformer layer.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub router: Mat, // (d_model, n_experts)
+    pub experts: Vec<ExpertWeights>,
+    pub shared: Vec<ExpertWeights>,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    pub embed: Mat, // (vocab, d_model); output head is tied (embed^T)
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl Weights {
+    /// Random initialization (used in tests and before pretraining).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 100);
+        let sd = (1.0 / cfg.d_model as f32).sqrt();
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; cfg.d_model],
+                ffn_norm: vec![1.0; cfg.d_model],
+                wq: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
+                wk: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
+                wv: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
+                wo: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
+                router: Mat::randn(cfg.d_model, cfg.n_experts, sd, &mut rng),
+                experts: (0..cfg.n_experts).map(|_| ExpertWeights::randn(cfg, &mut rng)).collect(),
+                shared: (0..cfg.n_shared).map(|_| ExpertWeights::randn(cfg, &mut rng)).collect(),
+            })
+            .collect();
+        Weights {
+            cfg: cfg.clone(),
+            embed: Mat::randn(cfg.vocab, cfg.d_model, sd, &mut rng),
+            final_norm: vec![1.0; cfg.d_model],
+            layers,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        let mut n = self.embed.data.len() + self.final_norm.len();
+        for l in &self.layers {
+            n += l.attn_norm.len() + l.ffn_norm.len();
+            n += l.wq.data.len() + l.wk.data.len() + l.wv.data.len() + l.wo.data.len();
+            n += l.router.data.len();
+            for e in l.experts.iter().chain(&l.shared) {
+                n += e.param_count();
+            }
+        }
+        n
+    }
+
+    /// Serialize into a TensorFile.
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let mut tf = TensorFile::new();
+        let c = &self.cfg;
+        tf.put_u32(
+            "config",
+            vec![9],
+            vec![
+                c.n_layers as u32,
+                c.d_model as u32,
+                c.d_ff as u32,
+                c.n_experts as u32,
+                c.top_k as u32,
+                c.n_shared as u32,
+                c.n_heads as u32,
+                c.vocab as u32,
+                c.max_seq as u32,
+            ],
+        );
+        tf.put_f32("embed", vec![c.vocab, c.d_model], self.embed.data.clone());
+        tf.put_f32("final_norm", vec![c.d_model], self.final_norm.clone());
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = format!("layer{i}");
+            tf.put_f32(&format!("{p}.attn_norm"), vec![c.d_model], l.attn_norm.clone());
+            tf.put_f32(&format!("{p}.ffn_norm"), vec![c.d_model], l.ffn_norm.clone());
+            for (nm, m) in [("wq", &l.wq), ("wk", &l.wk), ("wv", &l.wv), ("wo", &l.wo)] {
+                tf.put_f32(&format!("{p}.{nm}"), vec![m.rows, m.cols], m.data.clone());
+            }
+            tf.put_f32(&format!("{p}.router"), vec![c.d_model, c.n_experts], l.router.data.clone());
+            for (e, ew) in l.experts.iter().enumerate() {
+                let ep = format!("{p}.expert{e}");
+                tf.put_f32(&format!("{ep}.w1"), vec![c.d_model, c.d_ff], ew.w1.data.clone());
+                tf.put_f32(&format!("{ep}.w2"), vec![c.d_ff, c.d_model], ew.w2.data.clone());
+                tf.put_f32(&format!("{ep}.w3"), vec![c.d_model, c.d_ff], ew.w3.data.clone());
+            }
+            for (s, ew) in l.shared.iter().enumerate() {
+                let ep = format!("{p}.shared{s}");
+                tf.put_f32(&format!("{ep}.w1"), vec![c.d_model, c.d_ff], ew.w1.data.clone());
+                tf.put_f32(&format!("{ep}.w2"), vec![c.d_ff, c.d_model], ew.w2.data.clone());
+                tf.put_f32(&format!("{ep}.w3"), vec![c.d_model, c.d_ff], ew.w3.data.clone());
+            }
+        }
+        tf
+    }
+
+    /// Deserialize; `name` is stored in the returned config.
+    pub fn from_tensor_file(tf: &TensorFile, name: &str) -> Result<Self> {
+        let (_, c) = tf.get_u32("config")?;
+        let cfg = ModelConfig {
+            name: name.to_string(),
+            n_layers: c[0] as usize,
+            d_model: c[1] as usize,
+            d_ff: c[2] as usize,
+            n_experts: c[3] as usize,
+            top_k: c[4] as usize,
+            n_shared: c[5] as usize,
+            n_heads: c[6] as usize,
+            vocab: c[7] as usize,
+            max_seq: c[8] as usize,
+        };
+        let mat = |nm: &str, r: usize, cc: usize| -> Result<Mat> {
+            let (dims, d) = tf.get_f32(nm)?;
+            anyhow::ensure!(dims == [r, cc], "{nm}: dims {dims:?} != [{r}, {cc}]");
+            Ok(Mat::from_vec(r, cc, d.to_vec()))
+        };
+        let vecf = |nm: &str, n: usize| -> Result<Vec<f32>> {
+            let (dims, d) = tf.get_f32(nm)?;
+            anyhow::ensure!(dims == [n], "{nm}: bad dims {dims:?}");
+            Ok(d.to_vec())
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layer{i}");
+            let read_expert = |ep: &str| -> Result<ExpertWeights> {
+                Ok(ExpertWeights {
+                    w1: mat(&format!("{ep}.w1"), cfg.d_model, cfg.d_ff)?,
+                    w2: mat(&format!("{ep}.w2"), cfg.d_ff, cfg.d_model)?,
+                    w3: mat(&format!("{ep}.w3"), cfg.d_model, cfg.d_ff)?,
+                })
+            };
+            layers.push(LayerWeights {
+                attn_norm: vecf(&format!("{p}.attn_norm"), cfg.d_model)?,
+                ffn_norm: vecf(&format!("{p}.ffn_norm"), cfg.d_model)?,
+                wq: mat(&format!("{p}.wq"), cfg.d_model, cfg.d_model)?,
+                wk: mat(&format!("{p}.wk"), cfg.d_model, cfg.d_model)?,
+                wv: mat(&format!("{p}.wv"), cfg.d_model, cfg.d_model)?,
+                wo: mat(&format!("{p}.wo"), cfg.d_model, cfg.d_model)?,
+                router: mat(&format!("{p}.router"), cfg.d_model, cfg.n_experts)?,
+                experts: (0..cfg.n_experts)
+                    .map(|e| read_expert(&format!("{p}.expert{e}")))
+                    .collect::<Result<_>>()?,
+                shared: (0..cfg.n_shared)
+                    .map(|s| read_expert(&format!("{p}.shared{s}")))
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(Weights {
+            embed: mat("embed", cfg.vocab, cfg.d_model)?,
+            final_norm: vecf("final_norm", cfg.d_model)?,
+            cfg,
+            layers,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_tensor_file().save(path)
+    }
+
+    pub fn load(path: &Path, name: &str) -> Result<Self> {
+        Self::from_tensor_file(&TensorFile::load(path)?, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ZooModel;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 4,
+            top_k: 2,
+            n_shared: 1,
+            n_heads: 2,
+            vocab: 32,
+            max_seq: 64,
+        }
+    }
+
+    #[test]
+    fn init_matches_config_count() {
+        let cfg = tiny_cfg();
+        let w = Weights::init(&cfg, 1);
+        assert_eq!(w.param_count(), cfg.param_count());
+    }
+
+    #[test]
+    fn tensor_file_roundtrip() {
+        let cfg = tiny_cfg();
+        let w = Weights::init(&cfg, 7);
+        let tf = w.to_tensor_file();
+        let back = Weights::from_tensor_file(&tf, "tiny").unwrap();
+        assert_eq!(back.cfg, cfg);
+        assert_eq!(back.embed, w.embed);
+        assert_eq!(back.layers[1].router, w.layers[1].router);
+        assert_eq!(back.layers[0].experts[3].w2, w.layers[0].experts[3].w2);
+        assert_eq!(back.layers[1].shared[0].w1, w.layers[1].shared[0].w1);
+    }
+
+    #[test]
+    fn zoo_configs_init() {
+        // Smoke: all four zoo models initialize with consistent counts.
+        for m in ZooModel::ALL {
+            let cfg = m.config();
+            let w = Weights::init(&cfg, 2);
+            assert_eq!(w.param_count(), cfg.param_count(), "{}", cfg.name);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Dynamic expert pruning (paper §5) and the baselines of Table 3.
+//!
+//! * [`pesf`] — the paper's contribution: per-sequence frequency pruning
+//!   (Eq. 6) applied during prefill.
+//! * [`ees`] — Efficient Experts Skipping (Lu et al., 2024): per-token,
+//!   drop the least-contributing selected expert when its score ratio to
+//!   the top expert falls under a calibrated median threshold.
+//! * [`odp`] — Online Dynamic Pruning (Huang et al., 2024a): EES plus a
+//!   significance-aware critical-token protection mechanism.
+
+pub mod ees;
+pub mod odp;
+pub mod pesf;
+
+pub use ees::{calibrate_ees_threshold, EesPruner};
+pub use odp::OdpPruner;
+pub use pesf::{pesf_mask, PesfConfig, PesfStats};

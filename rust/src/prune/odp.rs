@@ -1,0 +1,137 @@
+//! ODP — dynamic pruning with critical-token protection (the MC-MoE /
+//! Huang et al. 2024a baseline, reproduced per the paper's Appendix A.8).
+//!
+//! ODP extends EES: the same median-ratio skip rule, plus a
+//! *significance-aware token protection* mechanism that identifies critical
+//! tokens and refuses to prune their experts even when the ratio condition
+//! holds. Token significance here is the L2 norm of the token's MoE-layer
+//! input (the activation magnitude heuristic MC-MoE derives its protection
+//! from); tokens above the calibrated `protect_quantile` norm are protected.
+
+use super::ees::{apply_ees, median};
+use crate::model::hooks::{Hooks, SelectionFilter, TokenSelection};
+use crate::model::Model;
+
+/// Calibrated ODP pruner.
+#[derive(Clone, Copy, Debug)]
+pub struct OdpPruner {
+    /// EES median score-ratio threshold.
+    pub ratio_threshold: f32,
+    /// Tokens with MoE-input norm above this are protected.
+    pub norm_threshold: f32,
+}
+
+impl OdpPruner {
+    /// Calibrate both thresholds on a calibration set. `protect_quantile`
+    /// is the fraction of tokens NOT protected (e.g. 0.8 protects the top
+    /// 20% most significant tokens).
+    pub fn calibrate(model: &Model, calib: &[Vec<u32>], protect_quantile: f32) -> Self {
+        let n_layers = model.cfg().n_layers;
+        let mut ratios: Vec<f32> = Vec::new();
+        let mut norms: Vec<f32> = Vec::new();
+        for seq in calib {
+            let hooks = Hooks {
+                record_selections: Some(std::cell::RefCell::new(
+                    crate::model::hooks::SelectionRecord::with_layers(n_layers),
+                )),
+                capture_moe_inputs: Some(std::cell::RefCell::new(vec![None; n_layers])),
+                ..Default::default()
+            };
+            model.forward_with_hooks(seq, &hooks);
+            let rec = hooks.record_selections.unwrap().into_inner();
+            for layer in &rec.layers {
+                for sel in layer {
+                    if sel.scores.len() >= 2 && sel.scores[0] > 0.0 {
+                        ratios.push(sel.scores.last().unwrap() / sel.scores[0]);
+                    }
+                }
+            }
+            let caps = hooks.capture_moe_inputs.unwrap().into_inner();
+            for cap in caps.into_iter().flatten() {
+                for t in 0..cap.rows {
+                    let n = cap.row(t).iter().map(|x| x * x).sum::<f32>().sqrt();
+                    norms.push(n);
+                }
+            }
+        }
+        let ratio_threshold = median(&mut ratios);
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((protect_quantile * norms.len() as f32) as usize).min(norms.len().saturating_sub(1));
+        let norm_threshold = if norms.is_empty() { f32::INFINITY } else { norms[idx] };
+        OdpPruner { ratio_threshold, norm_threshold }
+    }
+
+    /// Per-token selection filter: EES skip unless the token is critical.
+    pub fn filter(&self) -> SelectionFilter {
+        let rt = self.ratio_threshold;
+        let nt = self.norm_threshold;
+        Box::new(move |_layer, _token, x: &[f32], sel: &mut TokenSelection| {
+            let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if norm > nt {
+                return; // critical token: protected
+            }
+            apply_ees(sel, rt);
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Weights};
+
+    #[test]
+    fn protection_blocks_pruning() {
+        let pruner = OdpPruner { ratio_threshold: 0.9, norm_threshold: 1.0 };
+        let f = pruner.filter();
+        // Low-norm token: pruned (ratio 0.2/0.8 = 0.25 < 0.9).
+        let mut sel = TokenSelection { experts: vec![0, 1], scores: vec![0.8, 0.2] };
+        f(0, 0, &[0.1, 0.1], &mut sel);
+        assert_eq!(sel.experts.len(), 1);
+        // High-norm token: protected.
+        let mut sel = TokenSelection { experts: vec![0, 1], scores: vec![0.8, 0.2] };
+        f(0, 0, &[5.0, 5.0], &mut sel);
+        assert_eq!(sel.experts.len(), 2);
+    }
+
+    #[test]
+    fn calibration_produces_sane_thresholds() {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 6,
+            top_k: 2,
+            n_shared: 0,
+            n_heads: 2,
+            vocab: 32,
+            max_seq: 64,
+        };
+        let model = Model::new(Weights::init(&cfg, 29));
+        let calib: Vec<Vec<u32>> = vec![(0..20).map(|i| (3 * i) % 32).collect()];
+        let p = OdpPruner::calibrate(&model, &calib, 0.8);
+        assert!(p.ratio_threshold > 0.0 && p.ratio_threshold <= 1.0);
+        assert!(p.norm_threshold.is_finite() && p.norm_threshold > 0.0);
+        // ODP prunes strictly less than plain EES at the same threshold.
+        let ees_filter = crate::prune::ees::EesPruner { threshold: p.ratio_threshold }.filter();
+        let odp_filter = p.filter();
+        let mut rng = crate::tensor::Pcg64::seeded(91);
+        let mut ees_dropped = 0;
+        let mut odp_dropped = 0;
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+            let s0 = 0.5 + rng.next_f32() * 0.4;
+            let s1 = s0 * rng.next_f32();
+            let mk = || TokenSelection { experts: vec![0, 1], scores: vec![s0, s1] };
+            let mut a = mk();
+            ees_filter(0, 0, &x, &mut a);
+            let mut b = mk();
+            odp_filter(0, 0, &x, &mut b);
+            ees_dropped += (a.experts.len() == 1) as usize;
+            odp_dropped += (b.experts.len() == 1) as usize;
+            assert!(b.experts.len() >= a.experts.len());
+        }
+        assert!(odp_dropped <= ees_dropped);
+    }
+}

@@ -1,0 +1,302 @@
+//! Mixed-precision bit-width allocators for MoE experts — the baselines the
+//! paper compares QESC against (Table 2, Table 9, Appendix A.6):
+//!
+//! * **Uniform** — every expert at the same bit-width (GPTQ baseline rows).
+//! * **HalfSplit** — the paper's own 2.5-bit setting: experts in the first
+//!   half of the layers at 3-bit, second half at 2-bit (Appendix A.5).
+//! * **BSP** (Li et al., 2024a) — frequency split: the top-half (or top-n)
+//!   most-frequently-selected experts get the high bit-width, the rest get
+//!   the low one; shared experts get 8-bit.
+//! * **PMQ** (Huang et al., 2024a) — importance-weighted allocation solved
+//!   as a budgeted assignment: maximize Σ importance(e)·u(bits(e)) subject
+//!   to the average-bit budget, with concave per-bit utility (greedy
+//!   marginal-gain is exact for concave u + unit bit steps).
+//!
+//! Allocators consume *expert-selection frequencies measured on a
+//! calibration set* — precisely the thing §3.3/Table 9 shows overfits
+//! across task types, which `experiments::table9` demonstrates.
+
+/// Bit-width assignment for every (layer, expert) plus shared experts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitAlloc {
+    /// bits[layer][expert]
+    pub bits: Vec<Vec<u32>>,
+    /// shared_bits[layer][shared_expert]
+    pub shared_bits: Vec<Vec<u32>>,
+}
+
+impl BitAlloc {
+    pub fn uniform(n_layers: usize, n_experts: usize, n_shared: usize, bits: u32) -> Self {
+        BitAlloc {
+            bits: vec![vec![bits; n_experts]; n_layers],
+            shared_bits: vec![vec![bits; n_shared]; n_layers],
+        }
+    }
+
+    /// Average bits per expert weight (routed + shared uniformly weighted by
+    /// parameter count, which is equal per expert here).
+    pub fn average_bits(&self) -> f64 {
+        let mut total = 0f64;
+        let mut count = 0usize;
+        for (l, s) in self.bits.iter().zip(&self.shared_bits) {
+            for &b in l.iter().chain(s) {
+                total += b as f64;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total / count as f64
+        }
+    }
+}
+
+/// The allocation strategies.
+#[derive(Clone, Debug)]
+pub enum Allocator {
+    Uniform { bits: u32 },
+    /// Paper's 2.5-bit setting: first half of layers hi, second half lo.
+    HalfSplit { hi: u32, lo: u32 },
+    /// BSP: top `hi_count` experts by frequency get `hi` bits, rest `lo`;
+    /// shared experts get `shared` bits.
+    Bsp { hi: u32, lo: u32, hi_count: usize, shared: u32 },
+    /// PMQ: budgeted importance-weighted assignment over `choices`,
+    /// targeting `avg_bits` average; shared experts get `shared` bits.
+    Pmq { avg_bits: f64, shared: u32 },
+}
+
+impl Allocator {
+    /// Produce an allocation. `freq[layer][expert]` are measured selection
+    /// frequencies (ignored by Uniform/HalfSplit).
+    pub fn allocate(
+        &self,
+        n_layers: usize,
+        n_experts: usize,
+        n_shared: usize,
+        freq: &[Vec<f32>],
+    ) -> BitAlloc {
+        match *self {
+            Allocator::Uniform { bits } => {
+                BitAlloc::uniform(n_layers, n_experts, n_shared, bits)
+            }
+            Allocator::HalfSplit { hi, lo } => {
+                let bits = (0..n_layers)
+                    .map(|l| vec![if l < n_layers / 2 { hi } else { lo }; n_experts])
+                    .collect();
+                let shared_bits = (0..n_layers)
+                    .map(|l| vec![if l < n_layers / 2 { hi } else { lo }; n_shared])
+                    .collect();
+                BitAlloc { bits, shared_bits }
+            }
+            Allocator::Bsp { hi, lo, hi_count, shared } => {
+                assert_eq!(freq.len(), n_layers, "BSP needs per-layer frequencies");
+                let bits = (0..n_layers)
+                    .map(|l| {
+                        let order = crate::tensor::ops::topk_indices(&freq[l], n_experts);
+                        let mut row = vec![lo; n_experts];
+                        for &e in order.iter().take(hi_count.min(n_experts)) {
+                            row[e] = hi;
+                        }
+                        row
+                    })
+                    .collect();
+                BitAlloc { bits, shared_bits: vec![vec![shared; n_shared]; n_layers] }
+            }
+            Allocator::Pmq { avg_bits, shared } => {
+                assert_eq!(freq.len(), n_layers);
+                let bits = pmq_allocate(n_layers, n_experts, freq, avg_bits);
+                BitAlloc { bits, shared_bits: vec![vec![shared; n_shared]; n_layers] }
+            }
+        }
+    }
+}
+
+/// Concave utility of giving an expert b bits (diminishing returns; the
+/// shape matters, not the constants — mirrors PMQ's error-model weights).
+fn bit_utility(b: u32) -> f64 {
+    match b {
+        0 | 1 | 2 => 0.0,
+        3 => 1.0,
+        4 => 1.7,
+        _ => 1.7 + 0.15 * (b as f64 - 4.0),
+    }
+}
+
+/// Greedy marginal-gain allocation: start everyone at 2 bits, repeatedly
+/// grant +1 bit to the (layer, expert) with the highest
+/// `importance × Δutility` until the global budget is exhausted.
+fn pmq_allocate(
+    n_layers: usize,
+    n_experts: usize,
+    freq: &[Vec<f32>],
+    avg_bits: f64,
+) -> Vec<Vec<u32>> {
+    let base = 2u32;
+    let max_bits = 8u32;
+    let total_budget = (avg_bits * (n_layers * n_experts) as f64).round() as i64;
+    let mut bits = vec![vec![base; n_experts]; n_layers];
+    let mut spent = (base as i64) * (n_layers * n_experts) as i64;
+    // Max-heap of candidate upgrades via sort-each-round would be O(n² log n);
+    // use a simple binary heap on (gain, layer, expert).
+    let mut heap: std::collections::BinaryHeap<(ordered::F64, usize, usize)> =
+        std::collections::BinaryHeap::new();
+    let gain = |f: f32, b: u32| -> f64 { f as f64 * (bit_utility(b + 1) - bit_utility(b)) };
+    for (l, row) in freq.iter().enumerate() {
+        for (e, &f) in row.iter().enumerate() {
+            heap.push((ordered::F64(gain(f, base)), l, e));
+        }
+    }
+    while spent < total_budget {
+        let Some((_, l, e)) = heap.pop() else { break };
+        if bits[l][e] >= max_bits {
+            continue;
+        }
+        bits[l][e] += 1;
+        spent += 1;
+        if bits[l][e] < max_bits {
+            heap.push((ordered::F64(gain(freq[l][e], bits[l][e])), l, e));
+        }
+    }
+    bits
+}
+
+/// Ordered f64 wrapper for use in a BinaryHeap (NaN-free inputs only).
+mod ordered {
+    #[derive(PartialEq, PartialOrd)]
+    pub struct F64(pub f64);
+    impl Eq for F64 {}
+    #[allow(clippy::derive_ord_xor_partial_ord)]
+    impl Ord for F64 {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+        }
+    }
+}
+
+/// Average-bit accounting for a whole model under a given expert allocation
+/// (Appendix A.5 / Table 12): MHSA at `mhsa_bits`, router at fp16,
+/// experts per `alloc`, group-overhead included.
+pub fn model_average_bits(
+    cfg: &crate::model::ModelConfig,
+    alloc: &BitAlloc,
+    mhsa_bits: u32,
+    group_size: usize,
+) -> f64 {
+    let expert_params = 3 * cfg.d_model * cfg.d_ff;
+    let overhead = 40.0 / group_size as f64; // f32 scale + u8 zero per group
+    let mut bit_sum = 0f64;
+    let mut param_sum = 0f64;
+    // Experts.
+    for l in 0..cfg.n_layers {
+        for &b in alloc.bits[l].iter().chain(&alloc.shared_bits[l]) {
+            bit_sum += (b as f64 + overhead) * expert_params as f64;
+            param_sum += expert_params as f64;
+        }
+    }
+    // MHSA.
+    let mhsa = cfg.mhsa_param_count() as f64;
+    bit_sum += (mhsa_bits as f64 + overhead) * mhsa;
+    param_sum += mhsa;
+    // Router stays fp16.
+    let router = cfg.router_param_count() as f64;
+    bit_sum += 16.0 * router;
+    param_sum += router;
+    bit_sum / param_sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ZooModel;
+
+    fn flat_freq(n_layers: usize, n_experts: usize) -> Vec<Vec<f32>> {
+        vec![vec![1.0 / n_experts as f32; n_experts]; n_layers]
+    }
+
+    #[test]
+    fn uniform_alloc() {
+        let a = Allocator::Uniform { bits: 3 }.allocate(2, 4, 1, &flat_freq(2, 4));
+        assert_eq!(a.average_bits(), 3.0);
+    }
+
+    #[test]
+    fn half_split_averages_between() {
+        let a = Allocator::HalfSplit { hi: 3, lo: 2 }.allocate(4, 8, 0, &flat_freq(4, 8));
+        assert_eq!(a.average_bits(), 2.5);
+        assert!(a.bits[0].iter().all(|&b| b == 3));
+        assert!(a.bits[3].iter().all(|&b| b == 2));
+    }
+
+    #[test]
+    fn bsp_tops_get_high_bits() {
+        let mut freq = flat_freq(1, 8);
+        freq[0] = vec![0.4, 0.05, 0.3, 0.05, 0.05, 0.05, 0.05, 0.05];
+        let a = Allocator::Bsp { hi: 4, lo: 2, hi_count: 2, shared: 8 }.allocate(1, 8, 2, &freq);
+        assert_eq!(a.bits[0][0], 4);
+        assert_eq!(a.bits[0][2], 4);
+        assert_eq!(a.bits[0][1], 2);
+        assert_eq!(a.shared_bits[0], vec![8, 8]);
+    }
+
+    #[test]
+    fn pmq_respects_budget_and_prefers_frequent() {
+        let mut freq = flat_freq(2, 8);
+        freq[0][3] = 0.9;
+        freq[1][5] = 0.9;
+        let a = Allocator::Pmq { avg_bits: 2.5, shared: 3 }.allocate(2, 8, 0, &freq);
+        let avg = a.average_bits();
+        assert!((avg - 2.5).abs() < 0.07, "avg={avg}");
+        // The heavy experts must end with >= the bits of any light expert.
+        assert!(a.bits[0][3] >= a.bits[0][1], "{:?}", a.bits);
+        assert!(a.bits[1][5] >= a.bits[1][0]);
+        assert!(a.bits[0][3] > 2);
+    }
+
+    #[test]
+    fn pmq_different_calibration_changes_alloc() {
+        // The overfitting premise of Table 9: different frequency profiles
+        // produce different allocations.
+        let mut fa = flat_freq(1, 8);
+        fa[0] = vec![0.8, 0.05, 0.02, 0.02, 0.02, 0.03, 0.03, 0.03];
+        let mut fb = flat_freq(1, 8);
+        fb[0] = vec![0.02, 0.05, 0.8, 0.02, 0.02, 0.03, 0.03, 0.03];
+        let alloc = |f: &Vec<Vec<f32>>| {
+            Allocator::Pmq { avg_bits: 2.3, shared: 2 }.allocate(1, 8, 0, f)
+        };
+        assert_ne!(alloc(&fa).bits, alloc(&fb).bits);
+    }
+
+    #[test]
+    fn table12_average_bits_accounting() {
+        // Reproduce Table 12's shape: experts at 2/2.5/3-bit + 4-bit MHSA
+        // lands near 2.06 / 2.54 / 3.03 average bits.
+        for m in ZooModel::ALL {
+            let cfg = m.config();
+            for (ebits, want) in [(2u32, 2.06), (3u32, 3.03)] {
+                let a = Allocator::Uniform { bits: ebits }.allocate(
+                    cfg.n_layers,
+                    cfg.n_experts,
+                    cfg.n_shared,
+                    &flat_freq(cfg.n_layers, cfg.n_experts),
+                );
+                let avg = model_average_bits(&cfg, &a, 4, 128);
+                // Minis have a higher MHSA fraction than the real models, so
+                // allow a looser band than the paper's ±0.01.
+                assert!(
+                    (avg - want).abs() < 0.45,
+                    "{} ebits={ebits}: avg={avg:.3} want≈{want}",
+                    cfg.name
+                );
+            }
+            let half = Allocator::HalfSplit { hi: 3, lo: 2 }.allocate(
+                cfg.n_layers,
+                cfg.n_experts,
+                cfg.n_shared,
+                &flat_freq(cfg.n_layers, cfg.n_experts),
+            );
+            let avg = model_average_bits(&cfg, &half, 4, 128);
+            assert!((avg - 2.54).abs() < 0.45, "{}: 2.5-bit avg={avg:.3}", cfg.name);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Weight quantization substrate: group-wise asymmetric quantization,
+//! sub-byte bit packing, RTN and GPTQ quantizers, and the mixed-precision
+//! bit-width allocators (BSP / PMQ) the paper compares against.
+
+pub mod alloc;
+pub mod gptq;
+pub mod pack;
+pub mod quantizer;
+
+pub use alloc::{BitAlloc, Allocator};
+pub use gptq::{gptq_quantize_mat, GptqConfig};
+pub use pack::PackedMat;
+pub use quantizer::{quantize_dequant_mat, GroupQuant, QuantConfig};

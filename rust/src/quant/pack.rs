@@ -1,0 +1,286 @@
+//! Sub-byte bit-packing for quantized weight storage (the BitBLAS role in
+//! the paper: this is what makes the *memory* numbers real).
+//!
+//! Codes are packed along the **row (K/reduction) axis** in little-endian bit
+//! order within each column-contiguous stream. Packing along K mirrors why
+//! BitBLAS packs along the warp-contiguous axis on GPU: at dequant time a
+//! K-tile unpacks as one contiguous byte run (see DESIGN.md
+//! §Hardware-Adaptation; the Pallas kernel in
+//! `python/compile/kernels/quant_matmul.py` uses the same layout).
+
+use super::quantizer::{GroupQuant, QuantConfig};
+use crate::tensor::Mat;
+
+/// A bit-packed quantized matrix: storage form of [`GroupQuant`].
+#[derive(Clone, Debug)]
+pub struct PackedMat {
+    pub cfg: QuantConfig,
+    pub rows: usize,
+    pub cols: usize,
+    /// Packed codes: per column, `rows * bits` bits, padded to a byte
+    /// boundary; columns concatenated.
+    pub packed: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Bytes needed to pack one column.
+    fn col_bytes(rows: usize, bits: u32) -> usize {
+        (rows * bits as usize).div_ceil(8)
+    }
+
+    /// Pack a [`GroupQuant`] into sub-byte storage.
+    pub fn pack(gq: &GroupQuant) -> PackedMat {
+        let bits = gq.cfg.bits as usize;
+        let cb = Self::col_bytes(gq.rows, gq.cfg.bits);
+        let mut packed = vec![0u8; cb * gq.cols];
+        for c in 0..gq.cols {
+            let col = &mut packed[c * cb..(c + 1) * cb];
+            for r in 0..gq.rows {
+                let code = gq.codes[r * gq.cols + c] as usize;
+                let bit0 = r * bits;
+                for b in 0..bits {
+                    if (code >> b) & 1 == 1 {
+                        let pos = bit0 + b;
+                        col[pos / 8] |= 1 << (pos % 8);
+                    }
+                }
+            }
+        }
+        PackedMat {
+            cfg: gq.cfg,
+            rows: gq.rows,
+            cols: gq.cols,
+            packed,
+            scales: gq.scales.clone(),
+            zeros: gq.zeros.clone(),
+        }
+    }
+
+    /// Unpack back to byte codes.
+    pub fn unpack(&self) -> GroupQuant {
+        let bits = self.cfg.bits as usize;
+        let cb = Self::col_bytes(self.rows, self.cfg.bits);
+        let mut codes = vec![0u8; self.rows * self.cols];
+        for c in 0..self.cols {
+            let col = &self.packed[c * cb..(c + 1) * cb];
+            for r in 0..self.rows {
+                let bit0 = r * bits;
+                let mut code = 0usize;
+                for b in 0..bits {
+                    let pos = bit0 + b;
+                    if (col[pos / 8] >> (pos % 8)) & 1 == 1 {
+                        code |= 1 << b;
+                    }
+                }
+                codes[r * self.cols + c] = code as u8;
+            }
+        }
+        GroupQuant::from_parts(
+            self.cfg,
+            self.rows,
+            self.cols,
+            codes,
+            self.scales.clone(),
+            self.zeros.clone(),
+        )
+    }
+
+    /// Real storage footprint in bytes (packed codes + scales + zeros,
+    /// zeros stored as u8 on disk).
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4 + self.zeros.len()
+    }
+
+    /// Fused dequantize-matmul: `x (m, rows) @ dequant(self) (rows, cols)`.
+    ///
+    /// This is the native-path analogue of the Pallas `quant_matmul` kernel:
+    /// it never materializes the full f32 weight matrix; each column is
+    /// unpacked group-by-group into a stack buffer and consumed immediately.
+    ///
+    /// Unpacking is LUT-driven for the byte-aligned widths (2-bit: one
+    /// 256×4 table lookup per byte; 4-bit: 256×2) — the §Perf optimization
+    /// that took this from ~8x slower than dequant-then-GEMM to ~parity at
+    /// small M (see EXPERIMENTS.md §Perf). Non-aligned widths (3/5-bit)
+    /// take the generic bit-extraction path.
+    pub fn matmul_dequant(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.rows, "matmul_dequant inner-dim mismatch");
+        let bits = self.cfg.bits as usize;
+        let cb = Self::col_bytes(self.rows, self.cfg.bits);
+        let g = if self.cfg.group_size == 0 { self.rows } else { self.cfg.group_size };
+        let mut out = Mat::zeros(x.rows, self.cols);
+        let mut colbuf = vec![0f32; self.rows + 8]; // slack for LUT over-write
+        for c in 0..self.cols {
+            let col = &self.packed[c * cb..(c + 1) * cb];
+            match bits {
+                2 => unpack2_lut(col, &mut colbuf),
+                4 => unpack4_lut(col, &mut colbuf),
+                8 => {
+                    for (dst, &b) in colbuf.iter_mut().zip(col) {
+                        *dst = b as f32;
+                    }
+                }
+                _ => unpack_generic(col, bits, self.rows, &mut colbuf),
+            }
+            // Affine-correct per group: w = (code - zero) * scale.
+            for gi in 0..self.cfg.n_groups(self.rows) {
+                let scale = self.scales[gi * self.cols + c];
+                let zero = self.zeros[gi * self.cols + c];
+                let r1 = ((gi + 1) * g).min(self.rows);
+                for v in &mut colbuf[gi * g..r1] {
+                    *v = (*v - zero) * scale;
+                }
+            }
+            // out[:, c] = x @ colbuf
+            for m in 0..x.rows {
+                let xr = x.row(m);
+                let mut acc = 0.0f32;
+                for (xv, wv) in xr.iter().zip(&colbuf[..self.rows]) {
+                    acc += xv * wv;
+                }
+                *out.at_mut(m, c) = acc;
+            }
+        }
+        out
+    }
+}
+
+/// 256-entry LUT: byte -> four 2-bit codes as f32.
+fn lut2() -> &'static [[f32; 4]; 256] {
+    static LUT: std::sync::OnceLock<[[f32; 4]; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [[0f32; 4]; 256];
+        for (b, e) in t.iter_mut().enumerate() {
+            for (k, v) in e.iter_mut().enumerate() {
+                *v = ((b >> (2 * k)) & 3) as f32;
+            }
+        }
+        t
+    })
+}
+
+/// 256-entry LUT: byte -> two 4-bit codes as f32.
+fn lut4() -> &'static [[f32; 2]; 256] {
+    static LUT: std::sync::OnceLock<[[f32; 2]; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [[0f32; 2]; 256];
+        for (b, e) in t.iter_mut().enumerate() {
+            e[0] = (b & 15) as f32;
+            e[1] = (b >> 4) as f32;
+        }
+        t
+    })
+}
+
+fn unpack2_lut(col: &[u8], out: &mut [f32]) {
+    let lut = lut2();
+    for (i, &b) in col.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&lut[b as usize]);
+    }
+}
+
+fn unpack4_lut(col: &[u8], out: &mut [f32]) {
+    let lut = lut4();
+    for (i, &b) in col.iter().enumerate() {
+        out[i * 2..i * 2 + 2].copy_from_slice(&lut[b as usize]);
+    }
+}
+
+fn unpack_generic(col: &[u8], bits: usize, rows: usize, out: &mut [f32]) {
+    let mask = ((1u32 << bits) - 1) as u8;
+    for (r, dst) in out.iter_mut().enumerate().take(rows) {
+        let bit0 = r * bits;
+        let byte = bit0 / 8;
+        let off = bit0 % 8;
+        let mut raw = col[byte] as u32 >> off;
+        if off + bits > 8 && byte + 1 < col.len() {
+            raw |= (col[byte + 1] as u32) << (8 - off);
+        }
+        *dst = ((raw as u8) & mask) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, Pcg64};
+
+    #[test]
+    fn pack_unpack_identity_all_bitwidths() {
+        let mut rng = Pcg64::seeded(31);
+        for bits in [2u32, 3, 4, 5, 8] {
+            let rows = 37; // deliberately not byte-aligned
+            let cols = 5;
+            let w = Mat::randn(rows, cols, 1.0, &mut rng);
+            let gq = GroupQuant::quantize(&w, QuantConfig::new(bits, 16));
+            let packed = PackedMat::pack(&gq);
+            let back = packed.unpack();
+            assert_eq!(back.codes, gq.codes, "bits={bits}");
+            assert_eq!(back.scales, gq.scales);
+        }
+    }
+
+    #[test]
+    fn packed_size_matches_bits() {
+        let gq = GroupQuant::quantize(&Mat::zeros(128, 64), QuantConfig::new(2, 128));
+        let p = PackedMat::pack(&gq);
+        // 128 rows * 2 bits = 32 bytes per column * 64 cols.
+        assert_eq!(p.packed.len(), 32 * 64);
+        let gq3 = GroupQuant::quantize(&Mat::zeros(128, 64), QuantConfig::new(3, 128));
+        let p3 = PackedMat::pack(&gq3);
+        assert_eq!(p3.packed.len(), 48 * 64);
+    }
+
+    #[test]
+    fn matmul_dequant_matches_explicit() {
+        let mut rng = Pcg64::seeded(32);
+        for bits in [2u32, 3, 4] {
+            let w = Mat::randn(48, 20, 1.0, &mut rng);
+            let x = Mat::randn(7, 48, 1.0, &mut rng);
+            let gq = GroupQuant::quantize(&w, QuantConfig::new(bits, 16));
+            let p = PackedMat::pack(&gq);
+            let fused = p.matmul_dequant(&x);
+            let explicit = matmul(&x, &gq.dequantize());
+            for (a, b) in fused.data.iter().zip(&explicit.data) {
+                assert!((a - b).abs() < 1e-3, "bits={bits}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratio_is_real() {
+        // 2-bit packing of a 128x128 f32 matrix: 65536 B -> ~4096 B codes.
+        let w = Mat::zeros(128, 128);
+        let gq = GroupQuant::quantize(&w, QuantConfig::new(2, 128));
+        let p = PackedMat::pack(&gq);
+        let fp32 = 128 * 128 * 4;
+        let ratio = fp32 as f64 / p.storage_bytes() as f64;
+        assert!(ratio > 13.0, "ratio={ratio}"); // ~13.9x with group overhead
+    }
+
+    /// Property: pack∘unpack is the identity on random code matrices.
+    #[test]
+    fn prop_pack_roundtrip_random() {
+        let mut rng = Pcg64::seeded(33);
+        for _ in 0..10 {
+            let bits = 2 + rng.below(4) as u32; // 2..=5
+            let rows = 1 + rng.below_usize(70);
+            let cols = 1 + rng.below_usize(9);
+            let qmax = (1u32 << bits) - 1;
+            let codes: Vec<u8> =
+                (0..rows * cols).map(|_| rng.below(qmax as u64 + 1) as u8).collect();
+            let ng = QuantConfig::new(bits, 16).n_groups(rows);
+            let gq = GroupQuant::from_parts(
+                QuantConfig::new(bits, 16),
+                rows,
+                cols,
+                codes.clone(),
+                vec![1.0; ng * cols],
+                vec![0.0; ng * cols],
+            );
+            let back = PackedMat::pack(&gq).unpack();
+            assert_eq!(back.codes, codes);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Group-wise asymmetric uniform quantization (the paper's setting:
+//! group size 128, asymmetric, weight-only).
+//!
+//! A weight column group `g` of size G is mapped to integers
+//! `q = clamp(round(w / scale) + zero, 0, 2^B - 1)` with
+//! `scale = (max - min) / (2^B - 1)` and `zero = round(-min / scale)`;
+//! dequantization is `w ≈ (q - zero) * scale`.
+
+use crate::tensor::Mat;
+
+/// Quantization settings for one weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// Target bit-width (2..=8).
+    pub bits: u32,
+    /// Group size along the input (row) dimension; each column is split into
+    /// groups of this many consecutive rows. 0 = per-column (one group).
+    pub group_size: usize,
+}
+
+impl QuantConfig {
+    pub fn new(bits: u32, group_size: usize) -> Self {
+        assert!((2..=8).contains(&bits), "bits must be in 2..=8");
+        QuantConfig { bits, group_size }
+    }
+
+    /// Paper default: group size 128.
+    pub fn paper(bits: u32) -> Self {
+        Self::new(bits, 128)
+    }
+
+    pub fn qmax(&self) -> i32 {
+        (1i32 << self.bits) - 1
+    }
+
+    /// Number of groups for a matrix with `rows` input features.
+    pub fn n_groups(&self, rows: usize) -> usize {
+        let g = if self.group_size == 0 { rows } else { self.group_size };
+        rows.div_ceil(g)
+    }
+
+    pub fn group_rows(&self, rows: usize) -> usize {
+        if self.group_size == 0 {
+            rows
+        } else {
+            self.group_size.min(rows)
+        }
+    }
+
+    /// Storage cost in bits per weight including scale+zero overhead
+    /// (f32 scale + u8 zero per group, amortized).
+    pub fn bits_per_weight(&self, rows: usize) -> f64 {
+        let g = if self.group_size == 0 { rows } else { self.group_size.min(rows) };
+        self.bits as f64 + (32.0 + 8.0) / g as f64
+    }
+}
+
+/// Quantized representation of a (rows=in, cols=out) weight matrix:
+/// integer codes plus per-(group, col) scale and zero-point.
+#[derive(Clone, Debug)]
+pub struct GroupQuant {
+    pub cfg: QuantConfig,
+    pub rows: usize,
+    pub cols: usize,
+    /// Integer codes, row-major, one u8 per weight (packing is separate —
+    /// see [`super::pack::PackedMat`] for the storage form).
+    pub codes: Vec<u8>,
+    /// (n_groups, cols) scales.
+    pub scales: Vec<f32>,
+    /// (n_groups, cols) zero-points (stored as f32 for dequant math).
+    pub zeros: Vec<f32>,
+}
+
+impl GroupQuant {
+    /// Quantize a matrix (round-to-nearest within each group).
+    pub fn quantize(w: &Mat, cfg: QuantConfig) -> GroupQuant {
+        let rows = w.rows;
+        let cols = w.cols;
+        let g = if cfg.group_size == 0 { rows } else { cfg.group_size };
+        let n_groups = rows.div_ceil(g);
+        let qmax = cfg.qmax() as f32;
+        let mut codes = vec![0u8; rows * cols];
+        let mut scales = vec![0f32; n_groups * cols];
+        let mut zeros = vec![0f32; n_groups * cols];
+        for gi in 0..n_groups {
+            let r0 = gi * g;
+            let r1 = (r0 + g).min(rows);
+            for c in 0..cols {
+                let mut mn = f32::INFINITY;
+                let mut mx = f32::NEG_INFINITY;
+                for r in r0..r1 {
+                    let v = w.at(r, c);
+                    mn = mn.min(v);
+                    mx = mx.max(v);
+                }
+                // Ensure zero is representable & range non-degenerate.
+                mn = mn.min(0.0);
+                mx = mx.max(0.0);
+                let scale = ((mx - mn) / qmax).max(1e-10);
+                let zero = (-mn / scale).round().clamp(0.0, qmax);
+                scales[gi * cols + c] = scale;
+                zeros[gi * cols + c] = zero;
+                for r in r0..r1 {
+                    let q = (w.at(r, c) / scale + zero).round().clamp(0.0, qmax);
+                    codes[r * cols + c] = q as u8;
+                }
+            }
+        }
+        GroupQuant { cfg, rows, cols, codes, scales, zeros }
+    }
+
+    /// Build from externally-computed codes (GPTQ fills this in).
+    pub fn from_parts(
+        cfg: QuantConfig,
+        rows: usize,
+        cols: usize,
+        codes: Vec<u8>,
+        scales: Vec<f32>,
+        zeros: Vec<f32>,
+    ) -> GroupQuant {
+        assert_eq!(codes.len(), rows * cols);
+        let ng = cfg.n_groups(rows);
+        assert_eq!(scales.len(), ng * cols);
+        assert_eq!(zeros.len(), ng * cols);
+        GroupQuant { cfg, rows, cols, codes, scales, zeros }
+    }
+
+    /// Dequantize to f32.
+    pub fn dequantize(&self) -> Mat {
+        let g = if self.cfg.group_size == 0 { self.rows } else { self.cfg.group_size };
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let gi = r / g;
+            let srow = &self.scales[gi * self.cols..(gi + 1) * self.cols];
+            let zrow = &self.zeros[gi * self.cols..(gi + 1) * self.cols];
+            let crow = &self.codes[r * self.cols..(r + 1) * self.cols];
+            let orow = out.row_mut(r);
+            for c in 0..self.cols {
+                orow[c] = (crow[c] as f32 - zrow[c]) * srow[c];
+            }
+        }
+        out
+    }
+
+    /// Storage bytes for the packed form (codes at `bits` + scales + zeros).
+    pub fn storage_bytes(&self) -> usize {
+        let code_bits = self.rows * self.cols * self.cfg.bits as usize;
+        let ng = self.cfg.n_groups(self.rows);
+        code_bits.div_ceil(8) + ng * self.cols * (4 + 1)
+    }
+}
+
+/// Convenience: quantize then immediately dequantize (RTN baseline).
+pub fn quantize_dequant_mat(w: &Mat, cfg: QuantConfig) -> Mat {
+    GroupQuant::quantize(w, cfg).dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Pcg64::seeded(21);
+        let w = Mat::randn(128, 32, 1.0, &mut rng);
+        for bits in [2u32, 3, 4, 8] {
+            let cfg = QuantConfig::new(bits, 32);
+            let gq = GroupQuant::quantize(&w, cfg);
+            let dq = gq.dequantize();
+            // Per-group max error must be <= scale/2 (+ eps).
+            let g = 32;
+            for gi in 0..w.rows / g {
+                for c in 0..w.cols {
+                    let scale = gq.scales[gi * w.cols + c];
+                    for r in gi * g..(gi + 1) * g {
+                        let err = (w.at(r, c) - dq.at(r, c)).abs();
+                        assert!(err <= scale * 0.5 + 1e-5, "bits={bits} err={err} scale={scale}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Pcg64::seeded(22);
+        let w = Mat::randn(256, 16, 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for bits in [2u32, 3, 4, 6, 8] {
+            let dq = quantize_dequant_mat(&w, QuantConfig::new(bits, 128));
+            let mse = w.mse(&dq);
+            assert!(mse < last, "bits={bits}: {mse} !< {last}");
+            last = mse;
+        }
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Pcg64::seeded(23);
+        let w = Mat::randn(64, 8, 3.0, &mut rng);
+        let cfg = QuantConfig::new(3, 16);
+        let gq = GroupQuant::quantize(&w, cfg);
+        assert!(gq.codes.iter().all(|&c| (c as i32) <= cfg.qmax()));
+    }
+
+    #[test]
+    fn zero_weight_exactly_representable() {
+        // With asymmetric quant the range always includes 0.
+        let mut w = Mat::zeros(16, 4);
+        for r in 0..16 {
+            for c in 0..4 {
+                *w.at_mut(r, c) = if r % 3 == 0 { 0.0 } else { (r as f32 - 8.0) * 0.1 };
+            }
+        }
+        let dq = quantize_dequant_mat(&w, QuantConfig::new(4, 16));
+        for r in (0..16).step_by(3) {
+            for c in 0..4 {
+                assert!(dq.at(r, c).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_last_group() {
+        let mut rng = Pcg64::seeded(24);
+        let w = Mat::randn(100, 8, 1.0, &mut rng); // 100 = 3*32 + 4
+        let cfg = QuantConfig::new(4, 32);
+        assert_eq!(cfg.n_groups(100), 4);
+        let gq = GroupQuant::quantize(&w, cfg);
+        let dq = gq.dequantize();
+        assert!(w.mse(&dq) < 0.01);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let cfg = QuantConfig::new(2, 128);
+        let gq = GroupQuant::quantize(&Mat::zeros(128, 128), cfg);
+        // 128*128 weights at 2 bits = 4096 bytes, + 1 group * 128 cols * 5B.
+        assert_eq!(gq.storage_bytes(), 4096 + 640);
+        // bits_per_weight ~ 2 + 40/128.
+        assert!((cfg.bits_per_weight(128) - (2.0 + 40.0 / 128.0)).abs() < 1e-9);
+    }
+
+    /// Property: quantization is idempotent — quantizing a dequantized
+    /// matrix reproduces it exactly (codes map to themselves).
+    #[test]
+    fn prop_idempotent() {
+        let mut rng = Pcg64::seeded(25);
+        for _ in 0..5 {
+            let rows = 32 * (1 + rng.below_usize(4));
+            let cols = 1 + rng.below_usize(16);
+            let w = Mat::randn(rows, cols, 1.0, &mut rng);
+            let cfg = QuantConfig::new(3, 32);
+            let d1 = quantize_dequant_mat(&w, cfg);
+            let d2 = quantize_dequant_mat(&d1, cfg);
+            for (a, b) in d1.data.iter().zip(&d2.data) {
+                assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Shared infrastructure for the experiment drivers: method definitions
+//! (GPTQ / BSP / PMQ / QESC at the paper's three bit settings), compression
+//! dispatch, and the standard measurement bundle (PPL, 0-shot, latency).
+
+use crate::calib::loss::LossType;
+use crate::calib::qesc::{qesc_compress, CompressReport, QescConfig};
+use crate::coordinator::ExperimentContext;
+use crate::data::tasks::ZeroShotTask;
+use crate::eval::zeroshot::SuiteResult;
+use crate::model::hooks::Hooks;
+use crate::model::{Model, ZooModel};
+use crate::quant::alloc::Allocator;
+use crate::serve::{Engine, EngineConfig, PrunePolicy, Request};
+
+/// The paper's three average-bit settings (Appendix A.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitSetting {
+    B206,
+    B254,
+    B303,
+}
+
+impl BitSetting {
+    pub const ALL: [BitSetting; 3] = [BitSetting::B206, BitSetting::B254, BitSetting::B303];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BitSetting::B206 => "2.06",
+            BitSetting::B254 => "2.54",
+            BitSetting::B303 => "3.03",
+        }
+    }
+
+    /// Uniform expert bits for methods without their own allocation.
+    pub fn uniform_alloc(&self) -> Allocator {
+        match self {
+            BitSetting::B206 => Allocator::Uniform { bits: 2 },
+            BitSetting::B254 => Allocator::HalfSplit { hi: 3, lo: 2 },
+            BitSetting::B303 => Allocator::Uniform { bits: 3 },
+        }
+    }
+
+    pub fn avg_expert_bits(&self) -> f64 {
+        match self {
+            BitSetting::B206 => 2.0,
+            BitSetting::B254 => 2.5,
+            BitSetting::B303 => 3.0,
+        }
+    }
+}
+
+/// Quantization methods compared in Table 2 / Appendix A.6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMethod {
+    Gptq,
+    Bsp,
+    Pmq,
+    Qesc,
+    /// QESC ablation: full-MSE calibration loss (Table 6).
+    QescMse,
+}
+
+impl QuantMethod {
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantMethod::Gptq => "GPTQ",
+            QuantMethod::Bsp => "BSP",
+            QuantMethod::Pmq => "PMQ",
+            QuantMethod::Qesc => "QESC",
+            QuantMethod::QescMse => "QESC(MSE)",
+        }
+    }
+}
+
+/// BSP's published allocation rules, transcribed from Appendix A.6.
+pub fn bsp_allocator(zoo: ZooModel, bits: BitSetting) -> Allocator {
+    let cfg = zoo.config();
+    let has_shared = cfg.n_shared > 0;
+    match (has_shared, bits) {
+        // Mixtral/Phi: top-half experts hi, rest 2-bit.
+        (false, BitSetting::B303) => {
+            Allocator::Bsp { hi: 4, lo: 2, hi_count: cfg.n_experts / 2, shared: 8 }
+        }
+        (false, _) => Allocator::Bsp { hi: 3, lo: 2, hi_count: cfg.n_experts / 2, shared: 8 },
+        // DeepSeek/Qwen: shared experts 8-bit; 3.03: 4-bit top third;
+        // 2.54: 4-bit top tenth.
+        (true, BitSetting::B303) => {
+            Allocator::Bsp { hi: 4, lo: 2, hi_count: cfg.n_experts / 3, shared: 8 }
+        }
+        (true, _) => Allocator::Bsp { hi: 4, lo: 2, hi_count: cfg.n_experts / 10, shared: 8 },
+    }
+}
+
+/// Build the QESC pipeline config for (method, bit setting, model).
+pub fn method_config(zoo: ZooModel, method: QuantMethod, bits: BitSetting) -> QescConfig {
+    let mcfg = zoo.config();
+    let k = QescConfig::default_k(&mcfg);
+    let base = QescConfig::qesc(3, k); // placeholder alloc replaced below
+    match method {
+        QuantMethod::Gptq => QescConfig {
+            expert_alloc: bits.uniform_alloc(),
+            calib_router: false,
+            ..base
+        },
+        QuantMethod::Bsp => QescConfig {
+            expert_alloc: bsp_allocator(zoo, bits),
+            calib_router: false,
+            ..base
+        },
+        QuantMethod::Pmq => QescConfig {
+            expert_alloc: Allocator::Pmq { avg_bits: bits.avg_expert_bits(), shared: 3 },
+            calib_router: false,
+            ..base
+        },
+        QuantMethod::Qesc => QescConfig { expert_alloc: bits.uniform_alloc(), ..base },
+        QuantMethod::QescMse => QescConfig {
+            expert_alloc: bits.uniform_alloc(),
+            loss: LossType::Mse,
+            ..base
+        },
+    }
+}
+
+/// Compress a model with a method at a bit setting.
+pub fn compress(
+    model: &Model,
+    zoo: ZooModel,
+    method: QuantMethod,
+    bits: BitSetting,
+    ctx: &ExperimentContext,
+) -> (Model, CompressReport) {
+    let cfg = method_config(zoo, method, bits);
+    qesc_compress(model, &ctx.calib, &cfg)
+}
+
+/// Standard measurement bundle.
+pub struct Measured {
+    pub ppl: f64,
+    pub suite: SuiteResult,
+}
+
+pub fn measure(model: &Model, ctx: &ExperimentContext, suite: &[ZeroShotTask]) -> Measured {
+    Measured {
+        ppl: crate::eval::perplexity(model, &ctx.ppl_eval),
+        suite: crate::eval::eval_suite(model, suite, Hooks::none),
+    }
+}
+
+pub fn measure_pruned(
+    model: &Model,
+    ctx: &ExperimentContext,
+    suite: &[ZeroShotTask],
+    alpha: f32,
+) -> Measured {
+    let n_layers = model.cfg().n_layers;
+    let hooks = move || Hooks { pesf_alpha: Some(alpha), ..Default::default() };
+    let ppl = crate::eval::ppl::perplexity_with_hooks(model, &ctx.ppl_eval, hooks);
+    let suite = crate::eval::eval_suite(model, suite, hooks);
+    let _ = n_layers;
+    Measured { ppl, suite }
+}
+
+/// Prefill latency of a batch through the serving engine (the paper's
+/// Table-4 protocol: context latency for a batch of sequences). Runs a
+/// warmup pass then several trials and returns the median per-request
+/// prefill seconds (single-core wall-clock is noisy; median resists it).
+pub fn prefill_latency(model: Model, prune: PrunePolicy, n_reqs: usize, len: usize) -> f64 {
+    let engine = Engine::new(
+        model,
+        EngineConfig { workers: 1, prune, ..Default::default() },
+    );
+    let mut mix = crate::data::corpus::WikiMixture::new(97);
+    let make_reqs = |mix: &mut crate::data::corpus::WikiMixture| -> Vec<Request> {
+        (0..n_reqs as u64).map(|i| Request::new(i, mix.sequence(len))).collect()
+    };
+    engine.serve(make_reqs(&mut mix)); // warmup
+    let mut medians = Vec::new();
+    for _ in 0..3 {
+        let (_, metrics) = engine.serve(make_reqs(&mut mix));
+        medians.push(metrics.prefill.percentile_ms(0.5));
+    }
+    medians.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    medians[medians.len() / 2] / 1e3
+}
+
+/// Number of zero-shot items per task at a given scale.
+pub fn n_items(scale: f64) -> usize {
+    ((16.0 * scale).round() as usize).clamp(4, 64)
+}
+
+/// Serving workload size at a given scale.
+pub fn serve_workload(scale: f64) -> (usize, usize) {
+    let n = ((8.0 * scale).round() as usize).clamp(2, 16);
+    let len = ((256.0 * scale.sqrt()).round() as usize).clamp(64, 512);
+    (n, len)
+}

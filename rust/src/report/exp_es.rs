@@ -1,0 +1,136 @@
+//! Expert-selection analysis experiments: Fig 2 (task-typed similarity)
+//! and the Fig 10/11/13 frequency dumps (A.11/A.12).
+
+use super::Table;
+use crate::coordinator::load_or_init_model;
+use crate::data::corpus::DATASETS;
+use crate::eval::es_analysis::{
+    es_frequencies, es_similarity_matrix, intra_inter_summary, sparsity_stats, EsProfile,
+};
+use crate::model::ZooModel;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Fig 2: pairwise ES-frequency cosine similarity over the 19 datasets for
+/// phi-mini and deepseek-mini (the paper's two panels).
+pub fn fig2(scale: f64) -> Result<()> {
+    let n_seqs = ((6.0 * scale).round() as usize).max(2);
+    let mut json = Json::obj();
+    for zoo in [ZooModel::PhiMini, ZooModel::DeepseekMini] {
+        let (model, pretrained) = load_or_init_model(zoo);
+        if !pretrained {
+            println!("warning: {} not pretrained; Fig-2 structure needs `make artifacts`", zoo.key());
+        }
+        let profiles: Vec<EsProfile> =
+            DATASETS.iter().map(|d| es_frequencies(&model, d, n_seqs, 96, 19)).collect();
+        let sim = es_similarity_matrix(&profiles);
+        let (intra, inter) = intra_inter_summary(&profiles, &sim);
+        // Count high-similarity pairs (the paper highlights sim > 0.8).
+        let mut intra_high = 0usize;
+        let mut intra_total = 0usize;
+        let mut inter_high = 0usize;
+        let mut inter_total = 0usize;
+        for i in 0..profiles.len() {
+            for j in 0..i {
+                let same = profiles[i].family == profiles[j].family;
+                let high = sim[i][j] > 0.8;
+                if same {
+                    intra_total += 1;
+                    intra_high += high as usize;
+                } else {
+                    inter_total += 1;
+                    inter_high += high as usize;
+                }
+            }
+        }
+        let mut table = Table::new(
+            &format!("Fig 2 — ES similarity, {}", zoo.display()),
+            &["metric", "value"],
+        );
+        table.row(vec!["mean intra-family cosine".into(), format!("{intra:.3}")]);
+        table.row(vec!["mean inter-family cosine".into(), format!("{inter:.3}")]);
+        table.row(vec![
+            "intra pairs with sim > 0.8".into(),
+            format!("{intra_high}/{intra_total}"),
+        ]);
+        table.row(vec![
+            "inter pairs with sim > 0.8".into(),
+            format!("{inter_high}/{inter_total}"),
+        ]);
+        table.print();
+        let mut o = Json::obj();
+        o.set("intra_mean", Json::Num(intra as f64))
+            .set("inter_mean", Json::Num(inter as f64))
+            .set("intra_high", Json::from(intra_high))
+            .set("intra_total", Json::from(intra_total))
+            .set("inter_high", Json::from(inter_high))
+            .set("inter_total", Json::from(inter_total));
+        // Full matrix for plotting.
+        o.set(
+            "matrix",
+            Json::Arr(
+                sim.iter()
+                    .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        o.set(
+            "datasets",
+            Json::Arr(profiles.iter().map(|p| Json::from(p.dataset.clone())).collect()),
+        );
+        json.set(zoo.key(), o);
+    }
+    println!("(expected shape: intra-family similarity high (>0.8 pairs dominate),\n\
+              inter-family low — the paper's central §3.3 observation)");
+    super::save_result("fig2", &json)?;
+    Ok(())
+}
+
+/// Fig 10/11/13 (A.11/A.12): per-layer ES frequency dumps + sparsity
+/// summary, including mixtral-mini's weaker sparsity.
+pub fn fig10(scale: f64) -> Result<()> {
+    let n_seqs = ((6.0 * scale).round() as usize).max(2);
+    let mut json = Json::obj();
+    let mut table = Table::new(
+        "Fig 10/11/13 — ES sparsity by model (balanced freq = 1/N)",
+        &["Model", "dataset", "max freq", "min freq", "max/balanced"],
+    );
+    for zoo in [ZooModel::PhiMini, ZooModel::DeepseekMini, ZooModel::MixtralMini] {
+        let (model, _) = load_or_init_model(zoo);
+        let n = model.cfg().n_experts as f32;
+        for ds in ["openbookqa", "humaneval"] {
+            let spec = crate::data::corpus::dataset(ds).unwrap();
+            let prof = es_frequencies(&model, spec, n_seqs, 96, 23);
+            let stats = sparsity_stats(&prof);
+            let mx = stats.iter().map(|s| s.0).fold(0.0f32, f32::max);
+            let mn = stats.iter().map(|s| s.1).fold(1.0f32, f32::min);
+            table.row(vec![
+                zoo.display().into(),
+                ds.into(),
+                format!("{:.3}", mx),
+                format!("{:.4}", mn),
+                format!("{:.1}x", mx * n),
+            ]);
+            let mut o = Json::obj();
+            o.set("max", Json::Num(mx as f64))
+                .set("min", Json::Num(mn as f64))
+                .set("ratio_to_balanced", Json::Num((mx * n) as f64));
+            o.set(
+                "per_layer",
+                Json::Arr(
+                    prof.per_layer
+                        .iter()
+                        .map(|l| Json::Arr(l.iter().map(|&v| Json::Num(v as f64)).collect()))
+                        .collect(),
+                ),
+            );
+            json.set(&format!("{}/{ds}", zoo.key()), o);
+        }
+    }
+    table.print();
+    println!("(expected shape: phi/deepseek strongly sparse — few experts far above\n\
+              balanced; mixtral comparatively balanced, explaining its PESF(0.7)\n\
+              sensitivity — Appendix A.12)");
+    super::save_result("fig10", &json)?;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Experiment drivers: one function per paper table/figure (DESIGN.md §4).
+//! Each prints the paper-shaped rows and saves `results/<id>.json`.
+//!
+//! Run via `eac-moe experiment <id> [--scale S]` or `make experiments`.
+
+use crate::Result;
+
+/// Run one experiment id (or "all"). `scale` shrinks data volume (items,
+/// sequences, request counts) for quick runs.
+pub fn run(id: &str, scale: f64) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    match id {
+        "fig2" => super::exp_es::fig2(scale)?,
+        "fig10" | "fig11" | "fig13" => super::exp_es::fig10(scale)?,
+        "table1" => super::exp_quant::table1(scale)?,
+        "table2" => super::exp_quant::table2(scale)?,
+        "fig4" => super::exp_quant::fig4(scale)?,
+        "fig6" => super::exp_quant::fig6(scale)?,
+        "table6" => super::exp_quant::table6(scale)?,
+        "fig8" => super::exp_quant::fig8(scale)?,
+        "fig9" => super::exp_quant::fig9(scale)?,
+        "fig7" => super::exp_prune::fig7(scale)?,
+        "table3" => super::exp_prune::table3(scale)?,
+        "table4" | "fig1" => super::exp_e2e::table4(scale)?,
+        "table5" => super::exp_e2e::table5(scale)?,
+        "table7" => super::exp_e2e::table7(scale)?,
+        "table8" | "challenging" => super::exp_table9::challenging(scale)?,
+        "table9" => super::exp_table9::table9(scale)?,
+        "all" => {
+            for id in [
+                "fig2", "fig10", "table1", "fig4", "fig6", "table2", "fig7", "table3",
+                "table4", "table5", "table6", "table7", "table8", "table9", "fig8", "fig9",
+            ] {
+                println!("\n################ experiment {id} ################");
+                run(id, scale)?;
+            }
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (see `eac-moe --help` for the list)"
+        ),
+    }
+    if id != "all" {
+        println!("[experiment {id} done in {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Paper-shaped reporting: fixed-width table printers, JSON result files
+//! under `results/`, and the experiment drivers for every paper
+//! table/figure.
+
+pub mod exp_common;
+pub mod exp_e2e;
+pub mod exp_es;
+pub mod exp_prune;
+pub mod exp_quant;
+pub mod exp_table9;
+pub mod experiments;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// A printable table with a title, headers, and string rows.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], out: &mut String| {
+            for i in 0..ncol {
+                out.push_str(&format!("{:<w$}  ", cells[i], w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+        println!();
+    }
+
+    /// Convert to a JSON object for results/ files.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("title", Json::from(self.title.clone()));
+        obj.set(
+            "headers",
+            Json::Arr(self.headers.iter().map(|h| Json::from(h.clone())).collect()),
+        );
+        obj.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::from(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        obj
+    }
+}
+
+/// Write a JSON result document to `results/<name>.json`.
+pub fn save_result(name: &str, json: &Json) -> crate::Result<()> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), json.to_pretty())?;
+    Ok(())
+}
+
+/// Format helpers used across experiment tables.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["model", "ppl"]);
+        t.row(vec!["mixtral-mini".into(), "3.84".into()]);
+        t.row(vec!["phi".into(), "4.1".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("mixtral-mini"));
+        // Columns aligned: "ppl" header starts at same col in all lines.
+        let lines: Vec<&str> = s.lines().collect();
+        let hdr_pos = lines[1].find("ppl").unwrap();
+        let row_pos = lines[3].find("3.84").unwrap();
+        assert_eq!(hdr_pos, row_pos);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("T"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

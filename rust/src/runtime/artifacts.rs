@@ -1,0 +1,126 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json`:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {"name": "expert_ffn.m32", "path": "hlo/expert_ffn_m32.hlo.txt",
+//!      "inputs": [[32,128],[128,256],[256,128],[128,256]],
+//!      "outputs": [[32,128]], "bucket_m": 32, "kind": "expert_ffn"}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    /// Input shapes (row-major dims).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    /// Token-count bucket this entry was compiled for (0 = n/a).
+    pub bucket_m: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub root: PathBuf,
+    pub entries: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Default artifacts directory (env EAC_MOE_ARTIFACTS or ./artifacts).
+    pub fn default_root() -> PathBuf {
+        std::env::var("EAC_MOE_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from("artifacts")
+        })
+    }
+
+    pub fn present(root: &Path) -> bool {
+        root.join("manifest.json").exists()
+    }
+
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json", root.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut entries = Vec::new();
+        let shape_list = |j: &Json| -> Vec<Vec<usize>> {
+            j.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| s.as_arr().unwrap_or(&[]).iter().filter_map(|d| d.as_usize()).collect())
+                .collect()
+        };
+        for e in v.get("entries").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+            entries.push(ArtifactSpec {
+                name: e.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                path: root.join(e.get("path").and_then(|x| x.as_str()).unwrap_or("")),
+                kind: e.get("kind").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                inputs: e.get("inputs").map(&shape_list).unwrap_or_default(),
+                outputs: e.get("outputs").map(&shape_list).unwrap_or_default(),
+                bucket_m: e.get("bucket_m").and_then(|x| x.as_usize()).unwrap_or(0),
+            });
+        }
+        Ok(ArtifactManifest { root: root.to_path_buf(), entries })
+    }
+
+    /// All entries of a kind, sorted by bucket size ascending.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self.entries.iter().filter(|e| e.kind == kind).collect();
+        v.sort_by_key(|e| e.bucket_m);
+        v
+    }
+
+    /// Smallest bucket of `kind` with bucket_m >= m.
+    pub fn bucket_for(&self, kind: &str, m: usize) -> Option<&ArtifactSpec> {
+        self.of_kind(kind).into_iter().find(|e| e.bucket_m >= m)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"entries":[
+                {"name":"a.m8","path":"hlo/a8.hlo.txt","kind":"expert_ffn",
+                 "inputs":[[8,16]],"outputs":[[8,16]],"bucket_m":8},
+                {"name":"a.m32","path":"hlo/a32.hlo.txt","kind":"expert_ffn",
+                 "inputs":[[32,16]],"outputs":[[32,16]],"bucket_m":32}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_bucket_lookup() {
+        let dir = std::env::temp_dir().join("eac_manifest_test");
+        write_manifest(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.bucket_for("expert_ffn", 5).unwrap().bucket_m, 8);
+        assert_eq!(m.bucket_for("expert_ffn", 9).unwrap().bucket_m, 32);
+        assert_eq!(m.bucket_for("expert_ffn", 33).map(|e| e.bucket_m), None);
+        assert!(m.by_name("a.m8").is_some());
+        assert!(ArtifactManifest::present(&dir));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT client wrapper: compile-once / execute-many over HLO-text
+//! artifacts, with f32 `Mat` in/out (adapted from /opt/xla-example/load_hlo).
+
+use crate::runtime::artifacts::{ArtifactManifest, ArtifactSpec};
+use crate::tensor::Mat;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// A compiled computation ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An input value for mixed-dtype executions (the quantized-expert
+/// artifacts take u8 code tensors alongside f32 scales/zeros).
+pub enum RtInput<'a> {
+    F32(&'a Mat),
+    U8(&'a [u8]),
+}
+
+impl Executable {
+    /// Execute with mixed f32/u8 inputs (shapes from the spec).
+    pub fn run_mixed(&self, inputs: &[RtInput]) -> Result<Vec<Mat>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (inp, shape) in inputs.iter().zip(&self.spec.inputs) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let want: usize = shape.iter().product();
+            let lit = match inp {
+                RtInput::F32(m) => {
+                    anyhow::ensure!(m.data.len() == want, "{}: f32 input size mismatch", self.spec.name);
+                    xla::Literal::vec1(&m.data).reshape(&dims)?
+                }
+                RtInput::U8(b) => {
+                    anyhow::ensure!(b.len() == want, "{}: u8 input size mismatch", self.spec.name);
+                    // vec1 has no u8 NativeType impl; build from raw bytes.
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::U8,
+                        shape,
+                        b,
+                    )?
+                }
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, shape) in tuple.into_iter().zip(&self.spec.outputs) {
+            let data = lit.to_vec::<f32>()?;
+            let (rows, cols) = shape_2d(shape);
+            out.push(Mat::from_vec(rows, cols, data));
+        }
+        Ok(out)
+    }
+
+    /// Execute on f32 matrices. Inputs must match the spec's shapes;
+    /// returns the tuple elements as matrices (aot.py lowers with
+    /// return_tuple=True).
+    pub fn run(&self, inputs: &[&Mat]) -> Result<Vec<Mat>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (m, shape) in inputs.iter().zip(&self.spec.inputs) {
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                m.data.len() == want,
+                "{}: input size {} != shape {:?}",
+                self.spec.name,
+                m.data.len(),
+                shape
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(&m.data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, shape) in tuple.into_iter().zip(&self.spec.outputs) {
+            let data = lit.to_vec::<f32>()?;
+            let (rows, cols) = shape_2d(shape);
+            out.push(Mat::from_vec(rows, cols, data));
+        }
+        Ok(out)
+    }
+}
+
+fn shape_2d(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        0 => (1, 1),
+        1 => (1, shape[0]),
+        2 => (shape[0], shape[1]),
+        _ => (shape[..shape.len() - 1].iter().product(), shape[shape.len() - 1]),
+    }
+}
+
+/// Compile-once cache over a PJRT CPU client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client over the given artifact root.
+    pub fn new(manifest: ArtifactManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(RuntimeClient { client, manifest, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable with the given name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = spec.path.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let arc = std::sync::Arc::new(Executable { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Get the executable of `kind` for >= `m` rows (bucketed shapes).
+    pub fn executable_for(&self, kind: &str, m: usize) -> Result<std::sync::Arc<Executable>> {
+        let name = self
+            .manifest
+            .bucket_for(kind, m)
+            .with_context(|| format!("no '{kind}' bucket for m={m}"))?
+            .name
+            .clone();
+        self.executable(&name)
+    }
+
+    /// Number of compiled executables in the cache.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// Integration tests that require built artifacts live in
+// rust/tests/runtime_artifacts.rs (gated on artifacts/ existing).

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use client::{Executable, RtInput, RuntimeClient};

@@ -1,0 +1,174 @@
+//! Continuous batcher: forms batches from the request queue under a
+//! max-batch-size / max-wait policy (the standard serving tradeoff:
+//! larger batches amortize work, waiting adds latency).
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Thread-safe request queue with batch draining.
+pub struct Batcher {
+    policy: BatchPolicy,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request. Returns false if the batcher is closed.
+    pub fn push(&self, req: Request) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.queue.push_back(req);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Close the queue: pending requests still drain, pushes are rejected.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking: wait for a batch. Returns None when closed and drained.
+    /// Policy: return as soon as `max_batch` requests are available, or
+    /// `max_wait` after the first request became available.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        // Wait until at least one request or closed.
+        while st.queue.is_empty() && !st.closed {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.queue.is_empty() {
+            return None; // closed + drained
+        }
+        // Wait (bounded) for the batch to fill.
+        let deadline = Instant::now() + self.policy.max_wait;
+        while st.queue.len() < self.policy.max_batch && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (lock, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = lock;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = st.queue.len().min(self.policy.max_batch);
+        Some(st.queue.drain(..n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3])
+    }
+
+    #[test]
+    fn drains_in_order_up_to_max_batch() {
+        let b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        for i in 0..5 {
+            assert!(b.push(req(i)));
+        }
+        let b1 = b.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b2.len(), 2);
+        let b3 = b.next_batch().unwrap();
+        assert_eq!(b3.len(), 1);
+        b.close();
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains() {
+        let b = Batcher::new(BatchPolicy::default());
+        b.push(req(1));
+        b.close();
+        assert!(!b.push(req(2)));
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    /// Conservation: N requests pushed from many threads are delivered
+    /// exactly once each (no loss, no duplication).
+    #[test]
+    fn prop_conservation_under_concurrency() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_micros(200),
+        }));
+        let n_producers = 4;
+        let per = 50u64;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let bb = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    assert!(bb.push(req(p * 1000 + i)));
+                }
+            }));
+        }
+        let consumer = {
+            let bb = b.clone();
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = bb.next_batch() {
+                    seen.extend(batch.into_iter().map(|r| r.id));
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        let mut want: Vec<u64> =
+            (0..n_producers).flat_map(|p| (0..per).map(move |i| p * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+}

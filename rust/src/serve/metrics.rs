@@ -1,0 +1,99 @@
+//! Serving metrics: latency percentiles, throughput, pruning telemetry.
+
+/// Online latency statistics (stores samples; serving runs are bounded).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, secs: f64) {
+        self.samples_ms.push(secs * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[((p * (s.len() - 1) as f64).round() as usize).min(s.len() - 1)]
+    }
+}
+
+/// Aggregated serving-run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub prefill: LatencyStats,
+    pub queue: LatencyStats,
+    pub e2e: LatencyStats,
+    pub total_tokens: usize,
+    pub total_requests: usize,
+    pub wall_secs: f64,
+    /// Mean PESF prune rate across requests.
+    pub mean_prune_rate: f32,
+}
+
+impl ServeMetrics {
+    pub fn throughput_tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens as f64 / self.wall_secs
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_requests as f64 / self.wall_secs
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "reqs={} tokens={} wall={:.2}s thpt={:.0} tok/s prefill p50={:.1}ms p95={:.1}ms queue p50={:.1}ms prune={:.1}%",
+            self.total_requests,
+            self.total_tokens,
+            self.wall_secs,
+            self.throughput_tokens_per_sec(),
+            self.prefill.percentile_ms(0.5),
+            self.prefill.percentile_ms(0.95),
+            self.queue.percentile_ms(0.5),
+            self.mean_prune_rate * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100 {
+            l.record(i as f64 / 1000.0);
+        }
+        assert!(l.percentile_ms(0.5) <= l.percentile_ms(0.95));
+        assert!((l.mean_ms() - 50.5).abs() < 1.0);
+        assert_eq!(l.count(), 100);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.throughput_tokens_per_sec(), 0.0);
+        assert_eq!(m.prefill.mean_ms(), 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Serving engine (L3): request queue, continuous batcher, PESF-integrated
+//! prefill executor, and latency/throughput metrics.
+//!
+//! The engine owns the request lifecycle: requests enter a bounded queue,
+//! the batcher forms batches under a max-size/max-wait policy, worker
+//! threads run prefill (native or PJRT-backed), and PESF masks are derived
+//! per sequence before the MoE layers execute — so pruned experts never run,
+//! which is where the Table-3/4 speedups come from.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use engine::{Engine, EngineConfig, PrunePolicy};
+pub use metrics::{LatencyStats, ServeMetrics};
+pub use request::{Request, RequestId, Response};

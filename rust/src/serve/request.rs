@@ -1,0 +1,46 @@
+//! Request / response types for the serving engine.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// A prefill (context-scoring) request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    /// Number of tokens to greedily decode after prefill (0 = prefill only;
+    /// the paper measures context latency, decode is provided for
+    /// completeness — PESF is disabled during decode per the Limitations).
+    pub decode_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, tokens: Vec<u32>) -> Self {
+        Request { id, tokens, decode_tokens: 0, arrival: Instant::now() }
+    }
+
+    pub fn with_decode(mut self, n: usize) -> Self {
+        self.decode_tokens = n;
+        self
+    }
+}
+
+/// Completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    /// Greedy next-token prediction after the prompt.
+    pub next_token: u32,
+    /// Greedily decoded continuation (len == decode_tokens).
+    pub generated: Vec<u32>,
+    /// Mean log-likelihood per predicted prompt token (diagnostic).
+    pub mean_logprob: f32,
+    /// Queue wait, in seconds.
+    pub queue_secs: f64,
+    /// Prefill execution time, in seconds.
+    pub prefill_secs: f64,
+    /// Fraction of experts PESF pruned for this sequence (0 if disabled).
+    pub prune_rate: f32,
+}

@@ -1,0 +1,211 @@
+//! Elementwise / reduction ops used by the transformer forward and the
+//! compression pipeline: softmax, silu, rmsnorm, top-k, cross-entropy,
+//! cosine similarity.
+
+use super::Mat;
+
+/// In-place numerically-stable softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum.max(f32::MIN_POSITIVE);
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Softmax over each row of a matrix, returning a new matrix.
+pub fn softmax_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        softmax_inplace(out.row_mut(r));
+    }
+    out
+}
+
+/// log-softmax of one row, written into `out`.
+pub fn log_softmax_into(xs: &[f32], out: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let logsum = xs.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = x - logsum;
+    }
+}
+
+/// SiLU activation x * sigmoid(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// GeLU (tanh approximation).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+/// RMSNorm over each row: x / rms(x) * gain.
+pub fn rmsnorm(m: &Mat, gain: &[f32], eps: f32) -> Mat {
+    assert_eq!(gain.len(), m.cols);
+    let mut out = Mat::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let row = m.row(r);
+        let ms = row.iter().map(|x| x * x).sum::<f32>() / m.cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let orow = out.row_mut(r);
+        for ((o, &x), &g) in orow.iter_mut().zip(row).zip(gain) {
+            *o = x * inv * g;
+        }
+    }
+    out
+}
+
+/// Indices of the k largest values, in descending value order.
+/// Ties broken by lower index first (deterministic).
+pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(xs.len());
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Cross-entropy of target ids under row logits; returns mean NLL (nats).
+pub fn cross_entropy(logits: &Mat, targets: &[u32]) -> f32 {
+    assert_eq!(logits.rows, targets.len());
+    let mut scratch = vec![0.0f32; logits.cols];
+    let mut total = 0.0f64;
+    for (r, &t) in targets.iter().enumerate() {
+        log_softmax_into(logits.row(r), &mut scratch);
+        total -= scratch[t as usize] as f64;
+    }
+    (total / targets.len().max(1) as f64) as f32
+}
+
+/// Cosine similarity of two vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| (x * y) as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x * x) as f64).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x * x) as f64).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na * nb)) as f32
+}
+
+/// Elementwise a += b.
+pub fn add_inplace(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Elementwise a += s * b (axpy).
+pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += s * y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut xs = vec![1.0, 2.0, 3.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let mut xs = vec![1000.0, 1001.0];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let xs = [0.3f32, -1.2, 2.5, 0.0];
+        let mut ls = [0.0f32; 4];
+        log_softmax_into(&xs, &mut ls);
+        let mut sm = xs.to_vec();
+        softmax_inplace(&mut sm);
+        for (l, s) in ls.iter().zip(&sm) {
+            assert!((l.exp() - s).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn topk_orders_and_breaks_ties() {
+        let xs = [1.0f32, 5.0, 5.0, 0.0];
+        assert_eq!(topk_indices(&xs, 3), vec![1, 2, 0]);
+        assert_eq!(topk_indices(&xs, 10).len(), 4);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let mut rng = Pcg64::seeded(7);
+        let m = Mat::randn(3, 64, 2.0, &mut rng);
+        let gain = vec![1.0; 64];
+        let n = rmsnorm(&m, &gain, 1e-6);
+        for r in 0..3 {
+            let ms = n.row(r).iter().map(|x| x * x).sum::<f32>() / 64.0;
+            assert!((ms - 1.0).abs() < 1e-3, "rms^2={ms}");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_near_zero() {
+        // One-hot-ish logits on the target -> tiny NLL.
+        let mut logits = Mat::zeros(2, 4);
+        *logits.at_mut(0, 1) = 50.0;
+        *logits.at_mut(1, 3) = 50.0;
+        let ce = cross_entropy(&logits, &[1, 3]);
+        assert!(ce < 1e-3, "ce={ce}");
+        // Uniform logits -> ln(4).
+        let uni = Mat::zeros(2, 4);
+        let ce_u = cross_entropy(&uni, &[0, 2]);
+        assert!((ce_u - (4.0f32).ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cosine_bounds_and_identity() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [-1.0f32, -2.0, -3.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        assert!((cosine(&a, &b) + 1.0).abs() < 1e-6);
+    }
+
+    /// Property: topk of a permuted array returns the same value multiset.
+    #[test]
+    fn prop_topk_permutation_invariant() {
+        let mut rng = Pcg64::seeded(8);
+        for _ in 0..20 {
+            let n = 4 + rng.below_usize(40);
+            let k = 1 + rng.below_usize(n);
+            let xs: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            let ys: Vec<f32> = perm.iter().map(|&i| xs[i]).collect();
+            let mut v1: Vec<f32> = topk_indices(&xs, k).iter().map(|&i| xs[i]).collect();
+            let mut v2: Vec<f32> = topk_indices(&ys, k).iter().map(|&i| ys[i]).collect();
+            v1.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(v1, v2);
+        }
+    }
+}

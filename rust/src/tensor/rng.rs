@@ -1,0 +1,199 @@
+//! Seeded PCG64 random number generator + distribution helpers.
+//!
+//! The offline registry has no `rand` crate, so we carry a small,
+//! well-understood PRNG of our own. PCG-XSL-RR 128/64 (O'Neill 2014) — the
+//! same generator family rand's `Pcg64` uses — gives 64-bit outputs with a
+//! 128-bit state and excellent statistical quality for simulation work.
+
+/// PCG-XSL-RR 128/64. Deterministic across platforms (pure integer math).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams with
+    /// the same seed are independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64 | 0xda3e39cb94b95bdb) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (uses two uniforms per pair; we keep a
+    /// simple non-cached version for determinism across call sites).
+    pub fn gaussian(&mut self) -> f32 {
+        let u1 = (1.0 - self.next_f64()) as f64; // avoid log(0)
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Vector of standard normals scaled by `std`.
+    pub fn gaussian_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.gaussian() * std).collect()
+    }
+
+    /// Sample an index from an (unnormalized, non-negative) weight vector.
+    pub fn sample_weighted(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        if total <= 0.0 {
+            return self.below_usize(weights.len().max(1));
+        }
+        let mut t = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w.max(0.0) as f64;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from a categorical distribution given logits (softmax sample).
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32) -> usize {
+        let t = temperature.max(1e-6);
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let probs: Vec<f32> = logits.iter().map(|&l| ((l - max) / t).exp()).collect();
+        self.sample_weighted(&probs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Pcg64::seeded(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::seeded(2);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seeded(3);
+        let n = 40_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn weighted_sampling_prefers_heavy() {
+        let mut r = Pcg64::seeded(4);
+        let w = [0.05f32, 0.9, 0.05];
+        let mut counts = [0usize; 3];
+        for _ in 0..2000 {
+            counts[r.sample_weighted(&w)] += 1;
+        }
+        assert!(counts[1] > 1500, "{counts:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,280 @@
+//! Binary tensor/dataset IO shared with the Python build path.
+//!
+//! Format (little-endian throughout), written by `python/compile/pretrain.py`
+//! and read here:
+//!
+//! ```text
+//! file      := magic(u32=0x454d4f45 "EOME") version(u32) n_entries(u32)
+//!              entry*
+//! entry     := name_len(u32) name(utf8 bytes) dtype(u32) ndim(u32)
+//!              dims(u64 * ndim) payload
+//! dtype     := 0 = f32, 1 = u32, 2 = u8
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x454d4f45;
+pub const VERSION: u32 = 1;
+
+/// A named tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    U8(Vec<u8>),
+}
+
+impl Payload {
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::U32(v) => v.len(),
+            Payload::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<&[u32]> {
+        match self {
+            Payload::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(&self) -> Option<&[u8]> {
+        match self {
+            Payload::U8(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Named tensor with shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub dims: Vec<usize>,
+    pub payload: Payload,
+}
+
+/// An ordered bundle of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_f32(&mut self, name: &str, dims: Vec<usize>, data: Vec<f32>) {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "{name} shape mismatch");
+        self.entries.insert(name.to_string(), Entry { dims, payload: Payload::F32(data) });
+    }
+
+    pub fn put_u32(&mut self, name: &str, dims: Vec<usize>, data: Vec<u32>) {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "{name} shape mismatch");
+        self.entries.insert(name.to_string(), Entry { dims, payload: Payload::U32(data) });
+    }
+
+    pub fn put_u8(&mut self, name: &str, dims: Vec<usize>, data: Vec<u8>) {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "{name} shape mismatch");
+        self.entries.insert(name.to_string(), Entry { dims, payload: Payload::U8(data) });
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries.get(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        let e = self.get(name)?;
+        let d = e.payload.as_f32().with_context(|| format!("tensor '{name}' not f32"))?;
+        Ok((&e.dims, d))
+    }
+
+    pub fn get_u32(&self, name: &str) -> Result<(&[usize], &[u32])> {
+        let e = self.get(name)?;
+        let d = e.payload.as_u32().with_context(|| format!("tensor '{name}' not u32"))?;
+        Ok((&e.dims, d))
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, e) in &self.entries {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            let dtype: u32 = match e.payload {
+                Payload::F32(_) => 0,
+                Payload::U32(_) => 1,
+                Payload::U8(_) => 2,
+            };
+            out.extend_from_slice(&dtype.to_le_bytes());
+            out.extend_from_slice(&(e.dims.len() as u32).to_le_bytes());
+            for &d in &e.dims {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            match &e.payload {
+                Payload::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Payload::U32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Payload::U8(v) => out.extend_from_slice(v),
+            }
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut c = Cursor { b: bytes, i: 0 };
+        if c.u32()? != MAGIC {
+            bail!("bad magic (not an EAC-MoE tensor file)");
+        }
+        let ver = c.u32()?;
+        if ver != VERSION {
+            bail!("unsupported version {ver}");
+        }
+        let n = c.u32()? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = c.u32()? as usize;
+            let name = String::from_utf8(c.take(name_len)?.to_vec()).context("bad name utf8")?;
+            let dtype = c.u32()?;
+            let ndim = c.u32()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(c.u64()? as usize);
+            }
+            let count: usize = dims.iter().product();
+            let payload = match dtype {
+                0 => {
+                    let raw = c.take(count * 4)?;
+                    Payload::F32(
+                        raw.chunks_exact(4)
+                            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                            .collect(),
+                    )
+                }
+                1 => {
+                    let raw = c.take(count * 4)?;
+                    Payload::U32(
+                        raw.chunks_exact(4)
+                            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                            .collect(),
+                    )
+                }
+                2 => Payload::U8(c.take(count)?.to_vec()),
+                _ => bail!("unknown dtype {dtype}"),
+            };
+            entries.insert(name, Entry { dims, payload });
+        }
+        Ok(TensorFile { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated tensor file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut tf = TensorFile::new();
+        tf.put_f32("w", vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        tf.put_u32("ids", vec![4], vec![7, 8, 9, 10]);
+        tf.put_u8("packed", vec![3], vec![255, 0, 127]);
+        let bytes = tf.to_bytes();
+        let back = TensorFile::from_bytes(&bytes).unwrap();
+        assert_eq!(back.get_f32("w").unwrap().1, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.get_u32("ids").unwrap().0, &[4]);
+        assert_eq!(back.get("packed").unwrap().payload.as_u8().unwrap(), &[255, 0, 127]);
+    }
+
+    #[test]
+    fn rejects_truncation_and_bad_magic() {
+        let mut tf = TensorFile::new();
+        tf.put_f32("w", vec![2], vec![1., 2.]);
+        let mut bytes = tf.to_bytes();
+        bytes.truncate(bytes.len() - 3);
+        assert!(TensorFile::from_bytes(&bytes).is_err());
+        assert!(TensorFile::from_bytes(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("eac_moe_binio_test");
+        let path = dir.join("t.bin");
+        let mut tf = TensorFile::new();
+        tf.put_f32("x", vec![1], vec![42.0]);
+        tf.save(&path).unwrap();
+        let back = TensorFile::load(&path).unwrap();
+        assert_eq!(back.get_f32("x").unwrap().1, &[42.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities: minimal JSON, binary tensor IO, a
+//! timing/statistics harness (the offline registry has no serde/criterion).
+
+pub mod binio;
+pub mod json;
+pub mod timing;
+
+pub use json::Json;
+pub use timing::{bench, BenchResult, Timer};

@@ -1,0 +1,141 @@
+//! Timing / micro-benchmark harness (criterion isn't in the offline
+//! registry, so `benches/*.rs` use `harness = false` and call [`bench`]).
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Statistics from one benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    /// Human-friendly one-liner.
+    pub fn line(&self) -> String {
+        let (v, unit) = humanize(self.mean_ns);
+        let (md, md_u) = humanize(self.median_ns);
+        format!(
+            "{:<44} {:>9.3} {}  (median {:.3} {}, p95 {:.3} {}, n={})",
+            self.name,
+            v,
+            unit,
+            md,
+            md_u,
+            humanize(self.p95_ns).0,
+            humanize(self.p95_ns).1,
+            self.iters
+        )
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "us")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s ")
+    }
+}
+
+/// Run `f` repeatedly: warm up for ~10% of the budget, then sample until the
+/// time budget (default 2s, override with EAC_MOE_BENCH_MS) or `max_iters`.
+/// Prints and returns stats.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    let budget_ms: u64 = std::env::var("EAC_MOE_BENCH_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let budget = Duration::from_millis(budget_ms);
+    // Warmup: at least one call, up to 10% of budget.
+    let warm_deadline = Instant::now() + budget / 10;
+    loop {
+        f();
+        if Instant::now() >= warm_deadline {
+            break;
+        }
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let deadline = Instant::now() + budget;
+    let max_iters = 100_000;
+    while Instant::now() < deadline && samples.len() < max_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    let pct = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: pct(0.5),
+        p05_ns: pct(0.05),
+        p95_ns: pct(0.95),
+        std_ns: var.sqrt(),
+    };
+    println!("{}", res.line());
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("EAC_MOE_BENCH_MS", "30");
+        let mut acc = 0u64;
+        let r = bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.median_ns);
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: serving engine under load — conservation, policy effects,
+//! and the eval harness' PESF plumbing.
+
+use eac_moe::model::{Model, ModelConfig, Weights};
+use eac_moe::prune::pesf::PesfConfig;
+use eac_moe::serve::{BatchPolicy, Engine, EngineConfig, PrunePolicy, Request};
+use std::time::Duration;
+
+fn model() -> Model {
+    let cfg = ModelConfig {
+        name: "itest".into(),
+        n_layers: 2,
+        d_model: 32,
+        d_ff: 16,
+        n_experts: 16,
+        top_k: 2,
+        n_shared: 0,
+        n_heads: 4,
+        vocab: 128,
+        max_seq: 256,
+    };
+    Model::new(Weights::init(&cfg, 7))
+}
+
+fn reqs(n: u64, len: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            Request::new(i, (0..len as u32).map(|t| (t * 13 + i as u32 * 7) % 128).collect())
+        })
+        .collect()
+}
+
+#[test]
+fn large_burst_all_served_exactly_once() {
+    let engine = Engine::new(
+        model(),
+        EngineConfig {
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            workers: 4,
+            prune: PrunePolicy::None,
+        },
+    );
+    let (resps, metrics) = engine.serve(reqs(64, 24));
+    assert_eq!(resps.len(), 64);
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 64, "duplicate or lost responses");
+    assert_eq!(metrics.total_tokens, 64 * 24);
+}
+
+#[test]
+fn pesf_pruning_rate_grows_with_alpha_under_serving() {
+    let weights = model().weights.clone();
+    let mut last = -1.0f32;
+    for alpha in [0.2f32, 0.5, 0.9] {
+        let engine = Engine::new(
+            Model::new(weights.clone()),
+            EngineConfig {
+                workers: 2,
+                prune: PrunePolicy::Pesf(PesfConfig { alpha }),
+                ..Default::default()
+            },
+        );
+        let (_, metrics) = engine.serve(reqs(12, 48));
+        assert!(
+            metrics.mean_prune_rate >= last - 1e-4,
+            "prune rate not monotone: alpha={alpha} rate={} last={last}",
+            metrics.mean_prune_rate
+        );
+        last = metrics.mean_prune_rate;
+    }
+    assert!(last > 0.0);
+}
+
+#[test]
+fn pesf_alpha_zero_equals_dense_outputs() {
+    let m = model();
+    let dense_engine = Engine::new(
+        Model::new(m.weights.clone()),
+        EngineConfig { workers: 1, prune: PrunePolicy::None, ..Default::default() },
+    );
+    let pesf_engine = Engine::new(
+        Model::new(m.weights.clone()),
+        EngineConfig {
+            workers: 1,
+            prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.0 }),
+            ..Default::default()
+        },
+    );
+    let (mut a, _) = dense_engine.serve(reqs(6, 20));
+    let (mut b, _) = pesf_engine.serve(reqs(6, 20));
+    a.sort_by_key(|r| r.id);
+    b.sort_by_key(|r| r.id);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.next_token, y.next_token);
+        assert!((x.mean_logprob - y.mean_logprob).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn decode_after_prefill_consistent_with_forward() {
+    let m = model();
+    let engine = Engine::new(
+        Model::new(m.weights.clone()),
+        EngineConfig { workers: 1, ..Default::default() },
+    );
+    let toks: Vec<u32> = (0..16).map(|i| (i * 11) % 128).collect();
+    let (resps, _) = engine.serve(vec![Request::new(0, toks.clone()).with_decode(3)]);
+    assert_eq!(resps[0].generated.len(), 3);
+    // next_token equals argmax of the prefill logits' last row.
+    let logits = m.forward(&toks);
+    let want = eac_moe::tensor::ops::topk_indices(logits.row(15), 1)[0] as u32;
+    assert_eq!(resps[0].next_token, want);
+}
