@@ -13,8 +13,8 @@ use eac_moe::report::Table;
 fn main() -> eac_moe::Result<()> {
     let ctx = ExperimentContext::new(13, 0.25);
     let mut table = Table::new(
-        "compression landscape (QESC)",
-        &["model", "bits", "MB", "ratio", "PPL fp", "PPL q", "avg expert bits"],
+        "compression landscape (QESC) — MB is measured resident bytes",
+        &["model", "bits", "MB", "ratio vs f32", "PPL fp", "PPL q", "avg expert bits"],
     );
     for zoo in ZooModel::ALL {
         let (fp, _) = load_or_init_model(zoo);
@@ -22,11 +22,14 @@ fn main() -> eac_moe::Result<()> {
         for bits in BitSetting::ALL {
             let (q, report) = compress(&fp, zoo, QuantMethod::Qesc, bits, &ctx);
             let ppl_q = eac_moe::eval::perplexity(&q, &ctx.ppl_eval);
+            // Measured resident bytes of the packed model, not simulated.
+            let q_mb = q.weights.storage_bytes() as f64 / 1e6;
+            let fp_mb = fp.weights.storage_bytes() as f64 / 1e6;
             table.row(vec![
                 zoo.key().into(),
                 bits.label().into(),
-                format!("{:.2}", report.compressed_bytes as f64 / 1e6),
-                format!("{:.2}x", report.compression_ratio()),
+                format!("{q_mb:.2}"),
+                format!("{:.2}x", fp_mb / q_mb),
                 format!("{ppl_fp:.2}"),
                 format!("{ppl_q:.2}"),
                 format!("{:.2}", report.avg_expert_bits),

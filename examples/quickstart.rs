@@ -32,6 +32,14 @@ fn main() -> eac_moe::Result<()> {
         report.compression_ratio(),
         100.0 * report.router_calib_secs / (report.gptq_secs + report.router_calib_secs)
     );
+    // The compressed model really is smaller in memory: experts stay packed
+    // and run through the fused dequant GEMM.
+    println!(
+        "resident: {:.2} MB (experts {:.2} MB, vs {:.2} MB dense f32)",
+        compressed.weights.storage_bytes() as f64 / 1e6,
+        compressed.weights.expert_storage_bytes() as f64 / 1e6,
+        model.weights.storage_bytes() as f64 / 1e6
+    );
 
     // 4. Evaluate.
     let ppl_fp = eac_moe::eval::perplexity(&model, &ctx.ppl_eval);

@@ -1,19 +1,24 @@
 //! Performance micro-benches for the hot paths (EXPERIMENTS.md §Perf):
-//! native GEMM, fused packed dequant-matmul, GPTQ per-layer, model prefill,
-//! PESF overhead. `harness = false` — uses the in-crate timing harness
-//! (criterion is not in the offline registry).
+//! native GEMM, fused packed dequant-matmul, GPTQ per-layer, model prefill
+//! (dense vs packed weights), PESF overhead. `harness = false` — uses the
+//! in-crate timing harness (criterion is not in the offline registry).
+//!
+//! Emits `results/bench_perf.json` with the dense-vs-packed GEMM and
+//! end-to-end prefill numbers, same shape as the bench_tables outputs.
 
 use eac_moe::model::{Model, ModelConfig, Weights};
 use eac_moe::quant::gptq::{gptq_quantize_mat, GptqConfig, Hessian};
 use eac_moe::quant::pack::PackedMat;
 use eac_moe::quant::quantizer::{GroupQuant, QuantConfig};
 use eac_moe::tensor::{matmul, Mat, Pcg64};
+use eac_moe::util::json::Json;
 use eac_moe::util::timing::bench;
 
 fn main() {
     println!("== bench_perf (EAC_MOE_BENCH_MS={}ms/case) ==",
         std::env::var("EAC_MOE_BENCH_MS").unwrap_or_else(|_| "2000".into()));
     let mut rng = Pcg64::seeded(1);
+    let mut json = Json::obj();
 
     // --- GEMM: the prefill workhorse (tokens x d_model @ d_model x d_ff).
     for &(m, k, n) in &[(512usize, 128usize, 256usize), (128, 128, 512), (1, 128, 512)] {
@@ -26,19 +31,36 @@ fn main() {
         println!("    -> {:.2} GFLOP/s", flops / r.mean_ns);
     }
 
-    // --- Fused packed dequant-matmul vs dequant-then-GEMM (2-bit).
-    let w = Mat::randn(128, 512, 1.0, &mut rng);
-    let gq = GroupQuant::quantize(&w, QuantConfig::new(2, 128));
-    let packed = PackedMat::pack(&gq);
-    for &m in &[1usize, 16, 512] {
-        let x = Mat::randn(m, 128, 1.0, &mut rng);
-        bench(&format!("packed2 fused dequant-matmul m={m}"), || {
-            std::hint::black_box(packed.matmul_dequant(&x));
-        });
-        bench(&format!("dequant-then-matmul      m={m}"), || {
-            let dq = gq.dequantize();
-            std::hint::black_box(matmul(&x, &dq));
-        });
+    // --- Dense GEMM vs fused packed dequant-GEMM at 2 and 4 bits.
+    // The fused kernel unpacks K-tiles into a reused panel, so its cost
+    // should sit within ~1.5-2x of dense at batch M, not the ~column-count
+    // multiple the old per-call unpack paid.
+    let (k, n) = (128usize, 512usize);
+    let w = Mat::randn(k, n, 1.0, &mut rng);
+    for &bits in &[2u32, 4] {
+        let gq = GroupQuant::quantize(&w, QuantConfig::new(bits, 128));
+        let packed = PackedMat::pack(&gq);
+        let dq = gq.dequantize();
+        for &m in &[1usize, 16, 512] {
+            let x = Mat::randn(m, k, 1.0, &mut rng);
+            let rp = bench(&format!("packed{bits} fused dequant-matmul m={m}"), || {
+                std::hint::black_box(packed.matmul_dequant(&x));
+            });
+            let rd = bench(&format!("dense matmul (pre-dequantized) m={m}"), || {
+                std::hint::black_box(matmul(&x, &dq));
+            });
+            let ru = bench(&format!("dequant-then-matmul          m={m}"), || {
+                let dq = gq.dequantize();
+                std::hint::black_box(matmul(&x, &dq));
+            });
+            println!("    -> packed/dense ratio: {:.2}x", rp.mean_ns / rd.mean_ns);
+            let mut o = Json::obj();
+            o.set("fused_ns", Json::Num(rp.mean_ns))
+                .set("dense_ns", Json::Num(rd.mean_ns))
+                .set("unpack_per_call_ns", Json::Num(ru.mean_ns))
+                .set("fused_over_dense", Json::Num(rp.mean_ns / rd.mean_ns));
+            json.set(&format!("gemm/{bits}bit/m{m}"), o);
+        }
     }
 
     // --- GPTQ one expert matrix (the Table-7 dominant cost).
@@ -50,7 +72,7 @@ fn main() {
         std::hint::black_box(gptq_quantize_mat(&w, &h, GptqConfig::new(3, 128)));
     });
 
-    // --- Model prefill (mixtral-mini shape) with and without PESF.
+    // --- Model prefill (mixtral-mini shape): dense, packed 4-bit, PESF.
     let cfg = ModelConfig {
         name: "bench".into(),
         n_layers: 4,
@@ -64,10 +86,29 @@ fn main() {
         max_seq: 512,
     };
     let model = Model::new(Weights::init(&cfg, 2));
+    let mut packed_weights = model.weights.clone();
+    packed_weights.pack_experts_rtn(4, 128);
+    let packed_model = Model::new(packed_weights);
     let tokens: Vec<u32> = (0..256u32).map(|i| (i * 7) % 512).collect();
-    bench("prefill 256 tok (mixtral-mini shape)", || {
+    let rd = bench("prefill 256 tok dense (mixtral-mini shape)", || {
         std::hint::black_box(model.forward(&tokens));
     });
+    let rp = bench("prefill 256 tok packed 4-bit experts", || {
+        std::hint::black_box(packed_model.forward(&tokens));
+    });
+    println!(
+        "    -> packed/dense prefill ratio: {:.2}x  (resident weights {:.2} MB vs {:.2} MB)",
+        rp.mean_ns / rd.mean_ns,
+        packed_model.weights.storage_bytes() as f64 / 1e6,
+        model.weights.storage_bytes() as f64 / 1e6
+    );
+    let mut o = Json::obj();
+    o.set("dense_ns", Json::Num(rd.mean_ns))
+        .set("packed_ns", Json::Num(rp.mean_ns))
+        .set("packed_over_dense", Json::Num(rp.mean_ns / rd.mean_ns))
+        .set("dense_weight_bytes", Json::Num(model.weights.storage_bytes() as f64))
+        .set("packed_weight_bytes", Json::Num(packed_model.weights.storage_bytes() as f64));
+    json.set("prefill/256tok", o);
     bench("prefill 256 tok + PESF(0.5)", || {
         let hooks = eac_moe::model::hooks::Hooks {
             pesf_alpha: Some(0.5),
@@ -90,4 +131,27 @@ fn main() {
         }
         std::hint::black_box(model.decode_step(1, &mut c2, &eac_moe::model::hooks::Hooks::none()));
     });
+    let mut c2 = eac_moe::model::KvCache::new(packed_model.cfg());
+    for &t in tokens.iter().take(64) {
+        packed_model.decode_step(t, &mut c2, &eac_moe::model::hooks::Hooks::none());
+    }
+    bench("decode step @ctx64 packed 4-bit experts", || {
+        let mut c3 = eac_moe::model::KvCache::new(packed_model.cfg());
+        c3.len = c2.len;
+        for li in 0..cfg.n_layers {
+            c3.k[li] = c2.k[li].clone();
+            c3.v[li] = c2.v[li].clone();
+        }
+        std::hint::black_box(packed_model.decode_step(
+            1,
+            &mut c3,
+            &eac_moe::model::hooks::Hooks::none(),
+        ));
+    });
+
+    if let Err(e) = eac_moe::report::save_result("bench_perf", &json) {
+        eprintln!("warning: could not write results/bench_perf.json: {e:#}");
+    } else {
+        println!("wrote results/bench_perf.json");
+    }
 }

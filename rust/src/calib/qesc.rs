@@ -20,11 +20,16 @@
 //! Skipping step 2 (`calib_router = false`) yields exactly the GPTQ
 //! baseline of Table 2; the allocator picks uniform vs BSP/PMQ
 //! mixed-precision.
+//!
+//! Quantized matrices are emitted **packed** ([`WeightMat::Packed`]): the
+//! compressed model serves through the fused dequant GEMM with the low-bit
+//! codes as its only resident copy of those weights. Routers, norms and
+//! embeddings stay f32 (the paper keeps them full-precision).
 
 use crate::model::hooks::Hooks;
-use crate::model::{Model, Weights};
+use crate::model::{Model, WeightMat, Weights};
 use crate::quant::alloc::{Allocator, BitAlloc};
-use crate::quant::gptq::{gptq_quantize_mat, GptqConfig, Hessian};
+use crate::quant::gptq::{GptqConfig, Hessian};
 use crate::quant::pack::PackedMat;
 use crate::quant::quantizer::QuantConfig;
 use crate::calib::adam::Adam;
@@ -103,8 +108,9 @@ impl CompressReport {
 }
 
 /// Run QESC on `model` with calibration sequences `calib` (token streams).
-/// Returns the compressed model (dequantized weights for the native path)
-/// and the report. The original model is not modified.
+/// Returns the compressed model — MHSA and expert matrices packed at their
+/// assigned bit-widths, served via the fused dequant GEMM — and the
+/// report. The original model is not modified.
 pub fn qesc_compress(model: &Model, calib: &[Vec<u32>], cfg: &QescConfig) -> (Model, CompressReport) {
     let mcfg = model.cfg().clone();
     let n_layers = mcfg.n_layers;
@@ -161,14 +167,17 @@ pub fn qesc_compress(model: &Model, calib: &[Vec<u32>], cfg: &QescConfig) -> (Mo
                 2 => &work.weights.layers[li].wv,
                 _ => &work.weights.layers[li].wo,
             };
-            let gq = gptq_quantize_mat(w, hess, mh_cfg);
-            compressed_bytes += PackedMat::pack(&gq).storage_bytes();
-            let dq = gq.dequantize();
+            let gq = w.gptq_quantize(hess, mh_cfg);
+            let pm = PackedMat::pack(&gq);
+            compressed_bytes += pm.storage_bytes();
+            // Install the packed form: later layers' activation capture (and
+            // the final served model) run through the fused dequant GEMM.
+            let wm = WeightMat::Packed(pm);
             match which {
-                0 => work.weights.layers[li].wq = dq,
-                1 => work.weights.layers[li].wk = dq,
-                2 => work.weights.layers[li].wv = dq,
-                _ => work.weights.layers[li].wo = dq,
+                0 => work.weights.layers[li].wq = wm,
+                1 => work.weights.layers[li].wk = wm,
+                2 => work.weights.layers[li].wv = wm,
+                _ => work.weights.layers[li].wo = wm,
             }
         }
         report.gptq_secs += t0.elapsed().as_secs_f64();
@@ -247,15 +256,16 @@ fn fp_overhead_bytes(w: &Weights) -> usize {
     n * 2 // fp16 on disk
 }
 
-/// GPTQ-quantize one expert in place; returns packed storage bytes.
+/// GPTQ-quantize one expert in place, leaving it **packed**; returns the
+/// packed storage bytes (which are now also the resident bytes).
 fn quantize_expert(
     e: &mut crate::model::ExpertWeights,
     x: &Mat,
     bits: u32,
     cfg: &QescConfig,
 ) -> usize {
-    let d_model = e.w1.rows;
-    let d_ff = e.w1.cols;
+    let d_model = e.w1.rows();
+    let d_ff = e.w1.cols();
     let gcfg = |dim: usize| GptqConfig {
         quant: QuantConfig::new(bits, cfg.group_size.min(dim)),
         percdamp: 0.01,
@@ -264,23 +274,26 @@ fn quantize_expert(
     let mut h_x = Hessian::new(d_model);
     h_x.update(x);
     // w1 and w3 both consume x.
-    let gq1 = gptq_quantize_mat(&e.w1, &h_x, gcfg(d_model));
-    bytes += PackedMat::pack(&gq1).storage_bytes();
-    e.w1 = gq1.dequantize();
-    let gq3 = gptq_quantize_mat(&e.w3, &h_x, gcfg(d_model));
-    bytes += PackedMat::pack(&gq3).storage_bytes();
-    e.w3 = gq3.dequantize();
-    // Hidden activations through the *quantized* w1/w3 feed w2.
-    let mut hidden = crate::tensor::matmul(x, &e.w1);
-    let b = crate::tensor::matmul(x, &e.w3);
+    let gq1 = e.w1.gptq_quantize(&h_x, gcfg(d_model));
+    let p1 = PackedMat::pack(&gq1);
+    bytes += p1.storage_bytes();
+    e.w1 = WeightMat::Packed(p1);
+    let gq3 = e.w3.gptq_quantize(&h_x, gcfg(d_model));
+    let p3 = PackedMat::pack(&gq3);
+    bytes += p3.storage_bytes();
+    e.w3 = WeightMat::Packed(p3);
+    // Hidden activations through the *quantized* (packed) w1/w3 feed w2.
+    let mut hidden = e.w1.matmul(x);
+    let b = e.w3.matmul(x);
     for (hv, &bv) in hidden.data.iter_mut().zip(&b.data) {
         *hv = silu(*hv) * bv;
     }
     let mut h_h = Hessian::new(d_ff);
     h_h.update(&hidden);
-    let gq2 = gptq_quantize_mat(&e.w2, &h_h, gcfg(d_ff));
-    bytes += PackedMat::pack(&gq2).storage_bytes();
-    e.w2 = gq2.dequantize();
+    let gq2 = e.w2.gptq_quantize(&h_h, gcfg(d_ff));
+    let p2 = PackedMat::pack(&gq2);
+    bytes += p2.storage_bytes();
+    e.w2 = WeightMat::Packed(p2);
     bytes
 }
 
@@ -370,17 +383,24 @@ mod tests {
         for (b, a) in report.router_loss_before.iter().zip(&report.router_loss_after) {
             assert!(a <= b, "calibration worsened router loss: {b} -> {a}");
         }
-        // Quantized weights actually changed.
-        let diff = m.weights.layers[0].experts[0]
-            .w1
-            .data
-            .iter()
-            .zip(&qm.weights.layers[0].experts[0].w1.data)
-            .any(|(x, y)| (x - y).abs() > 1e-6);
+        // Quantized weights actually changed, and are emitted packed.
+        assert!(qm.weights.layers[0].experts[0].w1.is_packed());
+        assert!(qm.weights.layers[0].wq.is_packed());
+        let orig = m.weights.layers[0].experts[0].w1.to_dense();
+        let quant = qm.weights.layers[0].experts[0].w1.to_dense();
+        let diff = orig.data.iter().zip(&quant.data).any(|(x, y)| (x - y).abs() > 1e-6);
         assert!(diff);
-        // Storage accounting is sane: compressed well below fp32.
+        // Storage accounting is sane: compressed well below fp32, and the
+        // *resident* model actually shrank (the point of the packed path).
         assert!(report.compressed_bytes < report.fp_bytes / 3);
         assert!(report.compression_ratio() > 3.0);
+        assert!(
+            qm.weights.storage_bytes() < m.weights.storage_bytes(),
+            "packed model must be smaller resident: {} vs {}",
+            qm.weights.storage_bytes(),
+            m.weights.storage_bytes()
+        );
+        assert!(qm.weights.expert_storage_bytes() < m.weights.expert_storage_bytes() / 3);
     }
 
     #[test]

@@ -15,6 +15,28 @@
 //! ([`runtime`]); Python never runs on the request path. A fully native
 //! forward path ([`model`]) mirrors the AOT graph for compression-time
 //! activation capture and artifact-free testing.
+//!
+//! ## Quantized execution path
+//!
+//! Every projection/expert matrix is a [`model::WeightMat`] — `Dense`
+//! (f32, blocked GEMM) or `Packed` ([`quant::PackedMat`] sub-byte codes +
+//! per-group scale/zero, executed by the fused group-dequant GEMM in
+//! [`quant::fused`]). QESC emits `Packed` matrices, so a compressed model
+//! serves directly from its low-bit storage: the packed codes are the
+//! *only* resident copy of those weights, prefill and kv-decode dispatch
+//! through [`model::WeightMat::matmul`], and the fused kernel unpacks
+//! each K-tile into an f32 strip exactly once per call, reused across the
+//! batch dimension (never the whole matrix per column).
+//!
+//! ### Memory accounting
+//!
+//! [`model::Weights::storage_bytes`] reports the true resident footprint:
+//! embeddings, norms and routers stay f32 (the router is what QESC
+//! calibrates, ~0.03% of parameters), while each packed matrix counts
+//! `bits/8` bytes per weight plus 5 bytes per (group, column) for its
+//! f32 scale and u8 zero-point. Serving surfaces the same numbers as
+//! `ServeMetrics::resident_weight_bytes` / `resident_expert_bytes`, and
+//! the report tables use them in place of simulated sizes.
 
 pub mod calib;
 pub mod coordinator;

@@ -13,6 +13,7 @@
 
 use eac_moe::coordinator::{load_or_init_model, ExperimentContext};
 use eac_moe::model::ZooModel;
+use eac_moe::runtime::xla_stub as xla;
 use std::collections::HashMap;
 
 fn main() {
@@ -169,6 +170,12 @@ fn cmd_compress(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
         report.fp_bytes as f64 / 1e6,
         report.compressed_bytes as f64 / 1e6,
         report.compression_ratio()
+    );
+    println!(
+        "resident (measured): {:.2} MB total, experts {:.2} MB at avg {:.2} bits",
+        qmodel.weights.storage_bytes() as f64 / 1e6,
+        qmodel.weights.expert_storage_bytes() as f64 / 1e6,
+        report.avg_expert_bits
     );
     let ppl_fp = eac_moe::eval::perplexity(&model, &ctx.ppl_eval);
     let ppl_q = eac_moe::eval::perplexity(&qmodel, &ctx.ppl_eval);

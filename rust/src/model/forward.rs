@@ -7,6 +7,11 @@
 //! expert are gathered and run through the expert FFN as one GEMM, so
 //! skipping an expert (PESF) skips real work, which is exactly the latency
 //! model the paper's speedup numbers rely on.
+//!
+//! All projection/expert GEMMs dispatch through [`WeightMat`]: a dense
+//! matrix hits the blocked f32 GEMM, a packed quantized matrix hits the
+//! fused group-dequant GEMM — QESC-compressed models serve directly from
+//! their packed storage with no f32 weight copies resident.
 
 use super::config::ModelConfig;
 use super::hooks::{Hooks, TokenSelection};
@@ -101,9 +106,9 @@ impl Model {
         let cfg = &self.weights.cfg;
         let (seq, d) = (x.rows, cfg.d_model);
         let (h, hd) = (cfg.n_heads, cfg.head_dim());
-        let q = matmul(x, &layer.wq);
-        let k = matmul(x, &layer.wk);
-        let v = matmul(x, &layer.wv);
+        let q = layer.wq.matmul(x);
+        let k = layer.wk.matmul(x);
+        let v = layer.wv.matmul(x);
         let scale = 1.0 / (hd as f32).sqrt();
         let mut ctx = Mat::zeros(seq, d);
         let mut qh = Mat::zeros(seq, hd);
@@ -136,7 +141,7 @@ impl Model {
         if let Some(cap) = &hooks.capture_wo_inputs {
             cap.borrow_mut()[li] = Some(ctx.clone());
         }
-        matmul(&ctx, &layer.wo)
+        layer.wo.matmul(&ctx)
     }
 
     /// Route tokens, execute (unpruned) experts grouped by expert, and add
@@ -265,9 +270,9 @@ impl Model {
             let xm = Mat::from_vec(1, cfg.d_model, x.clone());
             let normed = rmsnorm(&xm, &layer.attn_norm, 1e-6);
             // Project this position's q/k/v; append k/v to cache.
-            let q = matmul(&normed, &layer.wq);
-            let knew = matmul(&normed, &layer.wk);
-            let vnew = matmul(&normed, &layer.wv);
+            let q = layer.wq.matmul(&normed);
+            let knew = layer.wk.matmul(&normed);
+            let vnew = layer.wv.matmul(&normed);
             cache.k[li].row_mut(pos).copy_from_slice(knew.row(0));
             cache.v[li].row_mut(pos).copy_from_slice(vnew.row(0));
             let (h, hd) = (cfg.n_heads, cfg.head_dim());
@@ -293,7 +298,7 @@ impl Model {
                     }
                 }
             }
-            let attn = matmul(&Mat::from_vec(1, cfg.d_model, ctx), &layer.wo);
+            let attn = layer.wo.matmul(&Mat::from_vec(1, cfg.d_model, ctx));
             for (xi, a) in x.iter_mut().zip(attn.row(0)) {
                 *xi += a;
             }
@@ -312,14 +317,16 @@ impl Model {
     }
 }
 
-/// SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2.
+/// SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2. Each matrix dispatches
+/// through [`WeightMat::matmul`], so packed experts run the fused
+/// dequant GEMM directly.
 pub fn expert_forward(x: &Mat, e: &ExpertWeights) -> Mat {
-    let mut a = matmul(x, &e.w1);
-    let b = matmul(x, &e.w3);
+    let mut a = e.w1.matmul(x);
+    let b = e.w3.matmul(x);
     for (av, &bv) in a.data.iter_mut().zip(&b.data) {
         *av = silu(*av) * bv;
     }
-    matmul(&a, &e.w2)
+    e.w2.matmul(&a)
 }
 
 #[cfg(test)]

@@ -12,4 +12,4 @@ pub mod weights;
 pub use config::{ModelConfig, ZooModel};
 pub use forward::{expert_forward, KvCache, Model, MoeLayerOut};
 pub use hooks::{ForcedSelections, Hooks, SelectionRecord};
-pub use weights::{ExpertWeights, LayerWeights, Weights};
+pub use weights::{ExpertWeights, LayerWeights, WeightMat, Weights};

@@ -1,5 +1,13 @@
 //! Weight containers + initialization + binary IO.
 //!
+//! Every projection/expert matrix is a [`WeightMat`] — either `Dense` f32
+//! or `Packed` sub-byte quantized storage ([`PackedMat`]) executed through
+//! the fused dequant GEMM. This is what makes the served model's resident
+//! memory match the paper's compression numbers: QESC emits `Packed`
+//! experts and they stay packed through prefill/decode. The router (and
+//! embeddings/norms) stay f32, per the paper (router is ~0.03% of params
+//! and is the thing QESC calibrates).
+//!
 //! Layout matches `python/compile/pretrain.py`, which trains the miniature
 //! models in JAX and saves them through the same `TensorFile` format
 //! (see `util::binio` for the byte layout). Naming convention:
@@ -14,19 +22,126 @@
 //! layer{i}.expert{e}.w2                (d_ff, d_model)
 //! layer{i}.shared{s}.w1 / w2 / w3      same shapes
 //! ```
+//!
+//! A `Dense` weight is one f32 entry under its plain name (unchanged from
+//! the pre-quantized format, so Python-written checkpoints still load). A
+//! `Packed` weight is four entries: `{name}.q.meta` (u32 `[bits,
+//! group_size, rows, cols]`), `{name}.q.codes` (u8 packed bit-stream),
+//! `{name}.q.scales` (f32 `(n_groups, cols)`) and `{name}.q.zeros`
+//! (u8 `(n_groups, cols)` — zero-points are integers in `0..=qmax`).
 
 use super::config::ModelConfig;
+use crate::quant::pack::PackedMat;
+use crate::quant::quantizer::{GroupQuant, QuantConfig};
 use crate::tensor::{Mat, Pcg64};
 use crate::util::binio::TensorFile;
 use anyhow::Result;
 use std::path::Path;
 
+/// Polymorphic weight matrix: dense f32 or packed low-bit, with all
+/// execution dispatched through [`WeightMat::matmul`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum WeightMat {
+    Dense(Mat),
+    Packed(PackedMat),
+}
+
+impl WeightMat {
+    pub fn rows(&self) -> usize {
+        match self {
+            WeightMat::Dense(m) => m.rows,
+            WeightMat::Packed(p) => p.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            WeightMat::Dense(m) => m.cols,
+            WeightMat::Packed(p) => p.cols,
+        }
+    }
+
+    /// Logical parameter count (independent of storage form).
+    pub fn param_count(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    /// `x @ W`: dense GEMM or fused group-dequant GEMM.
+    pub fn matmul(&self, x: &Mat) -> Mat {
+        match self {
+            WeightMat::Dense(m) => crate::tensor::matmul(x, m),
+            WeightMat::Packed(p) => crate::quant::fused::matmul_packed(x, p),
+        }
+    }
+
+    /// Actual resident bytes of this matrix (f32 data, or packed codes +
+    /// scales + zeros).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            WeightMat::Dense(m) => m.data.len() * 4,
+            WeightMat::Packed(p) => p.storage_bytes(),
+        }
+    }
+
+    /// Effective code bit-width (32 for dense).
+    pub fn bits(&self) -> u32 {
+        match self {
+            WeightMat::Dense(_) => 32,
+            WeightMat::Packed(p) => p.cfg.bits,
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, WeightMat::Packed(_))
+    }
+
+    /// Materialize as dense f32 (calibration-time use: GPTQ reads the
+    /// current weights through this; it is never on the serving path).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            WeightMat::Dense(m) => m.clone(),
+            WeightMat::Packed(p) => p.unpack().dequantize(),
+        }
+    }
+
+    /// Pack a quantized matrix into its storage form.
+    pub fn from_quant(gq: &GroupQuant) -> WeightMat {
+        WeightMat::Packed(PackedMat::pack(gq))
+    }
+
+    /// GPTQ-quantize this matrix, borrowing the f32 data when it is
+    /// already dense (the common calibration case) instead of cloning it.
+    pub fn gptq_quantize(
+        &self,
+        hess: &crate::quant::gptq::Hessian,
+        cfg: crate::quant::gptq::GptqConfig,
+    ) -> GroupQuant {
+        use crate::quant::gptq::gptq_quantize_mat;
+        match self {
+            WeightMat::Dense(m) => gptq_quantize_mat(m, hess, cfg),
+            packed => gptq_quantize_mat(&packed.to_dense(), hess, cfg),
+        }
+    }
+
+    /// Mean squared difference, materializing as needed (test/analysis
+    /// helper).
+    pub fn mse(&self, other: &WeightMat) -> f32 {
+        self.to_dense().mse(&other.to_dense())
+    }
+}
+
+impl From<Mat> for WeightMat {
+    fn from(m: Mat) -> Self {
+        WeightMat::Dense(m)
+    }
+}
+
 /// One SwiGLU expert: out = (silu(x@w1) * (x@w3)) @ w2.
 #[derive(Clone, Debug)]
 pub struct ExpertWeights {
-    pub w1: Mat, // (d_model, d_ff)
-    pub w2: Mat, // (d_ff, d_model)
-    pub w3: Mat, // (d_model, d_ff)
+    pub w1: WeightMat, // (d_model, d_ff)
+    pub w2: WeightMat, // (d_ff, d_model)
+    pub w3: WeightMat, // (d_model, d_ff)
 }
 
 impl ExpertWeights {
@@ -34,14 +149,19 @@ impl ExpertWeights {
         let s1 = (2.0 / cfg.d_model as f32).sqrt();
         let s2 = (2.0 / cfg.d_ff as f32).sqrt();
         ExpertWeights {
-            w1: Mat::randn(cfg.d_model, cfg.d_ff, s1, rng),
-            w2: Mat::randn(cfg.d_ff, cfg.d_model, s2, rng),
-            w3: Mat::randn(cfg.d_model, cfg.d_ff, s1, rng),
+            w1: Mat::randn(cfg.d_model, cfg.d_ff, s1, rng).into(),
+            w2: Mat::randn(cfg.d_ff, cfg.d_model, s2, rng).into(),
+            w3: Mat::randn(cfg.d_model, cfg.d_ff, s1, rng).into(),
         }
     }
 
     pub fn param_count(&self) -> usize {
-        self.w1.data.len() + self.w2.data.len() + self.w3.data.len()
+        self.w1.param_count() + self.w2.param_count() + self.w3.param_count()
+    }
+
+    /// Resident bytes of the three matrices.
+    pub fn storage_bytes(&self) -> usize {
+        self.w1.storage_bytes() + self.w2.storage_bytes() + self.w3.storage_bytes()
     }
 }
 
@@ -50,11 +170,11 @@ impl ExpertWeights {
 pub struct LayerWeights {
     pub attn_norm: Vec<f32>,
     pub ffn_norm: Vec<f32>,
-    pub wq: Mat,
-    pub wk: Mat,
-    pub wv: Mat,
-    pub wo: Mat,
-    pub router: Mat, // (d_model, n_experts)
+    pub wq: WeightMat,
+    pub wk: WeightMat,
+    pub wv: WeightMat,
+    pub wo: WeightMat,
+    pub router: Mat, // (d_model, n_experts); stays f32 (paper Table 11)
     pub experts: Vec<ExpertWeights>,
     pub shared: Vec<ExpertWeights>,
 }
@@ -77,10 +197,10 @@ impl Weights {
             .map(|_| LayerWeights {
                 attn_norm: vec![1.0; cfg.d_model],
                 ffn_norm: vec![1.0; cfg.d_model],
-                wq: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
-                wk: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
-                wv: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
-                wo: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng),
+                wq: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng).into(),
+                wk: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng).into(),
+                wv: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng).into(),
+                wo: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng).into(),
                 router: Mat::randn(cfg.d_model, cfg.n_experts, sd, &mut rng),
                 experts: (0..cfg.n_experts).map(|_| ExpertWeights::randn(cfg, &mut rng)).collect(),
                 shared: (0..cfg.n_shared).map(|_| ExpertWeights::randn(cfg, &mut rng)).collect(),
@@ -98,13 +218,56 @@ impl Weights {
         let mut n = self.embed.data.len() + self.final_norm.len();
         for l in &self.layers {
             n += l.attn_norm.len() + l.ffn_norm.len();
-            n += l.wq.data.len() + l.wk.data.len() + l.wv.data.len() + l.wo.data.len();
+            n += l.wq.param_count() + l.wk.param_count() + l.wv.param_count() + l.wo.param_count();
             n += l.router.data.len();
             for e in l.experts.iter().chain(&l.shared) {
                 n += e.param_count();
             }
         }
         n
+    }
+
+    /// True resident bytes of the model as served: f32 for embeddings,
+    /// norms and routers, plus each [`WeightMat`]'s actual storage. For an
+    /// all-dense model this equals `param_count() * 4`; after QESC it is
+    /// the real compressed footprint (codes + scales + zeros).
+    pub fn storage_bytes(&self) -> usize {
+        let mut n = (self.embed.data.len() + self.final_norm.len()) * 4;
+        for l in &self.layers {
+            n += (l.attn_norm.len() + l.ffn_norm.len() + l.router.data.len()) * 4;
+            n += l.wq.storage_bytes()
+                + l.wk.storage_bytes()
+                + l.wv.storage_bytes()
+                + l.wo.storage_bytes();
+            for e in l.experts.iter().chain(&l.shared) {
+                n += e.storage_bytes();
+            }
+        }
+        n
+    }
+
+    /// Resident bytes of routed + shared expert weights only (the paper's
+    /// headline memory axis).
+    pub fn expert_storage_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.experts.iter().chain(&l.shared))
+            .map(|e| e.storage_bytes())
+            .sum()
+    }
+
+    /// RTN-quantize + pack every routed/shared expert in place (uncalibrated
+    /// helper for benches/tests; QESC is the calibrated path).
+    pub fn pack_experts_rtn(&mut self, bits: u32, group_size: usize) {
+        for l in &mut self.layers {
+            for e in l.experts.iter_mut().chain(l.shared.iter_mut()) {
+                for w in [&mut e.w1, &mut e.w2, &mut e.w3] {
+                    let gs = if group_size == 0 { 0 } else { group_size.min(w.rows()) };
+                    let gq = GroupQuant::quantize(&w.to_dense(), QuantConfig::new(bits, gs));
+                    *w = WeightMat::from_quant(&gq);
+                }
+            }
+        }
     }
 
     /// Serialize into a TensorFile.
@@ -133,20 +296,20 @@ impl Weights {
             tf.put_f32(&format!("{p}.attn_norm"), vec![c.d_model], l.attn_norm.clone());
             tf.put_f32(&format!("{p}.ffn_norm"), vec![c.d_model], l.ffn_norm.clone());
             for (nm, m) in [("wq", &l.wq), ("wk", &l.wk), ("wv", &l.wv), ("wo", &l.wo)] {
-                tf.put_f32(&format!("{p}.{nm}"), vec![m.rows, m.cols], m.data.clone());
+                put_weight(&mut tf, &format!("{p}.{nm}"), m);
             }
             tf.put_f32(&format!("{p}.router"), vec![c.d_model, c.n_experts], l.router.data.clone());
             for (e, ew) in l.experts.iter().enumerate() {
                 let ep = format!("{p}.expert{e}");
-                tf.put_f32(&format!("{ep}.w1"), vec![c.d_model, c.d_ff], ew.w1.data.clone());
-                tf.put_f32(&format!("{ep}.w2"), vec![c.d_ff, c.d_model], ew.w2.data.clone());
-                tf.put_f32(&format!("{ep}.w3"), vec![c.d_model, c.d_ff], ew.w3.data.clone());
+                put_weight(&mut tf, &format!("{ep}.w1"), &ew.w1);
+                put_weight(&mut tf, &format!("{ep}.w2"), &ew.w2);
+                put_weight(&mut tf, &format!("{ep}.w3"), &ew.w3);
             }
             for (s, ew) in l.shared.iter().enumerate() {
                 let ep = format!("{p}.shared{s}");
-                tf.put_f32(&format!("{ep}.w1"), vec![c.d_model, c.d_ff], ew.w1.data.clone());
-                tf.put_f32(&format!("{ep}.w2"), vec![c.d_ff, c.d_model], ew.w2.data.clone());
-                tf.put_f32(&format!("{ep}.w3"), vec![c.d_model, c.d_ff], ew.w3.data.clone());
+                put_weight(&mut tf, &format!("{ep}.w1"), &ew.w1);
+                put_weight(&mut tf, &format!("{ep}.w2"), &ew.w2);
+                put_weight(&mut tf, &format!("{ep}.w3"), &ew.w3);
             }
         }
         tf
@@ -177,23 +340,26 @@ impl Weights {
             anyhow::ensure!(dims == [n], "{nm}: bad dims {dims:?}");
             Ok(d.to_vec())
         };
+        let weight = |nm: &str, r: usize, cc: usize| -> Result<WeightMat> {
+            get_weight(tf, nm, r, cc)
+        };
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let p = format!("layer{i}");
             let read_expert = |ep: &str| -> Result<ExpertWeights> {
                 Ok(ExpertWeights {
-                    w1: mat(&format!("{ep}.w1"), cfg.d_model, cfg.d_ff)?,
-                    w2: mat(&format!("{ep}.w2"), cfg.d_ff, cfg.d_model)?,
-                    w3: mat(&format!("{ep}.w3"), cfg.d_model, cfg.d_ff)?,
+                    w1: weight(&format!("{ep}.w1"), cfg.d_model, cfg.d_ff)?,
+                    w2: weight(&format!("{ep}.w2"), cfg.d_ff, cfg.d_model)?,
+                    w3: weight(&format!("{ep}.w3"), cfg.d_model, cfg.d_ff)?,
                 })
             };
             layers.push(LayerWeights {
                 attn_norm: vecf(&format!("{p}.attn_norm"), cfg.d_model)?,
                 ffn_norm: vecf(&format!("{p}.ffn_norm"), cfg.d_model)?,
-                wq: mat(&format!("{p}.wq"), cfg.d_model, cfg.d_model)?,
-                wk: mat(&format!("{p}.wk"), cfg.d_model, cfg.d_model)?,
-                wv: mat(&format!("{p}.wv"), cfg.d_model, cfg.d_model)?,
-                wo: mat(&format!("{p}.wo"), cfg.d_model, cfg.d_model)?,
+                wq: weight(&format!("{p}.wq"), cfg.d_model, cfg.d_model)?,
+                wk: weight(&format!("{p}.wk"), cfg.d_model, cfg.d_model)?,
+                wv: weight(&format!("{p}.wv"), cfg.d_model, cfg.d_model)?,
+                wo: weight(&format!("{p}.wo"), cfg.d_model, cfg.d_model)?,
                 router: mat(&format!("{p}.router"), cfg.d_model, cfg.n_experts)?,
                 experts: (0..cfg.n_experts)
                     .map(|e| read_expert(&format!("{p}.expert{e}")))
@@ -218,6 +384,76 @@ impl Weights {
     pub fn load(path: &Path, name: &str) -> Result<Self> {
         Self::from_tensor_file(&TensorFile::load(path)?, name)
     }
+}
+
+/// Write one [`WeightMat`]: dense as a plain f32 entry, packed as the
+/// `.q.meta/.q.codes/.q.scales/.q.zeros` quartet.
+fn put_weight(tf: &mut TensorFile, name: &str, w: &WeightMat) {
+    match w {
+        WeightMat::Dense(m) => tf.put_f32(name, vec![m.rows, m.cols], m.data.clone()),
+        WeightMat::Packed(p) => {
+            tf.put_u32(
+                &format!("{name}.q.meta"),
+                vec![4],
+                vec![p.cfg.bits, p.cfg.group_size as u32, p.rows as u32, p.cols as u32],
+            );
+            tf.put_u8(&format!("{name}.q.codes"), vec![p.packed.len()], p.packed.clone());
+            let ng = p.cfg.n_groups(p.rows);
+            tf.put_f32(&format!("{name}.q.scales"), vec![ng, p.cols], p.scales.clone());
+            tf.put_u8(&format!("{name}.q.zeros"), vec![ng, p.cols], p.zeros.clone());
+        }
+    }
+}
+
+/// Read one [`WeightMat`], detecting packed storage by the presence of the
+/// `.q.meta` entry; otherwise falls back to the legacy plain-f32 layout.
+fn get_weight(tf: &TensorFile, name: &str, rows: usize, cols: usize) -> Result<WeightMat> {
+    let meta_name = format!("{name}.q.meta");
+    if tf.get(&meta_name).is_err() {
+        let (dims, d) = tf.get_f32(name)?;
+        anyhow::ensure!(dims == [rows, cols], "{name}: dims {dims:?} != [{rows}, {cols}]");
+        return Ok(WeightMat::Dense(Mat::from_vec(rows, cols, d.to_vec())));
+    }
+    let (mdims, meta) = tf.get_u32(&meta_name)?;
+    anyhow::ensure!(mdims == [4], "{meta_name}: bad dims {mdims:?}");
+    let bits = meta[0];
+    let group_size = meta[1] as usize;
+    anyhow::ensure!((2..=8).contains(&bits), "{name}: unsupported bit-width {bits}");
+    anyhow::ensure!(
+        meta[2] as usize == rows && meta[3] as usize == cols,
+        "{name}: packed shape {}x{} != expected {rows}x{cols}",
+        meta[2],
+        meta[3]
+    );
+    let cfg = QuantConfig::new(bits, group_size);
+    let codes_entry = tf.get(&format!("{name}.q.codes"))?;
+    let codes = codes_entry
+        .payload
+        .as_u8()
+        .ok_or_else(|| anyhow::anyhow!("{name}.q.codes: not u8"))?;
+    let want = PackedMat::col_bytes(rows, bits) * cols;
+    anyhow::ensure!(codes.len() == want, "{name}.q.codes: {} bytes != {want}", codes.len());
+    let ng = cfg.n_groups(rows);
+    let (sdims, scales) = tf.get_f32(&format!("{name}.q.scales"))?;
+    anyhow::ensure!(sdims == [ng, cols], "{name}.q.scales: bad dims {sdims:?}");
+    let zeros_entry = tf.get(&format!("{name}.q.zeros"))?;
+    anyhow::ensure!(
+        zeros_entry.dims == [ng, cols],
+        "{name}.q.zeros: bad dims {:?}",
+        zeros_entry.dims
+    );
+    let zeros = zeros_entry
+        .payload
+        .as_u8()
+        .ok_or_else(|| anyhow::anyhow!("{name}.q.zeros: not u8"))?;
+    Ok(WeightMat::Packed(PackedMat {
+        cfg,
+        rows,
+        cols,
+        packed: codes.to_vec(),
+        scales: scales.to_vec(),
+        zeros: zeros.to_vec(),
+    }))
 }
 
 #[cfg(test)]
@@ -261,6 +497,22 @@ mod tests {
     }
 
     #[test]
+    fn tensor_file_roundtrip_packed() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 8);
+        w.pack_experts_rtn(4, 16);
+        let tf = w.to_tensor_file();
+        let back = Weights::from_tensor_file(&tf, "tiny").unwrap();
+        // Packed payloads survive byte-for-byte and storage accounting agrees.
+        assert_eq!(back.layers[0].experts[0].w1, w.layers[0].experts[0].w1);
+        assert_eq!(back.layers[1].shared[0].w2, w.layers[1].shared[0].w2);
+        assert_eq!(back.storage_bytes(), w.storage_bytes());
+        assert!(back.layers[0].experts[0].w1.is_packed());
+        // Attention stays dense through the same roundtrip.
+        assert!(!back.layers[0].wq.is_packed());
+    }
+
+    #[test]
     fn zoo_configs_init() {
         // Smoke: all four zoo models initialize with consistent counts.
         for m in ZooModel::ALL {
@@ -268,5 +520,52 @@ mod tests {
             let w = Weights::init(&cfg, 2);
             assert_eq!(w.param_count(), cfg.param_count(), "{}", cfg.name);
         }
+    }
+
+    /// Acceptance: a packed 4-bit model reports resident expert bytes of
+    /// roughly bits/8 × params (+ scale/zero overhead), not the f32 size.
+    #[test]
+    fn packed_expert_storage_is_real() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 9);
+        let expert_params = cfg.expert_param_count();
+        assert_eq!(w.storage_bytes(), w.param_count() * 4);
+        assert_eq!(w.expert_storage_bytes(), expert_params * 4);
+        w.pack_experts_rtn(4, 16);
+        // Parameters are unchanged; only the storage form shrank.
+        assert_eq!(w.param_count(), cfg.param_count());
+        let packed = w.expert_storage_bytes();
+        // Codes alone are bits/8 per param; scales+zeros add 5 bytes per
+        // 16-row group. Must be far below f32 and at least the code floor.
+        let code_floor = expert_params / 2; // 4 bits = 0.5 B/param
+        assert!(packed >= code_floor, "packed={packed} floor={code_floor}");
+        // One byte per param bounds codes+overhead from above here (= f32/4).
+        assert!(packed < expert_params, "packed={packed} not < {expert_params}");
+        // Non-expert tensors are still f32.
+        let non_expert = w.storage_bytes() - packed;
+        assert_eq!(non_expert, (w.param_count() - expert_params) * 4);
+    }
+
+    /// Packed and dense forms compute the same product through the
+    /// WeightMat dispatch (the dequantized values, exactly).
+    #[test]
+    fn weightmat_dispatch_consistent() {
+        let mut rng = Pcg64::seeded(17);
+        let m = Mat::randn(24, 12, 1.0, &mut rng);
+        let x = Mat::randn(3, 24, 1.0, &mut rng);
+        let gq = GroupQuant::quantize(&m, QuantConfig::new(4, 8));
+        let packed = WeightMat::from_quant(&gq);
+        let dense_of_packed = WeightMat::Dense(packed.to_dense());
+        let a = packed.matmul(&x);
+        let b = dense_of_packed.matmul(&x);
+        for (u, v) in a.data.iter().zip(&b.data) {
+            assert!((u - v).abs() <= 1e-5, "{u} vs {v}");
+        }
+        assert_eq!(packed.rows(), 24);
+        assert_eq!(packed.cols(), 12);
+        assert_eq!(packed.bits(), 4);
+        // Group size 8 carries heavy scale/zero overhead (5 B per 8-row
+        // group/column), so the bound here is /3, not the asymptotic /8.
+        assert!(packed.storage_bytes() < dense_of_packed.storage_bytes() / 3);
     }
 }

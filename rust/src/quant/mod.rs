@@ -3,11 +3,13 @@
 //! bit-width allocators (BSP / PMQ) the paper compares against.
 
 pub mod alloc;
+pub mod fused;
 pub mod gptq;
 pub mod pack;
 pub mod quantizer;
 
 pub use alloc::{BitAlloc, Allocator};
+pub use fused::matmul_packed;
 pub use gptq::{gptq_quantize_mat, GptqConfig};
 pub use pack::PackedMat;
 pub use quantizer::{quantize_dequant_mat, GroupQuant, QuantConfig};

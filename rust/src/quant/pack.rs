@@ -12,7 +12,7 @@ use super::quantizer::{GroupQuant, QuantConfig};
 use crate::tensor::Mat;
 
 /// A bit-packed quantized matrix: storage form of [`GroupQuant`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PackedMat {
     pub cfg: QuantConfig,
     pub rows: usize,
@@ -21,12 +21,14 @@ pub struct PackedMat {
     /// boundary; columns concatenated.
     pub packed: Vec<u8>,
     pub scales: Vec<f32>,
-    pub zeros: Vec<f32>,
+    /// Zero-points, resident as u8 (they are integers in `0..=qmax`), so
+    /// [`PackedMat::storage_bytes`] is the true in-memory footprint.
+    pub zeros: Vec<u8>,
 }
 
 impl PackedMat {
     /// Bytes needed to pack one column.
-    fn col_bytes(rows: usize, bits: u32) -> usize {
+    pub(crate) fn col_bytes(rows: usize, bits: u32) -> usize {
         (rows * bits as usize).div_ceil(8)
     }
 
@@ -54,7 +56,9 @@ impl PackedMat {
             cols: gq.cols,
             packed,
             scales: gq.scales.clone(),
-            zeros: gq.zeros.clone(),
+            // Integral by construction (RTN and GPTQ both round + clamp to
+            // 0..=qmax), so the u8 narrowing is exact.
+            zeros: gq.zeros.iter().map(|&z| z as u8).collect(),
         }
     }
 
@@ -83,66 +87,28 @@ impl PackedMat {
             self.cols,
             codes,
             self.scales.clone(),
-            self.zeros.clone(),
+            self.zeros.iter().map(|&z| z as f32).collect(),
         )
     }
 
-    /// Real storage footprint in bytes (packed codes + scales + zeros,
-    /// zeros stored as u8 on disk).
+    /// Real storage footprint in bytes (packed codes + f32 scales + u8
+    /// zeros) — this is both the resident and the on-disk size.
     pub fn storage_bytes(&self) -> usize {
         self.packed.len() + self.scales.len() * 4 + self.zeros.len()
     }
 
     /// Fused dequantize-matmul: `x (m, rows) @ dequant(self) (rows, cols)`.
     ///
-    /// This is the native-path analogue of the Pallas `quant_matmul` kernel:
-    /// it never materializes the full f32 weight matrix; each column is
-    /// unpacked group-by-group into a stack buffer and consumed immediately.
-    ///
-    /// Unpacking is LUT-driven for the byte-aligned widths (2-bit: one
-    /// 256×4 table lookup per byte; 4-bit: 256×2) — the §Perf optimization
-    /// that took this from ~8x slower than dequant-then-GEMM to ~parity at
-    /// small M (see EXPERIMENTS.md §Perf). Non-aligned widths (3/5-bit)
-    /// take the generic bit-extraction path.
+    /// Delegates to the cache-blocked kernel in [`crate::quant::fused`],
+    /// which unpacks each K-tile into an f32 strip once per call and
+    /// reuses it across the M dimension (the old implementation here
+    /// unpacked every full column per call with zero reuse). The LUT
+    /// unpackers below (2-bit: one
+    /// 256×4 table lookup per byte; 4-bit: 256×2) are what it builds on;
+    /// non-byte-aligned widths (3/5-bit) take the generic bit-extraction
+    /// path.
     pub fn matmul_dequant(&self, x: &Mat) -> Mat {
-        assert_eq!(x.cols, self.rows, "matmul_dequant inner-dim mismatch");
-        let bits = self.cfg.bits as usize;
-        let cb = Self::col_bytes(self.rows, self.cfg.bits);
-        let g = if self.cfg.group_size == 0 { self.rows } else { self.cfg.group_size };
-        let mut out = Mat::zeros(x.rows, self.cols);
-        let mut colbuf = vec![0f32; self.rows + 8]; // slack for LUT over-write
-        for c in 0..self.cols {
-            let col = &self.packed[c * cb..(c + 1) * cb];
-            match bits {
-                2 => unpack2_lut(col, &mut colbuf),
-                4 => unpack4_lut(col, &mut colbuf),
-                8 => {
-                    for (dst, &b) in colbuf.iter_mut().zip(col) {
-                        *dst = b as f32;
-                    }
-                }
-                _ => unpack_generic(col, bits, self.rows, &mut colbuf),
-            }
-            // Affine-correct per group: w = (code - zero) * scale.
-            for gi in 0..self.cfg.n_groups(self.rows) {
-                let scale = self.scales[gi * self.cols + c];
-                let zero = self.zeros[gi * self.cols + c];
-                let r1 = ((gi + 1) * g).min(self.rows);
-                for v in &mut colbuf[gi * g..r1] {
-                    *v = (*v - zero) * scale;
-                }
-            }
-            // out[:, c] = x @ colbuf
-            for m in 0..x.rows {
-                let xr = x.row(m);
-                let mut acc = 0.0f32;
-                for (xv, wv) in xr.iter().zip(&colbuf[..self.rows]) {
-                    acc += xv * wv;
-                }
-                *out.at_mut(m, c) = acc;
-            }
-        }
-        out
+        crate::quant::fused::matmul_packed(x, self)
     }
 }
 
@@ -173,21 +139,21 @@ fn lut4() -> &'static [[f32; 2]; 256] {
     })
 }
 
-fn unpack2_lut(col: &[u8], out: &mut [f32]) {
+pub(crate) fn unpack2_lut(col: &[u8], out: &mut [f32]) {
     let lut = lut2();
     for (i, &b) in col.iter().enumerate() {
         out[i * 4..i * 4 + 4].copy_from_slice(&lut[b as usize]);
     }
 }
 
-fn unpack4_lut(col: &[u8], out: &mut [f32]) {
+pub(crate) fn unpack4_lut(col: &[u8], out: &mut [f32]) {
     let lut = lut4();
     for (i, &b) in col.iter().enumerate() {
         out[i * 2..i * 2 + 2].copy_from_slice(&lut[b as usize]);
     }
 }
 
-fn unpack_generic(col: &[u8], bits: usize, rows: usize, out: &mut [f32]) {
+pub(crate) fn unpack_generic(col: &[u8], bits: usize, rows: usize, out: &mut [f32]) {
     let mask = ((1u32 << bits) - 1) as u8;
     for (r, dst) in out.iter_mut().enumerate().take(rows) {
         let bit0 = r * bits;
@@ -259,12 +225,15 @@ mod tests {
         assert!(ratio > 13.0, "ratio={ratio}"); // ~13.9x with group overhead
     }
 
-    /// Property: pack∘unpack is the identity on random code matrices.
+    /// Property: pack∘unpack is the identity on random code matrices at
+    /// every supported width, including the byte-aligned 8-bit case and
+    /// row counts that do not land on byte boundaries for any width.
     #[test]
     fn prop_pack_roundtrip_random() {
         let mut rng = Pcg64::seeded(33);
-        for _ in 0..10 {
-            let bits = 2 + rng.below(4) as u32; // 2..=5
+        let widths = [2u32, 3, 4, 5, 8];
+        for trial in 0..20 {
+            let bits = widths[trial % widths.len()];
             let rows = 1 + rng.below_usize(70);
             let cols = 1 + rng.below_usize(9);
             let qmax = (1u32 << bits) - 1;

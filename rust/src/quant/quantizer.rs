@@ -151,6 +151,10 @@ impl GroupQuant {
 }
 
 /// Convenience: quantize then immediately dequantize (RTN baseline).
+///
+/// Calibration/analysis only — the inference path never materializes
+/// dequantized weights anymore; packed matrices execute through
+/// [`crate::quant::fused::matmul_packed`] instead.
 pub fn quantize_dequant_mat(w: &Mat, cfg: QuantConfig) -> Mat {
     GroupQuant::quantize(w, cfg).dequantize()
 }

@@ -25,14 +25,26 @@ pub fn table4(scale: f64) -> Result<()> {
     let mut json = Json::obj();
     for zoo in ZooModel::ALL {
         let (fp, _) = load_or_init_model(zoo);
-        let fp_mb = (fp.weights.param_count() * 2) as f64 / 1e6; // fp16 deploy
+        // Measured resident bytes (Weights::storage_bytes), not a simulated
+        // size: the compressed model actually holds packed codes.
+        let fp_mb = fp.weights.storage_bytes() as f64 / 1e6;
         let (q, report) = compress(&fp, zoo, QuantMethod::Qesc, BitSetting::B303, &ctx);
-        let q_mb = report.compressed_bytes as f64 / 1e6;
+        let q_mb = q.weights.storage_bytes() as f64 / 1e6;
+        let expert_mb = q.weights.expert_storage_bytes() as f64 / 1e6;
         let base = measure(&fp, &ctx, &suite);
         let qesc = measure(&q, &ctx, &suite);
         let qp = measure_pruned(&q, &ctx, &suite, 0.3);
         let lat_base = prefill_latency(
             crate::model::Model::new(fp.weights.clone()),
+            PrunePolicy::None,
+            n_reqs,
+            len,
+        );
+        // Same packed weights with and without PESF, so the speedup column
+        // isolates the PESF gain; the packed/dense GEMM cost shows up in
+        // the QESC row's own ratio instead of contaminating PESF's.
+        let lat_q = prefill_latency(
+            crate::model::Model::new(q.weights.clone()),
             PrunePolicy::None,
             n_reqs,
             len,
@@ -43,27 +55,34 @@ pub fn table4(scale: f64) -> Result<()> {
             n_reqs,
             len,
         );
-        // Native-path speedup comes from PESF (quantization's bandwidth win
-        // needs the packed decode path — see EXPERIMENTS.md §Substitutions).
-        let speedup = lat_base / lat_pesf;
+        let speedup_pesf = lat_q / lat_pesf;
         table.row(vec![zoo.display().into(), "Baseline".into(), format!("{fp_mb:.2}"), format!("{:.2}", base.suite.mean_accuracy()), "1.00x".into()]);
-        table.row(vec!["".into(), "QESC".into(), format!("{q_mb:.2}"), format!("{:.2}", qesc.suite.mean_accuracy()), "-".into()]);
-        table.row(vec!["".into(), "QESC+PESF".into(), format!("{q_mb:.2}"), format!("{:.2}", qp.suite.mean_accuracy()), format!("{speedup:.2}x")]);
+        table.row(vec!["".into(), "QESC".into(), format!("{q_mb:.2}"), format!("{:.2}", qesc.suite.mean_accuracy()), format!("{:.2}x", lat_base / lat_q)]);
+        table.row(vec!["".into(), "QESC+PESF".into(), format!("{q_mb:.2}"), format!("{:.2}", qp.suite.mean_accuracy()), format!("{:.2}x", lat_base / lat_pesf)]);
         let mut o = Json::obj();
         o.set("fp_mb", Json::Num(fp_mb))
             .set("q_mb", Json::Num(q_mb))
+            .set("q_expert_mb", Json::Num(expert_mb))
+            .set("avg_expert_bits", Json::Num(report.avg_expert_bits))
             .set("compression", Json::Num(fp_mb / q_mb))
             .set("acc_base", Json::Num(base.suite.mean_accuracy() as f64))
             .set("acc_qesc", Json::Num(qesc.suite.mean_accuracy() as f64))
             .set("acc_qesc_pesf", Json::Num(qp.suite.mean_accuracy() as f64))
-            .set("speedup", Json::Num(speedup))
+            // PESF gain isolated on the same packed weights.
+            .set("speedup_pesf", Json::Num(speedup_pesf))
+            // Cost of serving packed vs dense f32 on this CPU path (>1 =
+            // slower; the fused GEMM targets ~1.5-2x of dense).
+            .set("packed_over_dense_latency", Json::Num(lat_q / lat_base))
             .set("ppl_base", Json::Num(base.ppl))
             .set("ppl_qesc", Json::Num(qesc.ppl));
         json.set(zoo.key(), o);
     }
     table.print();
-    println!("(expected shape: ~4-5x memory reduction at fp16-baseline accuracy within\n\
-              ~1 point, with PESF adding measurable speedup — Fig 1's summary)");
+    println!("(expected shape: large memory reduction vs the f32-resident baseline —\n\
+              ~8-10x at 3.03-bit experts — at baseline accuracy within ~1 point;\n\
+              PESF speeds up the packed model, while the packed GEMM itself costs\n\
+              ~1.5-2x dense on CPU, so the Speedup column vs the f32 baseline can\n\
+              sit below 1.00x — the isolated PESF gain is in speedup_pesf)");
     super::save_result("table4", &json)?;
     Ok(())
 }

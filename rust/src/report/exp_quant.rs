@@ -11,8 +11,8 @@ use crate::calib::shift::{change_rates, mean_change_rates, shift_rank_analysis};
 use crate::coordinator::{load_or_init_model, ExperimentContext};
 use crate::data::tasks::zero_shot_suite;
 use crate::model::hooks::Hooks;
-use crate::model::{Model, ZooModel};
-use crate::quant::gptq::{gptq_quantize_mat, GptqConfig, Hessian};
+use crate::model::{Model, WeightMat, ZooModel};
+use crate::quant::gptq::{GptqConfig, Hessian};
 use crate::tensor::Mat;
 use crate::util::json::Json;
 use crate::Result;
@@ -367,10 +367,11 @@ pub fn fig9(scale: f64) -> Result<()> {
             let mut h_wo = Hessian::new(fp.cfg().d_model);
             h_wo.update(&wo_x);
             let l = &mut q.weights.layers[li];
-            l.wq = gptq_quantize_mat(&l.wq, &h_in, gcfg).dequantize();
-            l.wk = gptq_quantize_mat(&l.wk, &h_in, gcfg).dequantize();
-            l.wv = gptq_quantize_mat(&l.wv, &h_in, gcfg).dequantize();
-            l.wo = gptq_quantize_mat(&l.wo, &h_wo, gcfg).dequantize();
+            // Install packed weights: the sweep measures the served path.
+            l.wq = WeightMat::from_quant(&l.wq.gptq_quantize(&h_in, gcfg));
+            l.wk = WeightMat::from_quant(&l.wk.gptq_quantize(&h_in, gcfg));
+            l.wv = WeightMat::from_quant(&l.wv.gptq_quantize(&h_in, gcfg));
+            l.wo = WeightMat::from_quant(&l.wo.gptq_quantize(&h_wo, gcfg));
         }
         let (rec_q, _) = record_selections(&q, &ctx.ppl_eval);
         let cr = mean_change_rates(&rec_fp, &rec_q);

@@ -2,6 +2,7 @@
 //! artifacts, with f32 `Mat` in/out (adapted from /opt/xla-example/load_hlo).
 
 use crate::runtime::artifacts::{ArtifactManifest, ArtifactSpec};
+use crate::runtime::xla_stub as xla;
 use crate::tensor::Mat;
 use anyhow::{Context, Result};
 use std::collections::HashMap;

@@ -7,6 +7,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec};
 pub use client::{Executable, RtInput, RuntimeClient};

@@ -1,0 +1,155 @@
+//! Build-time stub for the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The offline build environment does not ship the `xla` crate, so this
+//! module provides the exact API surface `runtime::client` and `main`
+//! consume, with every runtime entry point reporting "unavailable".
+//! [`PjRtClient::cpu`] always errors, so no other method is ever reached:
+//! the PJRT integration tests self-gate on `artifacts/manifest.json` and
+//! pass vacuously, and the serving/compression stack runs on the native
+//! tensor path. To use real PJRT, replace the `use ... xla_stub as xla`
+//! aliases with the real crate; the call sites are unchanged.
+
+use std::fmt;
+
+/// Stub error: carries the unavailability message.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "xla_extension runtime is not linked into this build (native fallback active)".into(),
+    ))
+}
+
+/// Element dtypes the artifact path uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    U8,
+}
+
+/// Marker for dtypes convertible out of a [`Literal`].
+pub trait NativeType {}
+impl NativeType for f32 {}
+impl NativeType for u8 {}
+impl NativeType for u32 {}
+
+/// Host-side tensor value (stub: never holds data).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn create_from_shape_and_untyped_data<D: AsRef<[u8]>>(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: D,
+    ) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Computation wrapper accepted by [`PjRtClient::compile`].
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the only constructor and it
+/// always errors in the stub, so the handle is never observable.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not create a client");
+        assert!(err.to_string().contains("not linked"));
+    }
+}

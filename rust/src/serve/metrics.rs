@@ -43,6 +43,14 @@ pub struct ServeMetrics {
     pub wall_secs: f64,
     /// Mean PESF prune rate across requests.
     pub mean_prune_rate: f32,
+    /// True resident bytes of the served model's weights
+    /// ([`crate::model::Weights::storage_bytes`]): packed experts count at
+    /// their packed size, not a simulated f32 size.
+    pub resident_weight_bytes: usize,
+    /// Resident bytes of expert weights only (the paper's memory axis).
+    pub resident_expert_bytes: usize,
+    /// What the same weights would occupy fully dense in f32.
+    pub fp32_weight_bytes: usize,
 }
 
 impl ServeMetrics {
@@ -60,9 +68,17 @@ impl ServeMetrics {
         self.total_requests as f64 / self.wall_secs
     }
 
+    /// Resident-weight compression vs dense f32 (1.0 = uncompressed).
+    pub fn weight_compression_ratio(&self) -> f64 {
+        if self.resident_weight_bytes == 0 {
+            return 1.0;
+        }
+        self.fp32_weight_bytes as f64 / self.resident_weight_bytes as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "reqs={} tokens={} wall={:.2}s thpt={:.0} tok/s prefill p50={:.1}ms p95={:.1}ms queue p50={:.1}ms prune={:.1}%",
+            "reqs={} tokens={} wall={:.2}s thpt={:.0} tok/s prefill p50={:.1}ms p95={:.1}ms queue p50={:.1}ms prune={:.1}% weights={:.2}MB ({:.2}x vs f32)",
             self.total_requests,
             self.total_tokens,
             self.wall_secs,
@@ -70,7 +86,9 @@ impl ServeMetrics {
             self.prefill.percentile_ms(0.5),
             self.prefill.percentile_ms(0.95),
             self.queue.percentile_ms(0.5),
-            self.mean_prune_rate * 100.0
+            self.mean_prune_rate * 100.0,
+            self.resident_weight_bytes as f64 / 1e6,
+            self.weight_compression_ratio()
         )
     }
 }

@@ -98,8 +98,9 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 }
 
 /// Split rows across scoped threads; each thread writes its own disjoint
-/// slice of the output buffer.
-fn run_row_parallel<F>(m: usize, n: usize, out: &mut [f32], body: &F)
+/// slice of the output buffer. Shared with the fused dequant GEMM in
+/// `quant::fused`, which parallelizes the same way.
+pub(crate) fn run_row_parallel<F>(m: usize, n: usize, out: &mut [f32], body: &F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {

@@ -31,11 +31,13 @@ fn expert_ffn_artifact_matches_native() {
     let m = exe.spec.bucket_m;
     let x = Mat::randn(m, cfg.d_model, 1.0, &mut rng);
     let e = ExpertWeights {
-        w1: Mat::randn(cfg.d_model, cfg.d_ff, 0.1, &mut rng),
-        w2: Mat::randn(cfg.d_ff, cfg.d_model, 0.1, &mut rng),
-        w3: Mat::randn(cfg.d_model, cfg.d_ff, 0.1, &mut rng),
+        w1: Mat::randn(cfg.d_model, cfg.d_ff, 0.1, &mut rng).into(),
+        w2: Mat::randn(cfg.d_ff, cfg.d_model, 0.1, &mut rng).into(),
+        w3: Mat::randn(cfg.d_model, cfg.d_ff, 0.1, &mut rng).into(),
     };
-    let out = exe.run(&[&x, &e.w1, &e.w2, &e.w3]).expect("execute")[0].clone();
+    // The artifact takes f32 tensors; materialize the WeightMats.
+    let (w1, w2, w3) = (e.w1.to_dense(), e.w2.to_dense(), e.w3.to_dense());
+    let out = exe.run(&[&x, &w1, &w2, &w3]).expect("execute")[0].clone();
     let native = expert_forward(&x, &e);
     assert_eq!(out.rows, m);
     let max_err = out
@@ -145,7 +147,11 @@ fn quantized_expert_artifact_matches_native_dequant() {
         .expect("execute quantized expert")[0]
         .clone();
     // Native reference: dequantize then SwiGLU.
-    let e = ExpertWeights { w1: g1.dequantize(), w2: g2.dequantize(), w3: g3.dequantize() };
+    let e = ExpertWeights {
+        w1: g1.dequantize().into(),
+        w2: g2.dequantize().into(),
+        w3: g3.dequantize().into(),
+    };
     let native = expert_forward(&x, &e);
     let max_err = out
         .data
