@@ -32,8 +32,8 @@ fn main() -> eac_moe::Result<()> {
         ("PESF", PrunePolicy::Pesf(PesfConfig { alpha })),
     ];
     let mut table = Table::new(
-        "serving metrics (16 requests x 192 tokens, batch<=4, 1 worker)",
-        &["policy", "thpt tok/s", "prefill p50 ms", "p95 ms", "prune rate"],
+        "serving metrics (16 requests x 192 tokens + 16 decode, batch<=4, 1 worker)",
+        &["policy", "thpt tok/s", "decode tok/s", "prefill p50 ms", "p95 ms", "prune rate"],
     );
     let mut base_thpt = 0.0;
     for (name, policy) in policies {
@@ -46,8 +46,10 @@ fn main() -> eac_moe::Result<()> {
             },
         );
         let mut mix = eac_moe::data::corpus::WikiMixture::new(9);
+        // Decode requests ride the single-pass prefill (KV export) and the
+        // batched decode loop — PESF still applies to prefill only.
         let reqs: Vec<Request> =
-            (0..16u64).map(|i| Request::new(i, mix.sequence(192))).collect();
+            (0..16u64).map(|i| Request::new(i, mix.sequence(192)).with_decode(16)).collect();
         let (_, m) = engine.serve(reqs);
         if name == "none" {
             base_thpt = m.throughput_tokens_per_sec();
@@ -62,6 +64,7 @@ fn main() -> eac_moe::Result<()> {
                 }
             ),
             format!("{:.0}", m.throughput_tokens_per_sec()),
+            format!("{:.0}", m.decode_tokens_per_sec()),
             format!("{:.1}", m.prefill.percentile_ms(0.5)),
             format!("{:.1}", m.prefill.percentile_ms(0.95)),
             format!("{:.1}%", m.mean_prune_rate * 100.0),

@@ -3,8 +3,12 @@
 //! (dense vs packed weights), PESF overhead. `harness = false` — uses the
 //! in-crate timing harness (criterion is not in the offline registry).
 //!
-//! Emits `results/bench_perf.json` with the dense-vs-packed GEMM and
-//! end-to-end prefill numbers, same shape as the bench_tables outputs.
+//! Emits `results/bench_perf.json` with the dense-vs-packed GEMM,
+//! end-to-end prefill, serve-with-decode (seed double-compute vs prefill
+//! KV export) and batched-vs-sequential decode numbers, same shape as the
+//! bench_tables outputs. CI runs this in smoke mode
+//! (`EAC_MOE_BENCH_MS=25`) and uploads the JSON so the perf trajectory is
+//! tracked per PR.
 
 use eac_moe::model::{Model, ModelConfig, Weights};
 use eac_moe::quant::gptq::{gptq_quantize_mat, GptqConfig, Hessian};
@@ -117,34 +121,123 @@ fn main() {
         std::hint::black_box(model.forward_with_hooks(&tokens, &hooks));
     });
 
+    // --- Serve-with-decode: the seed engine forwarded every prompt twice
+    // (prefill for logits, then a token-by-token decode_step replay just to
+    // refill the KV cache). The KV-export path prefills once into the
+    // cache. Same outputs, one prompt pass — the ratio is the PR's win.
+    let (prompt_len, n_decode) = (192usize, 32usize);
+    let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| (i * 11) % 512).collect();
+    let seed_path = |model: &Model| {
+        let logits = model.forward(&prompt);
+        let mut cur = eac_moe::tensor::ops::topk_indices(logits.row(prompt_len - 1), 1)[0] as u32;
+        let mut cache = eac_moe::model::KvCache::new(model.cfg());
+        for &t in &prompt {
+            model.decode_step(t, &mut cache, &eac_moe::model::hooks::Hooks::none());
+        }
+        let mut generated = Vec::with_capacity(n_decode);
+        for _ in 0..n_decode {
+            generated.push(cur);
+            let l = model.decode_step(cur, &mut cache, &eac_moe::model::hooks::Hooks::none());
+            cur = eac_moe::tensor::ops::topk_indices(&l, 1)[0] as u32;
+        }
+        generated
+    };
+    let kv_export_path = |model: &Model| {
+        let mut cache = eac_moe::model::KvCache::new(model.cfg());
+        let logits =
+            model.prefill_into_cache(&prompt, &eac_moe::model::hooks::Hooks::none(), &mut cache);
+        let mut cur = eac_moe::tensor::ops::topk_indices(logits.row(prompt_len - 1), 1)[0] as u32;
+        let mut generated = Vec::with_capacity(n_decode);
+        for _ in 0..n_decode {
+            generated.push(cur);
+            let l = model.decode_step(cur, &mut cache, &eac_moe::model::hooks::Hooks::none());
+            cur = eac_moe::tensor::ops::topk_indices(&l, 1)[0] as u32;
+        }
+        generated
+    };
+    assert_eq!(seed_path(&model), kv_export_path(&model), "paths must agree token-for-token");
+    let rs = bench(&format!("serve {prompt_len}+{n_decode} seed double-compute"), || {
+        std::hint::black_box(seed_path(&model));
+    });
+    let rk = bench(&format!("serve {prompt_len}+{n_decode} prefill KV export"), || {
+        std::hint::black_box(kv_export_path(&model));
+    });
+    println!("    -> KV export speedup over seed path: {:.2}x", rs.mean_ns / rk.mean_ns);
+    let mut o = Json::obj();
+    o.set("seed_double_compute_ns", Json::Num(rs.mean_ns))
+        .set("kv_export_ns", Json::Num(rk.mean_ns))
+        .set("seed_over_kv_export", Json::Num(rs.mean_ns / rk.mean_ns));
+    json.set(&format!("serve_decode/{prompt_len}p{n_decode}d"), o);
+
+    // --- Batched decode: B sequences advanced together (experts gathered
+    // across the batch into one GEMM) vs B sequential decode_steps.
+    let bsz = 4usize;
+    let prefill_batch = || -> Vec<eac_moe::model::KvCache> {
+        (0..bsz)
+            .map(|b| {
+                let p: Vec<u32> = (0..64u32).map(|i| (i * 7 + b as u32 * 13) % 512).collect();
+                let mut c = eac_moe::model::KvCache::new(model.cfg());
+                model.prefill_into_cache(&p, &eac_moe::model::hooks::Hooks::none(), &mut c);
+                c
+            })
+            .collect()
+    };
+    // Rewinding `len` (instead of cloning ~MBs of cache per iteration)
+    // keeps the timed region pure decode: the step re-appends at the same
+    // position and never reads past `len`, so stale rows are harmless.
+    let mut caches = prefill_batch();
+    let ctx_len = caches[0].len;
+    let toks: Vec<u32> = (0..bsz as u32).map(|b| b * 31 % 512).collect();
+    let rb = bench(&format!("decode step batched B={bsz} @ctx64"), || {
+        for c in caches.iter_mut() {
+            c.len = ctx_len;
+        }
+        std::hint::black_box(model.decode_step_batch(
+            &toks,
+            &mut caches,
+            &eac_moe::model::hooks::Hooks::none(),
+        ));
+    });
+    let rq = bench(&format!("decode step sequential x{bsz} @ctx64"), || {
+        for (b, c) in caches.iter_mut().enumerate() {
+            c.len = ctx_len;
+            std::hint::black_box(model.decode_step(
+                toks[b],
+                c,
+                &eac_moe::model::hooks::Hooks::none(),
+            ));
+        }
+    });
+    println!("    -> batched/sequential decode ratio: {:.2}x", rb.mean_ns / rq.mean_ns);
+    let mut o = Json::obj();
+    o.set("batched_ns", Json::Num(rb.mean_ns))
+        .set("sequential_ns", Json::Num(rq.mean_ns))
+        .set("batched_over_sequential", Json::Num(rb.mean_ns / rq.mean_ns));
+    json.set(&format!("decode_batch/b{bsz}"), o);
+
     // --- Decode step (kv-cache path; quantization's bandwidth-bound case).
     let mut cache = eac_moe::model::KvCache::new(model.cfg());
     for &t in tokens.iter().take(64) {
         model.decode_step(t, &mut cache, &eac_moe::model::hooks::Hooks::none());
     }
+    let ctx = cache.len;
     bench("decode step @ctx64", || {
-        let mut c2 = eac_moe::model::KvCache::new(model.cfg());
-        c2.len = cache.len;
-        for li in 0..cfg.n_layers {
-            c2.k[li] = cache.k[li].clone();
-            c2.v[li] = cache.v[li].clone();
-        }
-        std::hint::black_box(model.decode_step(1, &mut c2, &eac_moe::model::hooks::Hooks::none()));
+        cache.len = ctx; // rewind instead of cloning the cache per call
+        std::hint::black_box(model.decode_step(
+            1,
+            &mut cache,
+            &eac_moe::model::hooks::Hooks::none(),
+        ));
     });
     let mut c2 = eac_moe::model::KvCache::new(packed_model.cfg());
     for &t in tokens.iter().take(64) {
         packed_model.decode_step(t, &mut c2, &eac_moe::model::hooks::Hooks::none());
     }
     bench("decode step @ctx64 packed 4-bit experts", || {
-        let mut c3 = eac_moe::model::KvCache::new(packed_model.cfg());
-        c3.len = c2.len;
-        for li in 0..cfg.n_layers {
-            c3.k[li] = c2.k[li].clone();
-            c3.v[li] = c2.v[li].clone();
-        }
+        c2.len = ctx;
         std::hint::black_box(packed_model.decode_step(
             1,
-            &mut c3,
+            &mut c2,
             &eac_moe::model::hooks::Hooks::none(),
         ));
     });

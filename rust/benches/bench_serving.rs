@@ -65,4 +65,27 @@ fn main() {
         let toks = 8.0 * 128.0;
         println!("    -> {:.0} tok/s", toks / (r.mean_ns / 1e9));
     }
+
+    // Decode batching: same requests + 24 decode tokens each, served with
+    // a decode batch of 1 vs 4 (the cross-batch expert-GEMM gather).
+    for max_batch in [1usize, 4] {
+        let weights = m.weights.clone();
+        let r = bench(&format!("engine 8x64 +24 decode, max_batch={max_batch}"), || {
+            let engine = Engine::new(
+                Model::new(weights.clone()),
+                EngineConfig {
+                    batch: BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
+                    workers: 1,
+                    prune: PrunePolicy::None,
+                },
+            );
+            let rs: Vec<Request> =
+                reqs(8, 64).into_iter().map(|r| r.with_decode(24)).collect();
+            let (resps, metrics) = engine.serve(rs);
+            assert_eq!(resps.len(), 8);
+            assert_eq!(metrics.generated_tokens, 8 * 24);
+        });
+        let gen_toks = 8.0 * 24.0;
+        println!("    -> {:.0} decode tok/s", gen_toks / (r.mean_ns / 1e9));
+    }
 }

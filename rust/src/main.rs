@@ -6,7 +6,7 @@
 //! eac-moe info                          environment + artifact status
 //! eac-moe compress  --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]
 //! eac-moe eval      --model <key> [--alpha A] [--scale S]
-//! eac-moe serve     --model <key> [--alpha A] [--requests N] [--len L]
+//! eac-moe serve     --model <key> [--alpha A] [--requests N] [--len L] [--decode D]
 //! eac-moe analyze-es --model <key> [--scale S]
 //! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|all
 //! ```
@@ -61,7 +61,7 @@ fn usage() {
          \x20 info                         environment + artifact status\n\
          \x20 compress   --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]\n\
          \x20 eval       --model <key> [--alpha A] [--scale S]\n\
-         \x20 serve      --model <key> [--alpha A] [--requests N] [--len L] [--workers W]\n\
+         \x20 serve      --model <key> [--alpha A] [--requests N] [--len L] [--decode D] [--workers W]\n\
          \x20 analyze-es --model <key> [--scale S]\n\
          \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
          \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|all)\n\
@@ -239,6 +239,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     let alpha: f32 = opts.get("alpha").and_then(|s| s.parse().ok()).unwrap_or(0.0);
     let n: u64 = opts.get("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
     let len: usize = opts.get("len").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let decode: usize = opts.get("decode").and_then(|s| s.parse().ok()).unwrap_or(0);
     let workers: usize = opts.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
     let prune = if alpha > 0.0 {
         PrunePolicy::Pesf(eac_moe::prune::pesf::PesfConfig { alpha })
@@ -248,8 +249,12 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     let cfg = EngineConfig { workers, prune, ..Default::default() };
     let engine = Engine::new(model, cfg);
     let mut mix = eac_moe::data::corpus::WikiMixture::new(21);
-    let reqs: Vec<Request> = (0..n).map(|i| Request::new(i, mix.sequence(len))).collect();
-    println!("serving {n} requests of len {len} on {} (alpha={alpha}, workers={workers})", zoo.key());
+    let reqs: Vec<Request> =
+        (0..n).map(|i| Request::new(i, mix.sequence(len)).with_decode(decode)).collect();
+    println!(
+        "serving {n} requests of len {len} (+{decode} decode) on {} (alpha={alpha}, workers={workers})",
+        zoo.key()
+    );
     let (_resps, metrics) = engine.serve(reqs);
     println!("{}", metrics.summary());
     Ok(())

@@ -1,4 +1,6 @@
-//! Native forward pass of the MoE transformer (prefill + kv-cache decode).
+//! Native forward pass of the MoE transformer: prefill (optionally
+//! exporting its K/V into the decode cache) + kv-cache decode, single
+//! sequence or batched.
 //!
 //! This mirrors the AOT-compiled JAX graph (L2) exactly — pre-norm blocks,
 //! causal MHSA, SwiGLU experts, softmax-then-top-k routing with top-k score
@@ -32,6 +34,10 @@ pub struct Model {
 }
 
 /// KV cache for incremental decode: per layer, (seq, d_model) K and V.
+/// Filled either token-by-token by [`Model::decode_step`] /
+/// [`Model::decode_step_batch`], or in one pass by
+/// [`Model::prefill_into_cache`].
+#[derive(Clone)]
 pub struct KvCache {
     pub k: Vec<Mat>,
     pub v: Vec<Mat>,
@@ -64,6 +70,30 @@ impl Model {
 
     /// Prefill forward with hooks.
     pub fn forward_with_hooks(&self, tokens: &[u32], hooks: &Hooks) -> Mat {
+        self.forward_full(tokens, hooks, None)
+    }
+
+    /// Prefill that also exports each layer's K/V projections into `cache`,
+    /// leaving it ready for [`Model::decode_step`] /
+    /// [`Model::decode_step_batch`] at position `tokens.len()`. This is the
+    /// serving engine's single-pass prompt path: with the same `hooks`, the
+    /// K/V written here are bit-identical to what a token-by-token
+    /// [`Model::decode_step`] replay of the prompt would produce (same
+    /// per-row GEMMs, same accumulation order), so decode can continue from
+    /// the prefill directly instead of re-computing the prompt.
+    ///
+    /// Note that with pruning hooks (PESF/EES/ODP) the exported K/V is the
+    /// *pruned* prefill's — decode continues from the prompt the request
+    /// actually saw, as a deployed system would, rather than from a second
+    /// unpruned prompt pass like the old engine's replay did.
+    pub fn prefill_into_cache(&self, tokens: &[u32], hooks: &Hooks, cache: &mut KvCache) -> Mat {
+        assert_eq!(cache.len, 0, "prefill_into_cache requires an empty cache");
+        let logits = self.forward_full(tokens, hooks, Some(cache));
+        cache.len = tokens.len();
+        logits
+    }
+
+    fn forward_full(&self, tokens: &[u32], hooks: &Hooks, mut cache: Option<&mut KvCache>) -> Mat {
         let cfg = &self.weights.cfg;
         assert!(tokens.len() <= cfg.max_seq, "sequence too long");
         // Embed.
@@ -78,7 +108,9 @@ impl Model {
             if let Some(cap) = &hooks.capture_mhsa_inputs {
                 cap.borrow_mut()[li] = Some(normed.clone());
             }
-            let attn = self.attention(&normed, layer, li, hooks);
+            let kv_export =
+                cache.as_deref_mut().map(|c| (&mut c.k[li], &mut c.v[li]));
+            let attn = self.attention(&normed, layer, li, hooks, kv_export);
             for r in 0..x.rows {
                 crate::tensor::ops::add_inplace(x.row_mut(r), attn.row(r));
             }
@@ -102,13 +134,30 @@ impl Model {
     /// GEMM-formulated (per head: S = Q Kᵀ, causal-masked row softmax,
     /// C = P V) so it rides the blocked matmul instead of scalar loops —
     /// the §Perf attention optimization (EXPERIMENTS.md §Perf).
-    fn attention(&self, x: &Mat, layer: &LayerWeights, li: usize, hooks: &Hooks) -> Mat {
+    ///
+    /// When `kv_export` is given, the layer's K/V projections are copied
+    /// into the target matrices row-per-position (the prefill KV export
+    /// feeding the decode cache).
+    fn attention(
+        &self,
+        x: &Mat,
+        layer: &LayerWeights,
+        li: usize,
+        hooks: &Hooks,
+        kv_export: Option<(&mut Mat, &mut Mat)>,
+    ) -> Mat {
         let cfg = &self.weights.cfg;
         let (seq, d) = (x.rows, cfg.d_model);
         let (h, hd) = (cfg.n_heads, cfg.head_dim());
         let q = layer.wq.matmul(x);
         let k = layer.wk.matmul(x);
         let v = layer.wv.matmul(x);
+        if let Some((ck, cv)) = kv_export {
+            for r in 0..seq {
+                ck.row_mut(r).copy_from_slice(k.row(r));
+                cv.row_mut(r).copy_from_slice(v.row(r));
+            }
+        }
         let scale = 1.0 / (hd as f32).sqrt();
         let mut ctx = Mat::zeros(seq, d);
         let mut qh = Mat::zeros(seq, hd);
@@ -260,60 +309,97 @@ impl Model {
 
     /// Single-token decode step with kv cache (generate stage; PESF is
     /// prefill-only per the paper's Limitations, but masks still apply if
-    /// provided).
+    /// provided). Thin wrapper over [`Model::decode_step_batch`] with B=1,
+    /// so the two paths cannot drift.
     pub fn decode_step(&self, token: u32, cache: &mut KvCache, hooks: &Hooks) -> Vec<f32> {
+        self.decode_step_batch(&[token], std::slice::from_mut(cache), hooks).data
+    }
+
+    /// Batched decode: advance B independent sequences one token each.
+    /// `tokens[b]` is appended to `caches[b]` (caches may hold different
+    /// lengths); returns logits `(B, vocab)`.
+    ///
+    /// The projections, router and experts all run over the B-row batch as
+    /// single GEMMs — [`Model::moe_layer`] gathers tokens routed to the
+    /// same expert *across the whole batch*, which is where MoE batching
+    /// wins: with B sequences decoding together, an expert touched by any
+    /// of them amortizes its (de)quantized weight traffic over all its
+    /// routed tokens instead of re-reading weights per sequence.
+    ///
+    /// Per-row results are bit-identical to the B=1 path: every op here is
+    /// row-independent with a fixed accumulation order (the blocked GEMM
+    /// partitions by row; rmsnorm/softmax are per-row), so batch
+    /// composition cannot change any sequence's output.
+    pub fn decode_step_batch(
+        &self,
+        tokens: &[u32],
+        caches: &mut [KvCache],
+        hooks: &Hooks,
+    ) -> Mat {
         let cfg = &self.weights.cfg;
-        assert!(cache.len < cfg.max_seq, "kv cache full");
-        let pos = cache.len;
-        let mut x = self.weights.embed.row(token as usize).to_vec();
+        let bsz = tokens.len();
+        assert_eq!(bsz, caches.len(), "one kv cache per sequence");
+        assert!(bsz > 0, "empty decode batch");
+        for c in caches.iter() {
+            assert!(c.len < cfg.max_seq, "kv cache full");
+        }
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut x = Mat::zeros(bsz, cfg.d_model);
+        for (b, &t) in tokens.iter().enumerate() {
+            x.row_mut(b).copy_from_slice(self.weights.embed.row(t as usize));
+        }
         for (li, layer) in self.weights.layers.iter().enumerate() {
-            let xm = Mat::from_vec(1, cfg.d_model, x.clone());
-            let normed = rmsnorm(&xm, &layer.attn_norm, 1e-6);
-            // Project this position's q/k/v; append k/v to cache.
+            // --- MHSA block: q/k/v projected for the whole batch at once;
+            // attention itself is per-sequence (each has its own cache).
+            let normed = rmsnorm(&x, &layer.attn_norm, 1e-6);
             let q = layer.wq.matmul(&normed);
             let knew = layer.wk.matmul(&normed);
             let vnew = layer.wv.matmul(&normed);
-            cache.k[li].row_mut(pos).copy_from_slice(knew.row(0));
-            cache.v[li].row_mut(pos).copy_from_slice(vnew.row(0));
-            let (h, hd) = (cfg.n_heads, cfg.head_dim());
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut ctx = vec![0.0f32; cfg.d_model];
-            let mut scores = vec![0.0f32; pos + 1];
-            for head in 0..h {
-                let off = head * hd;
-                for (j, s) in scores.iter_mut().enumerate() {
-                    let mut acc = 0.0;
-                    let kj = &cache.k[li].row(j)[off..off + hd];
-                    let qh = &q.row(0)[off..off + hd];
-                    for t in 0..hd {
-                        acc += qh[t] * kj[t];
+            let mut ctx = Mat::zeros(bsz, cfg.d_model);
+            for (b, cache) in caches.iter_mut().enumerate() {
+                let pos = cache.len;
+                cache.k[li].row_mut(pos).copy_from_slice(knew.row(b));
+                cache.v[li].row_mut(pos).copy_from_slice(vnew.row(b));
+                let mut scores = vec![0.0f32; pos + 1];
+                for head in 0..h {
+                    let off = head * hd;
+                    for (j, s) in scores.iter_mut().enumerate() {
+                        let mut acc = 0.0;
+                        let kj = &cache.k[li].row(j)[off..off + hd];
+                        let qh = &q.row(b)[off..off + hd];
+                        for t in 0..hd {
+                            acc += qh[t] * kj[t];
+                        }
+                        *s = acc * scale;
                     }
-                    *s = acc * scale;
-                }
-                softmax_inplace(&mut scores);
-                for (j, &w) in scores.iter().enumerate() {
-                    let vj = &cache.v[li].row(j)[off..off + hd];
-                    for t in 0..hd {
-                        ctx[off + t] += w * vj[t];
+                    softmax_inplace(&mut scores);
+                    let crow = &mut ctx.row_mut(b)[off..off + hd];
+                    for (j, &w) in scores.iter().enumerate() {
+                        let vj = &cache.v[li].row(j)[off..off + hd];
+                        for (ct, &vt) in crow.iter_mut().zip(vj) {
+                            *ct += w * vt;
+                        }
                     }
                 }
             }
-            let attn = layer.wo.matmul(&Mat::from_vec(1, cfg.d_model, ctx));
-            for (xi, a) in x.iter_mut().zip(attn.row(0)) {
-                *xi += a;
+            let attn = layer.wo.matmul(&ctx);
+            for b in 0..bsz {
+                crate::tensor::ops::add_inplace(x.row_mut(b), attn.row(b));
             }
-            // MoE block on the single token.
-            let xm = Mat::from_vec(1, cfg.d_model, x.clone());
-            let normed = rmsnorm(&xm, &layer.ffn_norm, 1e-6);
+            // --- MoE block over the batch: one router GEMM, experts
+            // gathered across all B sequences.
+            let normed = rmsnorm(&x, &layer.ffn_norm, 1e-6);
             let (moe, _) = self.moe_layer(&normed, layer, li, hooks);
-            for (xi, m) in x.iter_mut().zip(moe.row(0)) {
-                *xi += m;
+            for b in 0..bsz {
+                crate::tensor::ops::add_inplace(x.row_mut(b), moe.row(b));
             }
         }
-        cache.len += 1;
-        let xm = Mat::from_vec(1, cfg.d_model, x);
-        let normed = rmsnorm(&xm, &self.weights.final_norm, 1e-6);
-        crate::tensor::matmul_transb(&normed, &self.weights.embed).data
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        let normed = rmsnorm(&x, &self.weights.final_norm, 1e-6);
+        crate::tensor::matmul_transb(&normed, &self.weights.embed)
     }
 }
 
@@ -432,6 +518,70 @@ mod tests {
         let want = prefill.row(tokens.len() - 1);
         for (x, y) in last.iter().zip(want) {
             assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn prefill_kv_export_matches_decode_refill_bitwise() {
+        // The cache written by prefill_into_cache must equal, bit for bit,
+        // the cache a token-by-token decode_step replay of the prompt
+        // builds — this is what lets the engine skip the second prompt pass.
+        let m = tiny_model();
+        let tokens = [4u32, 9, 14, 19, 23, 2, 7];
+        let mut exported = KvCache::new(m.cfg());
+        let logits = m.prefill_into_cache(&tokens, &Hooks::none(), &mut exported);
+        let plain = m.forward(&tokens);
+        assert_eq!(logits.data, plain.data, "prefill logits unchanged by export");
+        let mut replayed = KvCache::new(m.cfg());
+        for &t in &tokens {
+            m.decode_step(t, &mut replayed, &Hooks::none());
+        }
+        assert_eq!(exported.len, replayed.len);
+        for li in 0..m.cfg().n_layers {
+            for r in 0..tokens.len() {
+                assert_eq!(exported.k[li].row(r), replayed.k[li].row(r), "k layer {li} row {r}");
+                assert_eq!(exported.v[li].row(r), replayed.v[li].row(r), "v layer {li} row {r}");
+            }
+        }
+        // ...and decode continues identically from either cache.
+        let a = m.decode_step(1, &mut exported, &Hooks::none());
+        let b = m.decode_step(1, &mut replayed, &Hooks::none());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decode_step_batch_matches_sequential_bitwise() {
+        // Each row of a batched decode step must equal the corresponding
+        // single-sequence decode exactly, even with unequal prompt lengths.
+        let m = tiny_model();
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[7, 11, 13, 17, 19], &[5]];
+        let mut solo_caches: Vec<KvCache> = Vec::new();
+        let mut solo_logits: Vec<Vec<f32>> = Vec::new();
+        for p in prompts {
+            let mut c = KvCache::new(m.cfg());
+            m.prefill_into_cache(p, &Hooks::none(), &mut c);
+            solo_logits.push(m.decode_step(p[0], &mut c, &Hooks::none()));
+            solo_caches.push(c);
+        }
+        let mut batch_caches: Vec<KvCache> = prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(m.cfg());
+                m.prefill_into_cache(p, &Hooks::none(), &mut c);
+                c
+            })
+            .collect();
+        let toks: Vec<u32> = prompts.iter().map(|p| p[0]).collect();
+        let logits = m.decode_step_batch(&toks, &mut batch_caches, &Hooks::none());
+        assert_eq!(logits.rows, 3);
+        for b in 0..3 {
+            assert_eq!(logits.row(b), &solo_logits[b][..], "row {b}");
+            assert_eq!(batch_caches[b].len, solo_caches[b].len);
+            for li in 0..m.cfg().n_layers {
+                let pos = batch_caches[b].len - 1;
+                assert_eq!(batch_caches[b].k[li].row(pos), solo_caches[b].k[li].row(pos));
+                assert_eq!(batch_caches[b].v[li].row(pos), solo_caches[b].v[li].row(pos));
+            }
         }
     }
 

@@ -111,17 +111,23 @@ pub fn pesf_prefill(
 /// Derive the PESF mask from router logits only (cheap pre-pass used by the
 /// serving engine: one GEMM per layer on the *embedded* tokens rather than a
 /// full forward; see DESIGN.md §Perf for the tradeoff).
+///
+/// `lens[li]` is the number of tokens recorded for layer `li` — Eq. 6's `l`
+/// is per layer, exactly as [`pesf_mask`] computes it from a
+/// [`SelectionRecord`]; a single global length silently disagrees with the
+/// record-based mask whenever layers hold different token counts.
 pub fn pesf_mask_from_counts(
     counts: &[Vec<u64>],
-    l: usize,
+    lens: &[usize],
     n_experts: usize,
     top_k: usize,
     cfg: PesfConfig,
 ) -> (Vec<Vec<bool>>, PesfStats) {
-    let threshold = (l * top_k) as f32 / n_experts as f32 * cfg.alpha;
+    assert_eq!(counts.len(), lens.len(), "one token count per layer");
     let mut mask = Vec::with_capacity(counts.len());
     let mut stats = PesfStats { pruned_per_layer: Vec::new(), n_experts };
-    for layer_counts in counts {
+    for (layer_counts, &l) in counts.iter().zip(lens) {
+        let threshold = (l * top_k) as f32 / n_experts as f32 * cfg.alpha;
         let layer_mask: Vec<bool> = layer_counts
             .iter()
             .map(|&c| cfg.alpha > 0.0 && (c as f32) < threshold)
@@ -232,7 +238,39 @@ mod tests {
         let rec = record_with_counts(&[6, 1, 1, 0], 1);
         let counts = vec![rec.counts(0, 4)];
         let (m1, _) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 0.8 });
-        let (m2, _) = pesf_mask_from_counts(&counts, 8, 4, 1, PesfConfig { alpha: 0.8 });
+        let (m2, _) =
+            pesf_mask_from_counts(&counts, &[rec.n_tokens(0)], 4, 1, PesfConfig { alpha: 0.8 });
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn counts_variant_matches_record_variant_on_unequal_layer_lengths() {
+        // Two layers with different token counts: layer 0 has 8 tokens,
+        // layer 1 has 2. A single global `l` (the old signature) produced
+        // the wrong threshold for one of them; per-layer lengths must
+        // reproduce pesf_mask exactly.
+        let mut rec = SelectionRecord::with_layers(2);
+        for (e, c) in [(0u16, 6u64), (1, 1), (2, 1), (3, 0)] {
+            for _ in 0..c {
+                rec.layers[0].push(TokenSelection { experts: vec![e], scores: vec![1.0] });
+            }
+        }
+        for e in [0u16, 1] {
+            rec.layers[1].push(TokenSelection { experts: vec![e], scores: vec![1.0] });
+        }
+        assert_ne!(rec.n_tokens(0), rec.n_tokens(1));
+        let counts = vec![rec.counts(0, 4), rec.counts(1, 4)];
+        let lens = vec![rec.n_tokens(0), rec.n_tokens(1)];
+        for alpha in [0.3, 0.8, 1.0] {
+            let (m1, s1) = pesf_mask(&rec, 4, 1, PesfConfig { alpha });
+            let (m2, s2) = pesf_mask_from_counts(&counts, &lens, 4, 1, PesfConfig { alpha });
+            assert_eq!(m1, m2, "alpha={alpha}");
+            assert_eq!(s1.pruned_per_layer, s2.pruned_per_layer, "alpha={alpha}");
+        }
+        // Pin the disagreement the bug caused: layer 1's threshold with a
+        // global l=8 would prune both its experts (c=1 < 0.8*2); with the
+        // correct l=2 threshold (0.4) neither is pruned.
+        let (m, _) = pesf_mask_from_counts(&counts, &lens, 4, 1, PesfConfig { alpha: 0.8 });
+        assert_eq!(m[1], vec![false, false, true, true]);
     }
 }

@@ -94,6 +94,16 @@ impl Batcher {
         let n = st.queue.len().min(self.policy.max_batch);
         Some(st.queue.drain(..n).collect())
     }
+
+    /// Non-blocking: take up to `n` queued requests immediately (possibly
+    /// none). Used by the engine's continuous decode loop to admit new
+    /// sequences into slots freed by retired ones, without waiting out the
+    /// batch-formation policy.
+    pub fn try_take(&self, n: usize) -> Vec<Request> {
+        let mut st = self.state.lock().unwrap();
+        let n = st.queue.len().min(n);
+        st.queue.drain(..n).collect()
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +129,19 @@ mod tests {
         assert_eq!(b3.len(), 1);
         b.close();
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn try_take_is_nonblocking_and_bounded() {
+        let b = Batcher::new(BatchPolicy::default());
+        assert!(b.try_take(4).is_empty()); // empty queue: returns immediately
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        let got = b.try_take(2);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.try_take(5).len(), 1);
+        assert!(b.try_take(1).is_empty());
     }
 
     #[test]

@@ -5,10 +5,20 @@
 //! router's selections on the request's own sequence (Eq. 6) and applied to
 //! the *prefill* MoE layers; decode runs unpruned. EES/ODP plug in as
 //! per-token selection filters instead.
+//!
+//! Serving shape (the "fast as the hardware allows" hot path): a drained
+//! batch is processed as a unit. Each request's prompt is forwarded
+//! **exactly once** — [`Model::prefill_into_cache`] exports the prefill's
+//! per-layer K/V straight into the decode cache, so there is no second
+//! token-by-token pass over the prompt. Decode then advances all live
+//! sequences together through [`Model::decode_step_batch`], which gathers
+//! tokens routed to the same expert across the whole batch into one GEMM;
+//! sequences retire as they finish and queued requests are admitted into
+//! the freed slots (continuous batching).
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServeMetrics;
-use super::request::{Request, Response};
+use super::request::{FinishReason, Request, Response};
 use crate::model::hooks::Hooks;
 use crate::model::{KvCache, Model};
 use crate::prune::ees::EesPruner;
@@ -55,11 +65,12 @@ impl Engine {
 
     /// Serve a closed set of requests to completion; returns responses
     /// (unordered) and aggregated metrics. This is the offline-benchmark
-    /// entry; [`Engine::serve_streaming`] is the long-running variant.
+    /// entry point.
     pub fn serve(&self, requests: Vec<Request>) -> (Vec<Response>, ServeMetrics) {
         let batcher = Arc::new(Batcher::new(self.cfg.batch));
         let responses = Arc::new(Mutex::new(Vec::with_capacity(requests.len())));
-        let token_count = Arc::new(AtomicUsize::new(0));
+        let prompt_tokens = Arc::new(AtomicUsize::new(0));
+        let generated_tokens = Arc::new(AtomicUsize::new(0));
         let t0 = Instant::now();
         std::thread::scope(|s| {
             let mut workers = Vec::new();
@@ -68,14 +79,14 @@ impl Engine {
                 let out = responses.clone();
                 let model = self.model.clone();
                 let prune = self.cfg.prune;
-                let tokens = token_count.clone();
+                let max_batch = self.cfg.batch.max_batch;
+                let prompt = prompt_tokens.clone();
+                let generated = generated_tokens.clone();
                 workers.push(s.spawn(move || {
                     while let Some(batch) = b.next_batch() {
-                        for req in batch {
-                            let resp = process_request(&model, prune, &req);
-                            tokens.fetch_add(req.tokens.len(), Ordering::Relaxed);
-                            out.lock().unwrap().push(resp);
-                        }
+                        process_batch(
+                            &model, prune, batch, &b, max_batch, &out, &prompt, &generated,
+                        );
                     }
                 }));
             }
@@ -92,7 +103,8 @@ impl Engine {
         let mut metrics = ServeMetrics {
             wall_secs: wall,
             total_requests: resps.len(),
-            total_tokens: token_count.load(Ordering::Relaxed),
+            prompt_tokens: prompt_tokens.load(Ordering::Relaxed),
+            generated_tokens: generated_tokens.load(Ordering::Relaxed),
             // True resident footprint of the weights being served: packed
             // experts report packed bytes, so a QESC model shows the real
             // memory win (not a simulated one).
@@ -104,8 +116,11 @@ impl Engine {
         let mut prune_sum = 0f32;
         for r in &resps {
             metrics.prefill.record(r.prefill_secs);
+            if r.decode_secs > 0.0 {
+                metrics.decode.record(r.decode_secs);
+            }
             metrics.queue.record(r.queue_secs);
-            metrics.e2e.record(r.queue_secs + r.prefill_secs);
+            metrics.e2e.record(r.e2e_secs);
             prune_sum += r.prune_rate;
         }
         metrics.mean_prune_rate = prune_sum / resps.len().max(1) as f32;
@@ -113,19 +128,161 @@ impl Engine {
     }
 }
 
-/// Process one request: PESF two-phase prefill (or filter-based pruning),
-/// then optional greedy decode.
-fn process_request(model: &Model, prune: PrunePolicy, req: &Request) -> Response {
+/// A sequence that survived prefill and still has decode budget.
+struct DecodeSeq {
+    resp: Response,
+    decode_tokens: usize,
+    /// Next token to commit to `resp.generated` (and then feed to decode).
+    cur: u32,
+    /// Sum of the batched decode-step durations this sequence took part
+    /// in — accumulated per step so prefills of requests admitted
+    /// mid-loop don't inflate other sequences' decode latency.
+    decode_secs: f64,
+    /// Request arrival, for true arrival-to-completion e2e.
+    arrival: Instant,
+}
+
+impl DecodeSeq {
+    /// Commit `cur` to the output, then decide whether the sequence is done:
+    /// budget reached → `Length`; KV cache at capacity with budget left →
+    /// `CacheFull` (truncation, now observable instead of silent).
+    fn commit_and_check(&mut self, cache_len: usize, max_seq: usize) -> Option<FinishReason> {
+        self.resp.generated.push(self.cur);
+        if self.resp.generated.len() >= self.decode_tokens {
+            Some(FinishReason::Length)
+        } else if cache_len >= max_seq {
+            Some(FinishReason::CacheFull)
+        } else {
+            None
+        }
+    }
+
+    fn finish(mut self, reason: FinishReason) -> Response {
+        self.resp.finish_reason = reason;
+        self.resp.decode_secs = self.decode_secs;
+        self.resp.e2e_secs = self.arrival.elapsed().as_secs_f64();
+        self.resp
+    }
+}
+
+/// Process one drained batch as a unit: prefill each request once
+/// (exporting KV when it will decode), then run the continuous batched
+/// decode loop, admitting queued requests into freed slots.
+#[allow(clippy::too_many_arguments)]
+fn process_batch(
+    model: &Model,
+    prune: PrunePolicy,
+    batch: Vec<Request>,
+    batcher: &Batcher,
+    max_batch: usize,
+    out: &Mutex<Vec<Response>>,
+    prompt_tokens: &AtomicUsize,
+    generated_tokens: &AtomicUsize,
+) {
+    let max_seq = model.cfg().max_seq;
+    let mut active: Vec<DecodeSeq> = Vec::new();
+    let mut caches: Vec<KvCache> = Vec::new();
+    let mut finished: Vec<Response> = Vec::new();
+
+    let admit = |req: Request,
+                     active: &mut Vec<DecodeSeq>,
+                     caches: &mut Vec<KvCache>,
+                     finished: &mut Vec<Response>| {
+        prompt_tokens.fetch_add(req.tokens.len(), Ordering::Relaxed);
+        match prefill_request(model, prune, &req) {
+            (mut resp, None) => {
+                resp.e2e_secs = req.arrival.elapsed().as_secs_f64();
+                finished.push(resp);
+            }
+            (resp, Some((seq_cache, next))) => {
+                let mut seq = DecodeSeq {
+                    resp,
+                    decode_tokens: req.decode_tokens,
+                    cur: next,
+                    decode_secs: 0.0,
+                    arrival: req.arrival,
+                };
+                // The first generated token (the prefill's greedy next) may
+                // already exhaust the budget or the cache.
+                match seq.commit_and_check(seq_cache.len, max_seq) {
+                    Some(reason) => finished.push(seq.finish(reason)),
+                    None => {
+                        active.push(seq);
+                        caches.push(seq_cache);
+                    }
+                }
+            }
+        }
+    };
+
+    for req in batch {
+        admit(req, &mut active, &mut caches, &mut finished);
+    }
+
+    // Continuous batched greedy decode: one token for every live sequence
+    // per iteration, all through a single decode_step_batch call.
+    while !active.is_empty() {
+        let toks: Vec<u32> = active.iter().map(|s| s.cur).collect();
+        let t_step = Instant::now();
+        let logits = model.decode_step_batch(&toks, &mut caches, &Hooks::none());
+        let step_secs = t_step.elapsed().as_secs_f64();
+        for (b, seq) in active.iter_mut().enumerate() {
+            seq.decode_secs += step_secs;
+            seq.cur = crate::tensor::ops::topk_indices(logits.row(b), 1)[0] as u32;
+        }
+        // Commit and retire (swap_remove keeps `caches` aligned with
+        // `active`; per-row outputs are batch-order independent).
+        let mut b = 0;
+        while b < active.len() {
+            match active[b].commit_and_check(caches[b].len, max_seq) {
+                Some(reason) => {
+                    let seq = active.swap_remove(b);
+                    caches.swap_remove(b);
+                    finished.push(seq.finish(reason));
+                }
+                None => b += 1,
+            }
+        }
+        // Admit queued requests into freed slots so the decode batch stays
+        // full (continuous batching) instead of draining to stragglers.
+        if active.len() < max_batch {
+            for req in batcher.try_take(max_batch - active.len()) {
+                admit(req, &mut active, &mut caches, &mut finished);
+            }
+        }
+    }
+
+    let gen: usize = finished.iter().map(|r| r.generated.len()).sum();
+    generated_tokens.fetch_add(gen, Ordering::Relaxed);
+    out.lock().unwrap().extend(finished);
+}
+
+/// Prefill one request (single forward pass — PESF/EES/ODP hooks applied
+/// per policy). Returns the response scaffold and, when the request wants
+/// decode, the KV cache exported by that same pass plus the greedy next
+/// token to seed the decode loop with.
+fn prefill_request(
+    model: &Model,
+    prune: PrunePolicy,
+    req: &Request,
+) -> (Response, Option<(KvCache, u32)>) {
     let queue_secs = req.arrival.elapsed().as_secs_f64();
     let mcfg = model.cfg();
+    // Only decode requests pay for a cache allocation.
+    let mut cache = if req.decode_tokens > 0 { Some(KvCache::new(mcfg)) } else { None };
     let t0 = Instant::now();
+    let run = |hooks: &Hooks, cache: &mut Option<KvCache>| match cache {
+        Some(c) => model.prefill_into_cache(&req.tokens, hooks, c),
+        None => model.forward_with_hooks(&req.tokens, hooks),
+    };
     let (logits, prune_rate) = match prune {
-        PrunePolicy::None => (model.forward(&req.tokens), 0.0),
+        PrunePolicy::None => (run(&Hooks::none(), &mut cache), 0.0),
         PrunePolicy::Pesf(pc) => {
             // Single-pass PESF: the mask is derived per layer between
-            // routing and expert dispatch (Eq. 6; Appendix A.1).
+            // routing and expert dispatch (Eq. 6; Appendix A.1). Decode
+            // continues from this (pruned) prefill's exported KV.
             let hooks = crate::prune::pesf::pesf_hooks(mcfg.n_layers, pc);
-            let logits = model.forward_with_hooks(&req.tokens, &hooks);
+            let logits = run(&hooks, &mut cache);
             let stats = crate::prune::pesf::PesfStats {
                 pruned_per_layer: hooks.pesf_pruned.unwrap().into_inner(),
                 n_experts: mcfg.n_experts,
@@ -134,11 +291,11 @@ fn process_request(model: &Model, prune: PrunePolicy, req: &Request) -> Response
         }
         PrunePolicy::Ees(p) => {
             let hooks = Hooks { selection_filter: Some(p.filter()), ..Default::default() };
-            (model.forward_with_hooks(&req.tokens, &hooks), 0.0)
+            (run(&hooks, &mut cache), 0.0)
         }
         PrunePolicy::Odp(p) => {
             let hooks = Hooks { selection_filter: Some(p.filter()), ..Default::default() };
-            (model.forward_with_hooks(&req.tokens, &hooks), 0.0)
+            (run(&hooks, &mut cache), 0.0)
         }
     };
     let prefill_secs = t0.elapsed().as_secs_f64();
@@ -157,44 +314,26 @@ fn process_request(model: &Model, prune: PrunePolicy, req: &Request) -> Response
     let last = logits.row(logits.rows - 1);
     let next_token = crate::tensor::ops::topk_indices(last, 1)[0] as u32;
 
-    // Optional greedy decode (PESF disabled here, per the paper).
-    let mut generated = Vec::with_capacity(req.decode_tokens);
-    if req.decode_tokens > 0 {
-        let mut cache = KvCache::new(mcfg);
-        // Refill the cache with the prompt (decode path re-computation;
-        // prefill KV export is a further optimization, see DESIGN §Perf).
-        let mut tok = *req.tokens.first().unwrap_or(&0);
-        for &t in &req.tokens {
-            model.decode_step(t, &mut cache, &Hooks::none());
-            tok = t;
-        }
-        let _ = tok;
-        let mut cur = next_token;
-        for _ in 0..req.decode_tokens {
-            generated.push(cur);
-            if cache.len >= mcfg.max_seq {
-                break;
-            }
-            let logits = model.decode_step(cur, &mut cache, &Hooks::none());
-            cur = crate::tensor::ops::topk_indices(&logits, 1)[0] as u32;
-        }
-    }
-
-    Response {
+    let resp = Response {
         id: req.id,
         next_token,
-        generated,
+        generated: Vec::with_capacity(req.decode_tokens),
+        finish_reason: FinishReason::Length,
         mean_logprob: mean_lp,
         queue_secs,
         prefill_secs,
+        decode_secs: 0.0,
+        e2e_secs: 0.0, // stamped at completion (finish / prefill-only admit)
         prune_rate,
-    }
+    };
+    (resp, cache.map(|c| (c, next_token)))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::{ModelConfig, Weights};
+    use crate::serve::BatchPolicy;
 
     fn tiny() -> Model {
         let cfg = ModelConfig {
@@ -225,7 +364,9 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, (0..20).collect::<Vec<_>>());
         assert_eq!(metrics.total_requests, 20);
-        assert_eq!(metrics.total_tokens, 20 * 16);
+        assert_eq!(metrics.prompt_tokens, 20 * 16);
+        assert_eq!(metrics.generated_tokens, 0);
+        assert_eq!(metrics.total_tokens(), 20 * 16);
         assert!(metrics.throughput_tokens_per_sec() > 0.0);
     }
 
@@ -237,19 +378,60 @@ mod tests {
             ..Default::default()
         };
         let e = Engine::new(tiny(), cfg);
-        let (resps, metrics) = e.serve(reqs(4, 32));
+        // Decode rides the PESF-pruned prefill's exported KV (decode itself
+        // runs unpruned, per the paper's Limitations).
+        let rs: Vec<Request> = reqs(4, 32).into_iter().map(|r| r.with_decode(4)).collect();
+        let (resps, metrics) = e.serve(rs);
         assert_eq!(resps.len(), 4);
+        assert!(resps.iter().all(|r| r.generated.len() == 4));
         // With alpha=0.9 on a random router, some experts must get pruned.
         assert!(metrics.mean_prune_rate > 0.0);
+        assert_eq!(metrics.generated_tokens, 16);
     }
 
     #[test]
-    fn decode_generates_tokens() {
+    fn decode_generates_tokens_and_counts_them() {
         let e = Engine::new(tiny(), EngineConfig::default());
         let reqs = vec![Request::new(0, vec![1, 2, 3, 4]).with_decode(5)];
-        let (resps, _) = e.serve(reqs);
+        let (resps, metrics) = e.serve(reqs);
         assert_eq!(resps[0].generated.len(), 5);
         assert_eq!(resps[0].generated[0], resps[0].next_token);
+        assert_eq!(resps[0].finish_reason, FinishReason::Length);
+        // The metrics bugfix: generated tokens are counted, separately
+        // from prompt tokens, and feed decode_tokens_per_sec.
+        assert_eq!(metrics.prompt_tokens, 4);
+        assert_eq!(metrics.generated_tokens, 5);
+        assert_eq!(metrics.total_tokens(), 9);
+        assert!(metrics.decode_tokens_per_sec() > 0.0);
+        assert_eq!(metrics.decode.count(), 1);
+    }
+
+    #[test]
+    fn cache_full_truncation_is_observable() {
+        // Prompt fills the cache to max_seq - 2: room to append exactly 2
+        // decode tokens. Generated = [next, g1, g2] then the cache is full
+        // with budget left -> CacheFull with 3 of 10 requested tokens.
+        let model = tiny();
+        let max_seq = model.cfg().max_seq;
+        let e = Engine::new(model, EngineConfig { workers: 1, ..Default::default() });
+        let prompt: Vec<u32> = (0..(max_seq - 2) as u32).map(|t| t % 64).collect();
+        let (resps, _) = e.serve(vec![Request::new(0, prompt.clone()).with_decode(10)]);
+        assert_eq!(resps[0].finish_reason, FinishReason::CacheFull);
+        assert_eq!(resps[0].generated.len(), 3);
+
+        // Prompt at exactly max_seq: only the prefill's next token fits.
+        let e = Engine::new(tiny(), EngineConfig { workers: 1, ..Default::default() });
+        let prompt: Vec<u32> = (0..max_seq as u32).map(|t| t % 64).collect();
+        let (resps, _) = e.serve(vec![Request::new(0, prompt).with_decode(10)]);
+        assert_eq!(resps[0].finish_reason, FinishReason::CacheFull);
+        assert_eq!(resps[0].generated.len(), 1);
+
+        // Budget that exactly fits reports Length, not CacheFull.
+        let e = Engine::new(tiny(), EngineConfig { workers: 1, ..Default::default() });
+        let prompt: Vec<u32> = (0..(max_seq - 2) as u32).map(|t| t % 64).collect();
+        let (resps, _) = e.serve(vec![Request::new(0, prompt).with_decode(3)]);
+        assert_eq!(resps[0].finish_reason, FinishReason::Length);
+        assert_eq!(resps[0].generated.len(), 3);
     }
 
     #[test]
@@ -276,16 +458,41 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_outputs_across_worker_counts() {
-        let e1 = Engine::new(tiny(), EngineConfig { workers: 1, ..Default::default() });
-        let e4 = Engine::new(tiny(), EngineConfig { workers: 4, ..Default::default() });
-        let (mut r1, _) = e1.serve(reqs(8, 12));
-        let (mut r4, _) = e4.serve(reqs(8, 12));
-        r1.sort_by_key(|r| r.id);
-        r4.sort_by_key(|r| r.id);
-        for (a, b) in r1.iter().zip(&r4) {
-            assert_eq!(a.next_token, b.next_token);
-            assert!((a.mean_logprob - b.mean_logprob).abs() < 1e-5);
+    fn deterministic_outputs_across_worker_counts_and_batch_sizes() {
+        // Batched serve must be bit-identical to the single-request path:
+        // same generated decode tokens (not just next_token) regardless of
+        // worker count or max_batch, for dense and packed weights alike.
+        let dense = tiny().weights;
+        let mut packed = dense.clone();
+        packed.pack_experts_rtn(4, 16);
+        for weights in [dense, packed] {
+            let mut baseline: Option<Vec<(u64, Vec<u32>, u32, f32)>> = None;
+            for (workers, max_batch) in [(1usize, 1usize), (1, 4), (4, 4)] {
+                let e = Engine::new(
+                    Model::new(weights.clone()),
+                    EngineConfig {
+                        workers,
+                        batch: BatchPolicy { max_batch, ..Default::default() },
+                        ..Default::default()
+                    },
+                );
+                let rs: Vec<Request> =
+                    reqs(8, 12).into_iter().map(|r| r.with_decode(6)).collect();
+                let (mut out, _) = e.serve(rs);
+                out.sort_by_key(|r| r.id);
+                let got: Vec<(u64, Vec<u32>, u32, f32)> = out
+                    .into_iter()
+                    .map(|r| (r.id, r.generated, r.next_token, r.mean_logprob))
+                    .collect();
+                assert!(got.iter().all(|(_, g, _, _)| g.len() == 6));
+                match &baseline {
+                    None => baseline = Some(got),
+                    Some(want) => assert_eq!(
+                        &got, want,
+                        "outputs differ at workers={workers} max_batch={max_batch}"
+                    ),
+                }
+            }
         }
     }
 }

@@ -6,6 +6,12 @@
 //! threads run prefill (native or PJRT-backed), and PESF masks are derived
 //! per sequence before the MoE layers execute — so pruned experts never run,
 //! which is where the Table-3/4 speedups come from.
+//!
+//! Decode is served from the prefill's own KV export
+//! ([`crate::model::Model::prefill_into_cache`]): the prompt is forwarded
+//! exactly once, and a worker advances its whole batch one token per step
+//! through [`crate::model::Model::decode_step_batch`], with finished
+//! sequences retiring and queued requests admitted into the freed slots.
 
 pub mod batcher;
 pub mod engine;
@@ -15,4 +21,4 @@ pub mod request;
 pub use batcher::{Batcher, BatchPolicy};
 pub use engine::{Engine, EngineConfig, PrunePolicy};
 pub use metrics::{LatencyStats, ServeMetrics};
-pub use request::{Request, RequestId, Response};
+pub use request::{FinishReason, Request, RequestId, Response};

@@ -27,20 +27,42 @@ impl Request {
     }
 }
 
+/// Why decoding stopped for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The full decode budget (`decode_tokens`) was generated. Also the
+    /// reason for prefill-only requests (budget 0).
+    Length,
+    /// The KV cache hit `max_seq` before the budget was exhausted: the
+    /// continuation is truncated (`generated.len() < decode_tokens`).
+    CacheFull,
+}
+
 /// Completed request.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: RequestId,
     /// Greedy next-token prediction after the prompt.
     pub next_token: u32,
-    /// Greedily decoded continuation (len == decode_tokens).
+    /// Greedily decoded continuation (len == decode_tokens unless
+    /// `finish_reason` is [`FinishReason::CacheFull`]).
     pub generated: Vec<u32>,
+    /// Why decoding stopped — makes KV-cache truncation observable instead
+    /// of a silently short `generated`.
+    pub finish_reason: FinishReason,
     /// Mean log-likelihood per predicted prompt token (diagnostic).
     pub mean_logprob: f32,
     /// Queue wait, in seconds.
     pub queue_secs: f64,
     /// Prefill execution time, in seconds.
     pub prefill_secs: f64,
+    /// Time this request spent in the batched decode loop, in seconds
+    /// (0 for prefill-only requests).
+    pub decode_secs: f64,
+    /// True arrival-to-completion wall time, in seconds. Not the sum of
+    /// queue + prefill + decode: it also covers time spent waiting on
+    /// batch-mates (their prefills and admissions) inside the worker.
+    pub e2e_secs: f64,
     /// Fraction of experts PESF pruned for this sequence (0 if disabled).
     pub prune_rate: f32,
 }

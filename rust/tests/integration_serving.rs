@@ -46,7 +46,33 @@ fn large_burst_all_served_exactly_once() {
     ids.sort_unstable();
     ids.dedup();
     assert_eq!(ids.len(), 64, "duplicate or lost responses");
-    assert_eq!(metrics.total_tokens, 64 * 24);
+    assert_eq!(metrics.prompt_tokens, 64 * 24);
+    assert_eq!(metrics.total_tokens(), 64 * 24);
+}
+
+#[test]
+fn decode_burst_counts_generated_tokens_and_batches() {
+    // Decode-heavy load through the batched path: every request decodes,
+    // all are served exactly once, and the metrics account generated
+    // tokens separately from prompt tokens.
+    let engine = Engine::new(
+        model(),
+        EngineConfig {
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            workers: 2,
+            prune: PrunePolicy::None,
+        },
+    );
+    let rs: Vec<Request> = reqs(16, 24).into_iter().map(|r| r.with_decode(8)).collect();
+    let (resps, metrics) = engine.serve(rs);
+    assert_eq!(resps.len(), 16);
+    assert!(resps.iter().all(|r| r.generated.len() == 8));
+    assert!(resps.iter().all(|r| r.finish_reason == eac_moe::serve::FinishReason::Length));
+    assert_eq!(metrics.prompt_tokens, 16 * 24);
+    assert_eq!(metrics.generated_tokens, 16 * 8);
+    assert_eq!(metrics.total_tokens(), 16 * 24 + 16 * 8);
+    assert!(metrics.decode_tokens_per_sec() > 0.0);
+    assert!(metrics.decode_tokens_per_sec() < metrics.throughput_tokens_per_sec());
 }
 
 #[test]
