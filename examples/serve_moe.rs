@@ -43,6 +43,7 @@ fn main() -> eac_moe::Result<()> {
                 batch: BatchPolicy::default(),
                 workers: 1,
                 prune: policy,
+                ..Default::default()
             },
         );
         let mut mix = eac_moe::data::corpus::WikiMixture::new(9);

@@ -5,7 +5,9 @@
 //!
 //! Emits `results/bench_perf.json` with the dense-vs-packed GEMM,
 //! end-to-end prefill, serve-with-decode (seed double-compute vs prefill
-//! KV export) and batched-vs-sequential decode numbers, same shape as the
+//! KV export), batched-vs-sequential decode, and small-batch decode
+//! tokens/sec across worker-pool sizes (B ∈ {1,4} × threads ∈ {1,4} — the
+//! persistent-pool win), same shape as the
 //! bench_tables outputs. CI runs this in smoke mode
 //! (`EAC_MOE_BENCH_MS=25`) and uploads the JSON so the perf trajectory is
 //! tracked per PR.
@@ -214,6 +216,55 @@ fn main() {
         .set("sequential_ns", Json::Num(rq.mean_ns))
         .set("batched_over_sequential", Json::Num(rb.mean_ns / rq.mean_ns));
     json.set(&format!("decode_batch/b{bsz}"), o);
+
+    // --- Small-batch decode vs pool size: the worker-pool win. Before the
+    // persistent pool, decode GEMMs (B rows, a few routed tokens per
+    // expert) always fell below the row-parallel threshold and ran on one
+    // core; expert- and head-level tasks now spread them across the pool,
+    // so B=1 decode tokens/sec should improve with threads=4 over
+    // threads=1.
+    {
+        use eac_moe::tensor::pool::ThreadPool;
+        use std::sync::Arc;
+        for &threads in &[1usize, 4] {
+            let pm = Model::with_pool(
+                model.weights.clone(),
+                Arc::new(ThreadPool::new(threads)),
+            );
+            for &bsz in &[1usize, 4] {
+                let mut caches: Vec<eac_moe::model::KvCache> = (0..bsz)
+                    .map(|b| {
+                        let p: Vec<u32> =
+                            (0..64u32).map(|i| (i * 7 + b as u32 * 13) % 512).collect();
+                        let mut c = eac_moe::model::KvCache::new(pm.cfg());
+                        pm.prefill_into_cache(&p, &eac_moe::model::hooks::Hooks::none(), &mut c);
+                        c
+                    })
+                    .collect();
+                let ctx_len = caches[0].len;
+                let toks: Vec<u32> = (0..bsz as u32).map(|b| b * 31 % 512).collect();
+                let r = bench(
+                    &format!("decode step B={bsz} pool={threads} @ctx64"),
+                    || {
+                        for c in caches.iter_mut() {
+                            c.len = ctx_len;
+                        }
+                        std::hint::black_box(pm.decode_step_batch(
+                            &toks,
+                            &mut caches,
+                            &eac_moe::model::hooks::Hooks::none(),
+                        ));
+                    },
+                );
+                let tps = bsz as f64 / (r.mean_ns / 1e9);
+                println!("    -> {tps:.0} decode tok/s");
+                let mut o = Json::obj();
+                o.set("step_ns", Json::Num(r.mean_ns))
+                    .set("tokens_per_sec", Json::Num(tps));
+                json.set(&format!("decode_pool/b{bsz}t{threads}"), o);
+            }
+        }
+    }
 
     // --- Decode step (kv-cache path; quantization's bandwidth-bound case).
     let mut cache = eac_moe::model::KvCache::new(model.cfg());

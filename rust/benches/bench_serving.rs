@@ -77,6 +77,7 @@ fn main() {
                     batch: BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
                     workers: 1,
                     prune: PrunePolicy::None,
+                    ..Default::default()
                 },
             );
             let rs: Vec<Request> =

@@ -28,6 +28,17 @@
 //! each K-tile into an f32 strip exactly once per call, reused across the
 //! batch dimension (never the whole matrix per column).
 //!
+//! ## Threading model
+//!
+//! All compute parallelism rides the persistent scoped worker pool in
+//! [`tensor::pool`] — no per-call thread spawns. Three surfaces use it:
+//! row-parallel GEMMs, expert-level tasks in [`model::Model::moe_layer`],
+//! and head-level attention tasks in prefill and batched decode, so
+//! decode saturates the cores even at batch 1. Pool size is explicit
+//! ([`serve::EngineConfig`] `threads`, [`model::Model::with_pool`]);
+//! `EAC_MOE_THREADS` only sizes the process-global pool, read once at its
+//! construction. Outputs are bit-identical at every pool size.
+//!
 //! ### Memory accounting
 //!
 //! [`model::Weights::storage_bytes`] reports the true resident footprint:

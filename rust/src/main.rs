@@ -61,7 +61,7 @@ fn usage() {
          \x20 info                         environment + artifact status\n\
          \x20 compress   --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]\n\
          \x20 eval       --model <key> [--alpha A] [--scale S]\n\
-         \x20 serve      --model <key> [--alpha A] [--requests N] [--len L] [--decode D] [--workers W]\n\
+         \x20 serve      --model <key> [--alpha A] [--requests N] [--len L] [--decode D] [--workers W] [--threads T]\n\
          \x20 analyze-es --model <key> [--scale S]\n\
          \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
          \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|all)\n\
@@ -241,12 +241,15 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     let len: usize = opts.get("len").and_then(|s| s.parse().ok()).unwrap_or(128);
     let decode: usize = opts.get("decode").and_then(|s| s.parse().ok()).unwrap_or(0);
     let workers: usize = opts.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    // Compute-pool size: --threads=N builds a dedicated pool; unset keeps
+    // the global pool (EAC_MOE_THREADS or machine parallelism).
+    let threads: Option<usize> = opts.get("threads").and_then(|s| s.parse().ok());
     let prune = if alpha > 0.0 {
         PrunePolicy::Pesf(eac_moe::prune::pesf::PesfConfig { alpha })
     } else {
         PrunePolicy::None
     };
-    let cfg = EngineConfig { workers, prune, ..Default::default() };
+    let cfg = EngineConfig { workers, prune, threads, ..Default::default() };
     let engine = Engine::new(model, cfg);
     let mut mix = eac_moe::data::corpus::WikiMixture::new(21);
     let reqs: Vec<Request> =

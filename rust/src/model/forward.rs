@@ -14,12 +14,21 @@
 //! matrix hits the blocked f32 GEMM, a packed quantized matrix hits the
 //! fused group-dequant GEMM — QESC-compressed models serve directly from
 //! their packed storage with no f32 weight copies resident.
+//!
+//! Parallelism: every forward surface runs on the model's persistent
+//! [`ThreadPool`] — rows within large GEMMs, whole experts within the MoE
+//! block, and (sequence, head) pairs within attention — so decode keeps
+//! every core busy even at B=1. Task partitioning never changes
+//! per-element accumulation order, so outputs are bit-identical at every
+//! pool size (pinned by `tests/thread_invariance.rs`).
 
 use super::config::ModelConfig;
 use super::hooks::{Hooks, TokenSelection};
 use super::weights::{ExpertWeights, LayerWeights, Weights};
 use crate::tensor::ops::{rmsnorm, silu, softmax_inplace, topk_indices};
-use crate::tensor::{matmul, Mat};
+use crate::tensor::pool::ThreadPool;
+use crate::tensor::{matmul_on, matmul_transb_on, Mat};
+use std::sync::Arc;
 
 /// Diagnostic output of one MoE layer (used by tests/analysis).
 #[derive(Clone, Debug)]
@@ -28,9 +37,15 @@ pub struct MoeLayerOut {
     pub expert_tokens: Vec<usize>,
 }
 
-/// A runnable model: weights + forward implementations.
+/// A runnable model: weights + forward implementations + the worker pool
+/// all of its GEMMs and expert/head tasks run on.
 pub struct Model {
     pub weights: Weights,
+    /// Parallelism substrate for every forward-pass surface: row-parallel
+    /// GEMMs, expert-level MoE dispatch, head-level attention. Swapping the
+    /// pool changes scheduling only — outputs are bit-identical at every
+    /// pool size (see `tests/thread_invariance.rs`).
+    pub pool: Arc<ThreadPool>,
 }
 
 /// KV cache for incremental decode: per layer, (seq, d_model) K and V.
@@ -55,8 +70,16 @@ impl KvCache {
 }
 
 impl Model {
+    /// Model on the process-global pool (sized from `EAC_MOE_THREADS` at
+    /// that pool's construction).
     pub fn new(weights: Weights) -> Self {
-        Model { weights }
+        Model { weights, pool: ThreadPool::global().clone() }
+    }
+
+    /// Model on an explicit pool — how `EngineConfig::threads` and the
+    /// thread-invariance tests control concurrency deterministically.
+    pub fn with_pool(weights: Weights, pool: Arc<ThreadPool>) -> Self {
+        Model { weights, pool }
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -126,14 +149,18 @@ impl Model {
         }
         // Final norm + tied output head.
         let normed = rmsnorm(&x, &self.weights.final_norm, 1e-6);
-        crate::tensor::matmul_transb(&normed, &self.weights.embed)
+        matmul_transb_on(&self.pool, &normed, &self.weights.embed)
     }
 
     /// Causal multi-head self-attention over the full sequence.
     ///
     /// GEMM-formulated (per head: S = Q Kᵀ, causal-masked row softmax,
     /// C = P V) so it rides the blocked matmul instead of scalar loops —
-    /// the §Perf attention optimization (EXPERIMENTS.md §Perf).
+    /// the §Perf attention optimization (EXPERIMENTS.md §Perf). Heads are
+    /// independent, so each head's whole chain runs as one pool task;
+    /// assembling `ctx` from the per-head outputs is a pure copy into
+    /// disjoint column strips, so task order cannot change the result and
+    /// outputs stay bit-identical to the sequential loop.
     ///
     /// When `kv_export` is given, the layer's K/V projections are copied
     /// into the target matrices row-per-position (the prefill KV export
@@ -149,9 +176,10 @@ impl Model {
         let cfg = &self.weights.cfg;
         let (seq, d) = (x.rows, cfg.d_model);
         let (h, hd) = (cfg.n_heads, cfg.head_dim());
-        let q = layer.wq.matmul(x);
-        let k = layer.wk.matmul(x);
-        let v = layer.wv.matmul(x);
+        let pool = &*self.pool;
+        let q = layer.wq.matmul_on(pool, x);
+        let k = layer.wk.matmul_on(pool, x);
+        let v = layer.wv.matmul_on(pool, x);
         if let Some((ck, cv)) = kv_export {
             for r in 0..seq {
                 ck.row_mut(r).copy_from_slice(k.row(r));
@@ -159,30 +187,40 @@ impl Model {
             }
         }
         let scale = 1.0 / (hd as f32).sqrt();
+        let mut head_ctx: Vec<Option<Mat>> = (0..h).map(|_| None).collect();
+        pool.scope(|s| {
+            for (head, slot) in head_ctx.iter_mut().enumerate() {
+                let (q, k, v) = (&q, &k, &v);
+                s.spawn(move || {
+                    let off = head * hd;
+                    let mut qh = Mat::zeros(seq, hd);
+                    let mut kh = Mat::zeros(seq, hd);
+                    let mut vh = Mat::zeros(seq, hd);
+                    for r in 0..seq {
+                        qh.row_mut(r).copy_from_slice(&q.row(r)[off..off + hd]);
+                        kh.row_mut(r).copy_from_slice(&k.row(r)[off..off + hd]);
+                        vh.row_mut(r).copy_from_slice(&v.row(r)[off..off + hd]);
+                    }
+                    // S = Q Kᵀ (scaled), causal mask, row softmax over j <= i.
+                    let mut scores = matmul_transb_on(pool, &qh, &kh);
+                    for i in 0..seq {
+                        let row = scores.row_mut(i);
+                        for s in row[..=i].iter_mut() {
+                            *s *= scale;
+                        }
+                        softmax_inplace(&mut row[..=i]);
+                        for s in row[i + 1..].iter_mut() {
+                            *s = 0.0; // masked out: contributes nothing to P V
+                        }
+                    }
+                    *slot = Some(matmul_on(pool, &scores, &vh));
+                });
+            }
+        });
         let mut ctx = Mat::zeros(seq, d);
-        let mut qh = Mat::zeros(seq, hd);
-        let mut kh = Mat::zeros(seq, hd);
-        let mut vh = Mat::zeros(seq, hd);
-        for head in 0..h {
+        for (head, slot) in head_ctx.into_iter().enumerate() {
             let off = head * hd;
-            for r in 0..seq {
-                qh.row_mut(r).copy_from_slice(&q.row(r)[off..off + hd]);
-                kh.row_mut(r).copy_from_slice(&k.row(r)[off..off + hd]);
-                vh.row_mut(r).copy_from_slice(&v.row(r)[off..off + hd]);
-            }
-            // S = Q Kᵀ (scaled), causal mask, row softmax over j <= i.
-            let mut scores = crate::tensor::matmul_transb(&qh, &kh);
-            for i in 0..seq {
-                let row = scores.row_mut(i);
-                for s in row[..=i].iter_mut() {
-                    *s *= scale;
-                }
-                softmax_inplace(&mut row[..=i]);
-                for s in row[i + 1..].iter_mut() {
-                    *s = 0.0; // masked out: contributes nothing to P V
-                }
-            }
-            let ctx_h = matmul(&scores, &vh);
+            let ctx_h = slot.expect("head task completed");
             for r in 0..seq {
                 ctx.row_mut(r)[off..off + hd].copy_from_slice(ctx_h.row(r));
             }
@@ -190,7 +228,7 @@ impl Model {
         if let Some(cap) = &hooks.capture_wo_inputs {
             cap.borrow_mut()[li] = Some(ctx.clone());
         }
-        layer.wo.matmul(&ctx)
+        layer.wo.matmul_on(pool, &ctx)
     }
 
     /// Route tokens, execute (unpruned) experts grouped by expert, and add
@@ -208,7 +246,8 @@ impl Model {
         let k = cfg.top_k;
 
         // Router logits + softmax scores.
-        let logits = matmul(x, &layer.router);
+        let pool = &*self.pool;
+        let logits = matmul_on(pool, x, &layer.router);
         if let Some(cap) = &hooks.capture_router_logits {
             cap.borrow_mut()[li] = Some(logits.clone());
         }
@@ -281,24 +320,43 @@ impl Model {
             }
         }
 
-        // Execute each expert on its gathered tokens as one GEMM.
-        let mut expert_tokens = vec![0usize; n];
-        for (e, group) in groups.iter().enumerate() {
-            if group.is_empty() {
-                continue;
+        // Execute each expert on its gathered tokens as one GEMM. Experts
+        // (routed and shared) are independent, so each gather → SwiGLU runs
+        // as its own pool task — decode-time MoE uses every core even at
+        // B=1, which is where the PESF latency claim lives. The scatter
+        // below stays sequential in ascending expert order, so every
+        // token's output accumulates in exactly the order the old
+        // sequential loop used: bit-identical at every pool size.
+        let mut expert_out: Vec<Option<Mat>> = (0..n).map(|_| None).collect();
+        let mut shared_out: Vec<Option<Mat>> = (0..layer.shared.len()).map(|_| None).collect();
+        pool.scope(|s| {
+            for ((e, group), slot) in groups.iter().enumerate().zip(expert_out.iter_mut()) {
+                if group.is_empty() {
+                    continue;
+                }
+                let experts = &layer.experts;
+                s.spawn(move || {
+                    let token_ids: Vec<usize> = group.iter().map(|(t, _)| *t).collect();
+                    let gathered = x.gather_rows(&token_ids);
+                    *slot = Some(expert_forward_on(pool, &gathered, &experts[e]));
+                });
             }
+            for (sh, slot) in layer.shared.iter().zip(shared_out.iter_mut()) {
+                s.spawn(move || *slot = Some(expert_forward_on(pool, x, sh)));
+            }
+        });
+        let mut expert_tokens = vec![0usize; n];
+        for ((e, group), y) in groups.iter().enumerate().zip(expert_out) {
+            let Some(y) = y else { continue };
             expert_tokens[e] = group.len();
-            let token_ids: Vec<usize> = group.iter().map(|(t, _)| *t).collect();
-            let gathered = x.gather_rows(&token_ids);
-            let y = expert_forward(&gathered, &layer.experts[e]);
             for (row, &(t, w)) in group.iter().enumerate() {
                 crate::tensor::ops::axpy(out.row_mut(t), w, y.row(row));
             }
         }
 
         // Shared experts: always-on, added with weight 1 (DeepSeek-MoE style).
-        for sh in &layer.shared {
-            let y = expert_forward(x, sh);
+        for y in shared_out {
+            let y = y.expect("shared expert task completed");
             for t in 0..seq {
                 crate::tensor::ops::add_inplace(out.row_mut(t), y.row(t));
             }
@@ -345,6 +403,7 @@ impl Model {
         }
         let (h, hd) = (cfg.n_heads, cfg.head_dim());
         let scale = 1.0 / (hd as f32).sqrt();
+        let pool = &*self.pool;
         let mut x = Mat::zeros(bsz, cfg.d_model);
         for (b, &t) in tokens.iter().enumerate() {
             x.row_mut(b).copy_from_slice(self.weights.embed.row(t as usize));
@@ -353,37 +412,65 @@ impl Model {
             // --- MHSA block: q/k/v projected for the whole batch at once;
             // attention itself is per-sequence (each has its own cache).
             let normed = rmsnorm(&x, &layer.attn_norm, 1e-6);
-            let q = layer.wq.matmul(&normed);
-            let knew = layer.wk.matmul(&normed);
-            let vnew = layer.wv.matmul(&normed);
-            let mut ctx = Mat::zeros(bsz, cfg.d_model);
+            let q = layer.wq.matmul_on(pool, &normed);
+            let knew = layer.wk.matmul_on(pool, &normed);
+            let vnew = layer.wv.matmul_on(pool, &normed);
+            // Append each sequence's new K/V row first (cheap copies), so
+            // attention below can read the caches immutably.
             for (b, cache) in caches.iter_mut().enumerate() {
                 let pos = cache.len;
                 cache.k[li].row_mut(pos).copy_from_slice(knew.row(b));
                 cache.v[li].row_mut(pos).copy_from_slice(vnew.row(b));
-                let mut scores = vec![0.0f32; pos + 1];
-                for head in 0..h {
-                    let off = head * hd;
-                    for (j, s) in scores.iter_mut().enumerate() {
-                        let mut acc = 0.0;
-                        let kj = &cache.k[li].row(j)[off..off + hd];
-                        let qh = &q.row(b)[off..off + hd];
-                        for t in 0..hd {
-                            acc += qh[t] * kj[t];
-                        }
-                        *s = acc * scale;
-                    }
-                    softmax_inplace(&mut scores);
-                    let crow = &mut ctx.row_mut(b)[off..off + hd];
-                    for (j, &w) in scores.iter().enumerate() {
-                        let vj = &cache.v[li].row(j)[off..off + hd];
-                        for (ct, &vt) in crow.iter_mut().zip(vj) {
-                            *ct += w * vt;
-                        }
-                    }
-                }
             }
-            let attn = layer.wo.matmul(&ctx);
+            // Every (sequence, head) pair is independent and owns a
+            // disjoint hd-wide strip of ctx (row-major ctx is exactly
+            // [b][head][hd]), so the pairs are chunked evenly across the
+            // pool — head-level parallelism reaches decode even at B=1.
+            // Per-strip arithmetic matches the old sequential loop
+            // operation for operation: bit-identical outputs.
+            let mut ctx = Mat::zeros(bsz, cfg.d_model);
+            {
+                let caches: &[KvCache] = caches;
+                let q = &q;
+                let total = bsz * h;
+                let per = total.div_ceil(pool.threads().min(total));
+                pool.scope(|s| {
+                    for (ci, chunk) in ctx.data.chunks_mut(per * hd).enumerate() {
+                        s.spawn(move || {
+                            // One scores buffer per task, resized per strip
+                            // (every element is overwritten before the
+                            // softmax, so reuse cannot change results).
+                            let mut scores: Vec<f32> = Vec::new();
+                            for (j, strip) in chunk.chunks_mut(hd).enumerate() {
+                                let idx = ci * per + j;
+                                let (b, head) = (idx / h, idx % h);
+                                let cache = &caches[b];
+                                let pos = cache.len;
+                                let off = head * hd;
+                                let qh = &q.row(b)[off..off + hd];
+                                scores.clear();
+                                scores.resize(pos + 1, 0.0);
+                                for (jj, s) in scores.iter_mut().enumerate() {
+                                    let kj = &cache.k[li].row(jj)[off..off + hd];
+                                    let mut acc = 0.0;
+                                    for t in 0..hd {
+                                        acc += qh[t] * kj[t];
+                                    }
+                                    *s = acc * scale;
+                                }
+                                softmax_inplace(&mut scores);
+                                for (jj, &w) in scores.iter().enumerate() {
+                                    let vj = &cache.v[li].row(jj)[off..off + hd];
+                                    for (ct, &vt) in strip.iter_mut().zip(vj) {
+                                        *ct += w * vt;
+                                    }
+                                }
+                            }
+                        });
+                    }
+                });
+            }
+            let attn = layer.wo.matmul_on(pool, &ctx);
             for b in 0..bsz {
                 crate::tensor::ops::add_inplace(x.row_mut(b), attn.row(b));
             }
@@ -399,20 +486,25 @@ impl Model {
             c.len += 1;
         }
         let normed = rmsnorm(&x, &self.weights.final_norm, 1e-6);
-        crate::tensor::matmul_transb(&normed, &self.weights.embed)
+        matmul_transb_on(pool, &normed, &self.weights.embed)
     }
 }
 
-/// SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2. Each matrix dispatches
-/// through [`WeightMat::matmul`], so packed experts run the fused
-/// dequant GEMM directly.
+/// SwiGLU expert FFN on the global pool: (silu(x@w1) * (x@w3)) @ w2.
 pub fn expert_forward(x: &Mat, e: &ExpertWeights) -> Mat {
-    let mut a = e.w1.matmul(x);
-    let b = e.w3.matmul(x);
+    expert_forward_on(ThreadPool::global(), x, e)
+}
+
+/// [`expert_forward`] on an explicit pool. Each matrix dispatches through
+/// [`WeightMat::matmul_on`], so packed experts run the fused dequant GEMM
+/// directly.
+pub fn expert_forward_on(pool: &ThreadPool, x: &Mat, e: &ExpertWeights) -> Mat {
+    let mut a = e.w1.matmul_on(pool, x);
+    let b = e.w3.matmul_on(pool, x);
     for (av, &bv) in a.data.iter_mut().zip(&b.data) {
         *av = silu(*av) * bv;
     }
-    e.w2.matmul(&a)
+    e.w2.matmul_on(pool, &a)
 }
 
 #[cfg(test)]

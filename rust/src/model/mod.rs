@@ -10,6 +10,6 @@ pub mod hooks;
 pub mod weights;
 
 pub use config::{ModelConfig, ZooModel};
-pub use forward::{expert_forward, KvCache, Model, MoeLayerOut};
+pub use forward::{expert_forward, expert_forward_on, KvCache, Model, MoeLayerOut};
 pub use hooks::{ForcedSelections, Hooks, SelectionRecord};
 pub use weights::{ExpertWeights, LayerWeights, WeightMat, Weights};

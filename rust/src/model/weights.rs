@@ -66,11 +66,17 @@ impl WeightMat {
         self.rows() * self.cols()
     }
 
-    /// `x @ W`: dense GEMM or fused group-dequant GEMM.
+    /// `x @ W`: dense GEMM or fused group-dequant GEMM, on the global pool.
     pub fn matmul(&self, x: &Mat) -> Mat {
+        self.matmul_on(crate::tensor::ThreadPool::global(), x)
+    }
+
+    /// [`WeightMat::matmul`] on an explicit pool — the form the model's
+    /// forward passes use, so `EngineConfig::threads` governs every GEMM.
+    pub fn matmul_on(&self, pool: &crate::tensor::ThreadPool, x: &Mat) -> Mat {
         match self {
-            WeightMat::Dense(m) => crate::tensor::matmul(x, m),
-            WeightMat::Packed(p) => crate::quant::fused::matmul_packed(x, p),
+            WeightMat::Dense(m) => crate::tensor::matmul_on(pool, x, m),
+            WeightMat::Packed(p) => crate::quant::fused::matmul_packed_on(pool, x, p),
         }
     }
 

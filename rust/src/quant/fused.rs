@@ -5,7 +5,7 @@
 //! materializing the f32 weight matrix. Per K-tile (KC rows of `w`), the
 //! codes are unpacked + affine-corrected into an f32 strip **exactly
 //! once**, then all rows of `x` consume the strip through the same
-//! scoped-thread row parallelism as `tensor::matmul` — so the unpack cost
+//! persistent-pool row parallelism as `tensor::matmul` — so the unpack cost
 //! is `K×N` total, independent of both the batch size and the thread
 //! count. The old naive `PackedMat::matmul_dequant` unpacked every full
 //! column per call with zero reuse.
@@ -17,7 +17,7 @@
 //! test below asserts 1e-5.
 
 use super::pack::PackedMat;
-use crate::tensor::matmul::run_row_parallel;
+use crate::tensor::pool::ThreadPool;
 use crate::tensor::Mat;
 
 /// K-tile height (matches the dense GEMM's KC so summation order agrees).
@@ -28,6 +28,12 @@ const KC: usize = 256;
 
 /// `x (m, k) @ dequant(w) (k, n)` with on-the-fly group dequantization.
 pub fn matmul_packed(x: &Mat, w: &PackedMat) -> Mat {
+    matmul_packed_on(ThreadPool::global(), x, w)
+}
+
+/// [`matmul_packed`] on an explicit pool (the model threads its own pool
+/// through so `EngineConfig::threads` controls the packed path too).
+pub fn matmul_packed_on(pool: &ThreadPool, x: &Mat, w: &PackedMat) -> Mat {
     assert_eq!(
         x.cols, w.rows,
         "matmul_packed inner-dim mismatch: {}x{} @ {}x{}",
@@ -63,7 +69,7 @@ pub fn matmul_packed(x: &Mat, w: &PackedMat) -> Mat {
         // Accumulates into `out` (zero-initialized; each K-tile adds its
         // contribution), k ascending per element exactly like the dense
         // kernel's KC blocking.
-        run_row_parallel(x.rows, n, &mut out.data, &body);
+        pool.run_rows(x.rows, n, &mut out.data, &body);
     }
     out
 }

@@ -15,6 +15,13 @@
 //! tokens routed to the same expert across the whole batch into one GEMM;
 //! sequences retire as they finish and queued requests are admitted into
 //! the freed slots (continuous batching).
+//!
+//! Requests the model cannot forward (over-long prompts, empty prompts,
+//! out-of-vocabulary token ids) are rejected at admission with a
+//! [`FinishReason`] instead of panicking a worker — one malformed request
+//! can no longer abort the engine and lose every in-flight response. Compute parallelism (GEMM rows, experts,
+//! attention heads) comes from the model's persistent
+//! [`crate::tensor::ThreadPool`], sized via [`EngineConfig::threads`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServeMetrics;
@@ -44,11 +51,24 @@ pub struct EngineConfig {
     pub batch: BatchPolicy,
     pub workers: usize,
     pub prune: PrunePolicy,
+    /// Compute-parallelism (GEMM rows, experts, attention heads) for the
+    /// served model: `Some(n)` builds a dedicated n-thread
+    /// [`crate::tensor::ThreadPool`] for this engine; `None` keeps the
+    /// model's pool (the process-global one for `Model::new`, sized from
+    /// `EAC_MOE_THREADS` once at that pool's construction). Orthogonal to
+    /// `workers`, which is how many batches progress concurrently.
+    /// Outputs are bit-identical at every pool size.
+    pub threads: Option<usize>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { batch: BatchPolicy::default(), workers: 2, prune: PrunePolicy::None }
+        EngineConfig {
+            batch: BatchPolicy::default(),
+            workers: 2,
+            prune: PrunePolicy::None,
+            threads: None,
+        }
     }
 }
 
@@ -59,7 +79,10 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(model: Model, cfg: EngineConfig) -> Self {
+    pub fn new(mut model: Model, cfg: EngineConfig) -> Self {
+        if let Some(n) = cfg.threads {
+            model.pool = Arc::new(crate::tensor::ThreadPool::new(n));
+        }
         Engine { model: Arc::new(model), cfg }
     }
 
@@ -115,8 +138,18 @@ impl Engine {
         };
         let mut prune_sum = 0f32;
         for r in &resps {
-            metrics.prefill.record(r.prefill_secs);
-            if r.decode_secs > 0.0 {
+            // Admission rejections never ran a prefill or decode; they
+            // only contribute queue/e2e samples.
+            if !r.finish_reason.is_rejection() {
+                metrics.prefill.record(r.prefill_secs);
+            }
+            // Every decode-requested response records into the decode
+            // percentiles — including requests whose whole budget was the
+            // prefill's next token (decode_secs == 0.0), which the old
+            // `> 0.0` guard silently dropped, biasing the percentiles
+            // against the fastest requests. Prefill-only and rejected
+            // requests have empty `generated` and stay out.
+            if !r.generated.is_empty() {
                 metrics.decode.record(r.decode_secs);
             }
             metrics.queue.record(r.queue_secs);
@@ -180,6 +213,7 @@ fn process_batch(
     generated_tokens: &AtomicUsize,
 ) {
     let max_seq = model.cfg().max_seq;
+    let vocab = model.cfg().vocab;
     let mut active: Vec<DecodeSeq> = Vec::new();
     let mut caches: Vec<KvCache> = Vec::new();
     let mut finished: Vec<Response> = Vec::new();
@@ -188,6 +222,34 @@ fn process_batch(
                      active: &mut Vec<DecodeSeq>,
                      caches: &mut Vec<KvCache>,
                      finished: &mut Vec<Response>| {
+        // Admission validation: a prompt the model cannot forward finishes
+        // here with a rejection reason instead of tripping the forward
+        // pass's asserts inside a worker — which would abort the engine
+        // and lose every in-flight request.
+        let reject = if req.tokens.len() > max_seq {
+            Some(FinishReason::PromptTooLong)
+        } else if req.tokens.is_empty() {
+            Some(FinishReason::EmptyPrompt)
+        } else if req.tokens.iter().any(|&t| t as usize >= vocab) {
+            Some(FinishReason::InvalidToken)
+        } else {
+            None
+        };
+        if let Some(reason) = reject {
+            finished.push(Response {
+                id: req.id,
+                next_token: 0,
+                generated: Vec::new(),
+                finish_reason: reason,
+                mean_logprob: 0.0,
+                queue_secs: req.arrival.elapsed().as_secs_f64(),
+                prefill_secs: 0.0,
+                decode_secs: 0.0,
+                e2e_secs: req.arrival.elapsed().as_secs_f64(),
+                prune_rate: 0.0,
+            });
+            return;
+        }
         prompt_tokens.fetch_add(req.tokens.len(), Ordering::Relaxed);
         match prefill_request(model, prune, &req) {
             (mut resp, None) => {
@@ -455,6 +517,90 @@ mod tests {
         // 4-bit RTN barely perturbs outputs on this tiny model: both
         // engines must serve every request with finite diagnostics.
         assert_eq!(resps_d.len(), resps_p.len());
+    }
+
+    #[test]
+    fn overlong_prompt_finishes_at_admission_without_killing_batch() {
+        // Regression: a prompt longer than max_seq used to trip
+        // forward_full's assert inside a worker, and the join().unwrap()
+        // turned that into a whole-engine abort. It must now finish at
+        // admission while every other request in the batch serves
+        // normally.
+        let model = tiny();
+        let max_seq = model.cfg().max_seq;
+        let e = Engine::new(model, EngineConfig { workers: 2, ..Default::default() });
+        let mut rs: Vec<Request> =
+            reqs(4, 16).into_iter().map(|r| r.with_decode(3)).collect();
+        rs.push(
+            Request::new(100, (0..(max_seq + 1) as u32).map(|t| t % 64).collect())
+                .with_decode(5),
+        );
+        rs.push(Request::new(101, vec![]).with_decode(2));
+        // Token 64 is out of vocab (vocab = 64): would index the embedding
+        // table out of bounds if it reached prefill.
+        rs.push(Request::new(102, vec![1, 2, 64]).with_decode(2));
+        let (resps, metrics) = e.serve(rs);
+        assert_eq!(resps.len(), 7, "every request gets a response");
+        let bad = resps.iter().find(|r| r.id == 100).unwrap();
+        assert_eq!(bad.finish_reason, FinishReason::PromptTooLong);
+        assert!(bad.generated.is_empty());
+        assert!(bad.finish_reason.is_rejection());
+        let empty = resps.iter().find(|r| r.id == 101).unwrap();
+        assert_eq!(empty.finish_reason, FinishReason::EmptyPrompt);
+        assert!(empty.generated.is_empty());
+        let oov = resps.iter().find(|r| r.id == 102).unwrap();
+        assert_eq!(oov.finish_reason, FinishReason::InvalidToken);
+        assert!(oov.generated.is_empty());
+        for r in resps.iter().filter(|r| r.id < 100) {
+            assert_eq!(r.finish_reason, FinishReason::Length);
+            assert_eq!(r.generated.len(), 3);
+        }
+        // Rejected prompts were never forwarded: not counted as prefill
+        // work, and absent from the prefill latency percentiles.
+        assert_eq!(metrics.prompt_tokens, 4 * 16);
+        assert_eq!(metrics.prefill.count(), 4);
+        assert_eq!(metrics.e2e.count(), 7);
+    }
+
+    #[test]
+    fn admission_finished_decode_requests_record_decode_stats() {
+        // A decode budget of 1 is exhausted by the prefill's own next
+        // token: the request finishes at admission with decode_secs == 0.
+        // The old `decode_secs > 0.0` guard dropped exactly these (the
+        // fastest decodes) from the percentiles.
+        let e = Engine::new(tiny(), EngineConfig { workers: 1, ..Default::default() });
+        let rs: Vec<Request> = reqs(3, 8).into_iter().map(|r| r.with_decode(1)).collect();
+        let (resps, metrics) = e.serve(rs);
+        assert!(resps.iter().all(|r| r.generated.len() == 1));
+        assert!(resps.iter().all(|r| r.decode_secs == 0.0));
+        assert_eq!(metrics.decode.count(), 3);
+        assert_eq!(metrics.decode.percentile_ms(0.5), 0.0);
+        assert_eq!(metrics.generated_tokens, 3);
+    }
+
+    #[test]
+    fn explicit_thread_pool_size_matches_default_outputs() {
+        // EngineConfig::threads is a scheduling knob only: generated
+        // tokens and diagnostics are bit-identical across pool sizes.
+        let weights = tiny().weights;
+        let mut baseline: Option<Vec<(u64, Vec<u32>, u32, f32)>> = None;
+        for threads in [Some(1usize), Some(2), Some(8), None] {
+            let e = Engine::new(
+                Model::new(weights.clone()),
+                EngineConfig { workers: 2, threads, ..Default::default() },
+            );
+            let rs: Vec<Request> = reqs(6, 12).into_iter().map(|r| r.with_decode(4)).collect();
+            let (mut out, _) = e.serve(rs);
+            out.sort_by_key(|r| r.id);
+            let got: Vec<(u64, Vec<u32>, u32, f32)> = out
+                .into_iter()
+                .map(|r| (r.id, r.generated, r.next_token, r.mean_logprob))
+                .collect();
+            match &baseline {
+                None => baseline = Some(got),
+                Some(want) => assert_eq!(&got, want, "outputs differ at threads={threads:?}"),
+            }
+        }
     }
 
     #[test]

@@ -36,6 +36,30 @@ pub enum FinishReason {
     /// The KV cache hit `max_seq` before the budget was exhausted: the
     /// continuation is truncated (`generated.len() < decode_tokens`).
     CacheFull,
+    /// Rejected at admission: the prompt exceeds the model's `max_seq`, so
+    /// it was never forwarded. The request finishes immediately with empty
+    /// `generated` (and meaningless `next_token`/`mean_logprob`) instead of
+    /// panicking a worker and taking the whole engine — and every other
+    /// in-flight request — down with it.
+    PromptTooLong,
+    /// Rejected at admission: an empty prompt has no last position to
+    /// predict from. Same immediate-finish semantics as `PromptTooLong`.
+    EmptyPrompt,
+    /// Rejected at admission: a prompt token id is outside the model's
+    /// vocabulary (would index the embedding table out of bounds). Same
+    /// immediate-finish semantics as `PromptTooLong`.
+    InvalidToken,
+}
+
+impl FinishReason {
+    /// True for requests rejected at admission (never forwarded: no
+    /// prefill ran, no tokens were processed).
+    pub fn is_rejection(self) -> bool {
+        matches!(
+            self,
+            FinishReason::PromptTooLong | FinishReason::EmptyPrompt | FinishReason::InvalidToken
+        )
+    }
 }
 
 /// Completed request.

@@ -3,23 +3,39 @@
 //! The native hot path (GPTQ Hessians, perplexity eval, the artifact-free
 //! serving fallback) is GEMM-bound, so this is written for throughput:
 //! k-panel blocking for L1/L2 reuse, 1x8 inner kernels that the compiler
-//! auto-vectorizes, and row-parallelism over a scoped thread pool for large
-//! outputs. No unsafe, no external deps.
+//! auto-vectorizes, and row-parallelism over the persistent
+//! [`ThreadPool`] (no per-call thread spawns). Every function has two
+//! forms: the plain name runs on [`ThreadPool::global`], and the `_on`
+//! variant takes an explicit pool — the model threads its own pool through
+//! so `EngineConfig::threads` genuinely controls concurrency.
+//!
+//! Determinism contract: parallelism only ever partitions output *rows*,
+//! and each element accumulates in ascending-k order regardless of
+//! blocking, so results are bit-identical at every pool size and equal to
+//! the naive triple loop.
 
+use super::pool::ThreadPool;
 use super::Mat;
 
-/// Rows below this stay single-threaded (thread spawn isn't free).
-const PAR_MIN_ROWS: usize = 64;
 /// K-panel size (fits comfortably in L1 alongside the output strip).
 const KC: usize = 256;
 /// N-panel size.
 const NC: usize = 512;
+/// N-panel size for the transposed-B kernel: the B panel (`TRANSB_NC`
+/// rows × `KC` cols of `b_t`) is reused across every output row a task
+/// owns, so it is sized to sit in L2 (128 × 256 × 4 B = 128 KB).
+const TRANSB_NC: usize = 128;
 
 /// `C = A @ B` (rows_a x k) @ (k x cols_b).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    matmul_on(ThreadPool::global(), a, b)
+}
+
+/// [`matmul`] on an explicit pool.
+pub fn matmul_on(pool: &ThreadPool, a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     let mut c = Mat::zeros(a.rows, b.cols);
-    matmul_into(a, b, &mut c);
+    matmul_into_on(pool, a, b, &mut c);
     c
 }
 
@@ -36,33 +52,102 @@ pub fn matmul_bias(a: &Mat, b: &Mat, bias: &[f32]) -> Mat {
     c
 }
 
-/// `C = A @ B^T` — used when weights are stored out-feature-major.
+/// `C = A @ B^T` — used when weights are stored out-feature-major (the
+/// vocab-wide tied output head, per-head attention scores).
 pub fn matmul_transb(a: &Mat, b_t: &Mat) -> Mat {
+    matmul_transb_on(ThreadPool::global(), a, b_t)
+}
+
+/// [`matmul_transb`] on an explicit pool. K/N panel blocking mirrors
+/// [`matmul_into_on`]: the `b_t` panel (`TRANSB_NC` rows × `KC` columns)
+/// loads once per task and is reused across all of that task's output
+/// rows — the old kernel re-streamed the whole `b_t` matrix (the entire
+/// embedding table, for the output head) for every row of `a`. Each
+/// element still accumulates in ascending-k order across the K panels, so
+/// the result is bit-identical to the naive dot product.
+///
+/// Parallelization picks the ragged axis: tall outputs split by row (as
+/// every GEMM here does); short-and-wide outputs — the decode-time output
+/// head, `B rows × vocab` — split by *column panel* instead, each task
+/// computing its columns into a private strip that is copied back
+/// sequentially. Either way each element is produced whole by one task,
+/// so outputs stay bit-identical at every pool size.
+pub fn matmul_transb_on(pool: &ThreadPool, a: &Mat, b_t: &Mat) -> Mat {
     assert_eq!(a.cols, b_t.cols, "matmul_transb inner-dim mismatch");
     let m = a.rows;
     let n = b_t.rows;
-    let k = a.cols;
     let mut c = Mat::zeros(m, n);
-    let body = |r0: usize, r1: usize, out: &mut [f32]| {
-        for r in r0..r1 {
-            let arow = a.row(r);
-            let crow = &mut out[(r - r0) * n..(r - r0 + 1) * n];
-            for j in 0..n {
-                let brow = b_t.row(j);
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += arow[kk] * brow[kk];
-                }
-                crow[j] = acc;
+    if m < crate::tensor::pool::PAR_MIN_ROWS && n >= 2 * TRANSB_NC && pool.threads() > 1 {
+        // Column-parallel path for decode-shaped outputs (m too small to
+        // split by row, n wide enough to matter).
+        let nchunks = pool.threads().min(n.div_ceil(TRANSB_NC));
+        let chunk_cols = n.div_ceil(nchunks);
+        let mut strips: Vec<Option<Vec<f32>>> = (0..nchunks).map(|_| None).collect();
+        // Both bounds clamp to n so a ragged tail can only shorten (or
+        // empty) the last chunks, never underflow.
+        let bounds = |ci: usize| ((ci * chunk_cols).min(n), ((ci + 1) * chunk_cols).min(n));
+        pool.scope(|s| {
+            for (ci, slot) in strips.iter_mut().enumerate() {
+                s.spawn(move || {
+                    let (j0, j1) = bounds(ci);
+                    let mut strip = vec![0f32; m * (j1 - j0)];
+                    transb_block(a, b_t, 0, m, j0, j1, &mut strip);
+                    *slot = Some(strip);
+                });
+            }
+        });
+        for (ci, slot) in strips.into_iter().enumerate() {
+            let (j0, j1) = bounds(ci);
+            let w = j1 - j0;
+            let strip = slot.expect("column task completed");
+            for r in 0..m {
+                c.row_mut(r)[j0..j1].copy_from_slice(&strip[r * w..(r + 1) * w]);
             }
         }
+        return c;
+    }
+    let body = |r0: usize, r1: usize, out: &mut [f32]| {
+        transb_block(a, b_t, r0, r1, 0, n, out);
     };
-    run_row_parallel(m, n, &mut c.data, &body);
+    pool.run_rows(m, n, &mut c.data, &body);
     c
+}
+
+/// Blocked `A @ B^T` over the sub-rectangle rows `r0..r1` × columns
+/// `j0..j1`, written into `out` (row-major, `j1 - j0` wide). One
+/// implementation serves both the row-parallel and column-parallel
+/// partitions, so the per-element ascending-k accumulation chain is
+/// identical everywhere (and bitwise equal to the naive dot product).
+fn transb_block(a: &Mat, b_t: &Mat, r0: usize, r1: usize, j0: usize, j1: usize, out: &mut [f32]) {
+    let k = a.cols;
+    let w = j1 - j0;
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for jb in (j0..j1).step_by(TRANSB_NC) {
+            let jend = (jb + TRANSB_NC).min(j1);
+            for r in r0..r1 {
+                let arow = &a.row(r)[kb..kend];
+                let crow = &mut out[(r - r0) * w + (jb - j0)..(r - r0) * w + (jend - j0)];
+                for (cv, j) in crow.iter_mut().zip(jb..jend) {
+                    let brow = &b_t.row(j)[kb..kend];
+                    let mut acc = *cv;
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    *cv = acc;
+                }
+            }
+        }
+    }
 }
 
 /// In-place `C = A @ B`; `c` must be pre-shaped (rows_a x cols_b).
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    matmul_into_on(ThreadPool::global(), a, b, c)
+}
+
+/// [`matmul_into`] on an explicit pool.
+pub fn matmul_into_on(pool: &ThreadPool, a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
@@ -94,48 +179,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
             }
         }
     };
-    run_row_parallel(a.rows, n, &mut c.data, &body);
-}
-
-/// Split rows across scoped threads; each thread writes its own disjoint
-/// slice of the output buffer. Shared with the fused dequant GEMM in
-/// `quant::fused`, which parallelizes the same way.
-pub(crate) fn run_row_parallel<F>(m: usize, n: usize, out: &mut [f32], body: &F)
-where
-    F: Fn(usize, usize, &mut [f32]) + Sync,
-{
-    let nthreads = available_threads();
-    if m < PAR_MIN_ROWS || nthreads <= 1 {
-        body(0, m, out);
-        return;
-    }
-    let nchunks = nthreads.min(m);
-    let chunk = m.div_ceil(nchunks);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut r0 = 0;
-        while r0 < m {
-            let r1 = (r0 + chunk).min(m);
-            let (mine, tail) = rest.split_at_mut((r1 - r0) * n);
-            rest = tail;
-            let start = r0;
-            s.spawn(move || body(start, r1, mine));
-            r0 = r1;
-        }
-    });
-}
-
-/// Number of worker threads to use (overridable via EAC_MOE_THREADS).
-pub fn available_threads() -> usize {
-    static CACHE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *CACHE.get_or_init(|| {
-        if let Ok(v) = std::env::var("EAC_MOE_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    })
+    pool.run_rows(a.rows, n, &mut c.data, &body);
 }
 
 #[cfg(test)]
@@ -150,6 +194,20 @@ mod tests {
                 let mut acc = 0.0;
                 for kk in 0..a.cols {
                     acc += a.at(i, kk) * b.at(kk, j);
+                }
+                *c.at_mut(i, j) = acc;
+            }
+        }
+        c
+    }
+
+    fn naive_transb(a: &Mat, b_t: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b_t.rows);
+        for i in 0..a.rows {
+            for j in 0..b_t.rows {
+                let mut acc = 0.0;
+                for kk in 0..a.cols {
+                    acc += a.at(i, kk) * b_t.at(j, kk);
                 }
                 *c.at_mut(i, j) = acc;
             }
@@ -195,6 +253,52 @@ mod tests {
         }
     }
 
+    /// The blocked transposed-B kernel is pinned *bitwise* to the naive
+    /// reference: K/N panels change loop structure but every element still
+    /// accumulates k-ascending, so no roundoff drift is tolerated. Shapes
+    /// span partial K panels (k=300 > KC), partial N panels (n=300 >
+    /// TRANSB_NC), the parallel row path (m=70 ≥ PAR_MIN_ROWS), and
+    /// degenerate edges.
+    #[test]
+    fn transb_blocked_bitwise_equals_naive() {
+        let mut rng = Pcg64::seeded(15);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 300, 140),  // two K panels, ragged second
+            (5, 64, 300),   // three N panels, ragged third
+            (70, 257, 131), // parallel rows + ragged K and N panels
+            (2, 70, 600),   // column-parallel path (decode head shape)
+            (1, 128, 519),  // column-parallel, ragged last column chunk
+        ] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b_t = Mat::randn(n, k, 1.0, &mut rng);
+            let got = matmul_transb(&a, &b_t);
+            let want = naive_transb(&a, &b_t);
+            assert_eq!(got.data, want.data, "m={m} k={k} n={n}");
+        }
+    }
+
+    /// ...and bit-identical across pool sizes, on both the row-parallel
+    /// (tall) and column-parallel (decode-head-shaped) partitions.
+    #[test]
+    fn transb_bitwise_invariant_across_pool_sizes() {
+        let mut rng = Pcg64::seeded(16);
+        for &(m, k, n) in &[(96usize, 77usize, 50usize), (2, 77, 600), (1, 64, 519)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b_t = Mat::randn(n, k, 1.0, &mut rng);
+            let p1 = ThreadPool::new(1);
+            let base = matmul_transb_on(&p1, &a, &b_t);
+            for threads in [2usize, 8] {
+                let p = ThreadPool::new(threads);
+                assert_eq!(
+                    matmul_transb_on(&p, &a, &b_t).data,
+                    base.data,
+                    "m={m} n={n} threads={threads}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn bias_broadcasts() {
         let a = Mat::from_vec(2, 2, vec![1., 0., 0., 1.]);
@@ -220,6 +324,20 @@ mod tests {
             for (x, y) in l.data.iter().zip(&r.data) {
                 assert!((x - y).abs() < 1e-3, "{x} vs {y}");
             }
+        }
+    }
+
+    /// Dense matmul bit-identical across pool sizes (row partitioning
+    /// never touches accumulation order).
+    #[test]
+    fn matmul_bitwise_invariant_across_pool_sizes() {
+        let mut rng = Pcg64::seeded(18);
+        let a = Mat::randn(80, 33, 1.0, &mut rng);
+        let b = Mat::randn(33, 47, 1.0, &mut rng);
+        let base = matmul_on(&ThreadPool::new(1), &a, &b);
+        for threads in [2usize, 8] {
+            let p = ThreadPool::new(threads);
+            assert_eq!(matmul_on(&p, &a, &b).data, base.data, "threads={threads}");
         }
     }
 }

@@ -4,13 +4,17 @@
 //!
 //! This is deliberately small — just what the model, quantizer and eval
 //! stack use — but the matmul is cache-blocked and multi-threaded because
-//! GPTQ and perplexity evaluation are GEMM-bound.
+//! GPTQ and perplexity evaluation are GEMM-bound. All parallelism runs on
+//! the persistent scoped worker pool in [`pool`] (no per-call thread
+//! spawns); see that module for the sizing and determinism contract.
 
 pub mod matmul;
 pub mod ops;
+pub mod pool;
 pub mod rng;
 
-pub use matmul::{matmul, matmul_bias, matmul_into, matmul_transb};
+pub use matmul::{matmul, matmul_bias, matmul_into, matmul_on, matmul_transb, matmul_transb_on};
+pub use pool::ThreadPool;
 pub use rng::Pcg64;
 
 /// Row-major 2-D matrix of `f32`.

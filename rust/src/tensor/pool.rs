@@ -1,0 +1,455 @@
+//! Persistent scoped worker pool — the parallelism substrate for every hot
+//! path (row-parallel GEMMs, expert-level MoE dispatch, head-level
+//! attention).
+//!
+//! The old `run_row_parallel` spawned fresh OS threads on every GEMM call,
+//! which priced parallelism out of exactly the GEMMs decode is made of
+//! (B-row projections, a handful of routed tokens per expert). This pool is
+//! sized **once at construction** (no per-call spawns) and exposes a
+//! crossbeam-style scoped-task API, so callers can fan borrowed work out
+//! across long-lived workers:
+//!
+//! ```text
+//! pool.scope(|s| {
+//!     for chunk in out.chunks_mut(n) {
+//!         s.spawn(move || fill(chunk));   // borrows OK: scope() joins all
+//!     }
+//! });                                      // tasks before returning
+//! ```
+//!
+//! Design points:
+//!
+//! - **Scope barrier**: `scope` does not return (or unwind) until every
+//!   task spawned inside it has finished. That barrier is what makes the
+//!   lifetime erasure in `spawn` sound — a task can borrow stack data from
+//!   the caller because the borrow provably outlives the task.
+//! - **Helping**: a thread waiting on its scope pops and runs queued tasks
+//!   (any scope's) instead of blocking. Nested scopes — an expert task
+//!   whose inner GEMM row-parallelizes, a worker batch inside an engine
+//!   worker — therefore cannot deadlock: whoever waits, works.
+//! - **Panics propagate**: a panicking task is caught on the worker (the
+//!   worker survives), recorded on its scope, and re-thrown from `scope` on
+//!   the calling thread — same observable behavior as `std::thread::scope`.
+//! - **Determinism**: the pool only affects *where* tasks run, never what
+//!   they compute. All users partition output disjointly and keep
+//!   per-element accumulation order fixed, so results are bit-identical at
+//!   every pool size (pinned by `tests/thread_invariance.rs`).
+//! - **`threads == 1` is truly sequential**: no worker threads exist and
+//!   `spawn` runs the task inline, so a size-1 pool is an exact
+//!   single-threaded execution (useful for tests and debugging).
+//!
+//! `EAC_MOE_THREADS` is read once, when the **global** pool is first
+//! constructed ([`ThreadPool::global`]) — not latched by whichever GEMM
+//! runs first, as the old `OnceLock` cache did. Code that needs a specific
+//! size (tests, `EngineConfig::threads`) builds its own pool explicitly and
+//! is immune to the environment entirely.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Row counts below this run inline in [`ThreadPool::run_rows`]: even with
+/// persistent workers, handing out a task costs a queue round-trip, and a
+/// few rows of GEMM are cheaper than that. Decode-sized GEMMs get their
+/// parallelism from expert- and head-level tasks instead.
+pub(crate) const PAR_MIN_ROWS: usize = 64;
+
+/// A queued task. Lifetime-erased to `'static`; soundness comes from the
+/// scope barrier (see [`PoolScope::spawn`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Default)]
+struct Queue {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Signaled when a task is pushed or shutdown begins.
+    available: Condvar,
+}
+
+/// Per-scope completion state: outstanding task count + first panic.
+#[derive(Default)]
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Persistent worker pool with scoped tasks. See the module docs.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    start: std::sync::Once,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool that runs up to `threads` tasks concurrently
+    /// (`threads - 1` dedicated workers; the thread calling `scope` is the
+    /// last lane, since it helps while waiting). `threads` is clamped to at
+    /// least 1; a size-1 pool runs everything inline. The size is fixed
+    /// here, but the worker OS threads start lazily on the first queued
+    /// task — a pool that is constructed and then shadowed (e.g. the
+    /// global pool when `EngineConfig::threads` installs a dedicated one)
+    /// costs nothing.
+    pub fn new(threads: usize) -> Self {
+        ThreadPool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(Queue::default()),
+                available: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+            start: std::sync::Once::new(),
+            threads: threads.max(1),
+        }
+    }
+
+    /// Spawn the `threads - 1` worker threads, once, on first use.
+    fn ensure_started(&self) {
+        self.start.call_once(|| {
+            let mut handles = self.handles.lock().unwrap();
+            for i in 0..self.threads - 1 {
+                let shared = self.shared.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("eac-moe-pool-{i}"))
+                        .spawn(move || worker_loop(&shared))
+                        .expect("spawn pool worker"),
+                );
+            }
+        });
+    }
+
+    /// The process-global pool, built on first use with
+    /// [`threads_from_env`]. This is the pool behind the free `matmul`
+    /// functions and `Model::new`.
+    pub fn global() -> &'static Arc<ThreadPool> {
+        static GLOBAL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(ThreadPool::new(threads_from_env())))
+    }
+
+    /// Concurrency of this pool (the constructor argument, clamped ≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` with a scope handle; every task spawned on the handle has
+    /// completed by the time `scope` returns. If any task (or `f` itself)
+    /// panicked, the panic is re-thrown here after all tasks finish.
+    pub fn scope<'env, F, T>(&'env self, f: F) -> T
+    where
+        F: FnOnce(&PoolScope<'env>) -> T,
+    {
+        let state = Arc::new(ScopeState::default());
+        let scope = PoolScope { pool: self, state: state.clone(), env: PhantomData };
+        // Catch so an unwinding `f` still waits for already-spawned tasks —
+        // they borrow the caller's stack and must not outlive it.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        self.wait_scope(&state);
+        let task_panic = state.panic.lock().unwrap().take();
+        match result {
+            Err(p) => std::panic::resume_unwind(p),
+            Ok(r) => {
+                if let Some(p) = task_panic {
+                    std::panic::resume_unwind(p);
+                }
+                r
+            }
+        }
+    }
+
+    /// Split `m` rows of an `(m, n)` output across the pool; each task gets
+    /// a disjoint `&mut` strip. `body(r0, r1, strip)` computes rows
+    /// `r0..r1` into `strip`. Small outputs run inline (task handoff isn't
+    /// free). Partitioning never changes per-element accumulation order —
+    /// each row is computed whole by exactly one task — so results are
+    /// bit-identical at every pool size.
+    pub fn run_rows<F>(&self, m: usize, n: usize, out: &mut [f32], body: &F)
+    where
+        F: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        if m < PAR_MIN_ROWS || self.threads <= 1 {
+            body(0, m, out);
+            return;
+        }
+        let nchunks = self.threads.min(m);
+        let chunk = m.div_ceil(nchunks);
+        self.scope(|s| {
+            let mut rest = out;
+            let mut r0 = 0;
+            while r0 < m {
+                let r1 = (r0 + chunk).min(m);
+                let (mine, tail) = rest.split_at_mut((r1 - r0) * n);
+                rest = tail;
+                let start = r0;
+                s.spawn(move || body(start, r1, mine));
+                r0 = r1;
+            }
+        });
+    }
+
+    fn push(&self, task: Task) {
+        self.shared.queue.lock().unwrap().tasks.push_back(task);
+        self.shared.available.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Task> {
+        self.shared.queue.lock().unwrap().tasks.pop_front()
+    }
+
+    /// Block until `state.pending == 0`, executing queued tasks while
+    /// waiting ("helping"). Helping is what makes nested scopes safe: a
+    /// worker waiting on an inner scope drains the queue instead of
+    /// deadlocking on itself.
+    fn wait_scope(&self, state: &ScopeState) {
+        loop {
+            if *state.pending.lock().unwrap() == 0 {
+                return;
+            }
+            if let Some(task) = self.try_pop() {
+                task();
+                continue;
+            }
+            // Queue empty: our remaining tasks are running on other
+            // threads (they were queued before this wait began and the pop
+            // above would have found them otherwise). Sleep until one
+            // completes.
+            let mut pending = state.pending.lock().unwrap();
+            while *pending != 0 {
+                pending = state.done.wait(pending).unwrap();
+            }
+            return;
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.available.notify_all();
+        let handles =
+            std::mem::take(&mut *self.handles.lock().unwrap_or_else(|e| e.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break t;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        // Task wrappers catch their own panics (into their scope's state),
+        // so the worker thread survives any task.
+        task();
+    }
+}
+
+/// Scoped spawn handle passed to the closure of [`ThreadPool::scope`].
+/// `'env` is invariant (the `PhantomData`) so it cannot be shrunk to smuggle
+/// shorter-lived borrows into tasks.
+pub struct PoolScope<'env> {
+    pool: &'env ThreadPool,
+    state: Arc<ScopeState>,
+    env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> PoolScope<'env> {
+    /// Queue `f` on the pool. On a size-1 pool it runs inline, in spawn
+    /// order — which is why sequential and parallel executions of the same
+    /// scope are the same program, just scheduled differently.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        if self.pool.threads <= 1 {
+            f();
+            return;
+        }
+        self.pool.ensure_started();
+        *self.state.pending.lock().unwrap() += 1;
+        let state = self.state.clone();
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.done.notify_all();
+            }
+        });
+        // SAFETY: `scope` blocks until `pending` reaches 0 — on success
+        // *and* on unwind — so this closure (and everything it borrows,
+        // which lives at least `'env`) is done executing before any
+        // borrowed data can be invalidated. The transmute only erases the
+        // lifetime; the fat-pointer layout is identical.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+        };
+        self.pool.push(task);
+    }
+}
+
+/// Pool size from the environment: `EAC_MOE_THREADS` if set and parseable
+/// (clamped ≥ 1), else the machine's available parallelism. Read at pool
+/// construction — constructing a pool is the only thing that latches it.
+pub fn threads_from_env() -> usize {
+    match std::env::var("EAC_MOE_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n.max(1),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_all_tasks_with_borrows() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 64];
+        pool.scope(|s| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                s.spawn(move || *slot = i * i);
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn size_one_pool_runs_inline_in_order() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        assert!(pool.handles.lock().unwrap().is_empty());
+        // Inline execution runs each task before `spawn` returns, so the
+        // observed order is exactly spawn order.
+        let order = Mutex::new(Vec::new());
+        pool.scope(|s| {
+            for i in 0..8 {
+                let order = &order;
+                s.spawn(move || order.lock().unwrap().push(i));
+            }
+        });
+        assert_eq!(order.into_inner().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn workers_start_lazily() {
+        // Constructing a pool costs no OS threads; they appear on the
+        // first queued task (so a constructed-then-shadowed pool is free).
+        let pool = ThreadPool::new(4);
+        assert!(pool.handles.lock().unwrap().is_empty());
+        pool.scope(|s| s.spawn(|| {}));
+        assert_eq!(pool.handles.lock().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        // An outer task fans out inner tasks on the same (small) pool; the
+        // helping waiter must drain them rather than deadlock.
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                let count = &count;
+                s.spawn(move || {
+                    pool.scope(|inner| {
+                        for _ in 0..8 {
+                            inner.spawn(|| {
+                                count.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_barrier() {
+        let pool = ThreadPool::new(3);
+        let done = AtomicUsize::new(0);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("task boom"));
+                for _ in 0..8 {
+                    s.spawn(|| {
+                        done.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }));
+        assert!(res.is_err(), "scope must re-throw the task panic");
+        // Barrier held: the healthy tasks all finished despite the panic.
+        assert_eq!(done.load(Ordering::Relaxed), 8);
+        // ...and the pool is still usable afterwards (workers survived).
+        let mut v = vec![0u8; 16];
+        pool.scope(|s| {
+            for slot in v.iter_mut() {
+                s.spawn(move || *slot = 7);
+            }
+        });
+        assert!(v.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn run_rows_partitions_disjointly() {
+        let pool = ThreadPool::new(4);
+        let (m, n) = (130, 3);
+        let mut out = vec![0f32; m * n];
+        let body = |r0: usize, r1: usize, strip: &mut [f32]| {
+            for r in r0..r1 {
+                for c in 0..n {
+                    strip[(r - r0) * n + c] = (r * n + c) as f32;
+                }
+            }
+        };
+        pool.run_rows(m, n, &mut out, &body);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+        // Small m runs inline through the same entry point.
+        let mut small = vec![0f32; 5 * n];
+        pool.run_rows(5, n, &mut small, &body);
+        for (i, &v) in small.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn env_threads_clamped() {
+        // Parse logic only (the env var itself is process-global state that
+        // other tests may depend on, so don't set it here).
+        assert_eq!("0".parse::<usize>().unwrap().max(1), 1);
+        assert!(threads_from_env() >= 1);
+    }
+}

@@ -38,6 +38,7 @@ fn large_burst_all_served_exactly_once() {
             batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
             workers: 4,
             prune: PrunePolicy::None,
+            ..Default::default()
         },
     );
     let (resps, metrics) = engine.serve(reqs(64, 24));
@@ -61,6 +62,7 @@ fn decode_burst_counts_generated_tokens_and_batches() {
             batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
             workers: 2,
             prune: PrunePolicy::None,
+            ..Default::default()
         },
     );
     let rs: Vec<Request> = reqs(16, 24).into_iter().map(|r| r.with_decode(8)).collect();
@@ -73,6 +75,51 @@ fn decode_burst_counts_generated_tokens_and_batches() {
     assert_eq!(metrics.total_tokens(), 16 * 24 + 16 * 8);
     assert!(metrics.decode_tokens_per_sec() > 0.0);
     assert!(metrics.decode_tokens_per_sec() < metrics.throughput_tokens_per_sec());
+}
+
+#[test]
+fn burst_with_overlong_prompts_served_without_engine_abort() {
+    // Regression (admission validation): malformed prompts sprinkled
+    // through a multi-worker burst finish with rejection reasons while
+    // every valid request — including valid requests *behind* the bad
+    // ones in the queue — serves to completion.
+    let m = model();
+    let max_seq = m.cfg().max_seq;
+    let engine = Engine::new(
+        m,
+        EngineConfig {
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            workers: 3,
+            ..Default::default()
+        },
+    );
+    let mut rs: Vec<Request> = Vec::new();
+    for i in 0..24u64 {
+        if i % 6 == 5 {
+            // Over-long prompt, decode requested: would have panicked a
+            // worker pre-fix.
+            rs.push(
+                Request::new(i, (0..(max_seq + 3) as u32).map(|t| t % 128).collect())
+                    .with_decode(4),
+            );
+        } else {
+            rs.push(Request::new(i, (0..20).map(|t| (t * 13 + i as u32) % 128).collect())
+                .with_decode(2));
+        }
+    }
+    let (resps, metrics) = engine.serve(rs);
+    assert_eq!(resps.len(), 24, "no responses lost to a worker abort");
+    let rejected: Vec<_> =
+        resps.iter().filter(|r| r.finish_reason.is_rejection()).collect();
+    assert_eq!(rejected.len(), 4);
+    assert!(rejected.iter().all(|r| r.generated.is_empty()));
+    for r in resps.iter().filter(|r| !r.finish_reason.is_rejection()) {
+        assert_eq!(r.generated.len(), 2);
+        assert!(r.mean_logprob.is_finite());
+    }
+    assert_eq!(metrics.prompt_tokens, 20 * 20);
+    assert_eq!(metrics.generated_tokens, 20 * 2);
+    assert_eq!(metrics.decode.count(), 20);
 }
 
 #[test]

@@ -1,0 +1,127 @@
+//! Thread-count invariance — the determinism guarantee the worker pool is
+//! built around: pool size changes *where* work runs, never what it
+//! computes. Prefill logits, decode tokens, and packed-path outputs must
+//! be **bit-identical** at pool sizes 1, 2, and 8, for dense and packed
+//! weights alike. (Size 1 is exactly sequential execution — no worker
+//! threads exist — so these tests pin the parallel paths to the
+//! sequential semantics, not just to each other.)
+
+use eac_moe::model::hooks::Hooks;
+use eac_moe::model::{KvCache, Model, ModelConfig, Weights};
+use eac_moe::tensor::pool::ThreadPool;
+use std::sync::Arc;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tinv".into(),
+        n_layers: 2,
+        d_model: 32,
+        d_ff: 16,
+        n_experts: 8,
+        top_k: 2,
+        n_shared: 1,
+        n_heads: 4,
+        vocab: 96,
+        max_seq: 96,
+    }
+}
+
+fn weight_variants() -> Vec<(&'static str, Weights)> {
+    let dense = Weights::init(&cfg(), 61);
+    let mut packed = dense.clone();
+    packed.pack_experts_rtn(4, 16);
+    vec![("dense", dense), ("packed", packed)]
+}
+
+/// Prompt long enough (≥ 64 rows) to engage the row-parallel GEMM path on
+/// top of expert- and head-level tasks.
+fn prompt() -> Vec<u32> {
+    (0..80u32).map(|i| (i * 11 + 3) % 96).collect()
+}
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+
+#[test]
+fn prefill_logits_bitwise_invariant() {
+    for (name, weights) in weight_variants() {
+        let mut base: Option<Vec<f32>> = None;
+        for threads in POOL_SIZES {
+            let m = Model::with_pool(weights.clone(), Arc::new(ThreadPool::new(threads)));
+            let logits = m.forward(&prompt());
+            match &base {
+                None => base = Some(logits.data),
+                Some(want) => {
+                    assert_eq!(&logits.data, want, "{name} prefill differs at threads={threads}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_decode_tokens_and_logits_bitwise_invariant() {
+    for (name, weights) in weight_variants() {
+        let mut base: Option<(Vec<u32>, Vec<f32>)> = None;
+        for threads in POOL_SIZES {
+            let m = Model::with_pool(weights.clone(), Arc::new(ThreadPool::new(threads)));
+            let mut cache = KvCache::new(m.cfg());
+            let logits = m.prefill_into_cache(&prompt(), &Hooks::none(), &mut cache);
+            let mut cur =
+                eac_moe::tensor::ops::topk_indices(logits.row(logits.rows - 1), 1)[0] as u32;
+            let mut toks = Vec::new();
+            let mut last = Vec::new();
+            for _ in 0..6 {
+                toks.push(cur);
+                last = m.decode_step(cur, &mut cache, &Hooks::none());
+                cur = eac_moe::tensor::ops::topk_indices(&last, 1)[0] as u32;
+            }
+            match &base {
+                None => base = Some((toks, last)),
+                Some((want_toks, want_logits)) => {
+                    assert_eq!(&toks, want_toks, "{name} decode tokens differ at threads={threads}");
+                    assert_eq!(
+                        &last, want_logits,
+                        "{name} decode logits differ at threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_bitwise_invariant() {
+    // Unequal-length sequences decoded as a batch: every row of every step
+    // must match across pool sizes (exercises the chunked per-(seq, head)
+    // attention tasks and the cross-batch expert gather).
+    let prompts: [&[u32]; 3] = [&[1, 2, 3, 4, 5], &[7, 11, 13, 17, 19, 23, 29, 31], &[5]];
+    for (name, weights) in weight_variants() {
+        let mut base: Option<Vec<Vec<f32>>> = None;
+        for threads in POOL_SIZES {
+            let m = Model::with_pool(weights.clone(), Arc::new(ThreadPool::new(threads)));
+            let mut caches: Vec<KvCache> = prompts
+                .iter()
+                .map(|p| {
+                    let mut c = KvCache::new(m.cfg());
+                    m.prefill_into_cache(p, &Hooks::none(), &mut c);
+                    c
+                })
+                .collect();
+            let mut toks: Vec<u32> = prompts.iter().map(|p| p[0]).collect();
+            let mut steps: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..4 {
+                let logits = m.decode_step_batch(&toks, &mut caches, &Hooks::none());
+                for b in 0..toks.len() {
+                    toks[b] = eac_moe::tensor::ops::topk_indices(logits.row(b), 1)[0] as u32;
+                }
+                steps.push(logits.data);
+            }
+            match &base {
+                None => base = Some(steps),
+                Some(want) => {
+                    assert_eq!(&steps, want, "{name} batched decode differs at threads={threads}")
+                }
+            }
+        }
+    }
+}
