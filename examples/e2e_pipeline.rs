@@ -80,7 +80,7 @@ fn main() -> eac_moe::Result<()> {
     });
     let lat_qp = serve_latency(
         Model::new(q.weights.clone()),
-        PrunePolicy::Pesf(PesfConfig { alpha }),
+        PrunePolicy::Pesf(PesfConfig { alpha, ..Default::default() }),
         4,
         256,
     );

@@ -29,11 +29,11 @@ fn main() -> eac_moe::Result<()> {
         ("none", PrunePolicy::None),
         ("EES", PrunePolicy::Ees(ees)),
         ("ODP", PrunePolicy::Odp(odp)),
-        ("PESF", PrunePolicy::Pesf(PesfConfig { alpha })),
+        ("PESF", PrunePolicy::Pesf(PesfConfig { alpha, ..Default::default() })),
     ];
     let mut table = Table::new(
         "serving metrics (16 requests x 192 tokens + 16 decode, batch<=4, 1 worker)",
-        &["policy", "thpt tok/s", "decode tok/s", "prefill p50 ms", "p95 ms", "prune rate"],
+        &["policy", "thpt tok/s", "decode tok/s", "prefill p50 ms", "p95 ms", "prune", "decode prune"],
     );
     let mut base_thpt = 0.0;
     for (name, policy) in policies {
@@ -48,7 +48,8 @@ fn main() -> eac_moe::Result<()> {
         );
         let mut mix = eac_moe::data::corpus::WikiMixture::new(9);
         // Decode requests ride the single-pass prefill (KV export) and the
-        // batched decode loop — PESF still applies to prefill only.
+        // batched decode loop — under PESF each sequence's mask follows it
+        // into decode and refreshes from a rolling frequency window.
         let reqs: Vec<Request> =
             (0..16u64).map(|i| Request::new(i, mix.sequence(192)).with_decode(16)).collect();
         let (_, m) = engine.serve(reqs);
@@ -69,6 +70,7 @@ fn main() -> eac_moe::Result<()> {
             format!("{:.1}", m.prefill.percentile_ms(0.5)),
             format!("{:.1}", m.prefill.percentile_ms(0.95)),
             format!("{:.1}%", m.mean_prune_rate * 100.0),
+            format!("{:.1}%", m.mean_decode_prune_rate * 100.0),
         ]);
     }
     table.print();

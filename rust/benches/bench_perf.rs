@@ -5,9 +5,11 @@
 //!
 //! Emits `results/bench_perf.json` with the dense-vs-packed GEMM,
 //! end-to-end prefill, serve-with-decode (seed double-compute vs prefill
-//! KV export), batched-vs-sequential decode, and small-batch decode
+//! KV export), batched-vs-sequential decode, small-batch decode
 //! tokens/sec across worker-pool sizes (B ∈ {1,4} × threads ∈ {1,4} — the
-//! persistent-pool win), same shape as the
+//! persistent-pool win), and pruned-vs-unpruned decode under decode-time
+//! PESF (`decode_pesf/*`: alpha ∈ {0, 0.3, 0.7} × B ∈ {1,4}, plus an
+//! engine run reporting the decode-phase prune rate), same shape as the
 //! bench_tables outputs. CI runs this in smoke mode
 //! (`EAC_MOE_BENCH_MS=25`) and uploads the JSON so the perf trajectory is
 //! tracked per PR.
@@ -263,6 +265,126 @@ fn main() {
                     .set("tokens_per_sec", Json::Num(tps));
                 json.set(&format!("decode_pool/b{bsz}t{threads}"), o);
             }
+        }
+    }
+
+    // --- Decode-time PESF: per-sequence masks carried through
+    // decode_step_batch, so pruned experts are skipped where serving
+    // spends its wall-clock. Pruned vs unpruned decode tokens/sec at
+    // alpha ∈ {0, 0.3, 0.7} × B ∈ {1, 4} (`decode_pesf/*` — the ISSUE-4
+    // acceptance surface: alpha=0.7 should beat unpruned on the same
+    // batch shape, alpha=0 is asserted bit-identical to it).
+    {
+        use eac_moe::model::hooks::{Hooks, SeqExpertMask};
+        use eac_moe::prune::pesf::{pesf_mask, PesfConfig};
+        use std::sync::Arc;
+        let (n_layers, n_experts, top_k) =
+            (model.cfg().n_layers, model.cfg().n_experts, model.cfg().top_k);
+        for &bsz in &[1usize, 4] {
+            let prompts: Vec<Vec<u32>> = (0..bsz)
+                .map(|b| (0..64u32).map(|i| (i * 7 + b as u32 * 13) % 512).collect())
+                .collect();
+            let mut caches: Vec<eac_moe::model::KvCache> = prompts
+                .iter()
+                .map(|p| {
+                    let mut c = eac_moe::model::KvCache::new(model.cfg());
+                    model.prefill_into_cache(p, &Hooks::none(), &mut c);
+                    c
+                })
+                .collect();
+            let ctx_len = caches[0].len;
+            let toks: Vec<u32> = (0..bsz as u32).map(|b| b * 31 % 512).collect();
+            let ru = bench(&format!("decode step B={bsz} unpruned @ctx64"), || {
+                for c in caches.iter_mut() {
+                    c.len = ctx_len;
+                }
+                std::hint::black_box(model.decode_step_batch(
+                    &toks,
+                    &mut caches,
+                    &Hooks::none(),
+                ));
+            });
+            let unpruned_tps = bsz as f64 / (ru.mean_ns / 1e9);
+            // Each sequence's routing statistics, recorded once — the
+            // record is alpha-independent; only the Eq. 6 thresholding
+            // below depends on alpha.
+            let records: Vec<_> = prompts
+                .iter()
+                .map(|p| {
+                    let hooks = Hooks::recording(n_layers);
+                    model.forward_with_hooks(p, &hooks);
+                    hooks.take_selections().unwrap()
+                })
+                .collect();
+            for &alpha in &[0.0f32, 0.3, 0.7] {
+                let pc = PesfConfig { alpha, ..Default::default() };
+                // Each sequence's mask from its own prompt statistics,
+                // exactly as the engine derives it at prefill.
+                let masks: Vec<Option<SeqExpertMask>> = records
+                    .iter()
+                    .map(|rec| {
+                        let (m, _) = pesf_mask(rec, n_experts, top_k, pc);
+                        Some(Arc::new(m))
+                    })
+                    .collect();
+                let hooks = Hooks::with_seq_masks(masks);
+                if alpha == 0.0 {
+                    // All-false masks: the masked path must be bit-identical
+                    // to the unpruned decode it is benchmarked against.
+                    for c in caches.iter_mut() {
+                        c.len = ctx_len;
+                    }
+                    let a = model.decode_step_batch(&toks, &mut caches, &hooks);
+                    for c in caches.iter_mut() {
+                        c.len = ctx_len;
+                    }
+                    let b = model.decode_step_batch(&toks, &mut caches, &Hooks::none());
+                    assert_eq!(a.data, b.data, "alpha=0 masked decode differs from unpruned");
+                }
+                let r = bench(&format!("decode step B={bsz} PESF(a={alpha}) @ctx64"), || {
+                    for c in caches.iter_mut() {
+                        c.len = ctx_len;
+                    }
+                    std::hint::black_box(model.decode_step_batch(&toks, &mut caches, &hooks));
+                });
+                let tps = bsz as f64 / (r.mean_ns / 1e9);
+                println!("    -> {tps:.0} pruned vs {unpruned_tps:.0} unpruned decode tok/s");
+                let mut o = Json::obj();
+                o.set("pruned_tokens_per_sec", Json::Num(tps))
+                    .set("unpruned_tokens_per_sec", Json::Num(unpruned_tps))
+                    .set("pruned_over_unpruned", Json::Num(tps / unpruned_tps));
+                json.set(&format!("decode_pesf/b{bsz}/alpha{alpha}"), o);
+            }
+        }
+        // The ServeMetrics surface: a short engine run at alpha=0.7 must
+        // report a decode-phase prune rate > 0 alongside the speedup.
+        {
+            use eac_moe::serve::{Engine, EngineConfig, PrunePolicy, Request};
+            let engine = Engine::new(
+                Model::new(model.weights.clone()),
+                EngineConfig {
+                    workers: 1,
+                    prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.7, ..Default::default() }),
+                    ..Default::default()
+                },
+            );
+            let reqs: Vec<Request> = (0..4u64)
+                .map(|i| {
+                    Request::new(i, (0..64u32).map(|t| (t * 7 + i as u32 * 13) % 512).collect())
+                        .with_decode(16)
+                })
+                .collect();
+            let (_, m) = engine.serve(reqs);
+            println!(
+                "    -> serve alpha=0.7: decode prune {:.1}%, {:.0} decode tok/s",
+                m.mean_decode_prune_rate * 100.0,
+                m.decode_tokens_per_sec()
+            );
+            let mut o = Json::obj();
+            o.set("decode_prune_rate", Json::Num(m.mean_decode_prune_rate as f64))
+                .set("prefill_prune_rate", Json::Num(m.mean_prune_rate as f64))
+                .set("decode_tokens_per_sec", Json::Num(m.decode_tokens_per_sec()));
+            json.set("decode_pesf/serve_alpha0.7", o);
         }
     }
 

@@ -50,8 +50,8 @@ fn main() {
     let m = model();
     for (name, prune) in [
         ("engine 8x128 dense", PrunePolicy::None),
-        ("engine 8x128 PESF(0.3)", PrunePolicy::Pesf(PesfConfig { alpha: 0.3 })),
-        ("engine 8x128 PESF(0.7)", PrunePolicy::Pesf(PesfConfig { alpha: 0.7 })),
+        ("engine 8x128 PESF(0.3)", PrunePolicy::Pesf(PesfConfig { alpha: 0.3, ..Default::default() })),
+        ("engine 8x128 PESF(0.7)", PrunePolicy::Pesf(PesfConfig { alpha: 0.7, ..Default::default() })),
     ] {
         let weights = m.weights.clone();
         let r = bench(name, || {

@@ -6,7 +6,8 @@
 //! eac-moe info                          environment + artifact status
 //! eac-moe compress  --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]
 //! eac-moe eval      --model <key> [--alpha A] [--scale S]
-//! eac-moe serve     --model <key> [--alpha A] [--requests N] [--len L] [--decode D]
+//! eac-moe serve     --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]
+//!                   [--requests N] [--len L] [--decode D]
 //! eac-moe analyze-es --model <key> [--scale S]
 //! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|all
 //! ```
@@ -61,7 +62,10 @@ fn usage() {
          \x20 info                         environment + artifact status\n\
          \x20 compress   --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]\n\
          \x20 eval       --model <key> [--alpha A] [--scale S]\n\
-         \x20 serve      --model <key> [--alpha A] [--requests N] [--len L] [--decode D] [--workers W] [--threads T]\n\
+         \x20 serve      --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]\n\
+         \x20            [--requests N] [--len L] [--decode D] [--workers W] [--threads T]\n\
+         \x20            (PESF prunes prefill AND decode; --pesf-refresh 0 freezes the\n\
+         \x20             decode mask at prompt statistics; --alpha aliases --pesf-alpha)\n\
          \x20 analyze-es --model <key> [--scale S]\n\
          \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
          \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|all)\n\
@@ -198,7 +202,7 @@ fn cmd_eval(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     let suite = zero_shot_suite(n_items, 13);
     println!("evaluating {} (alpha={alpha})", zoo.key());
     let ppl = if alpha > 0.0 {
-        let cfg = eac_moe::prune::pesf::PesfConfig { alpha };
+        let cfg = eac_moe::prune::pesf::PesfConfig { alpha, ..Default::default() };
         let mcfg = model.cfg().clone();
         eac_moe::eval::ppl::perplexity_with_hooks(&model, &ctx.ppl_eval, || {
             let _ = &cfg;
@@ -236,7 +240,26 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     use eac_moe::serve::{Engine, EngineConfig, PrunePolicy, Request};
     let zoo = model_key(opts);
     let (model, _) = load_or_init_model(zoo);
-    let alpha: f32 = opts.get("alpha").and_then(|s| s.parse().ok()).unwrap_or(0.0);
+    // `--pesf-alpha` is the canonical spelling; `--alpha` stays as an
+    // alias for older scripts.
+    let alpha: f32 = opts
+        .get("pesf-alpha")
+        .or_else(|| opts.get("alpha"))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.0);
+    let defaults = eac_moe::prune::pesf::PesfConfig::default();
+    // Decode-time PESF knobs: refresh cadence (0 freezes the mask at
+    // prompt statistics) and rolling-window length (Eq. 6's online `l`).
+    let refresh_every: usize =
+        opts.get("pesf-refresh").and_then(|s| s.parse().ok()).unwrap_or(defaults.refresh_every);
+    let window: usize =
+        opts.get("pesf-window").and_then(|s| s.parse().ok()).unwrap_or(defaults.window);
+    if window == 0 {
+        // A 0-token window would degenerate every refresh to single-token
+        // statistics (near-total pruning); there is no "windowing off"
+        // sentinel — use --pesf-refresh 0 to freeze the prompt mask.
+        anyhow::bail!("--pesf-window must be >= 1 (use --pesf-refresh 0 to freeze the mask)");
+    }
     let n: u64 = opts.get("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
     let len: usize = opts.get("len").and_then(|s| s.parse().ok()).unwrap_or(128);
     let decode: usize = opts.get("decode").and_then(|s| s.parse().ok()).unwrap_or(0);
@@ -245,7 +268,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     // the global pool (EAC_MOE_THREADS or machine parallelism).
     let threads: Option<usize> = opts.get("threads").and_then(|s| s.parse().ok());
     let prune = if alpha > 0.0 {
-        PrunePolicy::Pesf(eac_moe::prune::pesf::PesfConfig { alpha })
+        PrunePolicy::Pesf(eac_moe::prune::pesf::PesfConfig { alpha, refresh_every, window })
     } else {
         PrunePolicy::None
     };

@@ -244,6 +244,9 @@ impl Model {
         let seq = x.rows;
         let n = cfg.n_experts;
         let k = cfg.top_k;
+        if let Some(rows) = &hooks.seq_expert_masks {
+            assert_eq!(rows.len(), seq, "one seq-mask slot per row");
+        }
 
         // Router logits + softmax scores.
         let pool = &*self.pool;
@@ -269,7 +272,13 @@ impl Model {
                 }
             };
             if let Some(filter) = &hooks.selection_filter {
+                let before = sel.experts.len();
                 filter(li, t, x.row(t), &mut sel);
+                if let Some(stats) = &hooks.filter_drops {
+                    let mut s = stats.borrow_mut();
+                    s.seen += before as u64;
+                    s.dropped += (before - sel.experts.len()) as u64;
+                }
             }
             selections.push(sel);
         }
@@ -295,10 +304,20 @@ impl Model {
             stats.borrow_mut()[li] = mask.iter().filter(|&&m| m).count();
         }
 
-        // Group token-slots by expert, applying the prune masks.
-        let masked = |e: usize| {
+        // Group token-slots by expert, applying the prune masks. Masks are
+        // per (token, expert): the global `expert_mask` and the in-layer
+        // PESF mask apply to every token, while `seq_expert_masks` is
+        // row-indexed so each decode-batch sequence prunes by its own
+        // statistics.
+        let masked = |t: usize, e: usize| {
             hooks.expert_mask.as_ref().map(|m| m[li][e]).unwrap_or(false)
                 || pesf_mask.as_ref().map(|m| m[e]).unwrap_or(false)
+                || hooks
+                    .seq_expert_masks
+                    .as_ref()
+                    .and_then(|rows| rows[t].as_ref())
+                    .map(|m| m[li][e])
+                    .unwrap_or(false)
         };
         // For each token: surviving (expert, score) pairs, renormalized.
         let mut out = Mat::zeros(seq, cfg.d_model);
@@ -308,7 +327,7 @@ impl Model {
                 .experts
                 .iter()
                 .zip(&sel.scores)
-                .filter(|(e, _)| !masked(**e as usize))
+                .filter(|(e, _)| !masked(t, **e as usize))
                 .map(|(&e, &s)| (e as usize, s))
                 .collect();
             let denom: f32 = survivors.iter().map(|(_, s)| *s).sum();
@@ -365,10 +384,11 @@ impl Model {
         (out, MoeLayerOut { expert_tokens })
     }
 
-    /// Single-token decode step with kv cache (generate stage; PESF is
-    /// prefill-only per the paper's Limitations, but masks still apply if
-    /// provided). Thin wrapper over [`Model::decode_step_batch`] with B=1,
-    /// so the two paths cannot drift.
+    /// Single-token decode step with kv cache (generate stage). PESF
+    /// reaches decode through the hooks: `Hooks::seq_expert_masks` (one
+    /// row here) and the global masks all apply. Thin wrapper over
+    /// [`Model::decode_step_batch`] with B=1, so the two paths cannot
+    /// drift.
     pub fn decode_step(&self, token: u32, cache: &mut KvCache, hooks: &Hooks) -> Vec<f32> {
         self.decode_step_batch(&[token], std::slice::from_mut(cache), hooks).data
     }
@@ -384,10 +404,17 @@ impl Model {
     /// of them amortizes its (de)quantized weight traffic over all its
     /// routed tokens instead of re-reading weights per sequence.
     ///
+    /// Per-sequence pruning: `hooks.seq_expert_masks[b]` (if set) is
+    /// sequence `b`'s `layer × expert` PESF mask; [`Model::moe_layer`]
+    /// drops that row's masked experts from its survivor set and
+    /// renormalizes the remaining top-k scores, so a pruned expert
+    /// selected only by masked rows never runs at all.
+    ///
     /// Per-row results are bit-identical to the B=1 path: every op here is
     /// row-independent with a fixed accumulation order (the blocked GEMM
-    /// partitions by row; rmsnorm/softmax are per-row), so batch
-    /// composition cannot change any sequence's output.
+    /// partitions by row; rmsnorm/softmax are per-row; each row's mask
+    /// travels with it), so batch composition cannot change any
+    /// sequence's output.
     pub fn decode_step_batch(
         &self,
         tokens: &[u32],
@@ -675,6 +702,49 @@ mod tests {
                 assert_eq!(batch_caches[b].v[li].row(pos), solo_caches[b].v[li].row(pos));
             }
         }
+    }
+
+    #[test]
+    fn seq_masks_apply_per_row_only() {
+        use crate::model::hooks::SeqExpertMask;
+        use std::sync::Arc;
+        let m = tiny_model();
+        let prompts: [&[u32]; 2] = [&[1, 2, 3], &[7, 11, 13, 17]];
+        let mk_caches = || -> Vec<KvCache> {
+            prompts
+                .iter()
+                .map(|p| {
+                    let mut c = KvCache::new(m.cfg());
+                    m.prefill_into_cache(p, &Hooks::none(), &mut c);
+                    c
+                })
+                .collect()
+        };
+        let toks = [2u32, 5];
+        // All-false masks must be bit-identical to unpruned decode.
+        let open: SeqExpertMask = Arc::new(vec![vec![false; 4]; 2]);
+        let mut c1 = mk_caches();
+        let a = m.decode_step_batch(
+            &toks,
+            &mut c1,
+            &Hooks::with_seq_masks(vec![Some(open.clone()), Some(open)]),
+        );
+        let mut c2 = mk_caches();
+        let b = m.decode_step_batch(&toks, &mut c2, &Hooks::none());
+        assert_eq!(a.data, b.data, "all-false seq masks must be a no-op");
+        // Masking every expert for row 1 only: row 0 unchanged bitwise,
+        // row 1 differs (its MoE path collapses to the shared expert).
+        let closed: SeqExpertMask = Arc::new(vec![vec![true; 4]; 2]);
+        let mut c3 = mk_caches();
+        let c = m.decode_step_batch(
+            &toks,
+            &mut c3,
+            &Hooks::with_seq_masks(vec![None, Some(closed)]),
+        );
+        assert_eq!(c.row(0), b.row(0), "unmasked row must be unaffected");
+        let differs = c.row(1).iter().zip(b.row(1)).any(|(x, y)| (x - y).abs() > 1e-5);
+        assert!(differs, "masked row must change");
+        assert!(c.data.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -10,6 +10,12 @@
 
 use crate::tensor::Mat;
 use std::cell::RefCell;
+use std::sync::Arc;
+
+/// One sequence's `layer × expert` prune mask (true = skip the expert),
+/// shared between the engine's per-sequence PESF state and the per-step
+/// decode hooks without copying.
+pub type SeqExpertMask = Arc<Vec<Vec<bool>>>;
 
 /// One token's routing decision in one layer.
 #[derive(Clone, Debug, PartialEq)]
@@ -65,6 +71,35 @@ impl SelectionRecord {
     pub fn n_tokens(&self, layer: usize) -> usize {
         self.layers[layer].len()
     }
+
+    /// One token's selections across all layers: `out[layer]` = experts
+    /// chosen for token `t` in that layer. Used by the engine to feed a
+    /// decode step's routing into the per-sequence PESF rolling window
+    /// (in a batched decode record, token index == batch row).
+    pub fn token_experts(&self, t: usize) -> Vec<Vec<u16>> {
+        self.layers.iter().map(|l| l[t].experts.clone()).collect()
+    }
+}
+
+/// Running count of expert slots dropped by [`Hooks::selection_filter`]
+/// (see [`Hooks::filter_drops`]): `dropped / seen` is the fraction of
+/// router-selected expert executions the filter actually skipped.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FilterDropStats {
+    /// Expert slots selected by the router before filtering.
+    pub seen: u64,
+    /// Expert slots the filter removed.
+    pub dropped: u64,
+}
+
+impl FilterDropStats {
+    pub fn rate(&self) -> f32 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.dropped as f32 / self.seen as f32
+        }
+    }
 }
 
 /// Forced routing: replay `records[layer][token]` instead of computing
@@ -95,10 +130,23 @@ pub struct Hooks {
     /// If set (layer -> mask of experts to SKIP), prune at inference
     /// (PESF applies this per-sequence; see `prune::pesf`).
     pub expert_mask: Option<Vec<Vec<bool>>>,
+    /// If set, per-row expert prune masks: `seq_expert_masks[row]` is that
+    /// row's `layer × expert` mask, or `None` for an unpruned row. Length
+    /// must equal the number of rows in the forward. This is how the
+    /// serving engine carries each sequence's PESF mask through
+    /// [`crate::model::Model::decode_step_batch`], where row `b` is
+    /// sequence `b` — mixed batches of pruned and unpruned sequences are
+    /// expressed as `Some`/`None` rows. OR-combined with `expert_mask` and
+    /// the single-pass `pesf_alpha` mask.
+    pub seq_expert_masks: Option<Vec<Option<SeqExpertMask>>>,
     /// If set, invoked per token after top-k selection and before expert
     /// dispatch; may drop entries from the selection (EES/ODP pruning).
     /// Arguments: layer index, token index, token's MoE-input row.
     pub selection_filter: Option<SelectionFilter>,
+    /// If set alongside `selection_filter`, accumulates how many selected
+    /// expert slots the filter dropped vs how many it saw — the actual
+    /// EES/ODP prune rate (the engine used to report 0.0 for both).
+    pub filter_drops: Option<RefCell<FilterDropStats>>,
     /// PESF (paper Eq. 6), single-pass: within each MoE layer, after the
     /// router has scored every token but before expert dispatch, prune
     /// experts selected fewer than `(l*K/N) * alpha` times for this
@@ -142,6 +190,12 @@ impl Hooks {
         }
     }
 
+    /// Hooks carrying one prune mask per batch row (None = unpruned row) —
+    /// the decode-time PESF entry point.
+    pub fn with_seq_masks(masks: Vec<Option<SeqExpertMask>>) -> Self {
+        Hooks { seq_expert_masks: Some(masks), ..Default::default() }
+    }
+
     /// Take the recorded selections out of the hook.
     pub fn take_selections(self) -> Option<SelectionRecord> {
         self.record_selections.map(|r| r.into_inner())
@@ -175,5 +229,23 @@ mod tests {
     fn empty_layer_frequency_is_zero() {
         let rec = SelectionRecord::with_layers(1);
         assert_eq!(rec.frequency(0, 3), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn token_experts_is_layer_major() {
+        let mut rec = SelectionRecord::with_layers(2);
+        rec.layers[0].push(TokenSelection { experts: vec![0, 2], scores: vec![0.6, 0.3] });
+        rec.layers[0].push(TokenSelection { experts: vec![1], scores: vec![0.9] });
+        rec.layers[1].push(TokenSelection { experts: vec![3], scores: vec![0.8] });
+        rec.layers[1].push(TokenSelection { experts: vec![0, 1], scores: vec![0.5, 0.4] });
+        assert_eq!(rec.token_experts(0), vec![vec![0, 2], vec![3]]);
+        assert_eq!(rec.token_experts(1), vec![vec![1], vec![0, 1]]);
+    }
+
+    #[test]
+    fn filter_drop_rate() {
+        let s = FilterDropStats { seen: 8, dropped: 2 };
+        assert!((s.rate() - 0.25).abs() < 1e-6);
+        assert_eq!(FilterDropStats::default().rate(), 0.0);
     }
 }

@@ -11,5 +11,5 @@ pub mod weights;
 
 pub use config::{ModelConfig, ZooModel};
 pub use forward::{expert_forward, expert_forward_on, KvCache, Model, MoeLayerOut};
-pub use hooks::{ForcedSelections, Hooks, SelectionRecord};
+pub use hooks::{FilterDropStats, ForcedSelections, Hooks, SelectionRecord, SeqExpertMask};
 pub use weights::{ExpertWeights, LayerWeights, WeightMat, Weights};

@@ -1,7 +1,9 @@
 //! Dynamic expert pruning (paper §5) and the baselines of Table 3.
 //!
 //! * [`pesf`] — the paper's contribution: per-sequence frequency pruning
-//!   (Eq. 6) applied during prefill.
+//!   (Eq. 6) applied during prefill, and extended online into batched
+//!   decode via a rolling selection-frequency window
+//!   ([`pesf::PesfDecodeState`]).
 //! * [`ees`] — Efficient Experts Skipping (Lu et al., 2024): per-token,
 //!   drop the least-contributing selected expert when its score ratio to
 //!   the top expert falls under a calibrated median threshold.
@@ -14,4 +16,4 @@ pub mod pesf;
 
 pub use ees::{calibrate_ees_threshold, EesPruner};
 pub use odp::OdpPruner;
-pub use pesf::{pesf_mask, PesfConfig, PesfStats};
+pub use pesf::{pesf_mask, PesfConfig, PesfDecodeState, PesfStats};

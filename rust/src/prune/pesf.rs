@@ -16,26 +16,61 @@
 //! router is <0.03% of parameters), derives the mask, then runs the MoE
 //! layers with pruned experts skipped entirely — which is what converts the
 //! pruning rate into wall-clock speedup.
+//!
+//! ## Decode-time PESF (extends the paper)
+//!
+//! The paper's Limitations section disables PESF during the generate stage:
+//! its masks are frozen at prompt statistics, which drift as the
+//! continuation grows. This reproduction *extends* PESF into decode, where
+//! serving spends nearly all its wall-clock: each sequence carries its
+//! prefill-derived mask into [`crate::model::Model::decode_step_batch`]
+//! (via `Hooks::seq_expert_masks`), and [`PesfDecodeState`] keeps a
+//! **rolling selection-frequency window** over the most recent `window`
+//! tokens (prompt tail, then generated tokens as they arrive). Every
+//! `refresh_every` decode tokens the mask is re-derived from the window by
+//! the same Eq. 6 threshold — `l` is simply the window length, so Eq. 6 is
+//! applied *online* instead of once at the prompt. `refresh_every = 0`
+//! freezes the mask at prompt statistics. With `alpha = 0` every mask is
+//! all-false and decode is bit-identical to the unpruned path (pinned by
+//! `tests/integration_serving.rs`).
+//!
+//! CLI: `eac-moe serve --pesf-alpha A --pesf-refresh R --pesf-window W`.
 
-use crate::model::hooks::{Hooks, SelectionRecord};
+use crate::model::hooks::{Hooks, SelectionRecord, SeqExpertMask};
 use crate::model::Model;
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// PESF configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct PesfConfig {
     /// Pruning threshold alpha in (0, 1]; 0 disables pruning.
     pub alpha: f32,
+    /// Decode-time mask refresh cadence: re-derive the mask from the
+    /// rolling window every this many generated tokens (0 = never refresh;
+    /// the mask stays frozen at prompt statistics).
+    pub refresh_every: usize,
+    /// Rolling selection-frequency window length, in tokens — Eq. 6's `l`
+    /// for the online decode-time refresh. Seeded with the prompt's last
+    /// `window` tokens, then slides over generated tokens.
+    pub window: usize,
+}
+
+impl Default for PesfConfig {
+    fn default() -> Self {
+        PesfConfig { alpha: 0.0, refresh_every: 16, window: 64 }
+    }
 }
 
 impl PesfConfig {
     /// The paper's conservative sweet spot.
     pub fn conservative() -> Self {
-        PesfConfig { alpha: 0.3 }
+        PesfConfig { alpha: 0.3, ..Default::default() }
     }
 
     /// The paper's aggressive sweet spot.
     pub fn aggressive() -> Self {
-        PesfConfig { alpha: 0.7 }
+        PesfConfig { alpha: 0.7, ..Default::default() }
     }
 }
 
@@ -138,6 +173,114 @@ pub fn pesf_mask_from_counts(
     (mask, stats)
 }
 
+/// Online PESF state for one decoding sequence: the rolling
+/// selection-frequency window that re-derives the `layer × expert` mask
+/// every [`PesfConfig::refresh_every`] generated tokens (Eq. 6 with `l` =
+/// window length). Built from the prefill's [`SelectionRecord`]; the
+/// initial mask equals the mask the PESF prefill itself applied (same
+/// per-layer counts, same per-layer `l`).
+#[derive(Clone, Debug)]
+pub struct PesfDecodeState {
+    cfg: PesfConfig,
+    n_experts: usize,
+    top_k: usize,
+    /// Most recent `cfg.window` tokens: each entry is one token's selected
+    /// experts per layer (`entry[layer]`), prompt tail first.
+    window: VecDeque<Vec<Vec<u16>>>,
+    /// Running per-layer selection counts over `window`.
+    counts: Vec<Vec<u64>>,
+    /// Generated tokens observed since the last mask refresh.
+    since_refresh: usize,
+    mask: SeqExpertMask,
+    prune_rate: f32,
+}
+
+impl PesfDecodeState {
+    /// Seed the state from a prefill's routing record: initial mask from
+    /// the *full* prompt (exactly what [`pesf_hooks`] pruned with), window
+    /// from the prompt's last `cfg.window` tokens.
+    pub fn from_prefill(
+        record: &SelectionRecord,
+        n_experts: usize,
+        top_k: usize,
+        cfg: PesfConfig,
+    ) -> Self {
+        let n_layers = record.layers.len();
+        let counts: Vec<Vec<u64>> = (0..n_layers).map(|li| record.counts(li, n_experts)).collect();
+        let lens: Vec<usize> = (0..n_layers).map(|li| record.n_tokens(li)).collect();
+        let (mask, stats) = pesf_mask_from_counts(&counts, &lens, n_experts, top_k, cfg);
+        let l = lens.iter().copied().min().unwrap_or(0);
+        let start = l.saturating_sub(cfg.window.max(1));
+        let mut window: VecDeque<Vec<Vec<u16>>> = VecDeque::with_capacity(l - start);
+        for t in start..l {
+            window.push_back(record.token_experts(t));
+        }
+        let mut wcounts = vec![vec![0u64; n_experts]; n_layers];
+        for tok in &window {
+            for (li, experts) in tok.iter().enumerate() {
+                for &e in experts {
+                    wcounts[li][e as usize] += 1;
+                }
+            }
+        }
+        PesfDecodeState {
+            cfg,
+            n_experts,
+            top_k,
+            window,
+            counts: wcounts,
+            since_refresh: 0,
+            mask: Arc::new(mask),
+            prune_rate: stats.prune_rate(),
+        }
+    }
+
+    /// The mask currently in effect (cheap Arc clone; the engine hands it
+    /// to `Hooks::seq_expert_masks` every decode step).
+    pub fn mask(&self) -> SeqExpertMask {
+        self.mask.clone()
+    }
+
+    /// Fraction of experts the current mask prunes (mean over layers).
+    pub fn prune_rate(&self) -> f32 {
+        self.prune_rate
+    }
+
+    /// Feed one generated token's routing (from the decode step's
+    /// [`SelectionRecord`], layer-major as [`SelectionRecord::token_experts`]
+    /// returns) into the window; refresh the mask when the cadence is due.
+    pub fn observe(&mut self, token: Vec<Vec<u16>>) {
+        for (li, experts) in token.iter().enumerate() {
+            for &e in experts {
+                self.counts[li][e as usize] += 1;
+            }
+        }
+        self.window.push_back(token);
+        while self.window.len() > self.cfg.window.max(1) {
+            let old = self.window.pop_front().unwrap();
+            for (li, experts) in old.iter().enumerate() {
+                for &e in experts {
+                    self.counts[li][e as usize] -= 1;
+                }
+            }
+        }
+        self.since_refresh += 1;
+        if self.cfg.refresh_every > 0 && self.since_refresh >= self.cfg.refresh_every {
+            self.refresh();
+            self.since_refresh = 0;
+        }
+    }
+
+    /// Re-derive the mask from the window counts (Eq. 6, `l` = window len).
+    fn refresh(&mut self) {
+        let lens = vec![self.window.len(); self.counts.len()];
+        let (mask, stats) =
+            pesf_mask_from_counts(&self.counts, &lens, self.n_experts, self.top_k, self.cfg);
+        self.mask = Arc::new(mask);
+        self.prune_rate = stats.prune_rate();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,15 +307,15 @@ mod tests {
         // N=4, K=1, l=8 -> balanced count = 2. alpha=0.5 -> threshold 1.0:
         // prune experts with c < 1 (i.e. c == 0).
         let rec = record_with_counts(&[4, 2, 2, 0], 1);
-        let (mask, stats) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 0.5 });
+        let (mask, stats) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 0.5, ..Default::default() });
         assert_eq!(mask[0], vec![false, false, false, true]);
         assert_eq!(stats.pruned_per_layer[0], 1);
         // alpha=1.0 -> threshold 2.0: prune c < 2 (only expert 3).
-        let (mask, _) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 1.0 });
+        let (mask, _) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 1.0, ..Default::default() });
         assert_eq!(mask[0], vec![false, false, false, true]);
         // skewed: c=[6,1,1,0], alpha=1.0 -> prune c<2: experts 1,2,3.
         let rec2 = record_with_counts(&[6, 1, 1, 0], 1);
-        let (mask2, st2) = pesf_mask(&rec2, 4, 1, PesfConfig { alpha: 1.0 });
+        let (mask2, st2) = pesf_mask(&rec2, 4, 1, PesfConfig { alpha: 1.0, ..Default::default() });
         assert_eq!(mask2[0], vec![false, true, true, true]);
         assert!((st2.prune_rate() - 0.75).abs() < 1e-6);
     }
@@ -180,7 +323,7 @@ mod tests {
     #[test]
     fn alpha_zero_prunes_nothing() {
         let rec = record_with_counts(&[5, 0, 0, 0], 1);
-        let (mask, stats) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 0.0 });
+        let (mask, stats) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 0.0, ..Default::default() });
         assert!(mask[0].iter().all(|&m| !m));
         assert_eq!(stats.prune_rate(), 0.0);
     }
@@ -195,7 +338,7 @@ mod tests {
             let rec = record_with_counts(&counts, 1);
             let mut last = -1.0f32;
             for a in [0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
-                let (_, st) = pesf_mask(&rec, n, 1, PesfConfig { alpha: a });
+                let (_, st) = pesf_mask(&rec, n, 1, PesfConfig { alpha: a, ..Default::default() });
                 let rate = st.prune_rate();
                 assert!(rate >= last, "alpha={a}: {rate} < {last} counts={counts:?}");
                 last = rate;
@@ -225,7 +368,7 @@ mod tests {
         // Some pruning should happen at alpha=0.7 on a random router.
         assert!(stats.prune_rate() >= 0.0);
         // alpha=0 reproduces the dense output exactly.
-        let (l0, st0) = pesf_prefill(&model, &tokens, PesfConfig { alpha: 0.0 });
+        let (l0, st0) = pesf_prefill(&model, &tokens, PesfConfig { alpha: 0.0, ..Default::default() });
         assert_eq!(st0.prune_rate(), 0.0);
         let dense = model.forward(&tokens);
         for (a, b) in l0.data.iter().zip(&dense.data) {
@@ -237,9 +380,9 @@ mod tests {
     fn counts_variant_matches_record_variant() {
         let rec = record_with_counts(&[6, 1, 1, 0], 1);
         let counts = vec![rec.counts(0, 4)];
-        let (m1, _) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 0.8 });
+        let (m1, _) = pesf_mask(&rec, 4, 1, PesfConfig { alpha: 0.8, ..Default::default() });
         let (m2, _) =
-            pesf_mask_from_counts(&counts, &[rec.n_tokens(0)], 4, 1, PesfConfig { alpha: 0.8 });
+            pesf_mask_from_counts(&counts, &[rec.n_tokens(0)], 4, 1, PesfConfig { alpha: 0.8, ..Default::default() });
         assert_eq!(m1, m2);
     }
 
@@ -262,15 +405,78 @@ mod tests {
         let counts = vec![rec.counts(0, 4), rec.counts(1, 4)];
         let lens = vec![rec.n_tokens(0), rec.n_tokens(1)];
         for alpha in [0.3, 0.8, 1.0] {
-            let (m1, s1) = pesf_mask(&rec, 4, 1, PesfConfig { alpha });
-            let (m2, s2) = pesf_mask_from_counts(&counts, &lens, 4, 1, PesfConfig { alpha });
+            let (m1, s1) = pesf_mask(&rec, 4, 1, PesfConfig { alpha, ..Default::default() });
+            let (m2, s2) = pesf_mask_from_counts(&counts, &lens, 4, 1, PesfConfig { alpha, ..Default::default() });
             assert_eq!(m1, m2, "alpha={alpha}");
             assert_eq!(s1.pruned_per_layer, s2.pruned_per_layer, "alpha={alpha}");
         }
         // Pin the disagreement the bug caused: layer 1's threshold with a
         // global l=8 would prune both its experts (c=1 < 0.8*2); with the
         // correct l=2 threshold (0.4) neither is pruned.
-        let (m, _) = pesf_mask_from_counts(&counts, &lens, 4, 1, PesfConfig { alpha: 0.8 });
+        let (m, _) = pesf_mask_from_counts(&counts, &lens, 4, 1, PesfConfig { alpha: 0.8, ..Default::default() });
         assert_eq!(m[1], vec![false, false, true, true]);
+    }
+
+    /// A record whose every token selects `expert` (top_k = 1).
+    fn uniform_record(expert: u16, l: usize) -> SelectionRecord {
+        let mut r = SelectionRecord::with_layers(1);
+        for _ in 0..l {
+            r.layers[0].push(TokenSelection { experts: vec![expert], scores: vec![1.0] });
+        }
+        r
+    }
+
+    #[test]
+    fn decode_state_initial_mask_matches_prompt_mask() {
+        let rec = record_with_counts(&[6, 1, 1, 0], 1);
+        let cfg = PesfConfig { alpha: 0.8, refresh_every: 4, window: 8 };
+        let st = PesfDecodeState::from_prefill(&rec, 4, 1, cfg);
+        let (want, wstats) = pesf_mask(&rec, 4, 1, cfg);
+        assert_eq!(*st.mask(), want);
+        assert!((st.prune_rate() - wstats.prune_rate()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_state_refreshes_only_at_cadence_and_tracks_drift() {
+        // Prompt: every token routes to expert 0 -> experts 1..3 pruned.
+        let cfg = PesfConfig { alpha: 1.0, refresh_every: 4, window: 4 };
+        let st0 = PesfDecodeState::from_prefill(&uniform_record(0, 8), 4, 1, cfg);
+        assert_eq!(*st0.mask(), vec![vec![false, true, true, true]]);
+        // Decode drifts entirely to expert 2. Before `refresh_every`
+        // observations the mask must stay frozen at prompt statistics...
+        let mut st = st0.clone();
+        for i in 0..3 {
+            st.observe(vec![vec![2]]);
+            assert_eq!(*st.mask(), *st0.mask(), "mask refreshed early at token {i}");
+        }
+        // ...and the 4th observation refreshes it. By then the window
+        // (len 4) has slid entirely onto decode tokens: counts are
+        // [0, 0, 4, 0], threshold = 4*1/4*1.0 = 1, so expert 2 is revived
+        // and the prompt-hot expert 0 is now pruned along with 1 and 3.
+        st.observe(vec![vec![2]]);
+        assert_eq!(*st.mask(), vec![vec![true, true, false, true]]);
+        assert!((st.prune_rate() - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_state_refresh_zero_freezes_mask() {
+        let cfg = PesfConfig { alpha: 1.0, refresh_every: 0, window: 4 };
+        let mut st = PesfDecodeState::from_prefill(&uniform_record(0, 8), 4, 1, cfg);
+        let frozen = st.mask();
+        for _ in 0..12 {
+            st.observe(vec![vec![2]]);
+        }
+        assert_eq!(*st.mask(), *frozen, "refresh_every=0 must freeze the prompt mask");
+    }
+
+    #[test]
+    fn decode_state_alpha_zero_mask_stays_open() {
+        let cfg = PesfConfig { alpha: 0.0, refresh_every: 1, window: 2 };
+        let mut st = PesfDecodeState::from_prefill(&uniform_record(0, 6), 4, 1, cfg);
+        for _ in 0..5 {
+            st.observe(vec![vec![3]]);
+            assert!(st.mask().iter().all(|l| l.iter().all(|&m| !m)));
+            assert_eq!(st.prune_rate(), 0.0);
+        }
     }
 }

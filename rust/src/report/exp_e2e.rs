@@ -51,7 +51,7 @@ pub fn table4(scale: f64) -> Result<()> {
         );
         let lat_pesf = prefill_latency(
             crate::model::Model::new(q.weights.clone()),
-            PrunePolicy::Pesf(PesfConfig { alpha: 0.3 }),
+            PrunePolicy::Pesf(PesfConfig { alpha: 0.3, ..Default::default() }),
             n_reqs,
             len,
         );
@@ -129,7 +129,7 @@ pub fn table5(scale: f64) -> Result<()> {
         let eac = measure_pruned(&q_qesc, &ctx, &suite, 0.3);
         let eac_lat = prefill_latency(
             crate::model::Model::new(q_qesc.weights.clone()),
-            PrunePolicy::Pesf(PesfConfig { alpha: 0.3 }),
+            PrunePolicy::Pesf(PesfConfig { alpha: 0.3, ..Default::default() }),
             n_reqs,
             len,
         );

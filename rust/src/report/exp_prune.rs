@@ -40,7 +40,7 @@ pub fn fig7(scale: f64) -> Result<()> {
         let policy = if alpha == 0.0 {
             PrunePolicy::None
         } else {
-            PrunePolicy::Pesf(PesfConfig { alpha })
+            PrunePolicy::Pesf(PesfConfig { alpha, ..Default::default() })
         };
         let engine = crate::serve::Engine::new(
             crate::model::Model::new(model.weights.clone()),
@@ -107,8 +107,8 @@ pub fn table3(scale: f64) -> Result<()> {
             (0, PrunePolicy::None),
             (1, PrunePolicy::Ees(ees)),
             (2, PrunePolicy::Odp(odp)),
-            (3, PrunePolicy::Pesf(PesfConfig { alpha: 0.3 })),
-            (4, PrunePolicy::Pesf(PesfConfig { alpha: 0.7 })),
+            (3, PrunePolicy::Pesf(PesfConfig { alpha: 0.3, ..Default::default() })),
+            (4, PrunePolicy::Pesf(PesfConfig { alpha: 0.7, ..Default::default() })),
         ];
         let mut base_lat = 1.0f64;
         for (ri, policy) in policies {

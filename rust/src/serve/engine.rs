@@ -1,10 +1,19 @@
 //! The serving engine: worker threads drain the batcher and run PESF-aware
 //! prefill (+ optional greedy decode) over the model.
 //!
-//! PESF integration (paper §5 + Limitations): the mask is computed from the
-//! router's selections on the request's own sequence (Eq. 6) and applied to
-//! the *prefill* MoE layers; decode runs unpruned. EES/ODP plug in as
-//! per-token selection filters instead.
+//! PESF integration (paper §5, extended past its Limitations): the mask is
+//! computed from the router's selections on the request's own sequence
+//! (Eq. 6) and applied to the *prefill* MoE layers — and then **carried
+//! into decode**. Each live sequence owns a
+//! [`crate::prune::pesf::PesfDecodeState`]: its prefill-derived
+//! `layer × expert` mask rides every [`Model::decode_step_batch`] call via
+//! `Hooks::seq_expert_masks` (per batch row, so mixed batches prune each
+//! sequence by its own statistics), and a rolling selection-frequency
+//! window refreshes the mask every `refresh_every` generated tokens (Eq. 6
+//! applied online). With `alpha = 0` the masks are all-false and decode is
+//! bit-identical to the unpruned path. EES/ODP plug in as per-token
+//! selection filters instead (prefill only) and report their actual
+//! selection-drop rate.
 //!
 //! Serving shape (the "fast as the hardware allows" hot path): a drained
 //! batch is processed as a unit. Each request's prompt is forwarded
@@ -26,17 +35,20 @@
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServeMetrics;
 use super::request::{FinishReason, Request, Response};
-use crate::model::hooks::Hooks;
+use crate::model::hooks::{FilterDropStats, Hooks, SelectionRecord};
 use crate::model::{KvCache, Model};
 use crate::prune::ees::EesPruner;
 use crate::prune::odp::OdpPruner;
-use crate::prune::pesf::PesfConfig;
+use crate::prune::pesf::{PesfConfig, PesfDecodeState};
 use crate::tensor::ops::log_softmax_into;
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Which dynamic pruning to apply during prefill.
+/// Which dynamic pruning to apply. PESF prunes prefill *and* decode (the
+/// mask follows each sequence through the batched decode loop, refreshed
+/// online per [`PesfConfig`]); EES/ODP filter selections during prefill.
 #[derive(Clone, Copy, Debug)]
 pub enum PrunePolicy {
     None,
@@ -137,11 +149,18 @@ impl Engine {
             ..Default::default()
         };
         let mut prune_sum = 0f32;
+        let mut prefilled = 0usize;
+        let mut decode_prune_sum = 0f32;
+        let mut decoded = 0usize;
         for r in &resps {
             // Admission rejections never ran a prefill or decode; they
-            // only contribute queue/e2e samples.
+            // only contribute queue/e2e samples. Averaging their
+            // `prune_rate: 0.0` in with real prefills understated the
+            // prune rate, so they are excluded from that mean too.
             if !r.finish_reason.is_rejection() {
                 metrics.prefill.record(r.prefill_secs);
+                prune_sum += r.prune_rate;
+                prefilled += 1;
             }
             // Every decode-requested response records into the decode
             // percentiles — including requests whose whole budget was the
@@ -152,11 +171,18 @@ impl Engine {
             if !r.generated.is_empty() {
                 metrics.decode.record(r.decode_secs);
             }
+            // Decode-phase prune rate averages over requests that took at
+            // least one batched decode step (the first generated token is
+            // the prefill's own next-token, not a decode step).
+            if r.generated.len() > 1 {
+                decode_prune_sum += r.decode_prune_rate;
+                decoded += 1;
+            }
             metrics.queue.record(r.queue_secs);
             metrics.e2e.record(r.e2e_secs);
-            prune_sum += r.prune_rate;
         }
-        metrics.mean_prune_rate = prune_sum / resps.len().max(1) as f32;
+        metrics.mean_prune_rate = prune_sum / prefilled.max(1) as f32;
+        metrics.mean_decode_prune_rate = decode_prune_sum / decoded.max(1) as f32;
         (resps, metrics)
     }
 }
@@ -173,6 +199,12 @@ struct DecodeSeq {
     decode_secs: f64,
     /// Request arrival, for true arrival-to-completion e2e.
     arrival: Instant,
+    /// Decode-time PESF: this sequence's mask + rolling-window state
+    /// (None for unpruned policies).
+    pesf: Option<PesfDecodeState>,
+    /// Sum over decode steps of the mask prune fraction in effect.
+    decode_prune_sum: f64,
+    decode_steps: usize,
 }
 
 impl DecodeSeq {
@@ -193,6 +225,10 @@ impl DecodeSeq {
     fn finish(mut self, reason: FinishReason) -> Response {
         self.resp.finish_reason = reason;
         self.resp.decode_secs = self.decode_secs;
+        if self.decode_steps > 0 {
+            self.resp.decode_prune_rate =
+                (self.decode_prune_sum / self.decode_steps as f64) as f32;
+        }
         self.resp.e2e_secs = self.arrival.elapsed().as_secs_f64();
         self.resp
     }
@@ -247,6 +283,7 @@ fn process_batch(
                 decode_secs: 0.0,
                 e2e_secs: req.arrival.elapsed().as_secs_f64(),
                 prune_rate: 0.0,
+                decode_prune_rate: 0.0,
             });
             return;
         }
@@ -256,21 +293,24 @@ fn process_batch(
                 resp.e2e_secs = req.arrival.elapsed().as_secs_f64();
                 finished.push(resp);
             }
-            (resp, Some((seq_cache, next))) => {
+            (resp, Some(handoff)) => {
                 let mut seq = DecodeSeq {
                     resp,
                     decode_tokens: req.decode_tokens,
-                    cur: next,
+                    cur: handoff.next,
                     decode_secs: 0.0,
                     arrival: req.arrival,
+                    pesf: handoff.pesf,
+                    decode_prune_sum: 0.0,
+                    decode_steps: 0,
                 };
                 // The first generated token (the prefill's greedy next) may
                 // already exhaust the budget or the cache.
-                match seq.commit_and_check(seq_cache.len, max_seq) {
+                match seq.commit_and_check(handoff.cache.len, max_seq) {
                     Some(reason) => finished.push(seq.finish(reason)),
                     None => {
                         active.push(seq);
-                        caches.push(seq_cache);
+                        caches.push(handoff.cache);
                     }
                 }
             }
@@ -282,15 +322,46 @@ fn process_batch(
     }
 
     // Continuous batched greedy decode: one token for every live sequence
-    // per iteration, all through a single decode_step_batch call.
+    // per iteration, all through a single decode_step_batch call. Under
+    // PESF each row carries its own sequence's expert mask, and the step's
+    // routing record feeds every sequence's rolling frequency window.
+    let pesf_decode = matches!(prune, PrunePolicy::Pesf(_));
+    // Frozen-mask mode (refresh_every == 0) never reads the rolling
+    // window, so skip the per-step routing record entirely — recording
+    // (and the observe() it would feed) is pure hot-loop overhead there.
+    let pesf_refresh = matches!(prune, PrunePolicy::Pesf(pc) if pc.refresh_every > 0);
+    let n_layers = model.cfg().n_layers;
     while !active.is_empty() {
         let toks: Vec<u32> = active.iter().map(|s| s.cur).collect();
+        let step_hooks = if pesf_decode {
+            Hooks {
+                seq_expert_masks: Some(
+                    active.iter().map(|s| s.pesf.as_ref().map(|p| p.mask())).collect(),
+                ),
+                record_selections: pesf_refresh
+                    .then(|| RefCell::new(SelectionRecord::with_layers(n_layers))),
+                ..Default::default()
+            }
+        } else {
+            Hooks::none()
+        };
         let t_step = Instant::now();
-        let logits = model.decode_step_batch(&toks, &mut caches, &Hooks::none());
+        let logits = model.decode_step_batch(&toks, &mut caches, &step_hooks);
         let step_secs = t_step.elapsed().as_secs_f64();
+        let step_record = step_hooks.take_selections();
         for (b, seq) in active.iter_mut().enumerate() {
             seq.decode_secs += step_secs;
             seq.cur = crate::tensor::ops::topk_indices(logits.row(b), 1)[0] as u32;
+            if let Some(p) = seq.pesf.as_mut() {
+                // Account the mask that was in effect for this step, then
+                // feed the step's routing into the window (possibly
+                // refreshing the mask for the next step).
+                seq.decode_prune_sum += p.prune_rate() as f64;
+                seq.decode_steps += 1;
+                if let Some(rec) = &step_record {
+                    p.observe(rec.token_experts(b));
+                }
+            }
         }
         // Commit and retire (swap_remove keeps `caches` aligned with
         // `active`; per-row outputs are batch-order independent).
@@ -319,15 +390,23 @@ fn process_batch(
     out.lock().unwrap().extend(finished);
 }
 
+/// What a decode-bound request carries out of its prefill: the KV cache
+/// exported by that same pass, the greedy next token to seed the decode
+/// loop, and (under PESF) the sequence's online pruning state.
+struct PrefillHandoff {
+    cache: KvCache,
+    next: u32,
+    pesf: Option<PesfDecodeState>,
+}
+
 /// Prefill one request (single forward pass — PESF/EES/ODP hooks applied
 /// per policy). Returns the response scaffold and, when the request wants
-/// decode, the KV cache exported by that same pass plus the greedy next
-/// token to seed the decode loop with.
+/// decode, the [`PrefillHandoff`] produced by that same pass.
 fn prefill_request(
     model: &Model,
     prune: PrunePolicy,
     req: &Request,
-) -> (Response, Option<(KvCache, u32)>) {
+) -> (Response, Option<PrefillHandoff>) {
     let queue_secs = req.arrival.elapsed().as_secs_f64();
     let mcfg = model.cfg();
     // Only decode requests pay for a cache allocation.
@@ -337,27 +416,52 @@ fn prefill_request(
         Some(c) => model.prefill_into_cache(&req.tokens, hooks, c),
         None => model.forward_with_hooks(&req.tokens, hooks),
     };
+    let mut pesf_state: Option<PesfDecodeState> = None;
     let (logits, prune_rate) = match prune {
         PrunePolicy::None => (run(&Hooks::none(), &mut cache), 0.0),
         PrunePolicy::Pesf(pc) => {
             // Single-pass PESF: the mask is derived per layer between
             // routing and expert dispatch (Eq. 6; Appendix A.1). Decode
-            // continues from this (pruned) prefill's exported KV.
-            let hooks = crate::prune::pesf::pesf_hooks(mcfg.n_layers, pc);
+            // continues from this (pruned) prefill's exported KV. For
+            // decode requests the same pass also records the routing, so
+            // the sequence's decode-time mask + rolling window seed from
+            // the prompt statistics without any extra forward.
+            let mut hooks = crate::prune::pesf::pesf_hooks(mcfg.n_layers, pc);
+            if cache.is_some() {
+                hooks.record_selections =
+                    Some(RefCell::new(SelectionRecord::with_layers(mcfg.n_layers)));
+            }
             let logits = run(&hooks, &mut cache);
+            if let Some(rec) = hooks.record_selections.take() {
+                pesf_state = Some(PesfDecodeState::from_prefill(
+                    &rec.into_inner(),
+                    mcfg.n_experts,
+                    mcfg.top_k,
+                    pc,
+                ));
+            }
             let stats = crate::prune::pesf::PesfStats {
                 pruned_per_layer: hooks.pesf_pruned.unwrap().into_inner(),
                 n_experts: mcfg.n_experts,
             };
             (logits, stats.prune_rate())
         }
-        PrunePolicy::Ees(p) => {
-            let hooks = Hooks { selection_filter: Some(p.filter()), ..Default::default() };
-            (run(&hooks, &mut cache), 0.0)
-        }
-        PrunePolicy::Odp(p) => {
-            let hooks = Hooks { selection_filter: Some(p.filter()), ..Default::default() };
-            (run(&hooks, &mut cache), 0.0)
+        PrunePolicy::Ees(_) | PrunePolicy::Odp(_) => {
+            let filter = match prune {
+                PrunePolicy::Ees(p) => p.filter(),
+                PrunePolicy::Odp(p) => p.filter(),
+                _ => unreachable!(),
+            };
+            let hooks = Hooks {
+                selection_filter: Some(filter),
+                filter_drops: Some(RefCell::new(FilterDropStats::default())),
+                ..Default::default()
+            };
+            let logits = run(&hooks, &mut cache);
+            // Both policies hardcoded prune_rate 0.0 before even though
+            // their filters drop experts; report the measured drop rate.
+            let rate = hooks.filter_drops.unwrap().into_inner().rate();
+            (logits, rate)
         }
     };
     let prefill_secs = t0.elapsed().as_secs_f64();
@@ -387,8 +491,11 @@ fn prefill_request(
         decode_secs: 0.0,
         e2e_secs: 0.0, // stamped at completion (finish / prefill-only admit)
         prune_rate,
+        decode_prune_rate: 0.0,
     };
-    (resp, cache.map(|c| (c, next_token)))
+    let handoff =
+        cache.map(|c| PrefillHandoff { cache: c, next: next_token, pesf: pesf_state });
+    (resp, handoff)
 }
 
 #[cfg(test)]
@@ -435,20 +542,96 @@ mod tests {
     #[test]
     fn pesf_policy_reports_pruning() {
         let cfg = EngineConfig {
-            prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.9 }),
+            prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.9, ..Default::default() }),
             workers: 1,
             ..Default::default()
         };
         let e = Engine::new(tiny(), cfg);
-        // Decode rides the PESF-pruned prefill's exported KV (decode itself
-        // runs unpruned, per the paper's Limitations).
+        // Decode rides the PESF-pruned prefill's exported KV, and each
+        // sequence's mask follows it through the batched decode loop
+        // (decode-time PESF; extends the paper's Limitations).
         let rs: Vec<Request> = reqs(4, 32).into_iter().map(|r| r.with_decode(4)).collect();
         let (resps, metrics) = e.serve(rs);
         assert_eq!(resps.len(), 4);
         assert!(resps.iter().all(|r| r.generated.len() == 4));
-        // With alpha=0.9 on a random router, some experts must get pruned.
+        // With alpha=0.9 on a random router, some experts must get pruned
+        // — in prefill and in the decode steps that follow.
         assert!(metrics.mean_prune_rate > 0.0);
+        assert!(metrics.mean_decode_prune_rate > 0.0);
+        assert!(resps.iter().all(|r| r.decode_prune_rate > 0.0));
         assert_eq!(metrics.generated_tokens, 16);
+    }
+
+    #[test]
+    fn rejected_requests_do_not_dilute_prune_rate() {
+        // Regression: admission-rejected responses carry prune_rate 0.0
+        // and used to be averaged in, understating the real prune rate.
+        let model = tiny();
+        let max_seq = model.cfg().max_seq;
+        let e = Engine::new(
+            model,
+            EngineConfig {
+                prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.9, ..Default::default() }),
+                workers: 1,
+                ..Default::default()
+            },
+        );
+        let mut rs = reqs(6, 32);
+        rs.push(Request::new(100, (0..(max_seq + 1) as u32).map(|t| t % 64).collect()));
+        rs.push(Request::new(101, vec![]));
+        rs.push(Request::new(102, vec![1, 64]));
+        let (resps, metrics) = e.serve(rs);
+        assert_eq!(resps.len(), 9);
+        let valid: Vec<_> = resps.iter().filter(|r| !r.finish_reason.is_rejection()).collect();
+        assert_eq!(valid.len(), 6);
+        let want: f32 = valid.iter().map(|r| r.prune_rate).sum::<f32>() / valid.len() as f32;
+        assert!(want > 0.0);
+        assert!(
+            (metrics.mean_prune_rate - want).abs() < 1e-6,
+            "mean_prune_rate {} must average valid prefills only ({want})",
+            metrics.mean_prune_rate
+        );
+        // The diluted (buggy) mean would be strictly lower.
+        let diluted = valid.iter().map(|r| r.prune_rate).sum::<f32>() / resps.len() as f32;
+        assert!(metrics.mean_prune_rate > diluted);
+    }
+
+    #[test]
+    fn ees_and_odp_report_actual_prune_rate() {
+        // Regression: both policies hardcoded prune_rate 0.0 even though
+        // their selection filters drop experts. A threshold of 1.0 makes
+        // EES drop the weakest expert for (almost) every token.
+        let ees = crate::prune::ees::EesPruner { threshold: 1.0 };
+        let e = Engine::new(
+            tiny(),
+            EngineConfig { prune: PrunePolicy::Ees(ees), workers: 1, ..Default::default() },
+        );
+        let (resps, metrics) = e.serve(reqs(4, 24));
+        assert!(metrics.mean_prune_rate > 0.0, "EES must report its drop rate");
+        // EES drops at most 1 of top_k=2 selections per token.
+        assert!(metrics.mean_prune_rate <= 0.5 + 1e-6);
+        assert!(resps.iter().all(|r| r.prune_rate > 0.0));
+
+        // ODP with an infinite-protection threshold behaves like EES;
+        // with norm_threshold 0 every token is protected -> rate 0.
+        let odp = OdpPruner { ratio_threshold: 1.0, norm_threshold: f32::INFINITY };
+        let e = Engine::new(
+            tiny(),
+            EngineConfig { prune: PrunePolicy::Odp(odp), workers: 1, ..Default::default() },
+        );
+        let (_, m_odp) = e.serve(reqs(4, 24));
+        assert!(m_odp.mean_prune_rate > 0.0, "ODP must report its drop rate");
+        let odp_all_protected = OdpPruner { ratio_threshold: 1.0, norm_threshold: 0.0 };
+        let e = Engine::new(
+            tiny(),
+            EngineConfig {
+                prune: PrunePolicy::Odp(odp_all_protected),
+                workers: 1,
+                ..Default::default()
+            },
+        );
+        let (_, m_prot) = e.serve(reqs(4, 24));
+        assert_eq!(m_prot.mean_prune_rate, 0.0, "fully protected tokens drop nothing");
     }
 
     #[test]

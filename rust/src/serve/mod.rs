@@ -12,6 +12,12 @@
 //! exactly once, and a worker advances its whole batch one token per step
 //! through [`crate::model::Model::decode_step_batch`], with finished
 //! sequences retiring and queued requests admitted into the freed slots.
+//! Under PESF the pruning follows each sequence into that loop: its
+//! `layer × expert` mask rides every decode step (per batch row) and is
+//! refreshed online from a rolling selection-frequency window
+//! ([`crate::prune::pesf::PesfDecodeState`]), so the advertised prune
+//! rate is paid out where serving spends its time — `ServeMetrics`
+//! reports the prefill- and decode-phase rates separately.
 
 pub mod batcher;
 pub mod engine;

@@ -9,9 +9,10 @@ pub type RequestId = u64;
 pub struct Request {
     pub id: RequestId,
     pub tokens: Vec<u32>,
-    /// Number of tokens to greedily decode after prefill (0 = prefill only;
-    /// the paper measures context latency, decode is provided for
-    /// completeness — PESF is disabled during decode per the Limitations).
+    /// Number of tokens to greedily decode after prefill (0 = prefill
+    /// only). Under `PrunePolicy::Pesf` the sequence's expert mask follows
+    /// it into the batched decode loop (decode-time PESF — this extends
+    /// the paper, whose Limitations disable PESF during generation).
     pub decode_tokens: usize,
     pub arrival: Instant,
 }
@@ -87,6 +88,12 @@ pub struct Response {
     /// queue + prefill + decode: it also covers time spent waiting on
     /// batch-mates (their prefills and admissions) inside the worker.
     pub e2e_secs: f64,
-    /// Fraction of experts PESF pruned for this sequence (0 if disabled).
+    /// Fraction of experts pruned for this sequence during **prefill**
+    /// (PESF mask rate, or the EES/ODP selection-drop rate; 0 if
+    /// disabled).
     pub prune_rate: f32,
+    /// Mean fraction of experts this sequence's PESF mask pruned across
+    /// its batched **decode** steps (0 if pruning is disabled or the
+    /// request took no decode step).
+    pub decode_prune_rate: f32,
 }

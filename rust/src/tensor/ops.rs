@@ -66,13 +66,38 @@ pub fn rmsnorm(m: &Mat, gain: &[f32], eps: f32) -> Mat {
 
 /// Indices of the k largest values, in descending value order.
 /// Ties broken by lower index first (deterministic).
+///
+/// The decode hot path calls this with k=1 on a `vocab`-long row every
+/// step for every sequence; a full index sort there is O(V log V) of
+/// wasted work. k=1 is a single max pass and k>1 partitions the top k to
+/// the front (`select_nth_unstable_by`) before sorting only those k —
+/// both pinned equal (including the lower-index tie-break) to the full
+/// sort by `prop_topk_matches_full_sort`.
 pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
     let k = k.min(xs.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let cmp = |a: &usize, b: &usize| {
+        xs[*b].partial_cmp(&xs[*a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(b))
+    };
+    if k == 1 {
+        // Single-pass argmax; strict `>` keeps the first (lowest) index
+        // on ties, matching the sort's tie-break.
+        let mut best = 0usize;
+        for (i, &x) in xs.iter().enumerate().skip(1) {
+            if x > xs[best] {
+                best = i;
+            }
+        }
+        return vec![best];
+    }
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| {
-        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-    });
-    idx.truncate(k);
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_by(cmp);
     idx
 }
 
@@ -188,6 +213,39 @@ mod tests {
         let b = [-1.0f32, -2.0, -3.0];
         assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
         assert!((cosine(&a, &b) + 1.0).abs() < 1e-6);
+    }
+
+    /// Property: the partial-selection topk equals the full index sort it
+    /// replaced, element for element (order and tie-breaking included),
+    /// for every k — this is what pins the decode argmax optimization.
+    #[test]
+    fn prop_topk_matches_full_sort() {
+        let reference = |xs: &[f32], k: usize| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..xs.len()).collect();
+            idx.sort_by(|&a, &b| {
+                xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+            });
+            idx.truncate(k.min(xs.len()));
+            idx
+        };
+        let mut rng = Pcg64::seeded(13);
+        for case in 0..50 {
+            let n = 1 + rng.below_usize(60);
+            // Mix in heavy ties: quantize half the cases to few levels.
+            let xs: Vec<f32> = (0..n)
+                .map(|_| {
+                    let v = rng.gaussian();
+                    if case % 2 == 0 { (v * 2.0).round() / 2.0 } else { v }
+                })
+                .collect();
+            for k in [0usize, 1, 2, n / 2, n.saturating_sub(1), n, n + 3] {
+                assert_eq!(
+                    topk_indices(&xs, k),
+                    reference(&xs, k),
+                    "n={n} k={k} xs={xs:?}"
+                );
+            }
+        }
     }
 
     /// Property: topk of a permuted array returns the same value multiset.

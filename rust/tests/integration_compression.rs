@@ -116,7 +116,7 @@ fn pesf_on_compressed_model_prunes_and_stays_finite() {
     let (logits, stats) = eac_moe::prune::pesf::pesf_prefill(
         &q,
         &tokens,
-        eac_moe::prune::pesf::PesfConfig { alpha: 0.8 },
+        eac_moe::prune::pesf::PesfConfig { alpha: 0.8, ..Default::default() },
     );
     assert!(logits.data.iter().all(|x| x.is_finite()));
     assert!(stats.prune_rate() > 0.0, "alpha=0.8 must prune something on 8 experts");
@@ -124,7 +124,7 @@ fn pesf_on_compressed_model_prunes_and_stays_finite() {
     let (l0, _) = eac_moe::prune::pesf::pesf_prefill(
         &q,
         &tokens,
-        eac_moe::prune::pesf::PesfConfig { alpha: 0.0 },
+        eac_moe::prune::pesf::PesfConfig { alpha: 0.0, ..Default::default() },
     );
     let dense = q.forward(&tokens);
     for (a, b) in l0.data.iter().zip(&dense.data) {

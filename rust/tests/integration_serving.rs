@@ -1,9 +1,12 @@
 //! Integration: serving engine under load — conservation, policy effects,
-//! and the eval harness' PESF plumbing.
+//! decode-time PESF invariants, and the eval harness' PESF plumbing.
 
-use eac_moe::model::{Model, ModelConfig, Weights};
-use eac_moe::prune::pesf::PesfConfig;
+use eac_moe::model::hooks::{Hooks, SelectionRecord, SeqExpertMask};
+use eac_moe::model::{KvCache, Model, ModelConfig, Weights};
+use eac_moe::prune::pesf::{pesf_mask, PesfConfig, PesfDecodeState};
 use eac_moe::serve::{BatchPolicy, Engine, EngineConfig, PrunePolicy, Request};
+use std::cell::RefCell;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn model() -> Model {
@@ -131,7 +134,7 @@ fn pesf_pruning_rate_grows_with_alpha_under_serving() {
             Model::new(weights.clone()),
             EngineConfig {
                 workers: 2,
-                prune: PrunePolicy::Pesf(PesfConfig { alpha }),
+                prune: PrunePolicy::Pesf(PesfConfig { alpha, ..Default::default() }),
                 ..Default::default()
             },
         );
@@ -157,7 +160,7 @@ fn pesf_alpha_zero_equals_dense_outputs() {
         Model::new(m.weights.clone()),
         EngineConfig {
             workers: 1,
-            prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.0 }),
+            prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.0, ..Default::default() }),
             ..Default::default()
         },
     );
@@ -169,6 +172,195 @@ fn pesf_alpha_zero_equals_dense_outputs() {
         assert_eq!(x.next_token, y.next_token);
         assert!((x.mean_logprob - y.mean_logprob).abs() < 1e-5);
     }
+}
+
+#[test]
+fn pesf_alpha_zero_decode_bitwise_identical_to_unpruned() {
+    // Acceptance invariant: with PrunePolicy::Pesf(alpha=0) the whole
+    // masked decode machinery (per-row masks, per-step routing record,
+    // rolling window) is live but every mask is all-false — outputs must
+    // be bit-identical to PrunePolicy::None at every pool size and batch
+    // shape.
+    let weights = model().weights.clone();
+    for threads in [Some(1usize), Some(4)] {
+        for max_batch in [1usize, 4] {
+            let run = |prune: PrunePolicy| {
+                let e = Engine::new(
+                    Model::new(weights.clone()),
+                    EngineConfig {
+                        batch: BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
+                        workers: 1,
+                        prune,
+                        threads,
+                    },
+                );
+                let rs: Vec<Request> =
+                    reqs(5, 20).into_iter().map(|r| r.with_decode(6)).collect();
+                let (mut out, m) = e.serve(rs);
+                out.sort_by_key(|r| r.id);
+                let got: Vec<(u64, Vec<u32>, u32, u32)> = out
+                    .into_iter()
+                    .map(|r| (r.id, r.generated, r.next_token, r.mean_logprob.to_bits()))
+                    .collect();
+                (got, m)
+            };
+            let (dense, _) = run(PrunePolicy::None);
+            let (pesf, mp) = run(PrunePolicy::Pesf(PesfConfig {
+                alpha: 0.0,
+                refresh_every: 2,
+                window: 8,
+            }));
+            assert_eq!(dense, pesf, "threads={threads:?} max_batch={max_batch}");
+            assert_eq!(mp.mean_prune_rate, 0.0);
+            assert_eq!(mp.mean_decode_prune_rate, 0.0);
+        }
+    }
+}
+
+#[test]
+fn masked_batched_decode_matches_sequential_b1_bitwise() {
+    // A mixed batch — two sequences with different PESF masks and one
+    // unpruned — must produce, row for row, exactly what each sequence
+    // gets when decoded alone with its own mask (B=1 through the same
+    // entry point), across several chained steps.
+    let m = model();
+    let prompts: [&[u32]; 3] =
+        [&[1, 2, 3, 4, 5, 6, 7, 8], &[9, 10, 11], &[21, 34, 55, 89, 13]];
+    let mk_mask = |p: &[u32], alpha: f32| -> SeqExpertMask {
+        let hooks = Hooks::recording(2);
+        m.forward_with_hooks(p, &hooks);
+        let rec = hooks.take_selections().unwrap();
+        let (mask, _) = pesf_mask(&rec, 16, 2, PesfConfig { alpha, ..Default::default() });
+        Arc::new(mask)
+    };
+    // Row 2 gets a handcrafted lopsided mask (half of layer 0 pruned).
+    let mut lopsided = vec![vec![false; 16]; 2];
+    for e in 0..8 {
+        lopsided[0][e] = true;
+    }
+    let masks: Vec<Option<SeqExpertMask>> =
+        vec![Some(mk_mask(prompts[0], 0.7)), None, Some(Arc::new(lopsided))];
+    assert!(
+        masks[0].as_ref().unwrap().iter().flatten().any(|&x| x),
+        "alpha=0.7 mask should prune something on 16 experts"
+    );
+    let mk_caches = || -> Vec<KvCache> {
+        prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(m.cfg());
+                m.prefill_into_cache(p, &Hooks::none(), &mut c);
+                c
+            })
+            .collect()
+    };
+    let mut batch_caches = mk_caches();
+    let mut solo_caches = mk_caches();
+    let mut toks: Vec<u32> = prompts.iter().map(|p| p[0]).collect();
+    for step in 0..4 {
+        let logits = m.decode_step_batch(
+            &toks,
+            &mut batch_caches,
+            &Hooks::with_seq_masks(masks.clone()),
+        );
+        for b in 0..3 {
+            let solo = m.decode_step_batch(
+                &[toks[b]],
+                std::slice::from_mut(&mut solo_caches[b]),
+                &Hooks::with_seq_masks(vec![masks[b].clone()]),
+            );
+            assert_eq!(logits.row(b), solo.row(0), "step {step} row {b}");
+        }
+        toks = (0..3)
+            .map(|b| eac_moe::tensor::ops::topk_indices(logits.row(b), 1)[0] as u32)
+            .collect();
+    }
+}
+
+#[test]
+fn decode_mask_refreshes_at_exact_cadence_during_decode() {
+    // Drive a real masked decode loop (the engine's shape) and pin the
+    // refresh cadence: the mask Arc is replaced exactly every
+    // `refresh_every` observed tokens, never in between.
+    let m = model();
+    let prompt: Vec<u32> = (0..32).map(|i| (i * 5) % 128).collect();
+    let pc = PesfConfig { alpha: 0.9, refresh_every: 3, window: 8 };
+    let rec_hooks = Hooks::recording(2);
+    let mut cache = KvCache::new(m.cfg());
+    m.prefill_into_cache(&prompt, &rec_hooks, &mut cache);
+    let rec = rec_hooks.take_selections().unwrap();
+    let mut st = PesfDecodeState::from_prefill(&rec, 16, 2, pc);
+    assert!(st.prune_rate() > 0.0, "alpha=0.9 must prune on a random router");
+    let mut cur = *prompt.last().unwrap();
+    for step in 1..=9usize {
+        let prev = st.mask();
+        let hooks = Hooks {
+            seq_expert_masks: Some(vec![Some(st.mask())]),
+            record_selections: Some(RefCell::new(SelectionRecord::with_layers(2))),
+            ..Default::default()
+        };
+        let logits = m.decode_step_batch(&[cur], std::slice::from_mut(&mut cache), &hooks);
+        cur = eac_moe::tensor::ops::topk_indices(logits.row(0), 1)[0] as u32;
+        st.observe(hooks.take_selections().unwrap().token_experts(0));
+        let refreshed = !Arc::ptr_eq(&prev, &st.mask());
+        assert_eq!(refreshed, step % 3 == 0, "refresh at step {step}");
+    }
+}
+
+#[test]
+fn mixed_pesf_batch_retires_and_admits_correctly() {
+    // Continuous batching under decode-time PESF: a burst mixing
+    // prefill-only requests, budget-1 requests (finish at admission),
+    // longer decodes, and malformed prompts — all with per-sequence masks
+    // in flight — must conserve every request and report decode-phase
+    // pruning.
+    let mdl = model();
+    let max_seq = mdl.cfg().max_seq;
+    let engine = Engine::new(
+        mdl,
+        EngineConfig {
+            batch: BatchPolicy { max_batch: 3, max_wait: Duration::from_micros(100) },
+            workers: 1,
+            prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.9, refresh_every: 2, window: 16 }),
+            ..Default::default()
+        },
+    );
+    let budgets = [0usize, 1, 4, 9];
+    let mut rs: Vec<Request> = Vec::new();
+    for i in 0..12u64 {
+        rs.push(
+            Request::new(i, (0..24).map(|t| (t * 13 + i as u32 * 7) % 128).collect())
+                .with_decode(budgets[i as usize % 4]),
+        );
+    }
+    rs.push(
+        Request::new(100, (0..(max_seq + 1) as u32).map(|t| t % 128).collect()).with_decode(3),
+    );
+    rs.push(Request::new(101, vec![]).with_decode(2));
+    let (resps, metrics) = engine.serve(rs);
+    assert_eq!(resps.len(), 14, "every request answered exactly once");
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 14);
+    for r in &resps {
+        if r.finish_reason.is_rejection() {
+            assert!(r.generated.is_empty());
+            assert_eq!(r.decode_prune_rate, 0.0);
+        } else {
+            let want = budgets[r.id as usize % 4];
+            assert_eq!(r.generated.len(), want, "id {}", r.id);
+            if want > 1 {
+                // Took at least one batched decode step under a mask.
+                assert!(r.decode_prune_rate > 0.0, "id {}", r.id);
+            } else {
+                assert_eq!(r.decode_prune_rate, 0.0, "id {}", r.id);
+            }
+        }
+    }
+    assert_eq!(metrics.generated_tokens, 3 * (0 + 1 + 4 + 9));
+    assert!(metrics.mean_prune_rate > 0.0);
+    assert!(metrics.mean_decode_prune_rate > 0.0);
 }
 
 #[test]
