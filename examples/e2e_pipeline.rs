@@ -96,7 +96,7 @@ fn main() -> eac_moe::Result<()> {
         let d = fp.cfg().d_model;
         let mut rng = eac_moe::tensor::Pcg64::seeded(9);
         let x = Mat::randn(bucket, d, 1.0, &mut rng);
-        let e0 = &q.weights.layers[0].experts[0];
+        let e0 = &q.weights.layers[0].experts()[0];
         // QESC leaves experts packed; the f32 artifact takes dense inputs.
         let (w1, w2, w3) = (e0.w1.to_dense(), e0.w2.to_dense(), e0.w3.to_dense());
         let out = exe.run(&[&x, &w1, &w2, &w3])?[0].clone();

@@ -388,6 +388,72 @@ fn main() {
         }
     }
 
+    // --- Tiered ExpertStore: the packed model served with experts on
+    // disk under budget fractions {1.0, 0.5, 0.25} of their total bytes
+    // (`expert_store/*`). Decode tok/s + hit rate per budget; outputs are
+    // asserted bit-identical to the resident model before timing, so the
+    // entries measure pure residency-management cost.
+    {
+        use eac_moe::model::hooks::Hooks;
+        let spill = std::env::temp_dir()
+            .join(format!("eac_moe_bench_store_{}.bin", std::process::id()));
+        packed_model.weights.save(&spill).expect("spill packed weights");
+        let total = packed_model.expert_store_stats().total_bytes;
+        let min_fit = packed_model.weights.max_expert_bytes();
+        let bsz = 4usize;
+        let prompts: Vec<Vec<u32>> = (0..bsz)
+            .map(|b| (0..64u32).map(|i| (i * 7 + b as u32 * 13) % 512).collect())
+            .collect();
+        let toks: Vec<u32> = (0..bsz as u32).map(|b| b * 31 % 512).collect();
+        let prefill_on = |m: &Model| -> Vec<eac_moe::model::KvCache> {
+            prompts
+                .iter()
+                .map(|p| {
+                    let mut c = eac_moe::model::KvCache::new(m.cfg());
+                    m.prefill_into_cache(p, &Hooks::none(), &mut c);
+                    c
+                })
+                .collect()
+        };
+        let mut ref_caches = prefill_on(&packed_model);
+        let ref_logits = packed_model.decode_step_batch(&toks, &mut ref_caches, &Hooks::none());
+        for &frac in &[1.0f64, 0.5, 0.25] {
+            let budget = ((total as f64 * frac) as usize).max(min_fit);
+            let tm = Model::open_tiered(&spill, "bench", budget).expect("open tiered");
+            let mut caches = prefill_on(&tm);
+            let ctx_len = caches[0].len;
+            let a = tm.decode_step_batch(&toks, &mut caches, &Hooks::none());
+            assert_eq!(
+                a.data, ref_logits.data,
+                "tiered decode differs from resident at budget fraction {frac}"
+            );
+            let r = bench(&format!("decode step B={bsz} tiered budget={frac}"), || {
+                for c in caches.iter_mut() {
+                    c.len = ctx_len;
+                }
+                std::hint::black_box(tm.decode_step_batch(&toks, &mut caches, &Hooks::none()));
+            });
+            let st = tm.expert_store_stats();
+            let tps = bsz as f64 / (r.mean_ns / 1e9);
+            println!(
+                "    -> {tps:.0} decode tok/s at {:.0}% budget, hit rate {:.1}%, {} evictions",
+                frac * 100.0,
+                100.0 * st.hits as f64 / (st.hits + st.misses).max(1) as f64,
+                st.evictions
+            );
+            let mut o = Json::obj();
+            o.set("tokens_per_sec", Json::Num(tps))
+                .set("budget_bytes", Json::Num(budget as f64))
+                .set("total_bytes", Json::Num(total as f64))
+                .set("hit_rate", Json::Num(st.hits as f64 / (st.hits + st.misses).max(1) as f64))
+                .set("evictions", Json::Num(st.evictions as f64))
+                .set("load_stall_secs", Json::Num(st.load_stall_secs))
+                .set("peak_resident_bytes", Json::Num(st.peak_resident_bytes as f64));
+            json.set(&format!("expert_store/budget{frac}"), o);
+        }
+        let _ = std::fs::remove_file(&spill);
+    }
+
     // --- Decode step (kv-cache path; quantization's bandwidth-bound case).
     let mut cache = eac_moe::model::KvCache::new(model.cfg());
     for &t in tokens.iter().take(64) {

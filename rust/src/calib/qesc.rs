@@ -226,12 +226,12 @@ pub fn qesc_compress(model: &Model, calib: &[Vec<u32>], cfg: &QescConfig) -> (Mo
                 moe_x_q.gather_rows(&routed[e])
             };
             compressed_bytes +=
-                quantize_expert(&mut work.weights.layers[li].experts[e], &x_e, bits, cfg);
+                quantize_expert(work.weights.layers[li].expert_mut(e), &x_e, bits, cfg);
         }
         for s in 0..mcfg.n_shared {
             let bits = alloc.shared_bits[li][s];
             compressed_bytes +=
-                quantize_expert(&mut work.weights.layers[li].shared[s], &moe_x_q, bits, cfg);
+                quantize_expert(work.weights.layers[li].shared_expert_mut(s), &moe_x_q, bits, cfg);
         }
         report.gptq_secs += t2.elapsed().as_secs_f64();
     }
@@ -384,10 +384,10 @@ mod tests {
             assert!(a <= b, "calibration worsened router loss: {b} -> {a}");
         }
         // Quantized weights actually changed, and are emitted packed.
-        assert!(qm.weights.layers[0].experts[0].w1.is_packed());
+        assert!(qm.weights.layers[0].experts()[0].w1.is_packed());
         assert!(qm.weights.layers[0].wq.is_packed());
-        let orig = m.weights.layers[0].experts[0].w1.to_dense();
-        let quant = qm.weights.layers[0].experts[0].w1.to_dense();
+        let orig = m.weights.layers[0].experts()[0].w1.to_dense();
+        let quant = qm.weights.layers[0].experts()[0].w1.to_dense();
         let diff = orig.data.iter().zip(&quant.data).any(|(x, y)| (x - y).abs() > 1e-6);
         assert!(diff);
         // Storage accounting is sane: compressed well below fp32, and the

@@ -48,6 +48,17 @@
 //! f32 scale and u8 zero-point. Serving surfaces the same numbers as
 //! `ServeMetrics::resident_weight_bytes` / `resident_expert_bytes`, and
 //! the report tables use them in place of simulated sizes.
+//!
+//! ### Memory tiering
+//!
+//! Routed experts are reached through an [`model::ExpertStore`]:
+//! `Resident` (all experts in [`model::Weights`]) or `Tiered` — packed
+//! experts stay on disk behind the byte-range
+//! [`util::binio::IndexedTensorFile`] reader and are cached under a hard
+//! byte budget with selection-frequency-weighted LRU eviction (the same
+//! Eq. 6 counts PESF thresholds). Outputs are bit-identical at every
+//! budget; `serve --expert-budget-mb` bounds expert memory end to end.
+//! See [`model::store`] for the design.
 
 pub mod calib;
 pub mod coordinator;

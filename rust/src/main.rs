@@ -7,7 +7,7 @@
 //! eac-moe compress  --model <key> --bits <2|2.5|3> [--no-calib] [--scale S]
 //! eac-moe eval      --model <key> [--alpha A] [--scale S]
 //! eac-moe serve     --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]
-//!                   [--requests N] [--len L] [--decode D]
+//!                   [--requests N] [--len L] [--decode D] [--expert-budget-mb B]
 //! eac-moe analyze-es --model <key> [--scale S]
 //! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|all
 //! ```
@@ -64,8 +64,11 @@ fn usage() {
          \x20 eval       --model <key> [--alpha A] [--scale S]\n\
          \x20 serve      --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]\n\
          \x20            [--requests N] [--len L] [--decode D] [--workers W] [--threads T]\n\
+         \x20            [--expert-budget-mb B]\n\
          \x20            (PESF prunes prefill AND decode; --pesf-refresh 0 freezes the\n\
-         \x20             decode mask at prompt statistics; --alpha aliases --pesf-alpha)\n\
+         \x20             decode mask at prompt statistics; --alpha aliases --pesf-alpha;\n\
+         \x20             --expert-budget-mb serves experts from disk under a hard cache\n\
+         \x20             budget — bit-identical outputs, bounded expert memory)\n\
          \x20 analyze-es --model <key> [--scale S]\n\
          \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
          \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|all)\n\
@@ -267,6 +270,31 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     // Compute-pool size: --threads=N builds a dedicated pool; unset keeps
     // the global pool (EAC_MOE_THREADS or machine parallelism).
     let threads: Option<usize> = opts.get("threads").and_then(|s| s.parse().ok());
+    // Memory tiering: --expert-budget-mb=B spills the routed experts to a
+    // checkpoint and serves them through the tiered ExpertStore under a
+    // hard B-MB cache budget (selection-frequency-weighted LRU eviction;
+    // outputs are bit-identical to unbudgeted serving at any budget).
+    let model = if let Some(mb) = opts.get("expert-budget-mb") {
+        let mb: f64 = mb
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--expert-budget-mb must be a number (MB)"))?;
+        anyhow::ensure!(mb > 0.0, "--expert-budget-mb must be positive");
+        let budget = (mb * 1e6) as usize;
+        let spill = std::env::temp_dir()
+            .join(format!("eac_moe_spill_{}_{}.bin", zoo.key(), std::process::id()));
+        // Routed experts are what the budget manages; shared experts stay
+        // pinned resident outside it.
+        let total = model.weights.routed_expert_bytes() as f64 / 1e6;
+        let model = model.into_tiered(budget, &spill)?;
+        // Eager unlink (works while-open on unix) so even an aborted run
+        // leaves nothing behind; the store also removes its own spill on
+        // drop, which covers platforms where this call fails.
+        let _ = std::fs::remove_file(&spill);
+        println!("expert store: tiered, budget {mb:.2} MB of {total:.2} MB routed experts");
+        model
+    } else {
+        model
+    };
     let prune = if alpha > 0.0 {
         PrunePolicy::Pesf(eac_moe::prune::pesf::PesfConfig { alpha, refresh_every, window })
     } else {

@@ -15,6 +15,14 @@
 //! fused group-dequant GEMM — QESC-compressed models serve directly from
 //! their packed storage with no f32 weight copies resident.
 //!
+//! Routed expert weights are reached through the model's
+//! [`ExpertStore`] as `Arc<ExpertWeights>` guard handles, fetched in one
+//! batch right after routing determines which experts will run (the
+//! router-score-driven prefetch). Under a `Tiered` store the fetch may
+//! load experts from disk within a hard byte budget; under the default
+//! `Resident` store it is a cheap `Arc` clone. Either way the math — and
+//! therefore every output bit — is identical.
+//!
 //! Parallelism: every forward surface runs on the model's persistent
 //! [`ThreadPool`] — rows within large GEMMs, whole experts within the MoE
 //! block, and (sequence, head) pairs within attention — so decode keeps
@@ -24,6 +32,7 @@
 
 use super::config::ModelConfig;
 use super::hooks::{Hooks, TokenSelection};
+use super::store::ExpertStore;
 use super::weights::{ExpertWeights, LayerWeights, Weights};
 use crate::tensor::ops::{rmsnorm, silu, softmax_inplace, topk_indices};
 use crate::tensor::pool::ThreadPool;
@@ -37,10 +46,18 @@ pub struct MoeLayerOut {
     pub expert_tokens: Vec<usize>,
 }
 
-/// A runnable model: weights + forward implementations + the worker pool
-/// all of its GEMMs and expert/head tasks run on.
+/// A runnable model: weights + expert store + forward implementations +
+/// the worker pool all of its GEMMs and expert/head tasks run on.
 pub struct Model {
     pub weights: Weights,
+    /// Where routed expert weights live and how the forward pass fetches
+    /// them: [`ExpertStore::Resident`] (all in `weights`, the default) or
+    /// [`ExpertStore::Tiered`] (on disk, cached under a hard byte budget
+    /// with selection-frequency-weighted LRU eviction — see
+    /// [`crate::model::store`]). Swapping the store changes *when* expert
+    /// bytes are resident, never the math: outputs are bit-identical at
+    /// every budget.
+    pub store: ExpertStore,
     /// Parallelism substrate for every forward-pass surface: row-parallel
     /// GEMMs, expert-level MoE dispatch, head-level attention. Swapping the
     /// pool changes scheduling only — outputs are bit-identical at every
@@ -73,13 +90,13 @@ impl Model {
     /// Model on the process-global pool (sized from `EAC_MOE_THREADS` at
     /// that pool's construction).
     pub fn new(weights: Weights) -> Self {
-        Model { weights, pool: ThreadPool::global().clone() }
+        Model { weights, store: ExpertStore::Resident, pool: ThreadPool::global().clone() }
     }
 
     /// Model on an explicit pool — how `EngineConfig::threads` and the
     /// thread-invariance tests control concurrency deterministically.
     pub fn with_pool(weights: Weights, pool: Arc<ThreadPool>) -> Self {
-        Model { weights, pool }
+        Model { weights, store: ExpertStore::Resident, pool }
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -248,13 +265,16 @@ impl Model {
             assert_eq!(rows.len(), seq, "one seq-mask slot per row");
         }
 
-        // Router logits + softmax scores.
+        // Router logits + softmax scores. The softmax runs *in place* over
+        // the router-GEMM output — this is once per layer per decode step,
+        // and the old per-call `logits.clone()` was pure allocator traffic.
+        // Only the capture hook (calibration-time) still pays for a copy of
+        // the raw logits.
         let pool = &*self.pool;
-        let logits = matmul_on(pool, x, &layer.router);
+        let mut scores = matmul_on(pool, x, &layer.router);
         if let Some(cap) = &hooks.capture_router_logits {
-            cap.borrow_mut()[li] = Some(logits.clone());
+            cap.borrow_mut()[li] = Some(scores.clone());
         }
-        let mut scores = logits.clone();
         for r in 0..seq {
             softmax_inplace(scores.row_mut(r));
         }
@@ -339,6 +359,28 @@ impl Model {
             }
         }
 
+        // Prefetch: routing has just determined exactly which experts are
+        // about to run, so fetch all of their guard handles from the
+        // expert store in one batch *before* the expert GEMMs. On a
+        // Resident store these are Arc clones; on a Tiered store this is
+        // the load point — misses stall here (once, together), never
+        // inside the compute tasks — and the per-expert routed-token
+        // counts feed the store's selection-frequency eviction signal
+        // (the same counts PESF thresholds in Eq. 6). Pruned experts are
+        // never fetched, so PESF's compute savings double as residency
+        // savings under a tiered store.
+        let wants: Vec<(usize, usize)> = groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| !g.is_empty())
+            .map(|(e, g)| (e, g.len()))
+            .collect();
+        let fetched = self.experts_for_layer(li, &wants);
+        let mut handles: Vec<Option<Arc<ExpertWeights>>> = (0..n).map(|_| None).collect();
+        for (&(e, _), h) in wants.iter().zip(fetched) {
+            handles[e] = Some(h);
+        }
+
         // Execute each expert on its gathered tokens as one GEMM. Experts
         // (routed and shared) are independent, so each gather → SwiGLU runs
         // as its own pool task — decode-time MoE uses every core even at
@@ -346,21 +388,22 @@ impl Model {
         // below stays sequential in ascending expert order, so every
         // token's output accumulates in exactly the order the old
         // sequential loop used: bit-identical at every pool size.
+        let shared = layer.shared();
         let mut expert_out: Vec<Option<Mat>> = (0..n).map(|_| None).collect();
-        let mut shared_out: Vec<Option<Mat>> = (0..layer.shared.len()).map(|_| None).collect();
+        let mut shared_out: Vec<Option<Mat>> = (0..shared.len()).map(|_| None).collect();
         pool.scope(|s| {
             for ((e, group), slot) in groups.iter().enumerate().zip(expert_out.iter_mut()) {
                 if group.is_empty() {
                     continue;
                 }
-                let experts = &layer.experts;
+                let h = handles[e].as_ref().expect("prefetched above");
                 s.spawn(move || {
                     let token_ids: Vec<usize> = group.iter().map(|(t, _)| *t).collect();
                     let gathered = x.gather_rows(&token_ids);
-                    *slot = Some(expert_forward_on(pool, &gathered, &experts[e]));
+                    *slot = Some(expert_forward_on(pool, &gathered, h));
                 });
             }
-            for (sh, slot) in layer.shared.iter().zip(shared_out.iter_mut()) {
+            for (sh, slot) in shared.iter().zip(shared_out.iter_mut()) {
                 s.spawn(move || *slot = Some(expert_forward_on(pool, x, sh)));
             }
         });
@@ -769,7 +812,7 @@ mod tests {
         let x = Mat::randn(3, 16, 1.0, &mut crate::tensor::Pcg64::seeded(10));
         let (with_shared, _) = m.moe_layer(&x, &m.weights.layers[0], 0, &Hooks::none());
         let mut m2 = Model::new(m.weights.clone());
-        m2.weights.layers[0].shared.clear();
+        m2.weights.layers[0].set_shared(vec![]);
         let (without, _) = m2.moe_layer(&x, &m2.weights.layers[0], 0, &Hooks::none());
         let differs =
             with_shared.data.iter().zip(&without.data).any(|(a, b)| (a - b).abs() > 1e-5);

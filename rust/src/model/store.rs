@@ -1,0 +1,691 @@
+//! Memory-budgeted tiered expert storage — the paper's challenge (1) made
+//! operational.
+//!
+//! EAC-MoE opens with the observation that MoE serving is gated by the
+//! "substantial GPU memory consumption to load all experts": the experts
+//! are ~95% of the parameters, yet each token runs only `top_k` of them.
+//! Quantization (QESC) shrinks the *bytes per expert*; this module manages
+//! the other axis — *which experts are resident at all*. An
+//! [`ExpertStore`] mediates every routed-expert access in the forward
+//! pass:
+//!
+//! * [`ExpertStore::Resident`] — all experts live in
+//!   [`crate::model::Weights`], accesses are `Arc` clones. This is the
+//!   historical behavior and the default for [`crate::model::Model::new`].
+//! * [`ExpertStore::Tiered`] — packed experts stay **on disk** (via the
+//!   byte-range [`IndexedTensorFile`] reader) and are loaded on demand
+//!   into a cache bounded by a **hard byte budget**, evicting by
+//!   selection-frequency-weighted LRU.
+//!
+//! ## Why eviction reuses the PESF signal, not plain LRU
+//!
+//! PESF (paper Eq. 6) prunes an expert when its *selection count* over the
+//! recent token stream falls below `α · l·K/N` — the router's own
+//! selection frequencies are the paper's measure of how much an expert
+//! matters to the current workload. Mixture Compressor (arXiv 2410.06270)
+//! and MC# (arXiv 2510.10962) draw the same conclusion for static
+//! compression: per-expert significance ∝ routing frequency. The tiered
+//! store feeds the **same counts** (how many tokens each expert was
+//! routed, accumulated from the routing decisions the forward pass already
+//! computes) into its eviction policy: the victim is the resident expert
+//! with the lowest selection count, ties broken by least-recent use.
+//! Plain LRU would treat a once-touched cold expert and a consistently hot
+//! expert that happened to skip one batch as equals; frequency-weighting
+//! keeps the experts the router actually concentrates on (the skewed
+//! distribution PESF exploits) resident, so the hit rate tracks routing
+//! skew rather than batch order. Counts are aged (halved periodically) so
+//! the frequency reflects the recent workload, like PESF's rolling window
+//! rather than an all-time census.
+//!
+//! ## Correctness contract
+//!
+//! Tiering changes **when** an expert's bytes are resident, never its
+//! math: a loaded expert is decoded by the same
+//! [`crate::model::weights::read_expert_from`] path the eager loader uses,
+//! so outputs are bit-identical at every budget and pool size (pinned by
+//! `tests/expert_store.rs` across budget fractions {100%, 50%,
+//! smallest-that-fits} × pool sizes {1, 4}). The budget is enforced
+//! *inside* the store lock — the cache never holds more than
+//! `budget_bytes` — while callers keep experts alive through their
+//! `Arc<ExpertWeights>` guard handles for exactly the duration of the
+//! layer's GEMMs. Disk reads happen *outside* the lock (an in-flight set
+//! plus condvar deduplicates concurrent loads of the same expert), so one
+//! worker's miss never serializes another worker's cache hits. Shared
+//! (always-on) experts are pinned resident outside the store: they run
+//! for every token, so tiering them buys nothing and would thrash the
+//! cache.
+
+use super::config::ModelConfig;
+use super::forward::Model;
+use super::weights::{read_expert_from, ExpertWeights, Weights};
+use crate::tensor::pool::ThreadPool;
+use crate::util::binio::IndexedTensorFile;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Halve every selection count after this many store batches, so the
+/// frequency signal tracks the recent workload (PESF's rolling-window
+/// idea) instead of an all-time census.
+const AGE_EVERY_TICKS: u64 = 4096;
+
+/// Snapshot of the store's accounting, surfaced through
+/// [`crate::serve::ServeMetrics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExpertStoreStats {
+    /// Batch fetches answered from the cache.
+    pub hits: u64,
+    /// Fetches that had to load from disk.
+    pub misses: u64,
+    /// Residents dropped to keep the cache under budget.
+    pub evictions: u64,
+    /// Wall-clock spent blocked on on-demand expert loads.
+    pub load_stall_secs: f64,
+    /// Bytes of routed experts currently cached (≤ `budget_bytes`).
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes` (also ≤ `budget_bytes`).
+    pub peak_resident_bytes: usize,
+    /// On-disk bytes of the full routed-expert set.
+    pub total_bytes: usize,
+    /// Hard cache budget; 0 means unbudgeted (fully resident store).
+    pub budget_bytes: usize,
+}
+
+impl ExpertStoreStats {
+    /// Fraction of expert fetches served without touching disk.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            return 1.0;
+        }
+        self.hits as f64 / n as f64
+    }
+}
+
+/// How the model's routed experts are stored and fetched.
+pub enum ExpertStore {
+    /// Every expert materialized in [`Weights`]; fetches are `Arc` clones.
+    Resident,
+    /// Experts on disk, cached under a byte budget.
+    Tiered(TieredStore),
+}
+
+impl ExpertStore {
+    pub fn is_tiered(&self) -> bool {
+        matches!(self, ExpertStore::Tiered(_))
+    }
+}
+
+/// On-disk location + size of one expert's tensors.
+struct ExpertSpec {
+    /// Tensor-name prefix (`layer{i}.expert{e}`).
+    prefix: String,
+    /// Payload bytes across its tensors (codes+scales+zeros for packed,
+    /// plain f32 for dense) — equals the loaded
+    /// [`ExpertWeights::storage_bytes`], so budget accounting is exact.
+    bytes: usize,
+}
+
+struct CacheEntry {
+    w: Arc<ExpertWeights>,
+    bytes: usize,
+    last_tick: u64,
+}
+
+struct Inner {
+    /// `(layer, expert)` → resident entry. BTreeMap so eviction
+    /// tie-breaking is deterministic.
+    cache: BTreeMap<(u32, u32), CacheEntry>,
+    /// Keys some thread is currently loading *outside* the lock — other
+    /// threads wanting the same expert wait on [`TieredStore::loaded`]
+    /// instead of duplicating the disk read.
+    loading: std::collections::BTreeSet<(u32, u32)>,
+    /// Selection counts per (layer, expert) — the Eq. 6 signal, fed from
+    /// the routing decisions of every forward pass, aged periodically.
+    freq: Vec<Vec<u64>>,
+    tick: u64,
+    resident: usize,
+    peak_resident: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    stall_secs: f64,
+}
+
+/// The disk-backed, budget-bounded expert cache.
+pub struct TieredStore {
+    file: IndexedTensorFile,
+    cfg: ModelConfig,
+    budget: usize,
+    specs: Vec<Vec<ExpertSpec>>,
+    total_bytes: usize,
+    max_expert_bytes: usize,
+    inner: Mutex<Inner>,
+    /// Signalled whenever a load finishes (success or failure), so threads
+    /// waiting for an in-flight expert re-check the cache.
+    loaded: std::sync::Condvar,
+    /// Set by [`Model::into_tiered`] only: the spill checkpoint this store
+    /// created for itself, removed on [`Drop`]. `None` for
+    /// [`Model::open_tiered`] — that checkpoint belongs to the caller.
+    owned_spill: Option<std::path::PathBuf>,
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        // Portable cleanup of an into_tiered spill: the eager unlink the
+        // callers attempt only works while-open on unix; here the fd is
+        // gone on every platform.
+        if let Some(p) = &self.owned_spill {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl TieredStore {
+    /// Build the store over an already-opened indexed checkpoint.
+    /// Validates up front that every expert's tensors are present in the
+    /// index (a packed expert missing a `.q.codes`/`.q.scales`/`.q.zeros`
+    /// sidecar is an error *here*, not a mid-serve panic) and that the
+    /// budget can hold at least the largest single expert.
+    pub fn new(file: IndexedTensorFile, cfg: &ModelConfig, budget_bytes: usize) -> Result<Self> {
+        let mut specs = Vec::with_capacity(cfg.n_layers);
+        let mut total = 0usize;
+        let mut max_expert = 0usize;
+        for li in 0..cfg.n_layers {
+            let mut layer = Vec::with_capacity(cfg.n_experts);
+            for e in 0..cfg.n_experts {
+                let prefix = format!("layer{li}.expert{e}");
+                let mut bytes = 0usize;
+                for w in ["w1", "w2", "w3"] {
+                    let name = format!("{prefix}.{w}");
+                    if file.index.contains_key(&name) {
+                        bytes += file.entry_bytes(&name)?;
+                    } else if file.index.contains_key(&format!("{name}.q.meta")) {
+                        for side in ["q.codes", "q.scales", "q.zeros"] {
+                            bytes += file.entry_bytes(&format!("{name}.{side}")).with_context(
+                                || format!("expert '{prefix}': missing packed sidecar tensor"),
+                            )?;
+                        }
+                    } else {
+                        anyhow::bail!(
+                            "expert tensor '{name}' missing from {} (neither dense nor packed)",
+                            file.path().display()
+                        );
+                    }
+                }
+                total += bytes;
+                max_expert = max_expert.max(bytes);
+                layer.push(ExpertSpec { prefix, bytes });
+            }
+            specs.push(layer);
+        }
+        anyhow::ensure!(
+            budget_bytes >= max_expert,
+            "expert budget {budget_bytes} B cannot hold the largest expert ({max_expert} B); \
+             the smallest feasible budget for this model is {:.3} MB",
+            max_expert as f64 / 1e6
+        );
+        Ok(TieredStore {
+            file,
+            cfg: cfg.clone(),
+            budget: budget_bytes,
+            specs,
+            total_bytes: total,
+            max_expert_bytes: max_expert,
+            owned_spill: None,
+            inner: Mutex::new(Inner {
+                cache: BTreeMap::new(),
+                loading: std::collections::BTreeSet::new(),
+                freq: vec![vec![0; cfg.n_experts]; cfg.n_layers],
+                tick: 0,
+                resident: 0,
+                peak_resident: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                stall_secs: 0.0,
+            }),
+            loaded: std::sync::Condvar::new(),
+        })
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    /// Smallest budget [`TieredStore::new`] accepts for this checkpoint.
+    pub fn max_expert_bytes(&self) -> usize {
+        self.max_expert_bytes
+    }
+
+    /// Fetch guard handles for one layer's about-to-run experts, loading
+    /// misses from disk and evicting to budget. `wants` is
+    /// `(expert, routed_token_count)` — the token counts are the same
+    /// selection-frequency signal PESF thresholds (Eq. 6's counts) and
+    /// feed the eviction policy. Call once per MoE layer, *before* the
+    /// expert GEMMs: the router's top-k has just determined exactly which
+    /// experts run, so this is the router-score-driven prefetch point.
+    pub fn fetch(&self, layer: usize, wants: &[(usize, usize)]) -> Result<Vec<Arc<ExpertWeights>>> {
+        let batch: Vec<(u32, u32)> =
+            wants.iter().map(|&(e, _)| (layer as u32, e as u32)).collect();
+        let mut out = Vec::with_capacity(wants.len());
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if tick % AGE_EVERY_TICKS == 0 {
+            for l in &mut inner.freq {
+                for c in l.iter_mut() {
+                    *c >>= 1;
+                }
+            }
+        }
+        for &(e, tokens) in wants {
+            inner.freq[layer][e] += tokens as u64;
+            let key = (layer as u32, e as u32);
+            loop {
+                if let Some(ent) = inner.cache.get_mut(&key) {
+                    ent.last_tick = tick;
+                    let w = ent.w.clone();
+                    inner.hits += 1;
+                    out.push(w);
+                    break;
+                }
+                // Another thread is already reading this expert: wait for
+                // its insert instead of duplicating the disk IO, then
+                // re-check (it may also have failed, or been evicted).
+                if inner.loading.contains(&key) {
+                    inner = self.loaded.wait(inner).unwrap();
+                    continue;
+                }
+                // This thread loads it. The disk read + decode run
+                // *outside* the lock so concurrent fetches — cache hits
+                // and loads of other experts — proceed during the IO;
+                // `loading` keeps the key claimed meanwhile.
+                inner.misses += 1;
+                inner.loading.insert(key);
+                drop(inner);
+                let spec = &self.specs[layer][e];
+                let t0 = Instant::now();
+                let res = read_expert_from(&self.file, &spec.prefix, &self.cfg)
+                    .with_context(|| format!("loading expert '{}' on demand", spec.prefix));
+                let stall = t0.elapsed().as_secs_f64();
+                inner = self.inner.lock().unwrap();
+                inner.loading.remove(&key);
+                inner.stall_secs += stall;
+                let w = match res {
+                    Ok(w) => Arc::new(w),
+                    Err(err) => {
+                        // Waiters must wake even on failure (they will
+                        // retry the load themselves and surface the same
+                        // error).
+                        self.loaded.notify_all();
+                        return Err(err);
+                    }
+                };
+                inner
+                    .cache
+                    .insert(key, CacheEntry { w: w.clone(), bytes: spec.bytes, last_tick: tick });
+                inner.resident += spec.bytes;
+                // Enforce the budget immediately after each insert, never
+                // evicting the entry just added (the budget admits any
+                // single expert, so other residents always cover the
+                // overshoot). Current-batch residents are only evicted as
+                // a last resort — the caller's guard handle keeps them
+                // usable either way.
+                while inner.resident > self.budget {
+                    let victim = {
+                        let i = &*inner;
+                        i.cache
+                            .iter()
+                            .filter(|(k, _)| **k != key)
+                            .min_by_key(|(k, ent)| {
+                                let in_batch = batch.contains(*k);
+                                (in_batch, i.freq[k.0 as usize][k.1 as usize], ent.last_tick)
+                            })
+                            .map(|(k, _)| *k)
+                    };
+                    let Some(v) = victim else { break };
+                    let ent = inner.cache.remove(&v).unwrap();
+                    inner.resident -= ent.bytes;
+                    inner.evictions += 1;
+                }
+                inner.peak_resident = inner.peak_resident.max(inner.resident);
+                self.loaded.notify_all();
+                out.push(w);
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Re-seat the high-water mark to the current occupancy. The engine
+    /// calls this at the start of each serve run so
+    /// `peak_resident_bytes` reports that run's own peak instead of the
+    /// store's lifetime maximum.
+    pub fn reset_peak(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.peak_resident = inner.resident;
+    }
+
+    pub fn stats(&self) -> ExpertStoreStats {
+        let inner = self.inner.lock().unwrap();
+        ExpertStoreStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            load_stall_secs: inner.stall_secs,
+            resident_bytes: inner.resident,
+            peak_resident_bytes: inner.peak_resident,
+            total_bytes: self.total_bytes,
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+impl Model {
+    /// Open a checkpoint with its routed experts left **on disk**, served
+    /// through a [`TieredStore`] under `budget_bytes`. Everything else
+    /// (embeddings, norms, attention, routers, shared experts) loads
+    /// eagerly as usual. Runs on the process-global pool.
+    pub fn open_tiered(path: &Path, name: &str, budget_bytes: usize) -> Result<Model> {
+        Self::open_tiered_with_pool(path, name, budget_bytes, ThreadPool::global().clone())
+    }
+
+    /// [`Model::open_tiered`] on an explicit worker pool.
+    pub fn open_tiered_with_pool(
+        path: &Path,
+        name: &str,
+        budget_bytes: usize,
+        pool: Arc<ThreadPool>,
+    ) -> Result<Model> {
+        let file = IndexedTensorFile::open(path)?;
+        let weights = Weights::from_source(&file, name, false)?;
+        let store = TieredStore::new(file, &weights.cfg, budget_bytes)?;
+        Ok(Model { weights, store: ExpertStore::Tiered(store), pool })
+    }
+
+    /// Convert a resident model into a tiered one: spill the weights to
+    /// `spill` (full checkpoint save) and reopen with the routed experts
+    /// on disk under `budget_bytes`. Keeps the model's pool. This is what
+    /// `serve --expert-budget-mb` does for a model that was loaded (or
+    /// initialized) fully resident.
+    pub fn into_tiered(self, budget_bytes: usize, spill: &Path) -> Result<Model> {
+        // Validate the budget *before* writing a model-sized checkpoint:
+        // an infeasible budget must not cost a multi-GB spill first.
+        let min = self.weights.max_expert_bytes();
+        anyhow::ensure!(
+            budget_bytes >= min,
+            "expert budget {budget_bytes} B cannot hold the largest expert ({min} B); \
+             the smallest feasible budget for this model is {:.3} MB",
+            min as f64 / 1e6
+        );
+        self.weights
+            .save(spill)
+            .with_context(|| format!("spilling weights to {}", spill.display()))?;
+        let mut model =
+            Model::open_tiered_with_pool(spill, &self.weights.cfg.name, budget_bytes, self.pool)
+                .map_err(|e| {
+                    // Don't leave the spilled checkpoint behind on a failed
+                    // open.
+                    let _ = std::fs::remove_file(spill);
+                    e
+                })?;
+        // The spill was created for this store alone: remove it when the
+        // store drops (callers on unix may additionally unlink it eagerly
+        // — the store reads through its open fd either way).
+        if let ExpertStore::Tiered(t) = &mut model.store {
+            t.owned_spill = Some(spill.to_path_buf());
+        }
+        Ok(model)
+    }
+
+    /// Guard handles for one layer's routed experts. `wants` is
+    /// `(expert index, routed token count)`. Resident store: `Arc` clones
+    /// out of [`Weights`]. Tiered store: cache hits or on-demand loads
+    /// under the byte budget.
+    pub(crate) fn experts_for_layer(
+        &self,
+        li: usize,
+        wants: &[(usize, usize)],
+    ) -> Vec<Arc<ExpertWeights>> {
+        match &self.store {
+            ExpertStore::Resident => {
+                wants.iter().map(|&(e, _)| self.weights.layers[li].expert_arc(e)).collect()
+            }
+            // The store was fully validated at open (index complete,
+            // budget feasible), so an error here is an IO failure on the
+            // checkpoint mid-serve. Transient hiccups get a bounded retry
+            // (already-cached experts hit on the retry; only the failed
+            // load re-runs); a persistent failure still panics — the
+            // forward pass cannot produce correct output without the
+            // expert's weights.
+            ExpertStore::Tiered(t) => {
+                let mut last_err = None;
+                for attempt in 0..3u32 {
+                    match t.fetch(li, wants) {
+                        Ok(handles) => return handles,
+                        Err(e) => {
+                            last_err = Some(e);
+                            if attempt < 2 {
+                                std::thread::sleep(std::time::Duration::from_millis(
+                                    10 << attempt,
+                                ));
+                            }
+                        }
+                    }
+                }
+                panic!(
+                    "tiered expert store: on-demand load failed after 3 attempts: {:#}",
+                    last_err.expect("loop recorded an error")
+                )
+            }
+        }
+    }
+
+    /// Start a fresh measurement window on the tiered store: the peak
+    /// occupancy re-seats to the current occupancy (counters stay
+    /// cumulative; callers delta them). No-op for a resident store.
+    pub fn reset_expert_peak(&self) {
+        if let ExpertStore::Tiered(t) = &self.store {
+            t.reset_peak();
+        }
+    }
+
+    /// Store accounting. For a resident store this degenerates to the
+    /// weights' own expert bytes (everything resident, no budget, no
+    /// traffic). **Routed** experts only — shared experts are pinned in
+    /// [`Weights`] outside the budget in both modes.
+    pub fn expert_store_stats(&self) -> ExpertStoreStats {
+        match &self.store {
+            ExpertStore::Resident => {
+                let b = self.weights.routed_expert_bytes();
+                ExpertStoreStats {
+                    resident_bytes: b,
+                    peak_resident_bytes: b,
+                    total_bytes: b,
+                    ..Default::default()
+                }
+            }
+            ExpertStore::Tiered(t) => t.stats(),
+        }
+    }
+
+    /// True resident bytes of everything being served: the weights still
+    /// materialized in memory (embeddings, norms, attention, routers,
+    /// shared experts — plus routed experts when the store is resident)
+    /// plus whatever the tiered cache currently holds.
+    pub fn resident_weight_bytes(&self) -> usize {
+        let base = self.weights.storage_bytes();
+        match &self.store {
+            ExpertStore::Resident => base,
+            ExpertStore::Tiered(t) => base + t.stats().resident_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::hooks::Hooks;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 4,
+            top_k: 2,
+            n_shared: 1,
+            n_heads: 2,
+            vocab: 32,
+            max_seq: 64,
+        }
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("eac_moe_store_{tag}_{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn tiered_forward_bit_identical_to_resident() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 21);
+        w.pack_experts_rtn(4, 16);
+        let path = temp_path("fwd");
+        w.save(&path).unwrap();
+        let resident = Model::new(w.clone());
+        let tokens: Vec<u32> = (0..24).map(|i| (i * 7) % 32).collect();
+        let want = resident.forward(&tokens);
+        let total = resident.expert_store_stats().total_bytes;
+        let min_fit = w.max_expert_bytes();
+        for budget in [total, total / 2, min_fit] {
+            let tiered = Model::open_tiered(&path, "tiny", budget).unwrap();
+            assert!(tiered.store.is_tiered());
+            let got = tiered.forward(&tokens);
+            assert_eq!(got.data, want.data, "budget {budget}");
+            let st = tiered.expert_store_stats();
+            assert!(st.resident_bytes <= budget, "resident {} > {budget}", st.resident_bytes);
+            assert!(st.peak_resident_bytes <= budget);
+            assert_eq!(st.total_bytes, total);
+            assert!(st.misses > 0);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tight_budget_evicts_and_reloads() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 22);
+        w.pack_experts_rtn(4, 16);
+        let path = temp_path("evict");
+        w.save(&path).unwrap();
+        let m = Model::open_tiered(&path, "tiny", w.max_expert_bytes()).unwrap();
+        let tokens: Vec<u32> = (0..32).map(|i| (i * 5) % 32).collect();
+        m.forward(&tokens);
+        m.forward(&tokens);
+        let st = m.expert_store_stats();
+        // One-expert budget: every distinct expert in a layer forces a
+        // load, and repeat passes reload (cold cache every time).
+        assert!(st.evictions > 0, "smallest budget must evict");
+        assert!(st.misses > st.hits, "smallest budget should mostly miss");
+        assert!(st.peak_resident_bytes <= w.max_expert_bytes());
+        assert!(st.load_stall_secs >= 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn budget_below_largest_expert_is_rejected() {
+        let cfg = tiny_cfg();
+        let w = Weights::init(&cfg, 23);
+        let path = temp_path("reject");
+        w.save(&path).unwrap();
+        let err = Model::open_tiered(&path, "tiny", w.max_expert_bytes() - 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("budget"), "{msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn frequency_weighted_eviction_prefers_cold_experts() {
+        // Two experts fit. Make expert (0,0) hot, then touch two cold
+        // experts; the cold pair should cycle while 0 stays resident.
+        let cfg = tiny_cfg();
+        let w = Weights::init(&cfg, 24);
+        let path = temp_path("freq");
+        w.save(&path).unwrap();
+        let per = w.layers[0].experts()[0].storage_bytes();
+        let m = Model::open_tiered(&path, "tiny", per * 2).unwrap();
+        let ExpertStore::Tiered(t) = &m.store else { panic!("tiered") };
+        for _ in 0..5 {
+            t.fetch(0, &[(0, 8)]).unwrap(); // hot: high selection count
+        }
+        t.fetch(0, &[(1, 1)]).unwrap(); // cache: {0, 1}
+        t.fetch(0, &[(2, 1)]).unwrap(); // evicts 1 (cold), keeps hot 0
+        let st0 = t.stats();
+        let h0 = st0.hits;
+        t.fetch(0, &[(0, 1)]).unwrap(); // hot expert still resident -> hit
+        assert_eq!(t.stats().hits, h0 + 1, "hot expert was evicted");
+        t.fetch(0, &[(1, 1)]).unwrap(); // cold expert was evicted -> miss
+        assert_eq!(t.stats().hits, h0 + 1);
+        assert!(t.stats().evictions >= 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tiered_skeleton_keeps_shared_resident_and_drops_routed() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 25);
+        w.pack_experts_rtn(4, 16);
+        let path = temp_path("skel");
+        w.save(&path).unwrap();
+        let m = Model::open_tiered(&path, "tiny", w.expert_storage_bytes()).unwrap();
+        for (li, l) in m.weights.layers.iter().enumerate() {
+            assert!(l.experts().is_empty(), "layer {li} routed experts must be on disk");
+            assert_eq!(l.shared().len(), cfg.n_shared, "layer {li} shared stay resident");
+        }
+        // Resident weight bytes exclude the routed experts until they load.
+        let routed: usize = w
+            .layers
+            .iter()
+            .flat_map(|l| l.experts().iter())
+            .map(|e| e.storage_bytes())
+            .sum();
+        assert_eq!(m.resident_weight_bytes(), w.storage_bytes() - routed);
+        // Forward with hooks still works and matches resident exactly.
+        let resident = Model::new(w);
+        let toks = [1u32, 5, 9, 2, 7];
+        let a = m.forward_with_hooks(&toks, &Hooks::none());
+        let b = resident.forward(&toks);
+        assert_eq!(a.data, b.data);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_packed_sidecar_fails_at_open_with_context() {
+        use crate::util::binio::TensorFile;
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 26);
+        w.pack_experts_rtn(4, 16);
+        let mut tf = w.to_tensor_file();
+        assert!(tf.entries.remove("layer0.expert1.w2.q.codes").is_some());
+        let path = temp_path("sidecar");
+        tf.save(&path).unwrap();
+        // Whole-file load fails too (shared decode path)...
+        assert!(Weights::from_tensor_file(&TensorFile::load(&path).unwrap(), "tiny").is_err());
+        // ...and the tiered open names the broken expert instead of
+        // deferring the failure to a mid-serve fetch.
+        let err = Model::open_tiered(&path, "tiny", usize::MAX).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("layer0.expert1"), "{msg}");
+        assert!(msg.contains("sidecar") || msg.contains("missing"), "{msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -34,9 +34,10 @@ use super::config::ModelConfig;
 use crate::quant::pack::PackedMat;
 use crate::quant::quantizer::{GroupQuant, QuantConfig};
 use crate::tensor::{Mat, Pcg64};
-use crate::util::binio::TensorFile;
+use crate::util::binio::{TensorFile, TensorSource};
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Polymorphic weight matrix: dense f32 or packed low-bit, with all
 /// execution dispatched through [`WeightMat::matmul`].
@@ -172,6 +173,15 @@ impl ExpertWeights {
 }
 
 /// One transformer layer.
+///
+/// Expert weights are held as `Arc<ExpertWeights>` **guard handles** and
+/// the vectors are private: the forward pass no longer indexes a
+/// materialized `Vec<ExpertWeights>` — it asks the model's
+/// [`crate::model::store::ExpertStore`] for handles, which in `Tiered`
+/// mode may load an expert from disk on demand. In that mode these
+/// vectors are empty (only `shared` stays materialized — shared experts
+/// run for every token, so tiering them would guarantee thrash) and the
+/// store owns the single source of truth for routed experts.
 #[derive(Clone, Debug)]
 pub struct LayerWeights {
     pub attn_norm: Vec<f32>,
@@ -181,8 +191,42 @@ pub struct LayerWeights {
     pub wv: WeightMat,
     pub wo: WeightMat,
     pub router: Mat, // (d_model, n_experts); stays f32 (paper Table 11)
-    pub experts: Vec<ExpertWeights>,
-    pub shared: Vec<ExpertWeights>,
+    experts: Vec<Arc<ExpertWeights>>,
+    shared: Vec<Arc<ExpertWeights>>,
+}
+
+impl LayerWeights {
+    /// Resident routed experts (empty under a tiered store).
+    pub fn experts(&self) -> &[Arc<ExpertWeights>] {
+        &self.experts
+    }
+
+    /// Shared (always-on) experts — resident in every store mode.
+    pub fn shared(&self) -> &[Arc<ExpertWeights>] {
+        &self.shared
+    }
+
+    /// Guard handle to one resident routed expert (cheap `Arc` clone).
+    pub fn expert_arc(&self, e: usize) -> Arc<ExpertWeights> {
+        self.experts[e].clone()
+    }
+
+    /// Mutable access for the calibration pipeline (GPTQ writes packed
+    /// forms in place). Copy-on-write: if a forward pass still holds a
+    /// guard handle to this expert, the mutation clones instead of racing.
+    pub fn expert_mut(&mut self, e: usize) -> &mut ExpertWeights {
+        Arc::make_mut(&mut self.experts[e])
+    }
+
+    /// Mutable access to one shared expert (same CoW semantics).
+    pub fn shared_expert_mut(&mut self, s: usize) -> &mut ExpertWeights {
+        Arc::make_mut(&mut self.shared[s])
+    }
+
+    /// Replace the shared-expert set (tests/ablations).
+    pub fn set_shared(&mut self, shared: Vec<ExpertWeights>) {
+        self.shared = shared.into_iter().map(Arc::new).collect();
+    }
 }
 
 /// Full model weights.
@@ -208,8 +252,12 @@ impl Weights {
                 wv: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng).into(),
                 wo: Mat::randn(cfg.d_model, cfg.d_model, sd, &mut rng).into(),
                 router: Mat::randn(cfg.d_model, cfg.n_experts, sd, &mut rng),
-                experts: (0..cfg.n_experts).map(|_| ExpertWeights::randn(cfg, &mut rng)).collect(),
-                shared: (0..cfg.n_shared).map(|_| ExpertWeights::randn(cfg, &mut rng)).collect(),
+                experts: (0..cfg.n_experts)
+                    .map(|_| Arc::new(ExpertWeights::randn(cfg, &mut rng)))
+                    .collect(),
+                shared: (0..cfg.n_shared)
+                    .map(|_| Arc::new(ExpertWeights::randn(cfg, &mut rng)))
+                    .collect(),
             })
             .collect();
         Weights {
@@ -262,11 +310,38 @@ impl Weights {
             .sum()
     }
 
+    /// Resident bytes of **routed** experts only — the set a tiered
+    /// [`crate::model::store::ExpertStore`] manages (shared experts are
+    /// always-on and stay pinned outside the budget). This is the "total"
+    /// every budget fraction and store stat is measured against; use
+    /// [`Weights::expert_storage_bytes`] when shared experts should count.
+    pub fn routed_expert_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .map(|e| e.storage_bytes())
+            .sum()
+    }
+
+    /// Storage bytes of the largest single routed expert — the smallest
+    /// feasible byte budget for a tiered [`crate::model::store::ExpertStore`]
+    /// over these weights (any budget below this cannot hold even one
+    /// expert resident).
+    pub fn max_expert_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .map(|e| e.storage_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
     /// RTN-quantize + pack every routed/shared expert in place (uncalibrated
     /// helper for benches/tests; QESC is the calibrated path).
     pub fn pack_experts_rtn(&mut self, bits: u32, group_size: usize) {
         for l in &mut self.layers {
             for e in l.experts.iter_mut().chain(l.shared.iter_mut()) {
+                let e = Arc::make_mut(e);
                 for w in [&mut e.w1, &mut e.w2, &mut e.w3] {
                     let gs = if group_size == 0 { 0 } else { group_size.min(w.rows()) };
                     let gq = GroupQuant::quantize(&w.to_dense(), QuantConfig::new(bits, gs));
@@ -323,7 +398,19 @@ impl Weights {
 
     /// Deserialize; `name` is stored in the returned config.
     pub fn from_tensor_file(tf: &TensorFile, name: &str) -> Result<Self> {
-        let (_, c) = tf.get_u32("config")?;
+        Self::from_source(tf, name, true)
+    }
+
+    /// Deserialize from any [`TensorSource`] (a fully resident
+    /// [`TensorFile`] or an indexed on-disk reader). With `load_experts =
+    /// false`, routed expert tensors are **skipped** and the returned
+    /// weights hold empty expert vectors — the skeleton a tiered
+    /// [`crate::model::store::ExpertStore`] wraps, loading experts by byte
+    /// range on demand. Shared experts are always loaded (they run for
+    /// every token and stay resident in every store mode).
+    pub fn from_source<S: TensorSource>(src: &S, name: &str, load_experts: bool) -> Result<Self> {
+        let (_, c) = src.fetch_u32("config")?;
+        anyhow::ensure!(c.len() == 9, "config: expected 9 fields, got {}", c.len());
         let cfg = ModelConfig {
             name: name.to_string(),
             n_layers: c[0] as usize,
@@ -337,27 +424,29 @@ impl Weights {
             max_seq: c[8] as usize,
         };
         let mat = |nm: &str, r: usize, cc: usize| -> Result<Mat> {
-            let (dims, d) = tf.get_f32(nm)?;
+            let (dims, d) = src.fetch_f32(nm)?;
             anyhow::ensure!(dims == [r, cc], "{nm}: dims {dims:?} != [{r}, {cc}]");
-            Ok(Mat::from_vec(r, cc, d.to_vec()))
+            Ok(Mat::from_vec(r, cc, d))
         };
         let vecf = |nm: &str, n: usize| -> Result<Vec<f32>> {
-            let (dims, d) = tf.get_f32(nm)?;
+            let (dims, d) = src.fetch_f32(nm)?;
             anyhow::ensure!(dims == [n], "{nm}: bad dims {dims:?}");
-            Ok(d.to_vec())
+            Ok(d)
         };
         let weight = |nm: &str, r: usize, cc: usize| -> Result<WeightMat> {
-            get_weight(tf, nm, r, cc)
+            get_weight(src, nm, r, cc)
         };
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let p = format!("layer{i}");
-            let read_expert = |ep: &str| -> Result<ExpertWeights> {
-                Ok(ExpertWeights {
-                    w1: weight(&format!("{ep}.w1"), cfg.d_model, cfg.d_ff)?,
-                    w2: weight(&format!("{ep}.w2"), cfg.d_ff, cfg.d_model)?,
-                    w3: weight(&format!("{ep}.w3"), cfg.d_model, cfg.d_ff)?,
-                })
+            let experts = if load_experts {
+                (0..cfg.n_experts)
+                    .map(|e| -> Result<Arc<ExpertWeights>> {
+                        Ok(Arc::new(read_expert_from(src, &format!("{p}.expert{e}"), &cfg)?))
+                    })
+                    .collect::<Result<_>>()?
+            } else {
+                Vec::new()
             };
             layers.push(LayerWeights {
                 attn_norm: vecf(&format!("{p}.attn_norm"), cfg.d_model)?,
@@ -367,11 +456,11 @@ impl Weights {
                 wv: weight(&format!("{p}.wv"), cfg.d_model, cfg.d_model)?,
                 wo: weight(&format!("{p}.wo"), cfg.d_model, cfg.d_model)?,
                 router: mat(&format!("{p}.router"), cfg.d_model, cfg.n_experts)?,
-                experts: (0..cfg.n_experts)
-                    .map(|e| read_expert(&format!("{p}.expert{e}")))
-                    .collect::<Result<_>>()?,
+                experts,
                 shared: (0..cfg.n_shared)
-                    .map(|s| read_expert(&format!("{p}.shared{s}")))
+                    .map(|s| -> Result<Arc<ExpertWeights>> {
+                        Ok(Arc::new(read_expert_from(src, &format!("{p}.shared{s}"), &cfg)?))
+                    })
                     .collect::<Result<_>>()?,
             });
         }
@@ -411,16 +500,24 @@ fn put_weight(tf: &mut TensorFile, name: &str, w: &WeightMat) {
     }
 }
 
-/// Read one [`WeightMat`], detecting packed storage by the presence of the
-/// `.q.meta` entry; otherwise falls back to the legacy plain-f32 layout.
-fn get_weight(tf: &TensorFile, name: &str, rows: usize, cols: usize) -> Result<WeightMat> {
+/// Read one [`WeightMat`] from any [`TensorSource`], detecting packed
+/// storage by the presence of the `.q.meta` entry; otherwise falls back to
+/// the legacy plain-f32 layout. A `.q.meta` entry whose sidecar tensors
+/// (`.q.codes/.q.scales/.q.zeros`) are absent or malformed is a contextful
+/// error naming the missing tensor — never a panic or silent garbage.
+pub(crate) fn get_weight<S: TensorSource>(
+    src: &S,
+    name: &str,
+    rows: usize,
+    cols: usize,
+) -> Result<WeightMat> {
     let meta_name = format!("{name}.q.meta");
-    if tf.get(&meta_name).is_err() {
-        let (dims, d) = tf.get_f32(name)?;
+    if !src.contains(&meta_name) {
+        let (dims, d) = src.fetch_f32(name)?;
         anyhow::ensure!(dims == [rows, cols], "{name}: dims {dims:?} != [{rows}, {cols}]");
-        return Ok(WeightMat::Dense(Mat::from_vec(rows, cols, d.to_vec())));
+        return Ok(WeightMat::Dense(Mat::from_vec(rows, cols, d)));
     }
-    let (mdims, meta) = tf.get_u32(&meta_name)?;
+    let (mdims, meta) = src.fetch_u32(&meta_name)?;
     anyhow::ensure!(mdims == [4], "{meta_name}: bad dims {mdims:?}");
     let bits = meta[0];
     let group_size = meta[1] as usize;
@@ -432,34 +529,32 @@ fn get_weight(tf: &TensorFile, name: &str, rows: usize, cols: usize) -> Result<W
         meta[3]
     );
     let cfg = QuantConfig::new(bits, group_size);
-    let codes_entry = tf.get(&format!("{name}.q.codes"))?;
-    let codes = codes_entry
-        .payload
-        .as_u8()
-        .ok_or_else(|| anyhow::anyhow!("{name}.q.codes: not u8"))?;
+    let (_, codes) = src.fetch_u8(&format!("{name}.q.codes"))?;
     let want = PackedMat::col_bytes(rows, bits) * cols;
     anyhow::ensure!(codes.len() == want, "{name}.q.codes: {} bytes != {want}", codes.len());
     let ng = cfg.n_groups(rows);
-    let (sdims, scales) = tf.get_f32(&format!("{name}.q.scales"))?;
+    let (sdims, scales) = src.fetch_f32(&format!("{name}.q.scales"))?;
     anyhow::ensure!(sdims == [ng, cols], "{name}.q.scales: bad dims {sdims:?}");
-    let zeros_entry = tf.get(&format!("{name}.q.zeros"))?;
-    anyhow::ensure!(
-        zeros_entry.dims == [ng, cols],
-        "{name}.q.zeros: bad dims {:?}",
-        zeros_entry.dims
-    );
-    let zeros = zeros_entry
-        .payload
-        .as_u8()
-        .ok_or_else(|| anyhow::anyhow!("{name}.q.zeros: not u8"))?;
-    Ok(WeightMat::Packed(PackedMat {
-        cfg,
-        rows,
-        cols,
-        packed: codes.to_vec(),
-        scales: scales.to_vec(),
-        zeros: zeros.to_vec(),
-    }))
+    let (zdims, zeros) = src.fetch_u8(&format!("{name}.q.zeros"))?;
+    anyhow::ensure!(zdims == [ng, cols], "{name}.q.zeros: bad dims {zdims:?}");
+    Ok(WeightMat::Packed(PackedMat { cfg, rows, cols, packed: codes, scales, zeros }))
+}
+
+/// Read one expert (w1/w2/w3, dense or packed) from a [`TensorSource`] by
+/// its tensor-name prefix (`layer{i}.expert{e}` / `layer{i}.shared{s}`).
+/// This is the tiered store's on-demand load path and the eager loader's
+/// shared implementation — one decode path, so a disk-loaded expert is
+/// byte-for-byte the expert the eager path would have built.
+pub(crate) fn read_expert_from<S: TensorSource>(
+    src: &S,
+    prefix: &str,
+    cfg: &ModelConfig,
+) -> Result<ExpertWeights> {
+    Ok(ExpertWeights {
+        w1: get_weight(src, &format!("{prefix}.w1"), cfg.d_model, cfg.d_ff)?,
+        w2: get_weight(src, &format!("{prefix}.w2"), cfg.d_ff, cfg.d_model)?,
+        w3: get_weight(src, &format!("{prefix}.w3"), cfg.d_model, cfg.d_ff)?,
+    })
 }
 
 #[cfg(test)]

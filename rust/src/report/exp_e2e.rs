@@ -12,15 +12,17 @@ use crate::serve::PrunePolicy;
 use crate::util::json::Json;
 use crate::Result;
 
-/// Table 4 (+ the Fig 1 summary): Baseline vs QESC(3.03) vs QESC+PESF(0.3):
-/// params, accuracy, speedup.
+/// Table 4 (+ the Fig 1 summary): Baseline vs QESC(3.03) vs QESC+PESF(0.3)
+/// vs QESC under a 50% expert-memory budget: params, **resident vs on-disk
+/// expert bytes** (so "budget held" and "model size" are separate
+/// columns), accuracy, speedup.
 pub fn table4(scale: f64) -> Result<()> {
     let suite = zero_shot_suite(n_items(scale), 54);
     let ctx = ExperimentContext::new(54, scale);
     let (n_reqs, len) = serve_workload(scale);
     let mut table = Table::new(
         "Table 4 — QESC(3.03-bit) + PESF(α=0.3) overall",
-        &["Model", "Method", "Params(MB)", "0-shot avg", "Speedup"],
+        &["Model", "Method", "Params(MB)", "Experts res(MB)", "Experts disk(MB)", "0-shot avg", "Speedup"],
     );
     let mut json = Json::obj();
     for zoo in ZooModel::ALL {
@@ -28,9 +30,14 @@ pub fn table4(scale: f64) -> Result<()> {
         // Measured resident bytes (Weights::storage_bytes), not a simulated
         // size: the compressed model actually holds packed codes.
         let fp_mb = fp.weights.storage_bytes() as f64 / 1e6;
+        // The expert columns use the *routed-only* definition throughout —
+        // the set a budget can manage — so the tiered row's numbers are
+        // comparable to the resident rows (shared experts are pinned and
+        // counted in Params(MB) instead).
+        let fp_expert_mb = fp.weights.routed_expert_bytes() as f64 / 1e6;
         let (q, report) = compress(&fp, zoo, QuantMethod::Qesc, BitSetting::B303, &ctx);
         let q_mb = q.weights.storage_bytes() as f64 / 1e6;
-        let expert_mb = q.weights.expert_storage_bytes() as f64 / 1e6;
+        let expert_mb = q.weights.routed_expert_bytes() as f64 / 1e6;
         let base = measure(&fp, &ctx, &suite);
         let qesc = measure(&q, &ctx, &suite);
         let qp = measure_pruned(&q, &ctx, &suite, 0.3);
@@ -56,9 +63,56 @@ pub fn table4(scale: f64) -> Result<()> {
             len,
         );
         let speedup_pesf = lat_q / lat_pesf;
-        table.row(vec![zoo.display().into(), "Baseline".into(), format!("{fp_mb:.2}"), format!("{:.2}", base.suite.mean_accuracy()), "1.00x".into()]);
-        table.row(vec!["".into(), "QESC".into(), format!("{q_mb:.2}"), format!("{:.2}", qesc.suite.mean_accuracy()), format!("{:.2}x", lat_base / lat_q)]);
-        table.row(vec!["".into(), "QESC+PESF".into(), format!("{q_mb:.2}"), format!("{:.2}", qp.suite.mean_accuracy()), format!("{:.2}x", lat_base / lat_pesf)]);
+        // Tiered serving: the same packed experts under a hard budget of
+        // 50% of their bytes (outputs are bit-identical; only residency
+        // changes). ServeMetrics supplies the measured "budget held" vs
+        // "model size" numbers.
+        let spill = std::env::temp_dir()
+            .join(format!("eac_moe_table4_{}_{}.bin", zoo.key(), std::process::id()));
+        let routed_total = q.weights.routed_expert_bytes();
+        let budget = (routed_total / 2).max(q.weights.max_expert_bytes());
+        let tiered = crate::model::Model::new(q.weights.clone()).into_tiered(budget, &spill)?;
+        let tiered_engine = crate::serve::Engine::new(
+            tiered,
+            crate::serve::EngineConfig { workers: 1, ..Default::default() },
+        );
+        // Same measurement protocol as `prefill_latency` (warmup serve,
+        // then median of 3), so this row's Speedup is comparable to the
+        // others — the warmup also brings the cache to its steady state
+        // instead of charging every cold-start load to the measurement.
+        let mut mix = crate::data::corpus::WikiMixture::new(97);
+        let make_reqs = |mix: &mut crate::data::corpus::WikiMixture| {
+            (0..n_reqs as u64)
+                .map(|i| crate::serve::Request::new(i, mix.sequence(len)))
+                .collect::<Vec<crate::serve::Request>>()
+        };
+        tiered_engine.serve(make_reqs(&mut mix)); // warmup (cold loads)
+        let mut trials = Vec::new();
+        let mut tm = None;
+        for _ in 0..3 {
+            let (_, m) = tiered_engine.serve(make_reqs(&mut mix));
+            trials.push(m.prefill.percentile_ms(0.5));
+            tm = Some(m);
+        }
+        trials.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lat_tiered = trials[trials.len() / 2] / 1e3;
+        let tm = tm.expect("three tiered trials ran");
+        let _ = std::fs::remove_file(&spill);
+        table.row(vec![zoo.display().into(), "Baseline".into(), format!("{fp_mb:.2}"), format!("{fp_expert_mb:.2}"), format!("{fp_expert_mb:.2}"), format!("{:.2}", base.suite.mean_accuracy()), "1.00x".into()]);
+        table.row(vec!["".into(), "QESC".into(), format!("{q_mb:.2}"), format!("{expert_mb:.2}"), format!("{expert_mb:.2}"), format!("{:.2}", qesc.suite.mean_accuracy()), format!("{:.2}x", lat_base / lat_q)]);
+        table.row(vec!["".into(), "QESC+PESF".into(), format!("{q_mb:.2}"), format!("{expert_mb:.2}"), format!("{expert_mb:.2}"), format!("{:.2}", qp.suite.mean_accuracy()), format!("{:.2}x", lat_base / lat_pesf)]);
+        table.row(vec![
+            "".into(),
+            "QESC tiered@50%".into(),
+            format!("{:.2}", tm.resident_weight_bytes as f64 / 1e6),
+            // "Budget held": the store's high-water mark under the budget.
+            format!("{:.2}", tm.peak_resident_expert_bytes as f64 / 1e6),
+            // "Model size": the full on-disk expert set.
+            format!("{:.2}", tm.total_expert_bytes as f64 / 1e6),
+            // Bit-identical to QESC by the store's correctness contract.
+            format!("{:.2}", qesc.suite.mean_accuracy()),
+            format!("{:.2}x", lat_base / lat_tiered),
+        ]);
         let mut o = Json::obj();
         o.set("fp_mb", Json::Num(fp_mb))
             .set("q_mb", Json::Num(q_mb))
@@ -73,6 +127,15 @@ pub fn table4(scale: f64) -> Result<()> {
             // Cost of serving packed vs dense f32 on this CPU path (>1 =
             // slower; the fused GEMM targets ~1.5-2x of dense).
             .set("packed_over_dense_latency", Json::Num(lat_q / lat_base))
+            // Tiered store at a 50% expert budget: budget held vs model
+            // size, plus the traffic the budget induced.
+            .set("tiered_budget_mb", Json::Num(budget as f64 / 1e6))
+            .set("tiered_peak_resident_mb", Json::Num(tm.peak_resident_expert_bytes as f64 / 1e6))
+            .set("tiered_disk_mb", Json::Num(tm.total_expert_bytes as f64 / 1e6))
+            .set("tiered_hit_rate", Json::Num(tm.expert_hit_rate()))
+            .set("tiered_evictions", Json::Num(tm.expert_evictions as f64))
+            .set("tiered_load_stall_secs", Json::Num(tm.expert_load_stall_secs))
+            .set("tiered_over_resident_latency", Json::Num(lat_tiered / lat_q))
             .set("ppl_base", Json::Num(base.ppl))
             .set("ppl_qesc", Json::Num(qesc.ppl));
         json.set(zoo.key(), o);
@@ -82,7 +145,10 @@ pub fn table4(scale: f64) -> Result<()> {
               ~8-10x at 3.03-bit experts — at baseline accuracy within ~1 point;\n\
               PESF speeds up the packed model, while the packed GEMM itself costs\n\
               ~1.5-2x dense on CPU, so the Speedup column vs the f32 baseline can\n\
-              sit below 1.00x — the isolated PESF gain is in speedup_pesf)");
+              sit below 1.00x — the isolated PESF gain is in speedup_pesf. The\n\
+              tiered row holds ≤50% of the expert bytes resident with identical\n\
+              outputs: 'Experts res' is the budget held, 'Experts disk' the model\n\
+              size — the distinction challenge (1) is about)");
     super::save_result("table4", &json)?;
     Ok(())
 }

@@ -106,6 +106,12 @@ impl Engine {
         let responses = Arc::new(Mutex::new(Vec::with_capacity(requests.len())));
         let prompt_tokens = Arc::new(AtomicUsize::new(0));
         let generated_tokens = Arc::new(AtomicUsize::new(0));
+        // Expert-store traffic counters are cumulative on the store;
+        // snapshot here so this run's metrics report its own hits/misses,
+        // and re-seat the occupancy high-water mark so peak is this run's
+        // own (an engine can serve several times, e.g. warmup + trials).
+        let store0 = self.model.expert_store_stats();
+        self.model.reset_expert_peak();
         let t0 = Instant::now();
         std::thread::scope(|s| {
             let mut workers = Vec::new();
@@ -135,17 +141,29 @@ impl Engine {
         });
         let wall = t0.elapsed().as_secs_f64();
         let resps = Arc::try_unwrap(responses).unwrap().into_inner().unwrap();
+        let store = self.model.expert_store_stats();
         let mut metrics = ServeMetrics {
             wall_secs: wall,
             total_requests: resps.len(),
             prompt_tokens: prompt_tokens.load(Ordering::Relaxed),
             generated_tokens: generated_tokens.load(Ordering::Relaxed),
             // True resident footprint of the weights being served: packed
-            // experts report packed bytes, so a QESC model shows the real
-            // memory win (not a simulated one).
-            resident_weight_bytes: self.model.weights.storage_bytes(),
-            resident_expert_bytes: self.model.weights.expert_storage_bytes(),
-            fp32_weight_bytes: self.model.weights.param_count() * 4,
+            // experts report packed bytes, and under a tiered store only
+            // the cached experts count — so a QESC model under a budget
+            // shows the real memory held, not a simulated size.
+            resident_weight_bytes: self.model.resident_weight_bytes(),
+            resident_expert_bytes: store.resident_bytes,
+            peak_resident_expert_bytes: store.peak_resident_bytes,
+            total_expert_bytes: store.total_bytes,
+            expert_budget_bytes: store.budget_bytes,
+            expert_hits: store.hits - store0.hits,
+            expert_misses: store.misses - store0.misses,
+            expert_evictions: store.evictions - store0.evictions,
+            expert_load_stall_secs: store.load_stall_secs - store0.load_stall_secs,
+            // Logical parameter count comes from the config so a tiered
+            // model (whose Weights hold no routed experts) still reports
+            // the full-model f32 equivalent.
+            fp32_weight_bytes: self.model.cfg().param_count() * 4,
             ..Default::default()
         };
         let mut prune_sum = 0f32;

@@ -10,11 +10,25 @@
 //!              dims(u64 * ndim) payload
 //! dtype     := 0 = f32, 1 = u32, 2 = u8
 //! ```
+//!
+//! Two readers share the format: [`TensorFile::load`] materializes every
+//! payload (the historical whole-checkpoint path), while
+//! [`IndexedTensorFile::open`] parses only the entry descriptors — name,
+//! dims, dtype, payload byte range — and leaves the payloads on disk, so a
+//! single tensor can be fetched later by byte range. The indexed reader is
+//! what lets the tiered [`crate::model::store::ExpertStore`] serve a model
+//! whose experts are loaded on demand instead of resident up front. Both
+//! readers are unified under the [`TensorSource`] trait so the weight
+//! loaders are written once.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
-use std::path::Path;
+#[cfg(not(unix))]
+use std::io::{Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+#[cfg(not(unix))]
+use std::sync::Mutex;
 
 pub const MAGIC: u32 = 0x454d4f45;
 pub const VERSION: u32 = 1;
@@ -213,6 +227,257 @@ impl TensorFile {
     }
 }
 
+/// A place tensors can be fetched from by name — either a fully resident
+/// [`TensorFile`] (fetch = clone) or an [`IndexedTensorFile`] (fetch =
+/// byte-range disk read). The weight loaders in `model::weights` are
+/// generic over this, so the resident and tiered paths decode tensors with
+/// the same (shape-checked) code.
+pub trait TensorSource {
+    /// Whether an entry with this name exists (no payload access).
+    fn contains(&self, name: &str) -> bool;
+
+    /// Fetch one entry, payload included.
+    fn fetch(&self, name: &str) -> Result<Entry>;
+
+    fn fetch_f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let e = self.fetch(name)?;
+        match e.payload {
+            Payload::F32(v) => Ok((e.dims, v)),
+            _ => bail!("tensor '{name}' not f32"),
+        }
+    }
+
+    fn fetch_u32(&self, name: &str) -> Result<(Vec<usize>, Vec<u32>)> {
+        let e = self.fetch(name)?;
+        match e.payload {
+            Payload::U32(v) => Ok((e.dims, v)),
+            _ => bail!("tensor '{name}' not u32"),
+        }
+    }
+
+    fn fetch_u8(&self, name: &str) -> Result<(Vec<usize>, Vec<u8>)> {
+        let e = self.fetch(name)?;
+        match e.payload {
+            Payload::U8(v) => Ok((e.dims, v)),
+            _ => bail!("tensor '{name}' not u8"),
+        }
+    }
+}
+
+impl TensorSource for TensorFile {
+    fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    fn fetch(&self, name: &str) -> Result<Entry> {
+        self.get(name).cloned()
+    }
+}
+
+/// Descriptor of one on-disk entry: shape, dtype, and the byte range its
+/// payload occupies in the file.
+#[derive(Clone, Debug)]
+pub struct IndexEntry {
+    pub dims: Vec<usize>,
+    pub dtype: u32,
+    /// Absolute file offset of the first payload byte.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub byte_len: usize,
+}
+
+/// A [`TensorFile`] opened *by index*: the header and entry descriptors are
+/// parsed eagerly (buffered, and validated against the file length, so
+/// truncation is caught at open time), but payloads stay on disk until
+/// [`IndexedTensorFile::read_entry`] fetches one by byte range. This is the
+/// storage backend of the tiered expert store: a multi-GB checkpoint costs
+/// only its descriptor table in memory, and one expert's tensors are read
+/// with three or four small positional reads — on unix via `read_exact_at`
+/// on a shared handle (no cursor, no lock), so concurrent cache misses to
+/// different experts overlap their IO.
+#[derive(Debug)]
+pub struct IndexedTensorFile {
+    file: std::fs::File,
+    /// Non-unix fallback only: serializes seek+read on the shared cursor.
+    #[cfg(not(unix))]
+    io_lock: Mutex<()>,
+    path: PathBuf,
+    pub index: BTreeMap<String, IndexEntry>,
+}
+
+fn dtype_size(dtype: u32) -> Option<usize> {
+    match dtype {
+        0 | 1 => Some(4),
+        2 => Some(1),
+        _ => None,
+    }
+}
+
+impl IndexedTensorFile {
+    /// Parse the descriptor table, skipping over payloads. Every entry's
+    /// payload range is checked against the file length, so a truncated or
+    /// corrupt file fails here with a contextful error rather than at some
+    /// later mid-serve fetch.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let file_len =
+            file.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+        // Descriptor fields are 4- and 8-byte reads; a BufReader keeps the
+        // walk to a handful of syscalls even for many-thousand-entry
+        // checkpoints. Payloads are skipped with seek_relative, which
+        // stays inside the buffer when it can.
+        let mut f = std::io::BufReader::new(&file);
+        let mut pos: u64 = 0;
+        fn read_exact<R: Read>(f: &mut R, pos: &mut u64, n: usize) -> Result<Vec<u8>> {
+            let mut buf = vec![0u8; n];
+            f.read_exact(&mut buf)
+                .with_context(|| format!("truncated tensor file at byte {pos}"))?;
+            *pos += n as u64;
+            Ok(buf)
+        }
+        let u32_of = |b: &[u8]| u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        let head = read_exact(&mut f, &mut pos, 12)?;
+        if u32_of(&head[0..4]) != MAGIC {
+            bail!("bad magic (not an EAC-MoE tensor file): {}", path.display());
+        }
+        let ver = u32_of(&head[4..8]);
+        if ver != VERSION {
+            bail!("unsupported version {ver}");
+        }
+        let n = u32_of(&head[8..12]) as usize;
+        let mut index = BTreeMap::new();
+        for i in 0..n {
+            let name_len = u32_of(&read_exact(&mut f, &mut pos, 4)?) as usize;
+            // Bound variable-length reads by the file size before allocating,
+            // so a corrupt length field errors instead of attempting a
+            // multi-GB allocation.
+            anyhow::ensure!(
+                pos + name_len as u64 <= file_len,
+                "truncated tensor file: entry {i} name ({name_len} B at {pos}) past EOF"
+            );
+            let name = String::from_utf8(read_exact(&mut f, &mut pos, name_len)?)
+                .with_context(|| format!("entry {i}: bad name utf8"))?;
+            let dtype = u32_of(&read_exact(&mut f, &mut pos, 4)?);
+            let Some(dsize) = dtype_size(dtype) else {
+                bail!("entry '{name}': unknown dtype {dtype}");
+            };
+            let ndim = u32_of(&read_exact(&mut f, &mut pos, 4)?) as usize;
+            anyhow::ensure!(
+                pos + (ndim as u64) * 8 <= file_len,
+                "truncated tensor file: entry '{name}' dims ({ndim} axes at {pos}) past EOF"
+            );
+            let mut dims = Vec::with_capacity(ndim);
+            let raw = read_exact(&mut f, &mut pos, ndim * 8)?;
+            for d in raw.chunks_exact(8) {
+                dims.push(u64::from_le_bytes([
+                    d[0], d[1], d[2], d[3], d[4], d[5], d[6], d[7],
+                ]) as usize);
+            }
+            let count = dims.iter().try_fold(1usize, |a, &d| a.checked_mul(d));
+            let byte_len = count
+                .and_then(|c| c.checked_mul(dsize))
+                .with_context(|| format!("entry '{name}': dims {dims:?} overflow"))?;
+            let offset = pos;
+            // checked_add: a crafted byte_len near u64::MAX must not wrap
+            // past file_len and sneak a bogus entry into the index.
+            let end = offset
+                .checked_add(byte_len as u64)
+                .filter(|&end| end <= file_len)
+                .with_context(|| {
+                    format!(
+                        "truncated tensor file: entry '{name}' payload ({byte_len} B at \
+                         {offset}) extends past EOF ({file_len} B) in {}",
+                        path.display()
+                    )
+                })?;
+            // Validated above: end <= file_len, so the payload length fits
+            // a real file size and the i64 cast cannot overflow.
+            f.seek_relative(byte_len as i64)
+                .with_context(|| format!("seek past '{name}'"))?;
+            pos = end;
+            index.insert(name, IndexEntry { dims, dtype, offset, byte_len });
+        }
+        drop(f);
+        Ok(IndexedTensorFile {
+            file,
+            #[cfg(not(unix))]
+            io_lock: Mutex::new(()),
+            path: path.to_path_buf(),
+            index,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// On-disk payload bytes of one entry (no IO).
+    pub fn entry_bytes(&self, name: &str) -> Result<usize> {
+        Ok(self
+            .index
+            .get(name)
+            .with_context(|| format!("tensor '{name}' missing from {}", self.path.display()))?
+            .byte_len)
+    }
+
+    /// Positional read of `buf.len()` bytes at `offset`. On unix this is a
+    /// lock-free `pread` on the shared handle (no cursor), so concurrent
+    /// reads overlap; elsewhere a mutex serializes seek+read.
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            let _guard = self.io_lock.lock().unwrap();
+            // Read/Seek are implemented for &File, so the shared handle's
+            // cursor is usable under the lock without &mut self.
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(buf)
+        }
+    }
+
+    /// Fetch one entry's payload by byte range.
+    pub fn read_entry(&self, name: &str) -> Result<Entry> {
+        let ie = self
+            .index
+            .get(name)
+            .with_context(|| format!("tensor '{name}' missing from {}", self.path.display()))?;
+        let mut raw = vec![0u8; ie.byte_len];
+        self.read_exact_at(&mut raw, ie.offset)
+            .with_context(|| format!("read tensor '{name}' ({} B)", ie.byte_len))?;
+        let payload = match ie.dtype {
+            0 => Payload::F32(
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            ),
+            1 => Payload::U32(
+                raw.chunks_exact(4)
+                    .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            ),
+            2 => Payload::U8(raw),
+            other => bail!("tensor '{name}': unknown dtype {other}"),
+        };
+        Ok(Entry { dims: ie.dims.clone(), payload })
+    }
+}
+
+impl TensorSource for IndexedTensorFile {
+    fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    fn fetch(&self, name: &str) -> Result<Entry> {
+        self.read_entry(name)
+    }
+}
+
 struct Cursor<'a> {
     b: &'a [u8],
     i: usize,
@@ -276,5 +541,110 @@ mod tests {
         let back = TensorFile::load(&path).unwrap();
         assert_eq!(back.get_f32("x").unwrap().1, &[42.0]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("eac_moe_binio_{tag}_{}.bin", std::process::id()))
+    }
+
+    fn sample_file() -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.put_f32("w", vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        tf.put_u32("ids", vec![4], vec![7, 8, 9, 10]);
+        tf.put_u8("packed", vec![3], vec![255, 0, 127]);
+        tf
+    }
+
+    #[test]
+    fn indexed_reader_matches_full_load() {
+        let path = temp_path("indexed");
+        let tf = sample_file();
+        tf.save(&path).unwrap();
+        let ix = IndexedTensorFile::open(&path).unwrap();
+        // Same entry set, and every byte-range fetch equals the resident
+        // entry exactly.
+        assert_eq!(ix.index.len(), tf.entries.len());
+        for (name, want) in &tf.entries {
+            assert!(TensorSource::contains(&ix, name));
+            let got = ix.read_entry(name).unwrap();
+            assert_eq!(&got, want, "{name}");
+        }
+        // The TensorSource views agree too (trait-level fetch).
+        let (d1, v1) = TensorSource::fetch_f32(&ix, "w").unwrap();
+        let (d2, v2) = TensorSource::fetch_f32(&tf, "w").unwrap();
+        assert_eq!((d1, v1), (d2, v2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn indexed_reader_rejects_truncated_payload_at_open() {
+        let path = temp_path("trunc");
+        let bytes = sample_file().to_bytes();
+        // Chop into the last entry's payload: open must fail with a
+        // truncation error naming the entry, not succeed and return garbage.
+        std::fs::write(&path, &bytes[..bytes.len() - 2]).unwrap();
+        let err = IndexedTensorFile::open(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated"), "unexpected error: {msg}");
+        // Chop mid-descriptor as well.
+        std::fs::write(&path, &bytes[..14]).unwrap();
+        let err = IndexedTensorFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn indexed_reader_rejects_corrupt_header() {
+        let path = temp_path("corrupt");
+        // Wrong magic.
+        std::fs::write(&path, [1u8; 16]).unwrap();
+        let err = IndexedTensorFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"));
+        // Valid magic/version but an absurd dims count in the first entry:
+        // must error (bounded by file length), not attempt a huge read.
+        let mut bytes = sample_file().to_bytes();
+        // First entry is "ids" (BTreeMap order): name_len@12, name@16..19,
+        // dtype@19, ndim@23. Corrupt ndim to u32::MAX.
+        bytes[23..27].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = IndexedTensorFile::open(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated") || msg.contains("overflow"), "{msg}");
+        // Unknown dtype.
+        let mut bytes = sample_file().to_bytes();
+        bytes[19..23].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = IndexedTensorFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype"));
+        // A byte_len near u64::MAX must not wrap the EOF bound check: craft
+        // a u8 entry whose single dim makes offset + byte_len overflow back
+        // below file_len (the unchecked add accepted this).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b'z');
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // dtype u8
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // ndim
+        bytes.extend_from_slice(&(u64::MAX - 8).to_le_bytes()); // dim
+        std::fs::write(&path, &bytes).unwrap();
+        let err = IndexedTensorFile::open(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated") || msg.contains("overflow"), "{msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn indexed_reader_missing_entry_is_contextful() {
+        let path = temp_path("missing");
+        sample_file().save(&path).unwrap();
+        let ix = IndexedTensorFile::open(&path).unwrap();
+        let err = ix.read_entry("nope").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("nope") && msg.contains("missing"), "{msg}");
+        assert!(ix.entry_bytes("w").unwrap() == 24);
+        assert!(ix.entry_bytes("nope").is_err());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,183 @@
+//! Integration: the memory-budgeted tiered ExpertStore.
+//!
+//! Acceptance (ISSUE 5): a packed model served under a budget ≤ 50% of its
+//! total expert bytes produces **bit-identical** responses to the
+//! unbudgeted `Resident` store — asserted across budget fractions
+//! {100%, 50%, smallest-that-fits} × pool sizes {1, 4} — while
+//! `ServeMetrics` shows `resident_expert_bytes` (and its peak) ≤ the
+//! configured budget and a nonzero eviction count. Tiering changes *when*
+//! an expert is resident, never its math.
+
+use eac_moe::model::{Model, ModelConfig, Weights};
+use eac_moe::serve::{BatchPolicy, Engine, EngineConfig, PrunePolicy, Request};
+use eac_moe::prune::pesf::PesfConfig;
+use std::time::Duration;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "store-itest".into(),
+        n_layers: 2,
+        d_model: 32,
+        d_ff: 16,
+        n_experts: 8,
+        top_k: 2,
+        n_shared: 0,
+        n_heads: 4,
+        vocab: 128,
+        max_seq: 128,
+    }
+}
+
+/// Packed 4-bit experts — the compressed serving shape the budget manages.
+fn packed_weights() -> Weights {
+    let mut w = Weights::init(&cfg(), 93);
+    w.pack_experts_rtn(4, 16);
+    w
+}
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("eac_moe_estore_{tag}_{}.bin", std::process::id()))
+}
+
+fn reqs(n: u64, len: usize, decode: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            Request::new(i, (0..len as u32).map(|t| (t * 13 + i as u32 * 7) % 128).collect())
+                .with_decode(decode)
+        })
+        .collect()
+}
+
+type Fingerprint = Vec<(u64, Vec<u32>, u32, u32)>;
+
+fn serve_fingerprint(model: Model, threads: usize) -> (Fingerprint, eac_moe::serve::ServeMetrics) {
+    let e = Engine::new(
+        model,
+        EngineConfig {
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            workers: 2,
+            prune: PrunePolicy::None,
+            threads: Some(threads),
+        },
+    );
+    let (mut out, m) = e.serve(reqs(8, 20, 6));
+    out.sort_by_key(|r| r.id);
+    let fp = out
+        .into_iter()
+        .map(|r| (r.id, r.generated, r.next_token, r.mean_logprob.to_bits()))
+        .collect();
+    (fp, m)
+}
+
+#[test]
+fn budgeted_serving_bit_identical_across_budgets_and_pools() {
+    let w = packed_weights();
+    let path = temp_path("accept");
+    w.save(&path).unwrap();
+    let total = Model::new(w.clone()).expert_store_stats().total_bytes;
+    let min_fit = w.max_expert_bytes();
+    assert!(min_fit * 2 < total / 2, "model too small for a meaningful 50% budget");
+    for threads in [1usize, 4] {
+        let (want, mr) = serve_fingerprint(Model::new(w.clone()), threads);
+        assert!(want.iter().all(|(_, g, _, _)| g.len() == 6));
+        // Resident store: no budget, experts fully resident, no traffic.
+        assert_eq!(mr.expert_budget_bytes, 0);
+        assert_eq!(mr.resident_expert_bytes, total);
+        assert_eq!(mr.total_expert_bytes, total);
+        assert_eq!(mr.expert_evictions, 0);
+        for budget in [total, total / 2, min_fit] {
+            let tiered = Model::open_tiered(&path, "store-itest", budget).unwrap();
+            let (got, mt) = serve_fingerprint(tiered, threads);
+            assert_eq!(got, want, "outputs differ at budget {budget} threads {threads}");
+            // The budget is a hard ceiling on what the store holds.
+            assert_eq!(mt.expert_budget_bytes, budget);
+            assert!(mt.resident_expert_bytes <= budget);
+            assert!(mt.peak_resident_expert_bytes <= budget);
+            assert_eq!(mt.total_expert_bytes, total);
+            assert!(mt.expert_misses > 0, "a cold store must load on demand");
+            if budget < total {
+                assert!(
+                    mt.expert_evictions > 0,
+                    "budget {budget} < total {total} must evict"
+                );
+            }
+            // The paper's memory axis, observable end to end: the served
+            // footprint under the 50% budget is genuinely smaller than
+            // fully resident.
+            if budget <= total / 2 {
+                assert!(mt.resident_weight_bytes < mr.resident_weight_bytes);
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn budgeted_serving_composes_with_pesf_decode() {
+    // PESF + tiered store: pruned experts are never fetched, and outputs
+    // under a tight budget still match the resident PESF engine exactly.
+    let w = packed_weights();
+    let path = temp_path("pesf");
+    w.save(&path).unwrap();
+    let prune = PrunePolicy::Pesf(PesfConfig { alpha: 0.9, refresh_every: 2, window: 8 });
+    let run = |model: Model| {
+        let e = Engine::new(
+            model,
+            EngineConfig {
+                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+                workers: 1,
+                prune,
+                threads: Some(2),
+            },
+        );
+        let (mut out, m) = e.serve(reqs(6, 24, 5));
+        out.sort_by_key(|r| r.id);
+        let fp: Fingerprint = out
+            .into_iter()
+            .map(|r| (r.id, r.generated, r.next_token, r.mean_logprob.to_bits()))
+            .collect();
+        (fp, m)
+    };
+    let (want, mr) = run(Model::new(w.clone()));
+    assert!(mr.mean_prune_rate > 0.0);
+    let budget = w.max_expert_bytes();
+    let (got, mt) = run(Model::open_tiered(&path, "store-itest", budget).unwrap());
+    assert_eq!(got, want, "tiered PESF serving must match resident PESF serving");
+    assert!(mt.mean_decode_prune_rate > 0.0);
+    assert!(mt.peak_resident_expert_bytes <= budget);
+    assert!(mt.expert_evictions > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn dense_models_tier_too() {
+    // The store is storage-form agnostic: dense (uncompressed) experts
+    // roundtrip through the byte-range loader bitwise as well.
+    let w = Weights::init(&cfg(), 94);
+    let path = temp_path("dense");
+    w.save(&path).unwrap();
+    let (want, _) = serve_fingerprint(Model::new(w.clone()), 2);
+    let budget = w.max_expert_bytes() * 3;
+    let (got, mt) = serve_fingerprint(Model::open_tiered(&path, "store-itest", budget).unwrap(), 2);
+    assert_eq!(got, want);
+    assert!(mt.expert_evictions > 0);
+    assert!(mt.peak_resident_expert_bytes <= budget);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn into_tiered_spill_roundtrip_matches_original() {
+    // The CLI path: a resident model spilled + reopened under a budget
+    // serves identically to its original self.
+    let w = packed_weights();
+    let (want, _) = serve_fingerprint(Model::new(w.clone()), 2);
+    let spill = temp_path("spill");
+    let total = Model::new(w.clone()).expert_store_stats().total_bytes;
+    let tiered = Model::new(w).into_tiered(total / 2, &spill).unwrap();
+    assert!(tiered.store.is_tiered());
+    let (got, mt) = serve_fingerprint(tiered, 2);
+    assert_eq!(got, want);
+    assert!(mt.expert_budget_bytes == total / 2);
+    assert!(mt.summary().contains("budget="), "{}", mt.summary());
+    let _ = std::fs::remove_file(&spill);
+}

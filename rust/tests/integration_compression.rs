@@ -46,7 +46,7 @@ fn full_pipeline_bit_settings_are_ordered() {
         let mut mse = 0f64;
         let mut count = 0usize;
         for (lo, lq) in m.weights.layers.iter().zip(&q.weights.layers) {
-            for (eo, eq) in lo.experts.iter().zip(&lq.experts) {
+            for (eo, eq) in lo.experts().iter().zip(lq.experts()) {
                 mse += eo.w1.mse(&eq.w1) as f64 + eo.w2.mse(&eq.w2) as f64
                     + eo.w3.mse(&eq.w3) as f64;
                 count += 3;

@@ -9,6 +9,28 @@ use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// When `EAC_MOE_EXPERT_BUDGET_MB` is set (CI's tight-budget pass), wrap
+/// the model in a tiered ExpertStore under that byte budget (clamped up to
+/// the smallest feasible budget, i.e. one expert), spilling the weights to
+/// a unique temp checkpoint. Outputs are bit-identical to resident
+/// serving, so every assertion in this suite doubles as a
+/// miss/evict/reload exercise of the store.
+fn maybe_tiered(m: Model) -> Model {
+    let Ok(mb) = std::env::var("EAC_MOE_EXPERT_BUDGET_MB") else { return m };
+    let mb: f64 = mb.parse().expect("EAC_MOE_EXPERT_BUDGET_MB must be a number (MB)");
+    static SPILL_ID: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let id = SPILL_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let spill = std::env::temp_dir()
+        .join(format!("eac_moe_itest_spill_{}_{id}.bin", std::process::id()));
+    let budget = ((mb * 1e6) as usize).max(m.weights.max_expert_bytes());
+    let m = m.into_tiered(budget, &spill).expect("tiered spill for EAC_MOE_EXPERT_BUDGET_MB");
+    // Eager unlink (unix: the store keeps reading through its open fd) so
+    // the suite leaves no spill checkpoints behind even if a test aborts;
+    // the store also removes its own spill on drop.
+    let _ = std::fs::remove_file(&spill);
+    m
+}
+
 fn model() -> Model {
     let cfg = ModelConfig {
         name: "itest".into(),
@@ -22,7 +44,7 @@ fn model() -> Model {
         vocab: 128,
         max_seq: 256,
     };
-    Model::new(Weights::init(&cfg, 7))
+    maybe_tiered(Model::new(Weights::init(&cfg, 7)))
 }
 
 fn reqs(n: u64, len: usize) -> Vec<Request> {
@@ -127,11 +149,13 @@ fn burst_with_overlong_prompts_served_without_engine_abort() {
 
 #[test]
 fn pesf_pruning_rate_grows_with_alpha_under_serving() {
-    let weights = model().weights.clone();
     let mut last = -1.0f32;
     for alpha in [0.2f32, 0.5, 0.9] {
+        // model() is seed-deterministic, so each engine serves identical
+        // weights (and inherits the tight-budget tiered store under
+        // EAC_MOE_EXPERT_BUDGET_MB).
         let engine = Engine::new(
-            Model::new(weights.clone()),
+            model(),
             EngineConfig {
                 workers: 2,
                 prune: PrunePolicy::Pesf(PesfConfig { alpha, ..Default::default() }),
@@ -151,13 +175,12 @@ fn pesf_pruning_rate_grows_with_alpha_under_serving() {
 
 #[test]
 fn pesf_alpha_zero_equals_dense_outputs() {
-    let m = model();
     let dense_engine = Engine::new(
-        Model::new(m.weights.clone()),
+        model(),
         EngineConfig { workers: 1, prune: PrunePolicy::None, ..Default::default() },
     );
     let pesf_engine = Engine::new(
-        Model::new(m.weights.clone()),
+        model(),
         EngineConfig {
             workers: 1,
             prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.0, ..Default::default() }),
@@ -181,12 +204,11 @@ fn pesf_alpha_zero_decode_bitwise_identical_to_unpruned() {
     // rolling window) is live but every mask is all-false — outputs must
     // be bit-identical to PrunePolicy::None at every pool size and batch
     // shape.
-    let weights = model().weights.clone();
     for threads in [Some(1usize), Some(4)] {
         for max_batch in [1usize, 4] {
             let run = |prune: PrunePolicy| {
                 let e = Engine::new(
-                    Model::new(weights.clone()),
+                    model(),
                     EngineConfig {
                         batch: BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
                         workers: 1,
@@ -366,10 +388,7 @@ fn mixed_pesf_batch_retires_and_admits_correctly() {
 #[test]
 fn decode_after_prefill_consistent_with_forward() {
     let m = model();
-    let engine = Engine::new(
-        Model::new(m.weights.clone()),
-        EngineConfig { workers: 1, ..Default::default() },
-    );
+    let engine = Engine::new(model(), EngineConfig { workers: 1, ..Default::default() });
     let toks: Vec<u32> = (0..16).map(|i| (i * 11) % 128).collect();
     let (resps, _) = engine.serve(vec![Request::new(0, toks.clone()).with_decode(3)]);
     assert_eq!(resps[0].generated.len(), 3);
