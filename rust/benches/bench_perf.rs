@@ -9,10 +9,13 @@
 //! tokens/sec across worker-pool sizes (B ∈ {1,4} × threads ∈ {1,4} — the
 //! persistent-pool win), and pruned-vs-unpruned decode under decode-time
 //! PESF (`decode_pesf/*`: alpha ∈ {0, 0.3, 0.7} × B ∈ {1,4}, plus an
-//! engine run reporting the decode-phase prune rate), same shape as the
-//! bench_tables outputs. CI runs this in smoke mode
-//! (`EAC_MOE_BENCH_MS=25`) and uploads the JSON so the perf trajectory is
-//! tracked per PR.
+//! engine run reporting the decode-phase prune rate), forced-scalar vs
+//! SIMD-dispatched decode with a bitwise-equality gate (`simd_gemm/b{1,4}`),
+//! and KV-cache bytes / decode tok/s / decode-path ppl at f32 vs int8
+//! storage (`kv_cache/*`), same shape as the bench_tables outputs. CI runs
+//! this in smoke mode (`EAC_MOE_BENCH_MS=25`), uploads the JSON, and
+//! appends the run's summary to the repo-root `BENCH_TRAJECTORY.json` so
+//! the perf trajectory is tracked per PR.
 
 use eac_moe::model::{Model, ModelConfig, Weights};
 use eac_moe::quant::gptq::{gptq_quantize_mat, GptqConfig, Hessian};
@@ -452,6 +455,145 @@ fn main() {
             json.set(&format!("expert_store/budget{frac}"), o);
         }
         let _ = std::fs::remove_file(&spill);
+    }
+
+    // --- SIMD kernel dispatch (`simd_gemm/*`): forced-scalar vs
+    // auto-dispatched decode on the same model and caches. Outputs are
+    // asserted bitwise-equal first — the kernels share one operation DAG,
+    // so the speedup is free of numerical drift — then both levels are
+    // timed. On a host without AVX2/NEON both entries run scalar and the
+    // ratio sits at ~1.0.
+    {
+        use eac_moe::model::hooks::Hooks;
+        use eac_moe::tensor::simd;
+        let auto_kernel = simd::active();
+        for &bsz in &[1usize, 4] {
+            let mut caches: Vec<eac_moe::model::KvCache> = (0..bsz)
+                .map(|b| {
+                    let p: Vec<u32> =
+                        (0..64u32).map(|i| (i * 7 + b as u32 * 13) % 512).collect();
+                    let mut c = eac_moe::model::KvCache::new(model.cfg());
+                    model.prefill_into_cache(&p, &Hooks::none(), &mut c);
+                    c
+                })
+                .collect();
+            let ctx_len = caches[0].len;
+            let toks: Vec<u32> = (0..bsz as u32).map(|b| b * 31 % 512).collect();
+            simd::force(Some(simd::Kernel::Scalar));
+            for c in caches.iter_mut() {
+                c.len = ctx_len;
+            }
+            let a = model.decode_step_batch(&toks, &mut caches, &Hooks::none());
+            simd::force(None);
+            for c in caches.iter_mut() {
+                c.len = ctx_len;
+            }
+            let b = model.decode_step_batch(&toks, &mut caches, &Hooks::none());
+            assert_eq!(
+                a.data, b.data,
+                "scalar and {} decode logits must be bitwise equal",
+                auto_kernel.name()
+            );
+            simd::force(Some(simd::Kernel::Scalar));
+            let rs = bench(&format!("decode step B={bsz} forced-scalar @ctx64"), || {
+                for c in caches.iter_mut() {
+                    c.len = ctx_len;
+                }
+                std::hint::black_box(model.decode_step_batch(
+                    &toks,
+                    &mut caches,
+                    &Hooks::none(),
+                ));
+            });
+            simd::force(None);
+            let rv = bench(
+                &format!("decode step B={bsz} simd ({}) @ctx64", auto_kernel.name()),
+                || {
+                    for c in caches.iter_mut() {
+                        c.len = ctx_len;
+                    }
+                    std::hint::black_box(model.decode_step_batch(
+                        &toks,
+                        &mut caches,
+                        &Hooks::none(),
+                    ));
+                },
+            );
+            let scalar_tps = bsz as f64 / (rs.mean_ns / 1e9);
+            let simd_tps = bsz as f64 / (rv.mean_ns / 1e9);
+            println!(
+                "    -> {simd_tps:.0} tok/s ({}) vs {scalar_tps:.0} tok/s scalar: {:.2}x",
+                auto_kernel.name(),
+                simd_tps / scalar_tps
+            );
+            let mut o = Json::obj();
+            o.set("scalar_tps", Json::Num(scalar_tps))
+                .set("simd_tps", Json::Num(simd_tps))
+                .set("simd_over_scalar", Json::Num(simd_tps / scalar_tps))
+                .set("kernel", Json::Str(auto_kernel.name().into()));
+            json.set(&format!("simd_gemm/b{bsz}"), o);
+        }
+        simd::force(None);
+    }
+
+    // --- KV cache (`kv_cache/*`): chunked growth + int8 storage. Reports
+    // actual cache bytes after a 64-token prefill against the eager
+    // n_layers x max_seq x d_model worst case the seed allocated up
+    // front, decode tok/s at both precisions, and the decode-path
+    // perplexity delta int8 quantization costs (f32 KV is bit-identical
+    // to the cacheless forward, so its ppl is the reference).
+    {
+        use eac_moe::model::hooks::Hooks;
+        use eac_moe::model::{KvCache, KvPrecision};
+        let cfgr = model.cfg();
+        let eager_bytes = cfgr.n_layers * cfgr.max_seq * cfgr.d_model * 2 * 4;
+        let prompt: Vec<u32> = (0..64u32).map(|i| (i * 7) % 512).collect();
+        for (name, prec, bits) in
+            [("f32", KvPrecision::F32, 32u32), ("int8", KvPrecision::Int8, 8)]
+        {
+            let mut c = KvCache::with_precision(cfgr, prec);
+            model.prefill_into_cache(&prompt, &Hooks::none(), &mut c);
+            let cache_bytes = c.bytes();
+            let ctx_len = c.len;
+            let r = bench(&format!("decode step kv-{name} @ctx64"), || {
+                c.len = ctx_len;
+                std::hint::black_box(model.decode_step(1, &mut c, &Hooks::none()));
+            });
+            let tps = 1.0 / (r.mean_ns / 1e9);
+            println!(
+                "    -> kv-{name}: {:.2} MB cached (eager worst case {:.2} MB), {tps:.0} tok/s",
+                cache_bytes as f64 / 1e6,
+                eager_bytes as f64 / 1e6
+            );
+            let mut o = Json::obj();
+            o.set("cache_bytes", Json::Num(cache_bytes as f64))
+                .set("eager_bytes", Json::Num(eager_bytes as f64))
+                .set("tokens_per_sec", Json::Num(tps));
+            json.set(&format!("kv_cache/{bits}bit"), o);
+        }
+        let stream: Vec<u32> = (0..96u32).map(|i| (i * 13 + 5) % 512).collect();
+        let decode_ppl = |prec: KvPrecision| -> f64 {
+            let mut c = KvCache::with_precision(cfgr, prec);
+            let mut logp = vec![0f32; cfgr.vocab];
+            let mut nll = 0.0f64;
+            for w in stream.windows(2) {
+                let l = model.decode_step(w[0], &mut c, &Hooks::none());
+                eac_moe::tensor::ops::log_softmax_into(&l, &mut logp);
+                nll -= logp[w[1] as usize] as f64;
+            }
+            (nll / (stream.len() - 1) as f64).exp()
+        };
+        let ppl32 = decode_ppl(KvPrecision::F32);
+        let ppl8 = decode_ppl(KvPrecision::Int8);
+        println!(
+            "    -> decode ppl: f32 {ppl32:.4} vs int8 {ppl8:.4} ({:+.3}% rel)",
+            100.0 * (ppl8 - ppl32) / ppl32
+        );
+        let mut o = Json::obj();
+        o.set("ppl_kv32", Json::Num(ppl32))
+            .set("ppl_kv8", Json::Num(ppl8))
+            .set("ppl_rel_delta", Json::Num((ppl8 - ppl32) / ppl32));
+        json.set("kv_cache/decode_ppl", o);
     }
 
     // --- Decode step (kv-cache path; quantization's bandwidth-bound case).

@@ -8,6 +8,7 @@
 //! eac-moe eval      --model <key> [--alpha A] [--scale S]
 //! eac-moe serve     --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]
 //!                   [--requests N] [--len L] [--decode D] [--expert-budget-mb B]
+//!                   [--kv-bits <32|8>]
 //! eac-moe analyze-es --model <key> [--scale S]
 //! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|all
 //! ```
@@ -64,11 +65,13 @@ fn usage() {
          \x20 eval       --model <key> [--alpha A] [--scale S]\n\
          \x20 serve      --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]\n\
          \x20            [--requests N] [--len L] [--decode D] [--workers W] [--threads T]\n\
-         \x20            [--expert-budget-mb B]\n\
+         \x20            [--expert-budget-mb B] [--kv-bits {{32|8}}]\n\
          \x20            (PESF prunes prefill AND decode; --pesf-refresh 0 freezes the\n\
          \x20             decode mask at prompt statistics; --alpha aliases --pesf-alpha;\n\
          \x20             --expert-budget-mb serves experts from disk under a hard cache\n\
-         \x20             budget — bit-identical outputs, bounded expert memory)\n\
+         \x20             budget — bit-identical outputs, bounded expert memory;\n\
+         \x20             --kv-bits 8 stores decode KV caches as int8 per head with\n\
+         \x20             per-position scales — ~4x smaller caches, tolerance-pinned)\n\
          \x20 analyze-es --model <key> [--scale S]\n\
          \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
          \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|all)\n\
@@ -270,6 +273,13 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     // Compute-pool size: --threads=N builds a dedicated pool; unset keeps
     // the global pool (EAC_MOE_THREADS or machine parallelism).
     let threads: Option<usize> = opts.get("threads").and_then(|s| s.parse().ok());
+    // KV-cache precision: 32 (f32, bit-identical serving) or 8 (int8 per
+    // head per position, ~4x smaller decode caches).
+    let kv_bits: u8 = match opts.get("kv-bits").map(|s| s.as_str()) {
+        None | Some("32") => 32,
+        Some("8") => 8,
+        Some(other) => anyhow::bail!("--kv-bits must be 32 or 8 (got {other})"),
+    };
     // Memory tiering: --expert-budget-mb=B spills the routed experts to a
     // checkpoint and serves them through the tiered ExpertStore under a
     // hard B-MB cache budget (selection-frequency-weighted LRU eviction;
@@ -300,7 +310,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     } else {
         PrunePolicy::None
     };
-    let cfg = EngineConfig { workers, prune, threads, ..Default::default() };
+    let cfg = EngineConfig { workers, prune, threads, kv_bits, ..Default::default() };
     let engine = Engine::new(model, cfg);
     let mut mix = eac_moe::data::corpus::WikiMixture::new(21);
     let reqs: Vec<Request> =

@@ -36,7 +36,7 @@ use super::store::ExpertStore;
 use super::weights::{ExpertWeights, LayerWeights, Weights};
 use crate::tensor::ops::{rmsnorm, silu, softmax_inplace, topk_indices};
 use crate::tensor::pool::ThreadPool;
-use crate::tensor::{matmul_on, matmul_transb_on, Mat};
+use crate::tensor::{matmul_on, matmul_transb_on, simd, Mat};
 use std::sync::Arc;
 
 /// Diagnostic output of one MoE layer (used by tests/analysis).
@@ -65,23 +65,217 @@ pub struct Model {
     pub pool: Arc<ThreadPool>,
 }
 
-/// KV cache for incremental decode: per layer, (seq, d_model) K and V.
-/// Filled either token-by-token by [`Model::decode_step`] /
-/// [`Model::decode_step_batch`], or in one pass by
-/// [`Model::prefill_into_cache`].
+/// Storage precision for the KV cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPrecision {
+    /// Full-precision f32 rows — bit-identical to the pre-quantization
+    /// cache, the default.
+    F32,
+    /// Symmetric int8 per head per position: each appended K/V row is
+    /// quantized one `head_dim` strip at a time with its own f32 scale
+    /// (`amax / 127`), and dequantization is fused into the attention
+    /// reads ([`crate::tensor::simd::dot_i8`] / `axpy_i8`) — the f32 row
+    /// is never materialized again. ~4x smaller resident cache.
+    Int8,
+}
+
+/// Rows the cache capacity grows by per reallocation. Chunked growth means
+/// a short request never pays `max_seq` residency, and the byte metric
+/// ([`KvCache::bytes`]) reflects what the request actually used.
+const KV_GROW_ROWS: usize = 64;
+
+/// One layer's K/V storage at the cache's precision. Capacity (`cap` rows)
+/// is shared across layers and grows in [`KV_GROW_ROWS`] chunks.
+#[derive(Clone)]
+enum KvStore {
+    F32 { k: Mat, v: Mat },
+    Int8 { k: Vec<i8>, v: Vec<i8>, kscale: Vec<f32>, vscale: Vec<f32> },
+}
+
+/// Borrowed view of one layer for the attention inner loop.
+enum KvLayerView<'a> {
+    F32 { k: &'a Mat, v: &'a Mat },
+    Int8 { k: &'a [i8], v: &'a [i8], kscale: &'a [f32], vscale: &'a [f32] },
+}
+
+/// KV cache for incremental decode: per layer, `len` rows of K and V at
+/// [`KvPrecision`] storage (f32 `(cap, d_model)` Mats, or int8 codes with
+/// per-head per-position scales). Filled either token-by-token by
+/// [`Model::decode_step`] / [`Model::decode_step_batch`], or in one pass
+/// by [`Model::prefill_into_cache`]. Capacity starts at zero and grows in
+/// [`KV_GROW_ROWS`] chunks (capped at `max_seq`) as rows are appended.
 #[derive(Clone)]
 pub struct KvCache {
-    pub k: Vec<Mat>,
-    pub v: Vec<Mat>,
+    layers: Vec<KvStore>,
+    /// Number of valid positions (public: the engine and benches read and
+    /// rewind it).
     pub len: usize,
+    cap: usize,
+    max_seq: usize,
+    d: usize,
+    heads: usize,
+    hd: usize,
+    precision: KvPrecision,
+}
+
+/// Quantize one head strip symmetrically to int8; returns the scale.
+/// `amax == 0` yields scale 0.0 with all-zero codes (dequant gives 0.0).
+fn quantize_head(src: &[f32], dst: &mut [i8]) -> f32 {
+    let amax = src.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if amax == 0.0 {
+        dst.iter_mut().for_each(|d| *d = 0);
+        return 0.0;
+    }
+    let inv = 127.0 / amax;
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    amax / 127.0
 }
 
 impl KvCache {
+    /// F32 cache (bit-identical to the historical eager-f32 cache in
+    /// every read, minus the up-front `max_seq` allocation).
     pub fn new(cfg: &ModelConfig) -> Self {
+        Self::with_precision(cfg, KvPrecision::F32)
+    }
+
+    /// Cache with an explicit storage precision (the engine maps
+    /// `--kv-bits 8` to [`KvPrecision::Int8`]).
+    pub fn with_precision(cfg: &ModelConfig, precision: KvPrecision) -> Self {
+        let mk = || match precision {
+            KvPrecision::F32 => KvStore::F32 { k: Mat::zeros(0, cfg.d_model), v: Mat::zeros(0, cfg.d_model) },
+            KvPrecision::Int8 => {
+                KvStore::Int8 { k: Vec::new(), v: Vec::new(), kscale: Vec::new(), vscale: Vec::new() }
+            }
+        };
         KvCache {
-            k: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.d_model)).collect(),
-            v: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            layers: (0..cfg.n_layers).map(|_| mk()).collect(),
             len: 0,
+            cap: 0,
+            max_seq: cfg.max_seq,
+            d: cfg.d_model,
+            heads: cfg.n_heads,
+            hd: cfg.head_dim(),
+            precision,
+        }
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        self.precision
+    }
+
+    /// Currently allocated rows per layer (grows in [`KV_GROW_ROWS`]
+    /// chunks; `len <= capacity <= max_seq`).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Resident bytes of the cache's backing storage across all layers —
+    /// actual allocation, not the `max_seq` worst case.
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                KvStore::F32 { k, v } => (k.data.len() + v.data.len()) * 4,
+                KvStore::Int8 { k, v, kscale, vscale } => {
+                    k.len() + v.len() + (kscale.len() + vscale.len()) * 4
+                }
+            })
+            .sum()
+    }
+
+    /// Grow every layer's storage to hold at least `rows` positions,
+    /// rounding up to the next [`KV_GROW_ROWS`] chunk (capped at
+    /// `max_seq`). New space is zero-filled; existing rows are untouched.
+    fn ensure_capacity(&mut self, rows: usize) {
+        assert!(rows <= self.max_seq, "kv cache beyond max_seq");
+        if rows <= self.cap {
+            return;
+        }
+        let new_cap = rows.div_ceil(KV_GROW_ROWS).saturating_mul(KV_GROW_ROWS).min(self.max_seq);
+        for l in &mut self.layers {
+            match l {
+                KvStore::F32 { k, v } => {
+                    k.data.resize(new_cap * self.d, 0.0);
+                    k.rows = new_cap;
+                    v.data.resize(new_cap * self.d, 0.0);
+                    v.rows = new_cap;
+                }
+                KvStore::Int8 { k, v, kscale, vscale } => {
+                    k.resize(new_cap * self.d, 0);
+                    v.resize(new_cap * self.d, 0);
+                    kscale.resize(new_cap * self.heads, 0.0);
+                    vscale.resize(new_cap * self.heads, 0.0);
+                }
+            }
+        }
+        self.cap = new_cap;
+    }
+
+    /// Store one position's K/V rows (capacity must already cover `pos`).
+    /// F32 stores the rows verbatim; Int8 quantizes per head strip.
+    fn write_row(&mut self, li: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        debug_assert!(pos < self.cap);
+        let (d, heads, hd) = (self.d, self.heads, self.hd);
+        match &mut self.layers[li] {
+            KvStore::F32 { k, v } => {
+                k.row_mut(pos).copy_from_slice(krow);
+                v.row_mut(pos).copy_from_slice(vrow);
+            }
+            KvStore::Int8 { k, v, kscale, vscale } => {
+                for head in 0..heads {
+                    let off = head * hd;
+                    kscale[pos * heads + head] =
+                        quantize_head(&krow[off..off + hd], &mut k[pos * d + off..pos * d + off + hd]);
+                    vscale[pos * heads + head] =
+                        quantize_head(&vrow[off..off + hd], &mut v[pos * d + off..pos * d + off + hd]);
+                }
+            }
+        }
+    }
+
+    /// Prefill export: store all `k.rows` positions of layer `li` (the
+    /// whole-prompt K/V projections), growing capacity as needed. Int8
+    /// caches quantize here too, so decode continues from exactly the
+    /// same stored representation a token-by-token append would build.
+    fn export_layer(&mut self, li: usize, k: &Mat, v: &Mat) {
+        self.ensure_capacity(k.rows);
+        for r in 0..k.rows {
+            self.write_row(li, r, k.row(r), v.row(r));
+        }
+    }
+
+    fn layer(&self, li: usize) -> KvLayerView<'_> {
+        match &self.layers[li] {
+            KvStore::F32 { k, v } => KvLayerView::F32 { k, v },
+            KvStore::Int8 { k, v, kscale, vscale } => {
+                KvLayerView::Int8 { k, v, kscale, vscale }
+            }
+        }
+    }
+
+    /// Dequantized K row at `pos` (f32 passthrough) — test/inspection
+    /// accessor, not a hot path.
+    pub fn k_row(&self, li: usize, pos: usize) -> Vec<f32> {
+        self.read_row(li, pos, true)
+    }
+
+    /// Dequantized V row at `pos` (f32 passthrough).
+    pub fn v_row(&self, li: usize, pos: usize) -> Vec<f32> {
+        self.read_row(li, pos, false)
+    }
+
+    fn read_row(&self, li: usize, pos: usize, want_k: bool) -> Vec<f32> {
+        assert!(pos < self.len, "kv row {pos} beyond len {}", self.len);
+        match &self.layers[li] {
+            KvStore::F32 { k, v } => if want_k { k.row(pos) } else { v.row(pos) }.to_vec(),
+            KvStore::Int8 { k, v, kscale, vscale } => {
+                let (codes, scales) = if want_k { (k, kscale) } else { (v, vscale) };
+                (0..self.d)
+                    .map(|t| codes[pos * self.d + t] as f32 * scales[pos * self.heads + t / self.hd])
+                    .collect()
+            }
         }
     }
 }
@@ -148,9 +342,7 @@ impl Model {
             if let Some(cap) = &hooks.capture_mhsa_inputs {
                 cap.borrow_mut()[li] = Some(normed.clone());
             }
-            let kv_export =
-                cache.as_deref_mut().map(|c| (&mut c.k[li], &mut c.v[li]));
-            let attn = self.attention(&normed, layer, li, hooks, kv_export);
+            let attn = self.attention(&normed, layer, li, hooks, cache.as_deref_mut());
             for r in 0..x.rows {
                 crate::tensor::ops::add_inplace(x.row_mut(r), attn.row(r));
             }
@@ -179,16 +371,16 @@ impl Model {
     /// disjoint column strips, so task order cannot change the result and
     /// outputs stay bit-identical to the sequential loop.
     ///
-    /// When `kv_export` is given, the layer's K/V projections are copied
-    /// into the target matrices row-per-position (the prefill KV export
-    /// feeding the decode cache).
+    /// When `kv_export` is given, the layer's K/V projections are stored
+    /// into the cache row-per-position at the cache's own precision (the
+    /// prefill KV export feeding the decode cache).
     fn attention(
         &self,
         x: &Mat,
         layer: &LayerWeights,
         li: usize,
         hooks: &Hooks,
-        kv_export: Option<(&mut Mat, &mut Mat)>,
+        kv_export: Option<&mut KvCache>,
     ) -> Mat {
         let cfg = &self.weights.cfg;
         let (seq, d) = (x.rows, cfg.d_model);
@@ -197,11 +389,8 @@ impl Model {
         let q = layer.wq.matmul_on(pool, x);
         let k = layer.wk.matmul_on(pool, x);
         let v = layer.wv.matmul_on(pool, x);
-        if let Some((ck, cv)) = kv_export {
-            for r in 0..seq {
-                ck.row_mut(r).copy_from_slice(k.row(r));
-                cv.row_mut(r).copy_from_slice(v.row(r));
-            }
+        if let Some(c) = kv_export {
+            c.export_layer(li, &k, &v);
         }
         let scale = 1.0 / (hd as f32).sqrt();
         let mut head_ctx: Vec<Option<Mat>> = (0..h).map(|_| None).collect();
@@ -468,10 +657,15 @@ impl Model {
         let bsz = tokens.len();
         assert_eq!(bsz, caches.len(), "one kv cache per sequence");
         assert!(bsz > 0, "empty decode batch");
-        for c in caches.iter() {
+        for c in caches.iter_mut() {
             assert!(c.len < cfg.max_seq, "kv cache full");
+            // Grow once per step, before the layer loop: capacity is
+            // shared across layers, so the per-layer appends below are
+            // plain writes.
+            c.ensure_capacity(c.len + 1);
         }
         let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let d = cfg.d_model;
         let scale = 1.0 / (hd as f32).sqrt();
         let pool = &*self.pool;
         let mut x = Mat::zeros(bsz, cfg.d_model);
@@ -485,12 +679,12 @@ impl Model {
             let q = layer.wq.matmul_on(pool, &normed);
             let knew = layer.wk.matmul_on(pool, &normed);
             let vnew = layer.wv.matmul_on(pool, &normed);
-            // Append each sequence's new K/V row first (cheap copies), so
-            // attention below can read the caches immutably.
+            // Append each sequence's new K/V row first (f32 copy or int8
+            // quantize, per the cache's precision), so attention below can
+            // read the caches immutably.
             for (b, cache) in caches.iter_mut().enumerate() {
                 let pos = cache.len;
-                cache.k[li].row_mut(pos).copy_from_slice(knew.row(b));
-                cache.v[li].row_mut(pos).copy_from_slice(vnew.row(b));
+                cache.write_row(li, pos, knew.row(b), vnew.row(b));
             }
             // Every (sequence, head) pair is independent and owns a
             // disjoint hd-wide strip of ctx (row-major ctx is exactly
@@ -520,19 +714,31 @@ impl Model {
                                 let qh = &q.row(b)[off..off + hd];
                                 scores.clear();
                                 scores.resize(pos + 1, 0.0);
-                                for (jj, s) in scores.iter_mut().enumerate() {
-                                    let kj = &cache.k[li].row(jj)[off..off + hd];
-                                    let mut acc = 0.0;
-                                    for t in 0..hd {
-                                        acc += qh[t] * kj[t];
+                                // Scores and context run on the SIMD dot /
+                                // axpy kernels; the int8 arm fuses
+                                // dequantization into the reads (one
+                                // per-head scale applied per position).
+                                match cache.layer(li) {
+                                    KvLayerView::F32 { k, v } => {
+                                        for (jj, s) in scores.iter_mut().enumerate() {
+                                            *s = simd::dot(qh, &k.row(jj)[off..off + hd]) * scale;
+                                        }
+                                        softmax_inplace(&mut scores);
+                                        for (jj, &w) in scores.iter().enumerate() {
+                                            simd::axpy(strip, w, &v.row(jj)[off..off + hd]);
+                                        }
                                     }
-                                    *s = acc * scale;
-                                }
-                                softmax_inplace(&mut scores);
-                                for (jj, &w) in scores.iter().enumerate() {
-                                    let vj = &cache.v[li].row(jj)[off..off + hd];
-                                    for (ct, &vt) in strip.iter_mut().zip(vj) {
-                                        *ct += w * vt;
+                                    KvLayerView::Int8 { k, v, kscale, vscale } => {
+                                        for (jj, s) in scores.iter_mut().enumerate() {
+                                            let kj = &k[jj * d + off..jj * d + off + hd];
+                                            *s = simd::dot_i8(qh, kj)
+                                                * (kscale[jj * h + head] * scale);
+                                        }
+                                        softmax_inplace(&mut scores);
+                                        for (jj, &w) in scores.iter().enumerate() {
+                                            let vj = &v[jj * d + off..jj * d + off + hd];
+                                            simd::axpy_i8(strip, w * vscale[jj * h + head], vj);
+                                        }
                                     }
                                 }
                             }
@@ -701,8 +907,8 @@ mod tests {
         assert_eq!(exported.len, replayed.len);
         for li in 0..m.cfg().n_layers {
             for r in 0..tokens.len() {
-                assert_eq!(exported.k[li].row(r), replayed.k[li].row(r), "k layer {li} row {r}");
-                assert_eq!(exported.v[li].row(r), replayed.v[li].row(r), "v layer {li} row {r}");
+                assert_eq!(exported.k_row(li, r), replayed.k_row(li, r), "k layer {li} row {r}");
+                assert_eq!(exported.v_row(li, r), replayed.v_row(li, r), "v layer {li} row {r}");
             }
         }
         // ...and decode continues identically from either cache.
@@ -741,8 +947,8 @@ mod tests {
             assert_eq!(batch_caches[b].len, solo_caches[b].len);
             for li in 0..m.cfg().n_layers {
                 let pos = batch_caches[b].len - 1;
-                assert_eq!(batch_caches[b].k[li].row(pos), solo_caches[b].k[li].row(pos));
-                assert_eq!(batch_caches[b].v[li].row(pos), solo_caches[b].v[li].row(pos));
+                assert_eq!(batch_caches[b].k_row(li, pos), solo_caches[b].k_row(li, pos));
+                assert_eq!(batch_caches[b].v_row(li, pos), solo_caches[b].v_row(li, pos));
             }
         }
     }
@@ -788,6 +994,88 @@ mod tests {
         let differs = c.row(1).iter().zip(b.row(1)).any(|(x, y)| (x - y).abs() > 1e-5);
         assert!(differs, "masked row must change");
         assert!(c.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn kv_cache_grows_in_chunks_not_eagerly() {
+        let mut cfg = tiny_model().cfg().clone();
+        cfg.max_seq = 200; // > KV_GROW_ROWS so chunking is observable
+        let m = Model::new(Weights::init(&cfg, 3));
+        let mut cache = KvCache::new(&cfg);
+        assert_eq!(cache.capacity(), 0);
+        assert_eq!(cache.bytes(), 0, "empty cache holds no storage");
+        m.prefill_into_cache(&[4, 9, 14], &Hooks::none(), &mut cache);
+        assert_eq!(cache.capacity(), KV_GROW_ROWS, "first chunk only");
+        let eager = cfg.n_layers * cfg.max_seq * cfg.d_model * 2 * 4;
+        assert!(cache.bytes() < eager, "{} !< {eager}", cache.bytes());
+        // Decoding past the chunk boundary grows by one more chunk.
+        for t in 0..=(KV_GROW_ROWS - 3) as u32 {
+            m.decode_step(t % cfg.vocab as u32, &mut cache, &Hooks::none());
+        }
+        assert_eq!(cache.len, KV_GROW_ROWS + 1);
+        assert_eq!(cache.capacity(), 2 * KV_GROW_ROWS);
+    }
+
+    #[test]
+    fn kv_capacity_rounds_to_max_seq() {
+        let cfg = tiny_model().cfg().clone(); // max_seq = 64 == KV_GROW_ROWS
+        let mut cache = KvCache::new(&cfg);
+        cache.ensure_capacity(cfg.max_seq);
+        assert_eq!(cache.capacity(), cfg.max_seq);
+    }
+
+    #[test]
+    fn int8_kv_cache_is_smaller_and_decode_stays_close() {
+        let m = tiny_model();
+        let prompt = [4u32, 9, 14, 19, 23];
+        let mut f32_cache = KvCache::new(m.cfg());
+        let mut i8_cache = KvCache::with_precision(m.cfg(), KvPrecision::Int8);
+        assert_eq!(i8_cache.precision(), KvPrecision::Int8);
+        m.prefill_into_cache(&prompt, &Hooks::none(), &mut f32_cache);
+        m.prefill_into_cache(&prompt, &Hooks::none(), &mut i8_cache);
+        assert!(
+            i8_cache.bytes() * 2 < f32_cache.bytes(),
+            "int8 {} !<< f32 {}",
+            i8_cache.bytes(),
+            f32_cache.bytes()
+        );
+        // Stored rows dequantize close to the f32 rows...
+        for li in 0..m.cfg().n_layers {
+            for r in 0..prompt.len() {
+                let (kf, ki) = (f32_cache.k_row(li, r), i8_cache.k_row(li, r));
+                let amax = kf.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                for (x, y) in kf.iter().zip(&ki) {
+                    assert!((x - y).abs() <= amax / 127.0 + 1e-6, "{x} vs {y}");
+                }
+            }
+        }
+        // ...and a short greedy decode stays close to the f32-cache path.
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for &t in &[1u32, 6, 11] {
+            a = m.decode_step(t, &mut f32_cache, &Hooks::none());
+            b = m.decode_step(t, &mut i8_cache, &Hooks::none());
+        }
+        let scale = a.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-6);
+        let rel = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max)
+            / scale;
+        assert!(rel < 0.05, "int8 KV decode drift {rel}");
+        assert!(b.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn quantize_head_zero_and_roundtrip() {
+        let mut dst = [0i8; 4];
+        assert_eq!(quantize_head(&[0.0; 4], &mut dst), 0.0);
+        assert_eq!(dst, [0i8; 4]);
+        let src = [1.0f32, -0.5, 0.25, -1.0];
+        let s = quantize_head(&src, &mut dst);
+        for (&c, &x) in dst.iter().zip(&src) {
+            assert!((c as f32 * s - x).abs() <= s * 0.5 + 1e-7);
+        }
     }
 
     #[test]

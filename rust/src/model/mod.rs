@@ -11,7 +11,7 @@ pub mod store;
 pub mod weights;
 
 pub use config::{ModelConfig, ZooModel};
-pub use forward::{expert_forward, expert_forward_on, KvCache, Model, MoeLayerOut};
+pub use forward::{expert_forward, expert_forward_on, KvCache, KvPrecision, Model, MoeLayerOut};
 pub use hooks::{FilterDropStats, ForcedSelections, Hooks, SelectionRecord, SeqExpertMask};
 pub use store::{ExpertStore, ExpertStoreStats, TieredStore};
 pub use weights::{ExpertWeights, LayerWeights, WeightMat, Weights};

@@ -18,7 +18,7 @@
 
 use super::pack::PackedMat;
 use crate::tensor::pool::ThreadPool;
-use crate::tensor::Mat;
+use crate::tensor::{simd, Mat};
 
 /// K-tile height (matches the dense GEMM's KC so summation order agrees).
 /// Must be a multiple of 8 so every tile starts on a byte boundary in the
@@ -60,9 +60,7 @@ pub fn matmul_packed_on(pool: &ThreadPool, x: &Mat, w: &PackedMat) -> Mat {
                         continue;
                     }
                     let wrow = &strip_ref[kk * n..kk * n + n];
-                    for (cv, &wv) in crow.iter_mut().zip(wrow) {
-                        *cv += av * wv;
-                    }
+                    simd::axpy(crow, av, wrow);
                 }
             }
         };
@@ -89,23 +87,22 @@ fn unpack_tile(w: &PackedMat, kb: usize, kc: usize, colbuf: &mut [f32], strip: &
         match bits {
             2 => super::pack::unpack2_lut(col, colbuf),
             4 => super::pack::unpack4_lut(col, colbuf),
-            8 => {
-                for (dst, &b) in colbuf.iter_mut().zip(col) {
-                    *dst = b as f32;
-                }
-            }
+            8 => simd::bytes_to_f32(col, colbuf),
             _ => super::pack::unpack_generic(col, bits, kc, colbuf),
         }
         // Affine-correct per quantization group: w = (code - zero) * scale.
+        // One `simd::affine` call per group — the correction stays scoped
+        // to the group the packed format defines, so per-group (future
+        // per-block mixed-precision) scale/zero layouts need no kernel
+        // changes. All dispatch levels are bit-identical to the scalar
+        // expression.
         let mut kk = 0;
         while kk < kc {
             let gi = (kb + kk) / g;
             let gend = ((gi + 1) * g - kb).min(kc);
             let scale = w.scales[gi * n + c];
             let zero = w.zeros[gi * n + c] as f32;
-            for v in &mut colbuf[kk..gend] {
-                *v = (*v - zero) * scale;
-            }
+            simd::affine(&mut colbuf[kk..gend], zero, scale);
             kk = gend;
         }
         // Scatter the column into the row-major strip.

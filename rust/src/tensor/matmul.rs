@@ -2,20 +2,25 @@
 //!
 //! The native hot path (GPTQ Hessians, perplexity eval, the artifact-free
 //! serving fallback) is GEMM-bound, so this is written for throughput:
-//! k-panel blocking for L1/L2 reuse, 1x8 inner kernels that the compiler
-//! auto-vectorizes, and row-parallelism over the persistent
-//! [`ThreadPool`] (no per-call thread spawns). Every function has two
-//! forms: the plain name runs on [`ThreadPool::global`], and the `_on`
-//! variant takes an explicit pool — the model threads its own pool through
-//! so `EngineConfig::threads` genuinely controls concurrency.
+//! k-panel blocking for L1/L2 reuse, inner loops routed through the
+//! runtime-dispatched kernels in [`crate::tensor::simd`], and
+//! row-parallelism over the persistent [`ThreadPool`] (no per-call thread
+//! spawns). Every function has two forms: the plain name runs on
+//! [`ThreadPool::global`], and the `_on` variant takes an explicit pool —
+//! the model threads its own pool through so `EngineConfig::threads`
+//! genuinely controls concurrency.
 //!
-//! Determinism contract: parallelism only ever partitions output *rows*,
-//! and each element accumulates in ascending-k order regardless of
-//! blocking, so results are bit-identical at every pool size and equal to
-//! the naive triple loop.
+//! Determinism contract: parallelism only ever partitions output *rows*
+//! (or whole column panels), and every SIMD dispatch level executes the
+//! same operation DAG (see `tensor/simd.rs`), so results are bit-identical
+//! at every pool size and every dispatch level. Dense [`matmul`]
+//! accumulates each element in ascending-k order exactly like the naive
+//! triple loop; [`matmul_transb`] accumulates KC-panel [`simd::dot`]
+//! partials in ascending-k panel order (the panel dot uses the fixed
+//! 8-lane split documented in `tensor/simd.rs`, not sequential summation).
 
 use super::pool::ThreadPool;
-use super::Mat;
+use super::{simd, Mat};
 
 /// K-panel size (fits comfortably in L1 alongside the output strip).
 const KC: usize = 256;
@@ -41,7 +46,15 @@ pub fn matmul_on(pool: &ThreadPool, a: &Mat, b: &Mat) -> Mat {
 
 /// `C = A @ B + bias` where `bias` broadcasts over rows.
 pub fn matmul_bias(a: &Mat, b: &Mat, bias: &[f32]) -> Mat {
-    let mut c = matmul(a, b);
+    matmul_bias_on(ThreadPool::global(), a, b, bias)
+}
+
+/// [`matmul_bias`] on an explicit pool, so callers under
+/// `EngineConfig::threads` no longer fall back to the global pool. The
+/// bias add happens after the pooled GEMM, per element, so results are
+/// bit-identical across pool sizes (the GEMM already is).
+pub fn matmul_bias_on(pool: &ThreadPool, a: &Mat, b: &Mat, bias: &[f32]) -> Mat {
+    let mut c = matmul_on(pool, a, b);
     assert_eq!(bias.len(), c.cols);
     for r in 0..c.rows {
         let row = c.row_mut(r);
@@ -63,8 +76,10 @@ pub fn matmul_transb(a: &Mat, b_t: &Mat) -> Mat {
 /// loads once per task and is reused across all of that task's output
 /// rows — the old kernel re-streamed the whole `b_t` matrix (the entire
 /// embedding table, for the output head) for every row of `a`. Each
-/// element still accumulates in ascending-k order across the K panels, so
-/// the result is bit-identical to the naive dot product.
+/// element accumulates one [`simd::dot`] partial per K panel, in
+/// ascending-k panel order, so the result is bit-identical to a reference
+/// that sums panel dots the same way — at every pool size and dispatch
+/// level.
 ///
 /// Parallelization picks the ragged axis: tall outputs split by row (as
 /// every GEMM here does); short-and-wide outputs — the decode-time output
@@ -116,8 +131,9 @@ pub fn matmul_transb_on(pool: &ThreadPool, a: &Mat, b_t: &Mat) -> Mat {
 /// Blocked `A @ B^T` over the sub-rectangle rows `r0..r1` × columns
 /// `j0..j1`, written into `out` (row-major, `j1 - j0` wide). One
 /// implementation serves both the row-parallel and column-parallel
-/// partitions, so the per-element ascending-k accumulation chain is
-/// identical everywhere (and bitwise equal to the naive dot product).
+/// partitions, so the per-element chain of ascending-k panel
+/// [`simd::dot`]s is identical everywhere — each element is bitwise
+/// reproducible at every pool size and dispatch level.
 fn transb_block(a: &Mat, b_t: &Mat, r0: usize, r1: usize, j0: usize, j1: usize, out: &mut [f32]) {
     let k = a.cols;
     let w = j1 - j0;
@@ -129,12 +145,7 @@ fn transb_block(a: &Mat, b_t: &Mat, r0: usize, r1: usize, j0: usize, j1: usize, 
                 let arow = &a.row(r)[kb..kend];
                 let crow = &mut out[(r - r0) * w + (jb - j0)..(r - r0) * w + (jend - j0)];
                 for (cv, j) in crow.iter_mut().zip(jb..jend) {
-                    let brow = &b_t.row(j)[kb..kend];
-                    let mut acc = *cv;
-                    for (&av, &bv) in arow.iter().zip(brow) {
-                        acc += av * bv;
-                    }
-                    *cv = acc;
+                    *cv += simd::dot(arow, &b_t.row(j)[kb..kend]);
                 }
             }
         }
@@ -170,10 +181,7 @@ pub fn matmul_into_on(pool: &ThreadPool, a: &Mat, b: &Mat, c: &mut Mat) {
                             continue;
                         }
                         let brow = &b.data[kk * n + nb..kk * n + nend];
-                        let cslice = &mut crow[nb..nend];
-                        for (cv, &bv) in cslice.iter_mut().zip(brow) {
-                            *cv += av * bv;
-                        }
+                        simd::axpy(&mut crow[nb..nend], av, brow);
                     }
                 }
             }
@@ -201,13 +209,18 @@ mod tests {
         c
     }
 
+    /// Unblocked reference with the same per-element semantics as the
+    /// production kernel: one `simd::dot` per KC panel, panels summed in
+    /// ascending-k order. (The kernel's N/row blocking and parallelism
+    /// must not change anything beyond this.)
     fn naive_transb(a: &Mat, b_t: &Mat) -> Mat {
         let mut c = Mat::zeros(a.rows, b_t.rows);
         for i in 0..a.rows {
             for j in 0..b_t.rows {
                 let mut acc = 0.0;
-                for kk in 0..a.cols {
-                    acc += a.at(i, kk) * b_t.at(j, kk);
+                for kb in (0..a.cols).step_by(KC) {
+                    let kend = (kb + KC).min(a.cols);
+                    acc += simd::dot(&a.row(i)[kb..kend], &b_t.row(j)[kb..kend]);
                 }
                 *c.at_mut(i, j) = acc;
             }
@@ -253,12 +266,13 @@ mod tests {
         }
     }
 
-    /// The blocked transposed-B kernel is pinned *bitwise* to the naive
-    /// reference: K/N panels change loop structure but every element still
-    /// accumulates k-ascending, so no roundoff drift is tolerated. Shapes
-    /// span partial K panels (k=300 > KC), partial N panels (n=300 >
-    /// TRANSB_NC), the parallel row path (m=70 ≥ PAR_MIN_ROWS), and
-    /// degenerate edges.
+    /// The blocked transposed-B kernel is pinned *bitwise* to the
+    /// unblocked panel-dot reference: N blocking, row partitioning and
+    /// column partitioning change loop structure but every element is
+    /// still the same ascending-k chain of panel dots, so no roundoff
+    /// drift is tolerated. Shapes span partial K panels (k=300 > KC),
+    /// partial N panels (n=300 > TRANSB_NC), the parallel row path (m=70 ≥
+    /// PAR_MIN_ROWS), and degenerate edges.
     #[test]
     fn transb_blocked_bitwise_equals_naive() {
         let mut rng = Pcg64::seeded(15);
@@ -305,6 +319,22 @@ mod tests {
         let b = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
         let c = matmul_bias(&a, &b, &[10.0, 20.0]);
         assert_eq!(c.data, vec![11., 22., 13., 24.]);
+    }
+
+    /// `matmul_bias_on` is bit-identical across pool sizes and matches
+    /// the global-pool `matmul_bias`.
+    #[test]
+    fn matmul_bias_bitwise_invariant_across_pool_sizes() {
+        let mut rng = Pcg64::seeded(19);
+        let a = Mat::randn(80, 33, 1.0, &mut rng);
+        let b = Mat::randn(33, 47, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..47).map(|_| rng.gaussian()).collect();
+        let base = matmul_bias_on(&ThreadPool::new(1), &a, &b, &bias);
+        for threads in [2usize, 8] {
+            let p = ThreadPool::new(threads);
+            assert_eq!(matmul_bias_on(&p, &a, &b, &bias).data, base.data, "threads={threads}");
+        }
+        assert_eq!(matmul_bias(&a, &b, &bias).data, base.data);
     }
 
     /// Property: (A@B)@C == A@(B@C) within tolerance, over random shapes.

@@ -12,8 +12,11 @@ pub mod matmul;
 pub mod ops;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 
-pub use matmul::{matmul, matmul_bias, matmul_into, matmul_on, matmul_transb, matmul_transb_on};
+pub use matmul::{
+    matmul, matmul_bias, matmul_bias_on, matmul_into, matmul_on, matmul_transb, matmul_transb_on,
+};
 pub use pool::ThreadPool;
 pub use rng::Pcg64;
 

@@ -133,12 +133,11 @@ pub fn add_inplace(a: &mut [f32], b: &[f32]) {
     }
 }
 
-/// Elementwise a += s * b (axpy).
+/// Elementwise a += s * b (axpy). Runs on the runtime-dispatched SIMD
+/// kernel; all dispatch levels are bit-identical to the scalar loop.
 pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
     assert_eq!(a.len(), b.len());
-    for (x, &y) in a.iter_mut().zip(b) {
-        *x += s * y;
-    }
+    crate::tensor::simd::axpy(a, s, b);
 }
 
 #[cfg(test)]

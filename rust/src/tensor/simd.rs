@@ -1,0 +1,709 @@
+//! Runtime-dispatched SIMD microkernels for the GEMM / dequant / attention
+//! hot loops.
+//!
+//! # Dispatch order
+//!
+//! Every public kernel resolves its implementation per call, in this order:
+//!
+//! 1. a test/bench override installed with [`force`] (process-global);
+//! 2. `EAC_MOE_NO_SIMD=1` in the environment (read once, at first use) —
+//!    pins the scalar reference path;
+//! 3. runtime CPU detection: AVX2 on `x86_64` (FMA ships on every AVX2
+//!    part, but see below for why the kernels still don't emit it), NEON
+//!    on `aarch64`;
+//! 4. the scalar fallback, which is always compiled on every target.
+//!
+//! # The bitwise-invariance contract
+//!
+//! The repo pins outputs bit-identical across pool sizes, batch shapes,
+//! expert budgets and prefill/decode replay — SIMD must not be the thing
+//! that breaks that. So every kernel here is defined such that **all
+//! dispatch levels produce bitwise-identical results**:
+//!
+//! - Elementwise kernels ([`axpy`], [`axpy_i8`], [`affine`],
+//!   [`bytes_to_f32`]) vectorize over independent output elements using
+//!   separate multiply and add instructions — never fused multiply-add.
+//!   Each lane performs exactly the IEEE-754 operations the scalar loop
+//!   performs (Rust/LLVM does not contract `a * b + c` by default), so the
+//!   vector path is bit-identical to scalar *and* to the pre-SIMD code.
+//! - Reduction kernels ([`dot`], [`dot_i8`]) cannot keep the old
+//!   sequential summation order and still vectorize, so their summation
+//!   order is *redefined* as a fixed 8-lane split: lane `l` accumulates
+//!   elements `8j + l` sequentially, the 8 lane sums combine through the
+//!   fixed tree `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` (what one
+//!   `__m256` horizontal reduction does), and any tail elements are added
+//!   sequentially after. The scalar, AVX2 and NEON implementations all
+//!   execute that exact operation DAG, so they agree bitwise at every
+//!   length — including lengths that are not multiples of the lane width.
+//!
+//! FMA is deliberately not used anywhere: fusing would change results
+//! vs. the separate mul+add scalar reference (and `f32::mul_add` on the
+//! scalar side would drop to a slow libm call on default x86-64 targets,
+//! making `EAC_MOE_NO_SIMD=1` runs pathologically slow).
+//!
+//! # Why dequantization stays per-group
+//!
+//! [`affine`] corrects one *quantization group* at a time
+//! (`(code - zero) * scale` with a single scale/zero pair), rather than
+//! folding the correction into a whole-column or whole-tile kernel. That
+//! keeps the dequant expression exactly where the packed format defines
+//! it — per group — so a future mixed-precision allocator (GEMQ-style:
+//! different bit-widths or group sizes per expert / per column block,
+//! ROADMAP open item 1) can ride the same kernels unchanged: each group,
+//! whatever its width or precision, is still one `affine` call over its
+//! unpacked codes.
+//!
+//! # Call sites
+//!
+//! - `tensor/matmul.rs`: dense `matmul*` row-accumulate ([`axpy`]) and
+//!   `matmul_transb*` per-panel dots ([`dot`]);
+//! - `quant/fused.rs`: packed-GEMM strip consumer ([`axpy`]) and
+//!   `unpack_tile`'s affine correction ([`affine`]) / 8-bit code widening
+//!   ([`bytes_to_f32`]);
+//! - `tensor/ops.rs`: the MoE scatter `axpy`;
+//! - `model/forward.rs`: decode attention scores ([`dot`] / [`dot_i8`])
+//!   and context accumulation ([`axpy`] / [`axpy_i8`]) — the `_i8`
+//!   variants fuse int8 KV-cache dequantization into the attention reads.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A dispatch level. All variants exist on every target so tests can name
+/// them portably; [`available`] reports which ones this host can run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar reference (always available).
+    Scalar,
+    /// 8-wide AVX2 path (`x86_64` with runtime `avx2`).
+    Avx2,
+    /// 4-wide NEON path (`aarch64`; NEON is baseline there).
+    Neon,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// 0 = no override; 1/2/3 = forced Scalar/Avx2/Neon.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+fn detected() -> Kernel {
+    static DETECTED: OnceLock<Kernel> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        let no_simd = std::env::var("EAC_MOE_NO_SIMD")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if no_simd {
+            return Kernel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Kernel::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Kernel::Neon;
+            }
+        }
+        Kernel::Scalar
+    })
+}
+
+/// The dispatch level kernels currently resolve to (override > env >
+/// detection).
+pub fn active() -> Kernel {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => Kernel::Scalar,
+        2 => Kernel::Avx2,
+        3 => Kernel::Neon,
+        _ => detected(),
+    }
+}
+
+/// Install (or with `None`, clear) a process-global dispatch override.
+/// Only levels reported by [`available`] may be forced. Because every
+/// level is bitwise-identical, racing overrides from concurrent tests
+/// cannot change any result — they only change which implementation runs.
+pub fn force(k: Option<Kernel>) {
+    let v = match k {
+        None => 0,
+        Some(Kernel::Scalar) => 1,
+        Some(Kernel::Avx2) => 2,
+        Some(Kernel::Neon) => 3,
+    };
+    FORCED.store(v, Ordering::Relaxed);
+}
+
+/// Dispatch levels this host can actually execute (Scalar always;
+/// Avx2/Neon per runtime detection, independent of `EAC_MOE_NO_SIMD`).
+pub fn available() -> Vec<Kernel> {
+    let mut v = vec![Kernel::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Kernel::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            v.push(Kernel::Neon);
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Public kernels (per-call dispatch; the branch is a relaxed atomic load
+// plus a predictable match — noise next to the vector work).
+// ---------------------------------------------------------------------------
+
+/// `out[i] += a * x[i]` — bitwise identical at every dispatch level.
+#[inline]
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::axpy(out, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::axpy(out, a, x) },
+        _ => scalar::axpy(out, a, x),
+    }
+}
+
+/// `out[i] += a * (x[i] as f32)` — the int8 KV context accumulate, with
+/// dequantization fused into the read. Bitwise identical at every level.
+#[inline]
+pub fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+    debug_assert_eq!(out.len(), x.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::axpy_i8(out, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::axpy_i8(out, a, x) },
+        _ => scalar::axpy_i8(out, a, x),
+    }
+}
+
+/// `buf[i] = (buf[i] - zero) * scale` — the per-group dequant affine
+/// correction. Bitwise identical at every level.
+#[inline]
+pub fn affine(buf: &mut [f32], zero: f32, scale: f32) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::affine(buf, zero, scale) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::affine(buf, zero, scale) },
+        _ => scalar::affine(buf, zero, scale),
+    }
+}
+
+/// `dst[i] = src[i] as f32` — widening convert for 8-bit packed codes
+/// (exact for all u8 values, so trivially bitwise at every level).
+#[inline]
+pub fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+    debug_assert!(dst.len() >= src.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::bytes_to_f32(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::bytes_to_f32(src, dst) },
+        _ => scalar::bytes_to_f32(src, dst),
+    }
+}
+
+/// Dot product under the fixed 8-lane split summation order (see module
+/// docs). Bitwise identical at every dispatch level and every length.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dot(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// `Σ a[i] * (k[i] as f32)` under the same fixed summation order as
+/// [`dot`] — the int8 KV attention score, dequant fused into the read
+/// (the caller applies the per-head scale once on the result).
+#[inline]
+pub fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), k.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dot_i8(a, k) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dot_i8(a, k) },
+        _ => scalar::dot_i8(a, k),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference — the semantic definition of every kernel.
+// ---------------------------------------------------------------------------
+
+mod scalar {
+    pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o += a * v;
+        }
+    }
+
+    pub fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o += a * v as f32;
+        }
+    }
+
+    pub fn affine(buf: &mut [f32], zero: f32, scale: f32) {
+        for v in buf.iter_mut() {
+            *v = (*v - zero) * scale;
+        }
+    }
+
+    pub fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+        for (d, &b) in dst.iter_mut().zip(src) {
+            *d = b as f32;
+        }
+    }
+
+    /// The 8-lane split + fixed reduction tree, in scalar form. This IS
+    /// the definition the vector paths replicate.
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = n & !7;
+        let mut acc = [0f32; 8];
+        let mut i = 0;
+        while i < n8 {
+            for (l, s) in acc.iter_mut().enumerate() {
+                *s += a[i + l] * b[i + l];
+            }
+            i += 8;
+        }
+        let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+        for j in n8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    pub fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
+        let n = a.len();
+        let n8 = n & !7;
+        let mut acc = [0f32; 8];
+        let mut i = 0;
+        while i < n8 {
+            for (l, s) in acc.iter_mut().enumerate() {
+                *s += a[i + l] * k[i + l] as f32;
+            }
+            i += 8;
+        }
+        let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+        for j in n8..n {
+            s += a[j] * k[j] as f32;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86_64) — same per-element / per-lane operations as scalar.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of [l0..l7] through the fixed tree
+    /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the same DAG the scalar
+    /// reference spells out.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+        let s2 = _mm_add_ps(s, _mm_movehl_ps(s, s)); // lane0=(l0+l4)+(l2+l6), lane1=(l1+l5)+(l3+l7)
+        _mm_cvtss_f32(_mm_add_ss(s2, _mm_movehdup_ps(s2)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len();
+        let n8 = n & !7;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < n8 {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            i += 8;
+        }
+        for j in n8..n {
+            out[j] += a * x[j];
+        }
+    }
+
+    /// Sign-extend 8 i8 codes to 8 f32 lanes (exact for |v| <= 127).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_i8_as_f32(p: *const i8) -> __m256 {
+        let bytes = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+        let n = out.len();
+        let n8 = n & !7;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < n8 {
+            let vx = load_i8_as_f32(x.as_ptr().add(i));
+            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            i += 8;
+        }
+        for j in n8..n {
+            out[j] += a * x[j] as f32;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
+        let n = buf.len();
+        let n8 = n & !7;
+        let vz = _mm256_set1_ps(zero);
+        let vs = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i < n8 {
+            let v = _mm256_loadu_ps(buf.as_ptr().add(i));
+            _mm256_storeu_ps(buf.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_sub_ps(v, vz), vs));
+            i += 8;
+        }
+        for v in &mut buf[n8..] {
+            *v = (*v - zero) * scale;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+        let n = src.len();
+        let n8 = n & !7;
+        let mut i = 0;
+        while i < n8 {
+            let bytes = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+            let v = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        for j in n8..n {
+            dst[j] = src[j] as f32;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = n & !7;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        for j in n8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
+        let n = a.len();
+        let n8 = n & !7;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vk = load_i8_as_f32(k.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vk));
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        for j in n8..n {
+            s += a[j] * k[j] as f32;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64) — two q-register accumulators reproduce the 8-lane split;
+// the final combine follows the same fixed tree as scalar/AVX2.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len();
+        let n4 = n & !3;
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i < n4 {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vo = vld1q_f32(out.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(vo, vmulq_f32(va, vx)));
+            i += 4;
+        }
+        for j in n4..n {
+            out[j] += a * x[j];
+        }
+    }
+
+    /// Sign-extend 8 i8 codes to two float32x4 registers (lanes 0-3, 4-7).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn load_i8_as_f32x2(p: *const i8) -> (float32x4_t, float32x4_t) {
+        let wide = vmovl_s8(vld1_s8(p)); // 8 x i16
+        let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(wide)));
+        let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(wide)));
+        (lo, hi)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+        let n = out.len();
+        let n8 = n & !7;
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i < n8 {
+            let (lo, hi) = load_i8_as_f32x2(x.as_ptr().add(i));
+            let o0 = vld1q_f32(out.as_ptr().add(i));
+            let o1 = vld1q_f32(out.as_ptr().add(i + 4));
+            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(o0, vmulq_f32(va, lo)));
+            vst1q_f32(out.as_mut_ptr().add(i + 4), vaddq_f32(o1, vmulq_f32(va, hi)));
+            i += 8;
+        }
+        for j in n8..n {
+            out[j] += a * x[j] as f32;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
+        let n = buf.len();
+        let n4 = n & !3;
+        let vz = vdupq_n_f32(zero);
+        let vs = vdupq_n_f32(scale);
+        let mut i = 0;
+        while i < n4 {
+            let v = vld1q_f32(buf.as_ptr().add(i));
+            vst1q_f32(buf.as_mut_ptr().add(i), vmulq_f32(vsubq_f32(v, vz), vs));
+            i += 4;
+        }
+        for v in &mut buf[n4..] {
+            *v = (*v - zero) * scale;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+        let n = src.len();
+        let n8 = n & !7;
+        let mut i = 0;
+        while i < n8 {
+            let wide = vmovl_u8(vld1_u8(src.as_ptr().add(i)));
+            let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+            let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+            vst1q_f32(dst.as_mut_ptr().add(i), lo);
+            vst1q_f32(dst.as_mut_ptr().add(i + 4), hi);
+            i += 8;
+        }
+        for j in n8..n {
+            dst[j] = src[j] as f32;
+        }
+    }
+
+    /// Combine accumulators [l0..l3], [l4..l7] through the fixed tree.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn combine(acc_lo: float32x4_t, acc_hi: float32x4_t) -> f32 {
+        let s = vaddq_f32(acc_lo, acc_hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+        let t = vadd_f32(vget_low_f32(s), vget_high_f32(s)); // [(l0+l4)+(l2+l6), (l1+l5)+(l3+l7)]
+        vget_lane_f32::<0>(t) + vget_lane_f32::<1>(t)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = n & !7;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n8 {
+            let a0 = vld1q_f32(a.as_ptr().add(i));
+            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+            let b0 = vld1q_f32(b.as_ptr().add(i));
+            let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a0, b0));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a1, b1));
+            i += 8;
+        }
+        let mut s = combine(acc_lo, acc_hi);
+        for j in n8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
+        let n = a.len();
+        let n8 = n & !7;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n8 {
+            let a0 = vld1q_f32(a.as_ptr().add(i));
+            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+            let (k0, k1) = load_i8_as_f32x2(k.as_ptr().add(i));
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a0, k0));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a1, k1));
+            i += 8;
+        }
+        let mut s = combine(acc_lo, acc_hi);
+        for j in n8..n {
+            s += a[j] * k[j] as f32;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+    use std::sync::Mutex;
+
+    /// Serialize tests that install a forced dispatch level. (Racing
+    /// forces cannot change results — all levels are bitwise equal — but
+    /// serializing keeps each test actually exercising the level it
+    /// names.)
+    pub(crate) fn force_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn gauss(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian()).collect()
+    }
+
+    /// Lengths chosen to hit: empty, sub-lane, exact lane multiples, and
+    /// odd tails around both the 4-wide and 8-wide boundaries.
+    const LENGTHS: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 100, 255, 256, 257];
+
+    #[test]
+    fn all_kernels_bitwise_equal_to_scalar_at_every_level() {
+        let _g = force_lock();
+        let mut rng = Pcg64::seeded(71);
+        for &n in LENGTHS {
+            let a = gauss(n, &mut rng);
+            let b = gauss(n, &mut rng);
+            let codes: Vec<i8> = (0..n).map(|_| (rng.below_usize(255) as i64 - 127) as i8) .collect();
+            let bytes: Vec<u8> = (0..n).map(|_| rng.below_usize(256) as u8).collect();
+            let base = gauss(n, &mut rng);
+            let (s, z) = (0.37f32, 3.0f32);
+            // Scalar reference results.
+            force(Some(Kernel::Scalar));
+            let dot_ref = dot(&a, &b);
+            let dot_i8_ref = dot_i8(&a, &codes);
+            let mut axpy_ref = base.clone();
+            axpy(&mut axpy_ref, 0.7, &a);
+            let mut axpy_i8_ref = base.clone();
+            axpy_i8(&mut axpy_i8_ref, 0.7, &codes);
+            let mut aff_ref = base.clone();
+            affine(&mut aff_ref, z, s);
+            let mut b2f_ref = vec![0f32; n];
+            bytes_to_f32(&bytes, &mut b2f_ref);
+            for k in available() {
+                force(Some(k));
+                assert_eq!(dot(&a, &b).to_bits(), dot_ref.to_bits(), "dot n={n} k={k:?}");
+                assert_eq!(dot_i8(&a, &codes).to_bits(), dot_i8_ref.to_bits(), "dot_i8 n={n} k={k:?}");
+                let mut out = base.clone();
+                axpy(&mut out, 0.7, &a);
+                assert_eq!(out, axpy_ref, "axpy n={n} k={k:?}");
+                let mut out = base.clone();
+                axpy_i8(&mut out, 0.7, &codes);
+                assert_eq!(out, axpy_i8_ref, "axpy_i8 n={n} k={k:?}");
+                let mut out = base.clone();
+                affine(&mut out, z, s);
+                assert_eq!(out, aff_ref, "affine n={n} k={k:?}");
+                let mut out = vec![0f32; n];
+                bytes_to_f32(&bytes, &mut out);
+                assert_eq!(out, b2f_ref, "bytes_to_f32 n={n} k={k:?}");
+            }
+            force(None);
+        }
+    }
+
+    #[test]
+    fn dot_close_to_sequential_reference() {
+        // The split order is a *different* summation than sequential; it
+        // must still agree to normal float tolerance.
+        let _g = force_lock();
+        force(None);
+        let mut rng = Pcg64::seeded(72);
+        for &n in &[1usize, 7, 64, 257, 1000] {
+            let a = gauss(n, &mut rng);
+            let b = gauss(n, &mut rng);
+            let seq: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+            let got = dot(&a, &b) as f64;
+            assert!((got - seq).abs() <= 1e-3 * (1.0 + seq.abs()), "n={n}: {got} vs {seq}");
+        }
+    }
+
+    #[test]
+    fn affine_matches_pre_simd_expression() {
+        // The affine kernel must reproduce `(v - zero) * scale` exactly —
+        // this is the dequant expression fused.rs used before the SIMD
+        // layer existed.
+        let _g = force_lock();
+        force(None);
+        let mut rng = Pcg64::seeded(73);
+        let vals = gauss(100, &mut rng);
+        let mut got = vals.clone();
+        affine(&mut got, 7.0, 0.021);
+        for (g, v) in got.iter().zip(&vals) {
+            assert_eq!(g.to_bits(), ((v - 7.0) * 0.021).to_bits());
+        }
+    }
+
+    #[test]
+    fn forced_level_is_reported_and_clearable() {
+        let _g = force_lock();
+        force(Some(Kernel::Scalar));
+        assert_eq!(active(), Kernel::Scalar);
+        force(None);
+        assert_eq!(active(), detected());
+        assert!(available().contains(&Kernel::Scalar));
+    }
+}

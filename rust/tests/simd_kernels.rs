@@ -1,0 +1,272 @@
+//! SIMD kernel equivalence — the dispatch layer's correctness contract
+//! from the outside: every kernel level (`scalar`, and `avx2`/`neon`
+//! where the host supports them) computes **bit-identical** results to an
+//! independently written scalar reference, at every odd length; the fused
+//! packed GEMM and the whole-model decode path are pinned bitwise across
+//! forced kernel levels at every bit-width (the in-process analogue of
+//! CI's `EAC_MOE_NO_SIMD=1` rerun); and the opt-in int8 KV cache stays
+//! within its documented tolerance on logits and decode-path perplexity.
+
+use eac_moe::model::hooks::Hooks;
+use eac_moe::model::{KvCache, KvPrecision, Model, ModelConfig, Weights};
+use eac_moe::quant::pack::PackedMat;
+use eac_moe::quant::quantizer::{GroupQuant, QuantConfig};
+use eac_moe::tensor::{simd, Mat, Pcg64};
+use std::sync::Mutex;
+
+/// `simd::force` is process-global; tests that flip it serialize here so
+/// parallel test threads never observe each other's override. A poisoned
+/// lock is safe to reuse — every kernel level computes the same bits, so
+/// a panicked holder cannot leave state behind that changes results.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn force_lock() -> std::sync::MutexGuard<'static, ()> {
+    FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Odd, boundary-straddling lengths: empty, sub-lane, one lane, lane ± 1,
+/// multiple lanes ± 1, and larger ragged sizes.
+const LENGTHS: &[usize] = &[0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 250];
+
+// Independent scalar references, written fresh rather than calling into
+// the crate, so a bug shared between `simd`'s scalar and vector paths
+// cannot cancel out.
+
+fn ref_axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+fn ref_axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += a * (v as f32);
+    }
+}
+
+fn ref_affine(buf: &mut [f32], zero: f32, scale: f32) {
+    for v in buf.iter_mut() {
+        *v = (*v - zero) * scale;
+    }
+}
+
+fn ref_bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32;
+    }
+}
+
+/// The pinned dot semantics: 8 independent lane accumulators over the
+/// aligned body, the fixed pairwise reduction tree, sequential tail.
+fn ref_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n8 = a.len() & !7;
+    let mut lanes = [0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        for (l, acc) in lanes.iter_mut().enumerate() {
+            *acc += a[i + l] * b[i + l];
+        }
+        i += 8;
+    }
+    let mut s = ((lanes[0] + lanes[4]) + (lanes[2] + lanes[6]))
+        + ((lanes[1] + lanes[5]) + (lanes[3] + lanes[7]));
+    for j in n8..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+fn ref_dot_i8(a: &[f32], k: &[i8]) -> f32 {
+    let kf: Vec<f32> = k.iter().map(|&v| v as f32).collect();
+    ref_dot(a, &kf)
+}
+
+fn floats(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    rng.gaussian_vec(n, 1.0)
+}
+
+fn codes(rng: &mut Pcg64, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below_usize(255) as i64 - 127) as i8).collect()
+}
+
+#[test]
+fn every_kernel_matches_reference_bitwise_on_odd_shapes() {
+    let _g = force_lock();
+    for kernel in simd::available() {
+        simd::force(Some(kernel));
+        let mut rng = Pcg64::seeded(0xF00D + kernel as u64);
+        for &n in LENGTHS {
+            let x = floats(&mut rng, n);
+            let y = floats(&mut rng, n);
+            let q = codes(&mut rng, n);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.below_usize(256) as u8).collect();
+            let a = 0.73f32;
+
+            let mut got = y.clone();
+            let mut want = y.clone();
+            simd::axpy(&mut got, a, &x);
+            ref_axpy(&mut want, a, &x);
+            assert_eq!(got, want, "axpy {} n={n}", kernel.name());
+
+            let mut got = y.clone();
+            let mut want = y.clone();
+            simd::axpy_i8(&mut got, a, &q);
+            ref_axpy_i8(&mut want, a, &q);
+            assert_eq!(got, want, "axpy_i8 {} n={n}", kernel.name());
+
+            let mut got = x.clone();
+            let mut want = x.clone();
+            simd::affine(&mut got, 0.31, 1.7);
+            ref_affine(&mut want, 0.31, 1.7);
+            assert_eq!(got, want, "affine {} n={n}", kernel.name());
+
+            let mut got = vec![0f32; n];
+            let mut want = vec![0f32; n];
+            simd::bytes_to_f32(&bytes, &mut got);
+            ref_bytes_to_f32(&bytes, &mut want);
+            assert_eq!(got, want, "bytes_to_f32 {} n={n}", kernel.name());
+
+            assert_eq!(
+                simd::dot(&x, &y).to_bits(),
+                ref_dot(&x, &y).to_bits(),
+                "dot {} n={n}",
+                kernel.name()
+            );
+            assert_eq!(
+                simd::dot_i8(&x, &q).to_bits(),
+                ref_dot_i8(&x, &q).to_bits(),
+                "dot_i8 {} n={n}",
+                kernel.name()
+            );
+        }
+    }
+    simd::force(None);
+}
+
+/// The fused packed dequant-GEMM must be bitwise-invariant to the kernel
+/// level at every supported bit-width, on ragged shapes that leave odd
+/// K-tile tails, partial groups, and sub-strip N remainders.
+#[test]
+fn packed_gemm_bitwise_invariant_across_kernels_at_all_bits() {
+    let _g = force_lock();
+    let mut rng = Pcg64::seeded(42);
+    // (m, k, n, group): deliberately not multiples of tile/strip sizes.
+    let shapes = [(1usize, 33usize, 19usize, 16usize), (5, 130, 61, 32), (17, 96, 40, 24)];
+    for &bits in &[2u32, 3, 4, 8] {
+        for &(m, k, n, group) in &shapes {
+            let w = Mat::randn(k, n, 1.0, &mut rng);
+            let packed = PackedMat::pack(&GroupQuant::quantize(&w, QuantConfig::new(bits, group)));
+            let x = Mat::randn(m, k, 1.0, &mut rng);
+            simd::force(Some(simd::Kernel::Scalar));
+            let want = packed.matmul_dequant(&x);
+            for kernel in simd::available() {
+                simd::force(Some(kernel));
+                let got = packed.matmul_dequant(&x);
+                assert_eq!(
+                    got.data,
+                    want.data,
+                    "packed GEMM differs: {} vs scalar at bits={bits} {m}x{k}x{n} g{group}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+    simd::force(None);
+}
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "simdtest".into(),
+        n_layers: 2,
+        d_model: 24,
+        d_ff: 16,
+        n_experts: 4,
+        top_k: 2,
+        n_shared: 1,
+        n_heads: 2,
+        vocab: 64,
+        max_seq: 96,
+    }
+}
+
+/// Whole-model decode pinned bitwise across kernel levels, for dense and
+/// packed weights — the in-process analogue of rerunning the suite under
+/// `EAC_MOE_NO_SIMD=1`: forcing scalar must reproduce the SIMD outputs
+/// exactly, greedy tokens and final logits alike.
+#[test]
+fn model_decode_bitwise_invariant_across_kernels() {
+    let _g = force_lock();
+    let dense = Weights::init(&tiny_cfg(), 7);
+    let mut packed = dense.clone();
+    packed.pack_experts_rtn(4, 8);
+    let prompt: Vec<u32> = (0..40u32).map(|i| (i * 11 + 3) % 64).collect();
+    for (name, weights) in [("dense", dense), ("packed", packed)] {
+        let m = Model::new(weights);
+        let run = || {
+            let mut cache = KvCache::new(m.cfg());
+            let logits = m.prefill_into_cache(&prompt, &Hooks::none(), &mut cache);
+            let mut cur =
+                eac_moe::tensor::ops::topk_indices(logits.row(logits.rows - 1), 1)[0] as u32;
+            let mut toks = Vec::new();
+            let mut last = Vec::new();
+            for _ in 0..6 {
+                toks.push(cur);
+                last = m.decode_step(cur, &mut cache, &Hooks::none());
+                cur = eac_moe::tensor::ops::topk_indices(&last, 1)[0] as u32;
+            }
+            (logits.data, toks, last)
+        };
+        simd::force(Some(simd::Kernel::Scalar));
+        let want = run();
+        for kernel in simd::available() {
+            simd::force(Some(kernel));
+            let got = run();
+            assert_eq!(
+                got, want,
+                "{name} decode differs: {} vs scalar",
+                kernel.name()
+            );
+        }
+    }
+    simd::force(None);
+}
+
+/// Int8 KV is tolerance-pinned, not bitwise: per-step logits stay within
+/// a small relative inf-norm of the f32-KV run, and the decode-path
+/// perplexity over a fixed stream moves by well under 5%.
+#[test]
+fn int8_kv_decode_stays_within_tolerance() {
+    let cfg = tiny_cfg();
+    let m = Model::new(Weights::init(&cfg, 23));
+    let stream: Vec<u32> = (0..64u32).map(|i| (i * 13 + 5) % 64).collect();
+    let run = |prec: KvPrecision| -> (Vec<Vec<f32>>, f64) {
+        let mut cache = KvCache::with_precision(m.cfg(), prec);
+        let mut logits = Vec::new();
+        let mut logp = vec![0f32; cfg.vocab];
+        let mut nll = 0.0f64;
+        for w in stream.windows(2) {
+            let l = m.decode_step(w[0], &mut cache, &Hooks::none());
+            eac_moe::tensor::ops::log_softmax_into(&l, &mut logp);
+            nll -= logp[w[1] as usize] as f64;
+            logits.push(l);
+        }
+        (logits, (nll / (stream.len() - 1) as f64).exp())
+    };
+    let (l32, ppl32) = run(KvPrecision::F32);
+    let (l8, ppl8) = run(KvPrecision::Int8);
+    for (step, (a, b)) in l32.iter().zip(&l8).enumerate() {
+        let scale = a.iter().fold(0f32, |s, &x| s.max(x.abs())).max(1e-6);
+        let diff = a.iter().zip(b).fold(0f32, |d, (&x, &y)| d.max((x - y).abs()));
+        assert!(
+            diff / scale < 0.05,
+            "int8 KV logit drift {:.4} at step {step} exceeds 5% of |logits|={scale:.4}",
+            diff / scale
+        );
+    }
+    let rel = ((ppl8 - ppl32) / ppl32).abs();
+    assert!(
+        rel < 0.05,
+        "decode ppl moved {:.2}% (f32 {ppl32:.4} -> int8 {ppl8:.4})",
+        rel * 100.0
+    );
+}
