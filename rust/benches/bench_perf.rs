@@ -27,7 +27,7 @@ use eac_moe::util::timing::bench;
 
 fn main() {
     println!("== bench_perf (EAC_MOE_BENCH_MS={}ms/case) ==",
-        std::env::var("EAC_MOE_BENCH_MS").unwrap_or_else(|_| "2000".into()));
+        eac_moe::util::env::bench_ms().unwrap_or(2000));
     let mut rng = Pcg64::seeded(1);
     let mut json = Json::obj();
 

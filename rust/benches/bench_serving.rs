@@ -34,9 +34,13 @@ fn main() {
 
     // Batcher overhead: push+drain 1k requests, no model work.
     bench("batcher push+drain 1000 reqs", || {
-        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(1) });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(1),
+            ..Default::default()
+        });
         for i in 0..1000 {
-            b.push(Request::new(i, vec![1, 2, 3]));
+            assert!(b.push(Request::new(i, vec![1, 2, 3])).is_ok());
         }
         b.close();
         let mut n = 0;
@@ -74,7 +78,11 @@ fn main() {
             let engine = Engine::new(
                 Model::new(weights.clone()),
                 EngineConfig {
-                    batch: BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
+                    batch: BatchPolicy {
+                        max_batch,
+                        max_wait: Duration::from_micros(100),
+                        ..Default::default()
+                    },
                     workers: 1,
                     prune: PrunePolicy::None,
                     ..Default::default()

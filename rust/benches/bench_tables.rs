@@ -10,10 +10,7 @@
 //! ```
 
 fn main() {
-    let scale: f64 = std::env::var("EAC_MOE_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0.25);
+    let scale: f64 = eac_moe::util::env::bench_scale().unwrap_or(0.25);
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let ids: Vec<&str> = if args.is_empty() {
         vec![

@@ -426,6 +426,10 @@ impl Model {
         let mut ctx = Mat::zeros(seq, d);
         for (head, slot) in head_ctx.into_iter().enumerate() {
             let off = head * hd;
+            // Invariant: the pool scope above spawned one task per head and
+            // barriers until all ran, so every slot is filled. An empty
+            // slot means a scheduler bug — wrong output is worse than abort.
+            // xtask-allow: serve-no-panic — post-barrier scope invariant
             let ctx_h = slot.expect("head task completed");
             for r in 0..seq {
                 ctx.row_mut(r)[off..off + hd].copy_from_slice(ctx_h.row(r));
@@ -585,6 +589,9 @@ impl Model {
                 if group.is_empty() {
                     continue;
                 }
+                // Invariant: the prefetch loop above filled `handles[e]`
+                // for every non-empty group (same `groups` iteration).
+                // xtask-allow: serve-no-panic — prefetch loop invariant
                 let h = handles[e].as_ref().expect("prefetched above");
                 s.spawn(move || {
                     let token_ids: Vec<usize> = group.iter().map(|(t, _)| *t).collect();
@@ -607,6 +614,9 @@ impl Model {
 
         // Shared experts: always-on, added with weight 1 (DeepSeek-MoE style).
         for y in shared_out {
+            // Invariant: one spawned task per shared expert, barriered by
+            // the scope above — every slot is filled.
+            // xtask-allow: serve-no-panic — post-barrier scope invariant
             let y = y.expect("shared expert task completed");
             for t in 0..seq {
                 crate::tensor::ops::add_inplace(out.row_mut(t), y.row(t));

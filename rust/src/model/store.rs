@@ -351,7 +351,9 @@ impl TieredStore {
                             .map(|(k, _)| *k)
                     };
                     let Some(v) = victim else { break };
-                    let ent = inner.cache.remove(&v).unwrap();
+                    // The victim key came from iterating this same map
+                    // under the same lock, so the entry is present.
+                    let Some(ent) = inner.cache.remove(&v) else { break };
                     inner.resident -= ent.bytes;
                     inner.evictions += 1;
                 }
@@ -480,10 +482,16 @@ impl Model {
                         }
                     }
                 }
-                panic!(
-                    "tiered expert store: on-demand load failed after 3 attempts: {:#}",
-                    last_err.expect("loop recorded an error")
-                )
+                let err = match last_err {
+                    Some(e) => format!("{e:#}"),
+                    None => "no error recorded".to_string(),
+                };
+                // Deliberate abort: continuing without the expert's weights
+                // would silently produce wrong logits for every token
+                // routed to it. The retry loop above already absorbed
+                // transient IO hiccups.
+                // xtask-allow: serve-no-panic — unrecoverable checkpoint IO
+                panic!("tiered expert store: on-demand load failed after 3 attempts: {err}")
             }
         }
     }

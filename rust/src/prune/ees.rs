@@ -68,7 +68,7 @@ pub(crate) fn median(xs: &mut [f32]) -> f32 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.total_cmp(b));
     xs[xs.len() / 2]
 }
 

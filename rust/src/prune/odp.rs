@@ -55,7 +55,7 @@ impl OdpPruner {
             }
         }
         let ratio_threshold = median(&mut ratios);
-        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        norms.sort_by(|a, b| a.total_cmp(b));
         let idx = ((protect_quantile * norms.len() as f32) as usize).min(norms.len().saturating_sub(1));
         let norm_threshold = if norms.is_empty() { f32::INFINITY } else { norms[idx] };
         OdpPruner { ratio_threshold, norm_threshold }

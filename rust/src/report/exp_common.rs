@@ -179,7 +179,7 @@ pub fn prefill_latency(model: Model, prune: PrunePolicy, n_reqs: usize, len: usi
         let (_, metrics) = engine.serve(make_reqs(&mut mix));
         medians.push(metrics.prefill.percentile_ms(0.5));
     }
-    medians.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    medians.sort_by(|a, b| a.total_cmp(b));
     medians[medians.len() / 2] / 1e3
 }
 

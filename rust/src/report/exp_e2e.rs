@@ -96,7 +96,7 @@ pub fn table4(scale: f64) -> Result<()> {
             trials.push(m.prefill.percentile_ms(0.5));
             tm = Some(m);
         }
-        trials.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        trials.sort_by(|a, b| a.total_cmp(b));
         let lat_tiered = trials[trials.len() / 2] / 1e3;
         let tm = tm.expect("three tiered trials ran");
         let _ = std::fs::remove_file(&spill);
@@ -126,7 +126,7 @@ pub fn table4(scale: f64) -> Result<()> {
             let mut runs: Vec<crate::serve::ServeMetrics> =
                 (0..3).map(|_| engine.serve(make(&mut mix)).1).collect();
             runs.sort_by(|a, b| {
-                a.decode_tokens_per_sec().partial_cmp(&b.decode_tokens_per_sec()).unwrap()
+                a.decode_tokens_per_sec().total_cmp(&b.decode_tokens_per_sec())
             });
             runs.swap_remove(1)
         };

@@ -89,12 +89,10 @@ impl Table {
     }
 }
 
-/// Write a JSON result document to `results/<name>.json`.
+/// Write a JSON result document to `results/<name>.json` (the path rides
+/// any error's context chain).
 pub fn save_result(name: &str, json: &Json) -> crate::Result<()> {
-    let dir = Path::new("results");
-    std::fs::create_dir_all(dir)?;
-    std::fs::write(dir.join(format!("{name}.json")), json.to_pretty())?;
-    Ok(())
+    crate::util::json::save(&Path::new("results").join(format!("{name}.json")), json)
 }
 
 /// Format helpers used across experiment tables.

@@ -40,20 +40,20 @@ pub struct ArtifactManifest {
 impl ArtifactManifest {
     /// Default artifacts directory (env EAC_MOE_ARTIFACTS or ./artifacts).
     pub fn default_root() -> PathBuf {
-        std::env::var("EAC_MOE_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
-            PathBuf::from("artifacts")
-        })
+        crate::util::env::artifacts_dir().unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
     pub fn present(root: &Path) -> bool {
         root.join("manifest.json").exists()
     }
 
-    /// Load `<root>/manifest.json`.
+    /// Load `<root>/manifest.json`. Strict on identity: `name`, `path`,
+    /// and `kind` are required per entry (an entry missing them is
+    /// unaddressable, so defaulting to "" only deferred the failure to a
+    /// confusing lookup miss). Shapes and `bucket_m` stay optional —
+    /// absent means "not shape-bucketed".
     pub fn load(root: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(root.join("manifest.json"))
-            .with_context(|| format!("read {}/manifest.json", root.display()))?;
-        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let v = crate::util::json::load(&root.join("manifest.json"))?;
         let mut entries = Vec::new();
         let shape_list = |j: &Json| -> Vec<Vec<usize>> {
             j.as_arr()
@@ -62,11 +62,12 @@ impl ArtifactManifest {
                 .map(|s| s.as_arr().unwrap_or(&[]).iter().filter_map(|d| d.as_usize()).collect())
                 .collect()
         };
-        for e in v.get("entries").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+        for (i, e) in v.req_arr("entries").context("manifest")?.iter().enumerate() {
+            let ctx = || format!("manifest entry {i}");
             entries.push(ArtifactSpec {
-                name: e.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
-                path: root.join(e.get("path").and_then(|x| x.as_str()).unwrap_or("")),
-                kind: e.get("kind").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                name: e.req_str("name").with_context(ctx)?.to_string(),
+                path: root.join(e.req_str("path").with_context(ctx)?),
+                kind: e.req_str("kind").with_context(ctx)?.to_string(),
                 inputs: e.get("inputs").map(&shape_list).unwrap_or_default(),
                 outputs: e.get("outputs").map(&shape_list).unwrap_or_default(),
                 bucket_m: e.get("bucket_m").and_then(|x| x.as_usize()).unwrap_or(0),
@@ -108,6 +109,27 @@ mod tests {
             ]}"#,
         )
         .unwrap();
+    }
+
+    #[test]
+    fn corrupt_or_incomplete_manifest_is_an_error_not_a_default() {
+        let dir = std::env::temp_dir()
+            .join(format!("eac_manifest_strict_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Entry missing `kind`: must fail naming the entry and the key,
+        // not load as kind "".
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"entries":[{"name":"a","path":"p"}]}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", ArtifactManifest::load(&dir).unwrap_err());
+        assert!(err.contains("entry 0") && err.contains("`kind`"), "got: {err}");
+        // Unparseable JSON: must fail with the path, not panic.
+        std::fs::write(dir.join("manifest.json"), "{oops").unwrap();
+        let err = format!("{:#}", ArtifactManifest::load(&dir).unwrap_err());
+        assert!(err.contains("manifest.json"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -12,11 +12,17 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Queue-depth bound: [`Batcher::push`] rejects once this many
+    /// requests are waiting (backpressure instead of unbounded memory
+    /// growth under a producer that outruns the engine). The default is
+    /// effectively unbounded, preserving the original accept-everything
+    /// behavior.
+    pub max_queue: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2), max_queue: usize::MAX }
     }
 }
 
@@ -41,15 +47,18 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a request. Returns false if the batcher is closed.
-    pub fn push(&self, req: Request) -> bool {
+    /// Enqueue a request. On rejection — the batcher is closed, or the
+    /// queue is at [`BatchPolicy::max_queue`] depth — the request is
+    /// handed back so the caller decides whether to retry, shed, or
+    /// fail it.
+    pub fn push(&self, req: Request) -> Result<(), Request> {
         let mut st = self.state.lock().unwrap();
-        if st.closed {
-            return false;
+        if st.closed || st.queue.len() >= self.policy.max_queue {
+            return Err(req);
         }
         st.queue.push_back(req);
         self.cv.notify_all();
-        true
+        Ok(())
     }
 
     /// Close the queue: pending requests still drain, pushes are rejected.
@@ -117,9 +126,13 @@ mod tests {
 
     #[test]
     fn drains_in_order_up_to_max_batch() {
-        let b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
         for i in 0..5 {
-            assert!(b.push(req(i)));
+            assert!(b.push(req(i)).is_ok());
         }
         let b1 = b.next_batch().unwrap();
         assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
@@ -136,7 +149,7 @@ mod tests {
         let b = Batcher::new(BatchPolicy::default());
         assert!(b.try_take(4).is_empty()); // empty queue: returns immediately
         for i in 0..3 {
-            b.push(req(i));
+            assert!(b.push(req(i)).is_ok());
         }
         let got = b.try_take(2);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
@@ -145,11 +158,25 @@ mod tests {
     }
 
     #[test]
+    fn full_queue_rejects_pushes_until_drained() {
+        let b = Batcher::new(BatchPolicy { max_queue: 2, ..Default::default() });
+        assert!(b.push(req(0)).is_ok());
+        assert!(b.push(req(1)).is_ok());
+        // At depth: rejected, and the request comes back to the caller.
+        let rejected = b.push(req(2)).unwrap_err();
+        assert_eq!(rejected.id, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.try_take(1).len(), 1); // free a slot
+        assert!(b.push(rejected).is_ok()); // now accepted
+        assert_eq!(b.try_take(4).iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
     fn close_rejects_pushes_but_drains() {
         let b = Batcher::new(BatchPolicy::default());
-        b.push(req(1));
+        assert!(b.push(req(1)).is_ok());
         b.close();
-        assert!(!b.push(req(2)));
+        assert!(b.push(req(2)).is_err());
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
     }
@@ -161,6 +188,7 @@ mod tests {
         let b = Arc::new(Batcher::new(BatchPolicy {
             max_batch: 3,
             max_wait: Duration::from_micros(200),
+            ..Default::default()
         }));
         let n_producers = 4;
         let per = 50u64;
@@ -169,7 +197,7 @@ mod tests {
             let bb = b.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..per {
-                    assert!(bb.push(req(p * 1000 + i)));
+                    assert!(bb.push(req(p * 1000 + i)).is_ok());
                 }
             }));
         }

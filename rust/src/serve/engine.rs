@@ -35,7 +35,7 @@
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServeMetrics;
 use super::request::{FinishReason, Request, Response};
-use crate::model::hooks::{FilterDropStats, Hooks, SelectionRecord};
+use crate::model::hooks::{FilterDropStats, Hooks, SelectionFilter, SelectionRecord};
 use crate::model::{KvCache, KvPrecision, Model};
 use crate::prune::ees::EesPruner;
 use crate::prune::odp::OdpPruner;
@@ -120,6 +120,11 @@ impl Engine {
         let kv = if self.cfg.kv_bits == 8 { KvPrecision::Int8 } else { KvPrecision::F32 };
         let peak_kv = Arc::new(AtomicUsize::new(0));
         let t0 = Instant::now();
+        // Engine workers block on the batcher condvar between batches, so
+        // they must NOT ride the compute pool (they would starve the GEMM
+        // tasks that each batch fans out onto it). Scoped OS threads are
+        // the right tool here; the pool-only rule is for compute.
+        // xtask-allow: no-raw-thread — blocking serve workers, not compute
         std::thread::scope(|s| {
             let mut workers = Vec::new();
             for _ in 0..self.cfg.workers.max(1) {
@@ -140,16 +145,35 @@ impl Engine {
                     }
                 }));
             }
-            for req in requests {
-                batcher.push(req);
+            for mut req in requests {
+                // Offline entry point, closed request set: honor the queue
+                // bound by waiting for the workers to drain a slot rather
+                // than shedding (an online producer would retry or shed
+                // itself). The batcher is only closed below, after this
+                // loop, so rejection here always means "queue full".
+                while let Err(r) = batcher.push(req) {
+                    req = r;
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
             }
             batcher.close();
             for w in workers {
-                w.join().unwrap();
+                // A worker that panicked poisons nothing the results need;
+                // re-throw its panic rather than unwinding with a generic
+                // `Any` unwrap message.
+                if let Err(p) = w.join() {
+                    std::panic::resume_unwind(p);
+                }
             }
         });
         let wall = t0.elapsed().as_secs_f64();
-        let resps = Arc::try_unwrap(responses).unwrap().into_inner().unwrap();
+        let resps = match Arc::try_unwrap(responses) {
+            Ok(m) => m.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner),
+            // The scope joined every worker, so no other clone can remain;
+            // if one somehow does, drain through the lock instead of
+            // unwinding with the metrics half-built.
+            Err(shared) => std::mem::take(&mut *shared.lock().unwrap()),
+        };
         let store = self.model.expert_store_stats();
         let mut metrics = ServeMetrics {
             wall_secs: wall,
@@ -483,28 +507,16 @@ fn prefill_request(
                 ));
             }
             let stats = crate::prune::pesf::PesfStats {
-                pruned_per_layer: hooks.pesf_pruned.unwrap().into_inner(),
+                // pesf_hooks always installs the counter; degrade to a 0.0
+                // prune rate rather than unwinding mid-batch if a future
+                // hook construction stops doing so.
+                pruned_per_layer: hooks.pesf_pruned.map(RefCell::into_inner).unwrap_or_default(),
                 n_experts: mcfg.n_experts,
             };
             (logits, stats.prune_rate())
         }
-        PrunePolicy::Ees(_) | PrunePolicy::Odp(_) => {
-            let filter = match prune {
-                PrunePolicy::Ees(p) => p.filter(),
-                PrunePolicy::Odp(p) => p.filter(),
-                _ => unreachable!(),
-            };
-            let hooks = Hooks {
-                selection_filter: Some(filter),
-                filter_drops: Some(RefCell::new(FilterDropStats::default())),
-                ..Default::default()
-            };
-            let logits = run(&hooks, &mut cache);
-            // Both policies hardcoded prune_rate 0.0 before even though
-            // their filters drop experts; report the measured drop rate.
-            let rate = hooks.filter_drops.unwrap().into_inner().rate();
-            (logits, rate)
-        }
+        PrunePolicy::Ees(p) => run_filtered(p.filter(), &mut cache, &run),
+        PrunePolicy::Odp(p) => run_filtered(p.filter(), &mut cache, &run),
     };
     let prefill_secs = t0.elapsed().as_secs_f64();
 
@@ -538,6 +550,24 @@ fn prefill_request(
     let handoff =
         cache.map(|c| PrefillHandoff { cache: c, next: next_token, pesf: pesf_state });
     (resp, handoff)
+}
+
+/// Run one prefill pass with a per-token selection filter (EES/ODP) and
+/// drop-rate accounting installed. Returns the pass output plus the
+/// measured fraction of selected expert slots the filter dropped.
+fn run_filtered<T>(
+    filter: SelectionFilter,
+    cache: &mut Option<KvCache>,
+    run: &impl Fn(&Hooks, &mut Option<KvCache>) -> T,
+) -> (T, f32) {
+    let hooks = Hooks {
+        selection_filter: Some(filter),
+        filter_drops: Some(RefCell::new(FilterDropStats::default())),
+        ..Default::default()
+    };
+    let out = run(&hooks, cache);
+    let rate = hooks.filter_drops.map(|d| d.into_inner().rate()).unwrap_or(0.0);
+    (out, rate)
 }
 
 #[cfg(test)]

@@ -318,7 +318,7 @@ impl<'env> PoolScope<'env> {
 /// (clamped ≥ 1), else the machine's available parallelism. Read at pool
 /// construction — constructing a pool is the only thing that latches it.
 pub fn threads_from_env() -> usize {
-    match std::env::var("EAC_MOE_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+    match crate::util::env::threads() {
         Some(n) => n.max(1),
         None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     }

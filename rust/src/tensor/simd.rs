@@ -39,7 +39,14 @@
 //! FMA is deliberately not used anywhere: fusing would change results
 //! vs. the separate mul+add scalar reference (and `f32::mul_add` on the
 //! scalar side would drop to a slow libm call on default x86-64 targets,
-//! making `EAC_MOE_NO_SIMD=1` runs pathologically slow).
+//! making `EAC_MOE_NO_SIMD=1` runs pathologically slow). The `no-fma`
+//! xtask lint enforces this mechanically across the tree; if a pinned-DAG
+//! variant ever legitimately needs a fused op, it goes inside an
+//! allow-region in this file (the only file the linter permits one in).
+//!
+//! Under Miri the vector modules are compiled out (`cfg(miri)`) and
+//! detection pins Scalar — vendor intrinsics aren't supported there, and
+//! the scalar path is the semantic definition of every kernel anyway.
 //!
 //! # Why dequantization stays per-group
 //!
@@ -96,19 +103,16 @@ static FORCED: AtomicU8 = AtomicU8::new(0);
 fn detected() -> Kernel {
     static DETECTED: OnceLock<Kernel> = OnceLock::new();
     *DETECTED.get_or_init(|| {
-        let no_simd = std::env::var("EAC_MOE_NO_SIMD")
-            .map(|v| !v.is_empty() && v != "0")
-            .unwrap_or(false);
-        if no_simd {
+        if crate::util::env::no_simd() {
             return Kernel::Scalar;
         }
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         {
             if std::arch::is_x86_feature_detected!("avx2") {
                 return Kernel::Avx2;
             }
         }
-        #[cfg(target_arch = "aarch64")]
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         {
             if std::arch::is_aarch64_feature_detected!("neon") {
                 return Kernel::Neon;
@@ -147,13 +151,13 @@ pub fn force(k: Option<Kernel>) {
 /// Avx2/Neon per runtime detection, independent of `EAC_MOE_NO_SIMD`).
 pub fn available() -> Vec<Kernel> {
     let mut v = vec![Kernel::Scalar];
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
             v.push(Kernel::Avx2);
         }
     }
-    #[cfg(target_arch = "aarch64")]
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
     {
         if std::arch::is_aarch64_feature_detected!("neon") {
             v.push(Kernel::Neon);
@@ -172,9 +176,14 @@ pub fn available() -> Vec<Kernel> {
 pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(out.len(), x.len());
     match active() {
-        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is active only after runtime detection confirmed
+        // the `avx2` target feature (forcing is limited to [`available`]
+        // levels), so the target_feature fn's precondition holds.
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         Kernel::Avx2 => unsafe { avx2::axpy(out, a, x) },
-        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is active only after runtime detection confirmed
+        // the `neon` target feature (baseline on aarch64).
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         Kernel::Neon => unsafe { neon::axpy(out, a, x) },
         _ => scalar::axpy(out, a, x),
     }
@@ -186,9 +195,12 @@ pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
 pub fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
     debug_assert_eq!(out.len(), x.len());
     match active() {
-        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 active ⇒ runtime detection confirmed the `avx2`
+        // target feature (see [`axpy`]).
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         Kernel::Avx2 => unsafe { avx2::axpy_i8(out, a, x) },
-        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon active ⇒ runtime detection confirmed `neon`.
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         Kernel::Neon => unsafe { neon::axpy_i8(out, a, x) },
         _ => scalar::axpy_i8(out, a, x),
     }
@@ -199,9 +211,12 @@ pub fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
 #[inline]
 pub fn affine(buf: &mut [f32], zero: f32, scale: f32) {
     match active() {
-        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 active ⇒ runtime detection confirmed the `avx2`
+        // target feature (see [`axpy`]).
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         Kernel::Avx2 => unsafe { avx2::affine(buf, zero, scale) },
-        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon active ⇒ runtime detection confirmed `neon`.
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         Kernel::Neon => unsafe { neon::affine(buf, zero, scale) },
         _ => scalar::affine(buf, zero, scale),
     }
@@ -213,9 +228,12 @@ pub fn affine(buf: &mut [f32], zero: f32, scale: f32) {
 pub fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
     debug_assert!(dst.len() >= src.len());
     match active() {
-        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 active ⇒ runtime detection confirmed the `avx2`
+        // target feature (see [`axpy`]).
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         Kernel::Avx2 => unsafe { avx2::bytes_to_f32(src, dst) },
-        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon active ⇒ runtime detection confirmed `neon`.
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         Kernel::Neon => unsafe { neon::bytes_to_f32(src, dst) },
         _ => scalar::bytes_to_f32(src, dst),
     }
@@ -227,9 +245,12 @@ pub fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     match active() {
-        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 active ⇒ runtime detection confirmed the `avx2`
+        // target feature (see [`axpy`]).
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         Kernel::Avx2 => unsafe { avx2::dot(a, b) },
-        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon active ⇒ runtime detection confirmed `neon`.
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         Kernel::Neon => unsafe { neon::dot(a, b) },
         _ => scalar::dot(a, b),
     }
@@ -242,9 +263,12 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 pub fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
     debug_assert_eq!(a.len(), k.len());
     match active() {
-        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 active ⇒ runtime detection confirmed the `avx2`
+        // target feature (see [`axpy`]).
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         Kernel::Avx2 => unsafe { avx2::dot_i8(a, k) },
-        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon active ⇒ runtime detection confirmed `neon`.
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         Kernel::Neon => unsafe { neon::dot_i8(a, k) },
         _ => scalar::dot_i8(a, k),
     }
@@ -320,15 +344,20 @@ mod scalar {
 
 // ---------------------------------------------------------------------------
 // AVX2 (x86_64) — same per-element / per-lane operations as scalar.
+// The vector modules are compiled out under Miri (vendor intrinsics are
+// unsupported there) and detection pins Scalar, so Miri runs exercise the
+// scalar reference, which is the semantic definition anyway.
 // ---------------------------------------------------------------------------
 
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 mod avx2 {
     use std::arch::x86_64::*;
 
     /// Horizontal sum of [l0..l7] through the fixed tree
     /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the same DAG the scalar
     /// reference spells out.
+    // SAFETY: contract — caller must have verified the `avx2` feature
+    // (every caller is itself an avx2 target_feature fn). Register-only.
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum(v: __m256) -> f32 {
@@ -339,6 +368,9 @@ mod avx2 {
         _mm_cvtss_f32(_mm_add_ss(s2, _mm_movehdup_ps(s2)))
     }
 
+    // SAFETY: contract — caller must have verified the `avx2` feature
+    // (the dispatch match does). Loads/stores stay in bounds: the vector
+    // loop covers indices < n8 ≤ len in whole 8-lane strips.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
         let n = out.len();
@@ -357,6 +389,8 @@ mod avx2 {
     }
 
     /// Sign-extend 8 i8 codes to 8 f32 lanes (exact for |v| <= 127).
+    // SAFETY: contract — `p` must be valid for reading 8 bytes
+    // (`_mm_loadl_epi64` reads exactly 8) and `avx2` must be verified.
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn load_i8_as_f32(p: *const i8) -> __m256 {
@@ -364,6 +398,10 @@ mod avx2 {
         _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes))
     }
 
+    // SAFETY: contract — caller must have verified `avx2`. In-bounds: the
+    // loop reads/writes 8-lane strips below n8 ≤ len of both slices
+    // (out.len() == x.len() per the public wrapper's debug_assert and all
+    // call sites).
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
         let n = out.len();
@@ -381,6 +419,8 @@ mod avx2 {
         }
     }
 
+    // SAFETY: contract — caller must have verified `avx2`. In-bounds:
+    // 8-lane strips below n8 ≤ len, scalar tail after.
     #[target_feature(enable = "avx2")]
     pub unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
         let n = buf.len();
@@ -398,6 +438,9 @@ mod avx2 {
         }
     }
 
+    // SAFETY: contract — caller must have verified `avx2`. In-bounds:
+    // reads 8-byte strips below n8 ≤ src.len(); writes below n8 ≤
+    // dst.len() (dst.len() >= src.len() per the public wrapper).
     #[target_feature(enable = "avx2")]
     pub unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
         let n = src.len();
@@ -414,6 +457,8 @@ mod avx2 {
         }
     }
 
+    // SAFETY: contract — caller must have verified `avx2`. In-bounds:
+    // 8-lane strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
@@ -433,6 +478,8 @@ mod avx2 {
         s
     }
 
+    // SAFETY: contract — caller must have verified `avx2`. In-bounds:
+    // 8-lane strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
         let n = a.len();
@@ -458,10 +505,12 @@ mod avx2 {
 // the final combine follows the same fixed tree as scalar/AVX2.
 // ---------------------------------------------------------------------------
 
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 mod neon {
     use std::arch::aarch64::*;
 
+    // SAFETY: contract — caller must have verified the `neon` feature
+    // (the dispatch match does). In-bounds: 4-lane strips below n4 ≤ len.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
         let n = out.len();
@@ -480,6 +529,8 @@ mod neon {
     }
 
     /// Sign-extend 8 i8 codes to two float32x4 registers (lanes 0-3, 4-7).
+    // SAFETY: contract — `p` must be valid for reading 8 bytes (`vld1_s8`
+    // reads exactly 8) and `neon` must be verified.
     #[inline]
     #[target_feature(enable = "neon")]
     unsafe fn load_i8_as_f32x2(p: *const i8) -> (float32x4_t, float32x4_t) {
@@ -489,6 +540,8 @@ mod neon {
         (lo, hi)
     }
 
+    // SAFETY: contract — caller must have verified `neon`. In-bounds:
+    // 8-element strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
         let n = out.len();
@@ -508,6 +561,8 @@ mod neon {
         }
     }
 
+    // SAFETY: contract — caller must have verified `neon`. In-bounds:
+    // 4-lane strips below n4 ≤ len, scalar tail after.
     #[target_feature(enable = "neon")]
     pub unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
         let n = buf.len();
@@ -525,6 +580,9 @@ mod neon {
         }
     }
 
+    // SAFETY: contract — caller must have verified `neon`. In-bounds:
+    // reads 8-byte strips below n8 ≤ src.len(); writes below n8 ≤
+    // dst.len() (dst.len() >= src.len() per the public wrapper).
     #[target_feature(enable = "neon")]
     pub unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
         let n = src.len();
@@ -544,6 +602,7 @@ mod neon {
     }
 
     /// Combine accumulators [l0..l3], [l4..l7] through the fixed tree.
+    // SAFETY: contract — caller must have verified `neon`. Register-only.
     #[inline]
     #[target_feature(enable = "neon")]
     unsafe fn combine(acc_lo: float32x4_t, acc_hi: float32x4_t) -> f32 {
@@ -552,6 +611,8 @@ mod neon {
         vget_lane_f32::<0>(t) + vget_lane_f32::<1>(t)
     }
 
+    // SAFETY: contract — caller must have verified `neon`. In-bounds:
+    // 8-element strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
@@ -575,6 +636,8 @@ mod neon {
         s
     }
 
+    // SAFETY: contract — caller must have verified `neon`. In-bounds:
+    // 8-element strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
         let n = a.len();
@@ -628,7 +691,7 @@ mod tests {
         for &n in LENGTHS {
             let a = gauss(n, &mut rng);
             let b = gauss(n, &mut rng);
-            let codes: Vec<i8> = (0..n).map(|_| (rng.below_usize(255) as i64 - 127) as i8) .collect();
+            let codes: Vec<i8> = (0..n).map(|_| (rng.below_usize(255) as i64 - 127) as i8).collect();
             let bytes: Vec<u8> = (0..n).map(|_| rng.below_usize(256) as u8).collect();
             let base = gauss(n, &mut rng);
             let (s, z) = (0.37f32, 3.0f32);

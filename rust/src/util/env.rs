@@ -1,0 +1,87 @@
+//! The designated `EAC_MOE_*` configuration read site.
+//!
+//! Every `EAC_MOE_*` environment variable is read here and nowhere else —
+//! mechanically enforced by the `env-read-site` xtask lint rule. The PR 3
+//! lesson behind the rule: scattered `std::env::var` calls let one process
+//! re-read configuration mid-run and half-reconfigure itself. Consumers
+//! whose value must not change after first use latch it behind their own
+//! `OnceLock` (the global pool's thread count, the SIMD dispatch level);
+//! the accessors here deliberately do not cache, so those consumers' first
+//! read — and tests that mutate variables with `std::env::set_var` —
+//! observe the current environment.
+
+use std::path::PathBuf;
+
+fn var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// `EAC_MOE_NO_SIMD`: any value other than empty or `0` pins the scalar
+/// kernels. Latched by `tensor/simd.rs` detection at first kernel call.
+pub fn no_simd() -> bool {
+    var("EAC_MOE_NO_SIMD").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// `EAC_MOE_THREADS`: requested worker-pool size. `None` when unset or
+/// unparseable (callers fall back to the machine's parallelism). Latched
+/// by the process-global pool at construction.
+pub fn threads() -> Option<usize> {
+    var("EAC_MOE_THREADS").and_then(|v| v.parse().ok())
+}
+
+/// `EAC_MOE_BENCH_MS`: per-case time budget for the bench harness
+/// (`util/timing.rs` defaults to 2000 when unset).
+pub fn bench_ms() -> Option<u64> {
+    var("EAC_MOE_BENCH_MS").and_then(|v| v.parse().ok())
+}
+
+/// `EAC_MOE_BENCH_SCALE`: problem-size multiplier for the Table-style
+/// bench sweeps (CI smoke runs use a small fraction).
+pub fn bench_scale() -> Option<f64> {
+    var("EAC_MOE_BENCH_SCALE").and_then(|v| v.parse().ok())
+}
+
+/// `EAC_MOE_ARTIFACTS`: root directory of the AOT artifact manifest.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    var("EAC_MOE_ARTIFACTS").map(PathBuf::from)
+}
+
+/// `EAC_MOE_EXPERT_BUDGET_MB`: tiered-ExpertStore byte budget for the
+/// integration tests' tight-budget pass. A set-but-unparseable value is a
+/// configuration error and panics loudly — silently ignoring it would
+/// turn the CI budget pass into a no-op that still reports green.
+pub fn expert_budget_mb() -> Option<f64> {
+    var("EAC_MOE_EXPERT_BUDGET_MB").map(|v| {
+        v.parse().unwrap_or_else(|_| {
+            panic!("EAC_MOE_EXPERT_BUDGET_MB must be a number (MB), got `{v}`")
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Only variables no other lib test reads are mutated here, so the
+    // process-wide environment can't race another test's latch.
+
+    #[test]
+    fn bench_scale_parses_and_ignores_garbage() {
+        std::env::set_var("EAC_MOE_BENCH_SCALE", "0.5");
+        assert_eq!(bench_scale(), Some(0.5));
+        std::env::set_var("EAC_MOE_BENCH_SCALE", "nope");
+        assert_eq!(bench_scale(), None);
+        std::env::remove_var("EAC_MOE_BENCH_SCALE");
+        assert_eq!(bench_scale(), None);
+    }
+
+    #[test]
+    fn expert_budget_rejects_garbage_loudly() {
+        std::env::set_var("EAC_MOE_EXPERT_BUDGET_MB", "12.5");
+        assert_eq!(expert_budget_mb(), Some(12.5));
+        std::env::set_var("EAC_MOE_EXPERT_BUDGET_MB", "garbage");
+        let r = std::panic::catch_unwind(expert_budget_mb);
+        std::env::remove_var("EAC_MOE_EXPERT_BUDGET_MB");
+        assert!(r.is_err(), "unparseable budget must panic, not be ignored");
+    }
+}

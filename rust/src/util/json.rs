@@ -3,9 +3,24 @@
 //! Used for the AOT artifact manifest and experiment result files. Covers
 //! the full JSON grammar (objects, arrays, strings with escapes, numbers,
 //! bools, null); no serde in the offline registry, so we own this ~300 lines.
+//!
+//! Two access layers: the `as_*` accessors return `Option` for
+//! shape-probing, and the `req*` accessors return [`anyhow::Result`] with
+//! the missing/mistyped key named in the error — use the latter when a
+//! document (a manifest, a results file) is *required* to have a field, so
+//! a corrupt file surfaces as a propagated error instead of a panic or a
+//! silently-defaulted value. [`load`]/[`save`] wrap file IO the same way,
+//! with the path in the error chain.
 
+use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::path::Path;
+
+/// Parser recursion bound: documents nested deeper than this are rejected
+/// instead of overflowing the stack (a hand-rolled recursive-descent
+/// parser's failure mode on e.g. a 100k-`[`-deep attack file).
+const MAX_DEPTH: usize = 256;
 
 /// A JSON value. Object keys are sorted (BTreeMap) for stable output.
 #[derive(Clone, Debug, PartialEq)]
@@ -73,7 +88,10 @@ impl Json {
         }
     }
 
-    /// Serialize compactly.
+    /// Serialize compactly. Named for symmetry with `to_pretty`, not as a
+    /// `Display` shadow — `Json` deliberately has no `Display` impl, so
+    /// serialization is always an explicit choice of compact vs pretty.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -161,9 +179,9 @@ impl Json {
     }
 
     /// Parse a JSON document.
-    pub fn parse(text: &str) -> Result<Json, String> {
+    pub fn parse(text: &str) -> std::result::Result<Json, String> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, i: 0 };
+        let mut p = Parser { b: bytes, i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -172,6 +190,52 @@ impl Json {
         }
         Ok(v)
     }
+
+    /// Required object field: [`Json::get`] with the key named in the error.
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing required key `{key}`"))
+    }
+
+    /// Required string field.
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.req(key)?.as_str().ok_or_else(|| anyhow!("key `{key}` is not a string"))
+    }
+
+    /// Required number field.
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.req(key)?.as_f64().ok_or_else(|| anyhow!("key `{key}` is not a number"))
+    }
+
+    /// Required non-negative integer field.
+    pub fn req_usize(&self, key: &str) -> Result<usize> {
+        let n = self.req_f64(key)?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(anyhow!("key `{key}` is not a non-negative integer (got {n})"));
+        }
+        Ok(n as usize)
+    }
+
+    /// Required array field.
+    pub fn req_arr(&self, key: &str) -> Result<&[Json]> {
+        self.req(key)?.as_arr().ok_or_else(|| anyhow!("key `{key}` is not an array"))
+    }
+}
+
+/// Read and parse a JSON file, with the path in the error chain.
+pub fn load(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow!("{e}").context(format!("parsing {}", path.display())))
+}
+
+/// Pretty-print a JSON document to a file (creating parent directories),
+/// with the path in the error chain.
+pub fn save(path: &Path, v: &Json) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, v.to_pretty()).with_context(|| format!("writing {}", path.display()))
 }
 
 fn write_num(out: &mut String, n: f64) {
@@ -205,6 +269,8 @@ fn write_str(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container-nesting depth, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -250,7 +316,24 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    /// Bounded container entry: rejects pathological nesting before the
+    /// recursion can overflow the stack.
+    fn enter(&mut self) -> std::result::Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        Ok(())
+    }
+
+    fn object(&mut self) -> std::result::Result<Json, String> {
+        self.enter()?;
+        let v = self.object_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_body(&mut self) -> std::result::Result<Json, String> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
@@ -277,7 +360,14 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> std::result::Result<Json, String> {
+        self.enter()?;
+        let v = self.array_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_body(&mut self) -> std::result::Result<Json, String> {
         self.expect(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
@@ -438,5 +528,51 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::obj());
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn nesting_is_bounded_not_stack_overflowed() {
+        // Deep-but-legal nests parse; past MAX_DEPTH is a parse error,
+        // not a stack overflow.
+        let deep_ok = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let deep_bad = format!("{}1{}", "[".repeat(300), "]".repeat(300));
+        let err = Json::parse(&deep_bad).unwrap_err();
+        assert!(err.contains("nesting deeper"), "unexpected error: {err}");
+        // Wide-but-shallow documents must not trip the bound (the depth
+        // counter has to come back down between siblings).
+        let wide = format!("[{}]", vec!["[]"; 400].join(","));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn req_accessors_name_the_key() {
+        let v = Json::parse(r#"{"n": 3, "s": "x", "a": [1], "f": 1.5}"#).unwrap();
+        assert_eq!(v.req_usize("n").unwrap(), 3);
+        assert_eq!(v.req_str("s").unwrap(), "x");
+        assert_eq!(v.req_arr("a").unwrap().len(), 1);
+        assert_eq!(v.req_f64("f").unwrap(), 1.5);
+        let err = format!("{:#}", v.req("missing").unwrap_err());
+        assert!(err.contains("missing"), "error must name the key: {err}");
+        let err = format!("{:#}", v.req_str("n").unwrap_err());
+        assert!(err.contains("`n`"), "error must name the key: {err}");
+        assert!(v.req_usize("f").is_err(), "1.5 is not a usize");
+    }
+
+    #[test]
+    fn load_errors_carry_the_path() {
+        let dir = std::env::temp_dir().join(format!("eac_json_test_{}", std::process::id()));
+        let p = dir.join("sub").join("doc.json");
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(err.contains("doc.json"), "error must carry the path: {err}");
+        let mut v = Json::obj();
+        v.set("k", Json::from(1.0));
+        save(&p, &v).unwrap(); // creates parent dirs
+        assert_eq!(load(&p).unwrap(), v);
+        let corrupt = dir.join("bad.json");
+        std::fs::write(&corrupt, "{not json").unwrap();
+        let err = format!("{:#}", load(&corrupt).unwrap_err());
+        assert!(err.contains("bad.json") && err.contains("parsing"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

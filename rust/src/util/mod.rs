@@ -2,6 +2,7 @@
 //! timing/statistics harness (the offline registry has no serde/criterion).
 
 pub mod binio;
+pub mod env;
 pub mod json;
 pub mod timing;
 

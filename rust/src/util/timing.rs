@@ -77,10 +77,7 @@ fn humanize(ns: f64) -> (f64, &'static str) {
 /// time budget (default 2s, override with EAC_MOE_BENCH_MS) or `max_iters`.
 /// Prints and returns stats.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    let budget_ms: u64 = std::env::var("EAC_MOE_BENCH_MS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(2000);
+    let budget_ms: u64 = crate::util::env::bench_ms().unwrap_or(2000);
     let budget = Duration::from_millis(budget_ms);
     // Warmup: at least one call, up to 10% of budget.
     let warm_deadline = Instant::now() + budget / 10;
@@ -98,7 +95,7 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len().max(1);
     let mean = samples.iter().sum::<f64>() / n as f64;
     let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;

@@ -1,0 +1,234 @@
+//! Concurrency stress: many producers hammering the batcher against
+//! concurrent consumers (blocking `next_batch` and non-blocking
+//! `try_take`), with and without a queue bound. These tests are the
+//! ThreadSanitizer workload for the serving layer — they chase the
+//! races the unit tests can't reach (push vs drain vs close
+//! interleavings) and assert request conservation under all of them:
+//! every submitted request is either delivered exactly once or handed
+//! back to its producer, never both and never lost.
+
+use eac_moe::model::{Model, ModelConfig, Weights};
+use eac_moe::serve::{BatchPolicy, Batcher, Engine, EngineConfig, PrunePolicy, Request};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn req(id: u64) -> Request {
+    Request::new(id, vec![1, 2, 3])
+}
+
+/// Bounded queue, multi-producer vs mixed consumers. Producers keep the
+/// ids of rejected pushes; consumers record delivered ids. Conservation:
+/// delivered ∪ rejected == submitted, with no id on both sides and no
+/// duplicates.
+#[test]
+fn bounded_queue_push_vs_try_take_conserves_requests() {
+    let n_producers: u64 = 4;
+    let per: u64 = 300;
+    let b = Arc::new(Batcher::new(BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_micros(50),
+        max_queue: 8,
+    }));
+    let done = Arc::new(AtomicBool::new(false));
+
+    let mut producers = Vec::new();
+    for p in 0..n_producers {
+        let bb = b.clone();
+        producers.push(std::thread::spawn(move || {
+            let mut rejected = Vec::new();
+            for i in 0..per {
+                if let Err(r) = bb.push(req(p * 10_000 + i)) {
+                    rejected.push(r.id);
+                }
+            }
+            rejected
+        }));
+    }
+
+    // One blocking consumer (drains until close) and one spinning
+    // try_take consumer (exits once producers are done and the queue is
+    // observed empty — try_take never blocks, so this is the racy side).
+    let blocking = {
+        let bb = b.clone();
+        std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            while let Some(batch) = bb.next_batch() {
+                seen.extend(batch.into_iter().map(|r| r.id));
+            }
+            seen
+        })
+    };
+    let spinning = {
+        let bb = b.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            loop {
+                let got = bb.try_take(3);
+                let empty = got.is_empty();
+                seen.extend(got.into_iter().map(|r| r.id));
+                if empty && done.load(Ordering::SeqCst) && bb.is_empty() {
+                    return seen;
+                }
+                if empty {
+                    std::thread::yield_now();
+                }
+            }
+        })
+    };
+
+    let mut rejected: Vec<u64> = Vec::new();
+    for p in producers {
+        rejected.extend(p.join().unwrap());
+    }
+    done.store(true, Ordering::SeqCst);
+    b.close();
+    let mut delivered = blocking.join().unwrap();
+    delivered.extend(spinning.join().unwrap());
+
+    // With an 8-deep queue and 1200 fast pushes, some rejections are
+    // effectively certain — but don't assert on scheduling luck, only on
+    // conservation.
+    let mut all: Vec<u64> = delivered.iter().chain(rejected.iter()).copied().collect();
+    all.sort_unstable();
+    let mut want: Vec<u64> =
+        (0..n_producers).flat_map(|p| (0..per).map(move |i| p * 10_000 + i)).collect();
+    want.sort_unstable();
+    assert_eq!(all, want, "each request must be delivered XOR rejected, exactly once");
+}
+
+/// Unbounded (default) queue: every push is accepted even under
+/// contention, and every accepted request is delivered exactly once.
+#[test]
+fn unbounded_queue_accepts_and_delivers_everything() {
+    let n_producers: u64 = 4;
+    let per: u64 = 250;
+    let b = Arc::new(Batcher::new(BatchPolicy {
+        max_batch: 3,
+        max_wait: Duration::from_micros(50),
+        ..Default::default()
+    }));
+    let mut producers = Vec::new();
+    for p in 0..n_producers {
+        let bb = b.clone();
+        producers.push(std::thread::spawn(move || {
+            for i in 0..per {
+                assert!(bb.push(req(p * 10_000 + i)).is_ok());
+            }
+        }));
+    }
+    let consumers: Vec<_> = (0..2)
+        .map(|_| {
+            let bb = b.clone();
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = bb.next_batch() {
+                    seen.extend(batch.into_iter().map(|r| r.id));
+                }
+                seen
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    b.close();
+    let mut seen: Vec<u64> = Vec::new();
+    for c in consumers {
+        seen.extend(c.join().unwrap());
+    }
+    seen.sort_unstable();
+    let mut want: Vec<u64> =
+        (0..n_producers).flat_map(|p| (0..per).map(move |i| p * 10_000 + i)).collect();
+    want.sort_unstable();
+    assert_eq!(seen, want);
+}
+
+/// Close racing in-flight pushes: whatever `push` accepted must come out
+/// the other side, and whatever it rejected must not.
+#[test]
+fn close_mid_stream_conserves_accepted_requests() {
+    for _ in 0..20 {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(20),
+            ..Default::default()
+        }));
+        let producer = {
+            let bb = b.clone();
+            std::thread::spawn(move || {
+                let mut accepted = Vec::new();
+                for i in 0..200u64 {
+                    if bb.push(req(i)).is_ok() {
+                        accepted.push(i);
+                    }
+                }
+                accepted
+            })
+        };
+        let closer = {
+            let bb = b.clone();
+            std::thread::spawn(move || {
+                std::thread::yield_now();
+                bb.close();
+            })
+        };
+        let consumer = {
+            let bb = b.clone();
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = bb.next_batch() {
+                    seen.extend(batch.into_iter().map(|r| r.id));
+                }
+                seen
+            })
+        };
+        let mut accepted = producer.join().unwrap();
+        closer.join().unwrap();
+        let mut seen = consumer.join().unwrap();
+        accepted.sort_unstable();
+        seen.sort_unstable();
+        assert_eq!(seen, accepted, "close must not lose accepted or leak rejected requests");
+    }
+}
+
+/// End-to-end: the engine's offline `serve` honors a tiny queue bound by
+/// waiting out backpressure, so a closed request set is still served
+/// exactly once per request.
+#[test]
+fn engine_serves_closed_set_through_tiny_bounded_queue() {
+    let cfg = ModelConfig {
+        name: "stress".into(),
+        n_layers: 2,
+        d_model: 16,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        n_shared: 0,
+        n_heads: 2,
+        vocab: 64,
+        max_seq: 64,
+    };
+    let engine = Engine::new(
+        Model::new(Weights::init(&cfg, 11)),
+        EngineConfig {
+            batch: BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_micros(50),
+                max_queue: 2,
+            },
+            workers: 2,
+            prune: PrunePolicy::None,
+            ..Default::default()
+        },
+    );
+    let reqs: Vec<Request> = (0..24)
+        .map(|i| Request::new(i, (0..8u32).map(|t| (t * 7 + i as u32) % 64).collect()))
+        .collect();
+    let (out, metrics) = engine.serve(reqs);
+    let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..24).collect::<Vec<u64>>());
+    assert_eq!(metrics.total_requests, 24);
+}

@@ -54,7 +54,11 @@ fn serve_fingerprint(model: Model, threads: usize) -> (Fingerprint, eac_moe::ser
     let e = Engine::new(
         model,
         EngineConfig {
-            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
             workers: 2,
             prune: PrunePolicy::None,
             threads: Some(threads),
@@ -124,7 +128,11 @@ fn budgeted_serving_composes_with_pesf_decode() {
         let e = Engine::new(
             model,
             EngineConfig {
-                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+                batch: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(100),
+                    ..Default::default()
+                },
                 workers: 1,
                 prune,
                 threads: Some(2),

@@ -16,8 +16,9 @@ use std::time::Duration;
 /// serving, so every assertion in this suite doubles as a
 /// miss/evict/reload exercise of the store.
 fn maybe_tiered(m: Model) -> Model {
-    let Ok(mb) = std::env::var("EAC_MOE_EXPERT_BUDGET_MB") else { return m };
-    let mb: f64 = mb.parse().expect("EAC_MOE_EXPERT_BUDGET_MB must be a number (MB)");
+    // The accessor panics on a set-but-unparseable value, keeping CI's
+    // tight-budget pass loud about misconfiguration.
+    let Some(mb) = eac_moe::util::env::expert_budget_mb() else { return m };
     static SPILL_ID: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
     let id = SPILL_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let spill = std::env::temp_dir()
@@ -60,7 +61,11 @@ fn large_burst_all_served_exactly_once() {
     let engine = Engine::new(
         model(),
         EngineConfig {
-            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
             workers: 4,
             prune: PrunePolicy::None,
             ..Default::default()
@@ -84,7 +89,11 @@ fn decode_burst_counts_generated_tokens_and_batches() {
     let engine = Engine::new(
         model(),
         EngineConfig {
-            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
             workers: 2,
             prune: PrunePolicy::None,
             ..Default::default()
@@ -113,7 +122,11 @@ fn burst_with_overlong_prompts_served_without_engine_abort() {
     let engine = Engine::new(
         m,
         EngineConfig {
-            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
             workers: 3,
             ..Default::default()
         },
@@ -210,7 +223,11 @@ fn pesf_alpha_zero_decode_bitwise_identical_to_unpruned() {
                 let e = Engine::new(
                     model(),
                     EngineConfig {
-                        batch: BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
+                        batch: BatchPolicy {
+                            max_batch,
+                            max_wait: Duration::from_micros(100),
+                            ..Default::default()
+                        },
                         workers: 1,
                         prune,
                         threads,
@@ -341,7 +358,11 @@ fn mixed_pesf_batch_retires_and_admits_correctly() {
     let engine = Engine::new(
         mdl,
         EngineConfig {
-            batch: BatchPolicy { max_batch: 3, max_wait: Duration::from_micros(100) },
+            batch: BatchPolicy {
+                max_batch: 3,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
             workers: 1,
             prune: PrunePolicy::Pesf(PesfConfig { alpha: 0.9, refresh_every: 2, window: 16 }),
             ..Default::default()

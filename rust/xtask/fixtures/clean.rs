@@ -1,0 +1,45 @@
+//! Lexer torture sheet: every construct here must produce zero findings
+//! (the self-tests lint it at a serve/ rel path so all rules are in
+//! scope). Rule tokens appear only inside comments, strings, raw strings,
+//! and char literals — places the scanner must blank.
+
+pub fn strings_hide_tokens() -> Vec<String> {
+    vec![
+        "unsafe { never scanned }".to_string(),
+        "a.mul_add(b, c)".to_string(),
+        "std::thread::spawn".to_string(),
+        ".unwrap() .expect( panic! unreachable!".to_string(),
+        r#"env::var("EAC_MOE_X")"#.to_string(),
+        "escaped \" quote stays inside the string".to_string(),
+        "two trailing backslashes \\\\".to_string(),
+    ]
+}
+
+/* block comment: unsafe, mul_add, thread::spawn, env::var("EAC_MOE_Y")
+   /* nested block */ still comment: .unwrap() panic! */
+pub fn lifetimes_and_chars<'env>(x: &'env [char]) -> (char, Option<&'env char>) {
+    let quote = '"';
+    let tick = '\'';
+    let backslash = '\\';
+    let newline = '\n';
+    let brace = '{';
+    let _ = (quote, tick, backslash, newline, brace);
+    ('q', x.first())
+}
+
+pub fn byte_literals() -> (&'static [u8], u8, &'static [u8]) {
+    let magic = b"EACM";
+    let nul = b'\0';
+    let raw = br#"bytes "quoted" here"#;
+    (magic, nul, raw)
+}
+
+pub fn multiline_raw() -> &'static str {
+    r#"
+    unsafe { panic!("EAC_MOE_FAKE") } env::var mul_add thread::spawn .unwrap()
+    "#
+}
+
+pub fn locks_are_exempt(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

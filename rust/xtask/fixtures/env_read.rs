@@ -1,0 +1,23 @@
+// Fixture: rule `env-read-site`. EAC_MOE_* configuration is read once
+// through util/env.rs; scattered reads reintroduce the PR 3 mid-run
+// reconfiguration bug.
+
+pub fn bad() -> Option<String> {
+    std::env::var("EAC_MOE_THREADS").ok() // LINT:env-read-site
+}
+
+pub fn bad_split() -> Option<String> {
+    std::env::var( // LINT:env-read-site
+        "EAC_MOE_NO_SIMD",
+    )
+    .ok()
+}
+
+pub fn other_vars_are_fine() -> Option<String> {
+    std::env::var("HOME").ok()
+}
+
+pub fn allowed() -> Option<String> {
+    // xtask-allow: env-read-site — fixture exercises the escape hatch
+    std::env::var("EAC_MOE_FIXTURE").ok()
+}

@@ -1,0 +1,20 @@
+// Fixture: rule `no-fma`. Fused multiply-add rounds once where the pinned
+// kernel DAG rounds twice, so any of these tokens breaks bit-identity.
+
+pub fn bad(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c) // LINT:no-fma
+}
+
+// Comments may name fused multiply-add (mul_add) freely; only code counts.
+pub fn ok(a: f32, b: f32, c: f32) -> f32 {
+    let s = "mul_add in a string is fine";
+    let _ = s;
+    // xtask-allow: no-fma — fixture exercises the escape hatch
+    a.mul_add(b, c)
+}
+
+pub fn region_outside_simd() -> f32 {
+    // xtask-allow-region: no-fma LINT:xtask-marker
+    1.0f32.mul_add(2.0, 3.0) // LINT:no-fma
+    // xtask-end-region: no-fma
+}

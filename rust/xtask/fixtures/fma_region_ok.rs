@@ -1,0 +1,12 @@
+// Fixture: `no-fma` allow-region, linted by the self-tests at the rel
+// path of tensor/simd.rs (the only file allowed to open one).
+
+pub fn pinned_dag_region(a: f32, b: f32, c: f32) -> f32 {
+    // xtask-allow-region: no-fma
+    a.mul_add(b, c)
+    // xtask-end-region: no-fma
+}
+
+pub fn outside_region_stays_clean(a: f32, b: f32) -> f32 {
+    a * b + 1.0
+}

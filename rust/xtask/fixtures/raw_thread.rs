@@ -1,0 +1,27 @@
+// Fixture: rule `no-raw-thread`. Production code must ride the scoped
+// worker pool; raw std::thread escapes the thread budget.
+
+pub fn bad_spawn() {
+    std::thread::spawn(|| {}); // LINT:no-raw-thread
+}
+
+pub fn bad_builder() {
+    let _ = std::thread::Builder::new(); // LINT:no-raw-thread
+}
+
+pub fn bad_scope() {
+    std::thread::scope(|_| {}); // LINT:no-raw-thread
+}
+
+pub fn allowed_scope() {
+    // xtask-allow: no-raw-thread — fixture exercises the escape hatch
+    std::thread::scope(|_| {});
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn threads_in_tests_are_fine() {
+        std::thread::spawn(|| {}).join().unwrap();
+    }
+}

@@ -1,0 +1,45 @@
+// Fixture: rule `serve-no-panic`. Linted by the self-tests at a
+// rust/src/serve/ rel path (in scope) and a rust/src/quant/ rel path
+// (out of scope, expecting zero findings).
+
+use std::sync::Mutex;
+
+pub fn bad_unwrap(v: Option<u32>) -> u32 {
+    v.unwrap() // LINT:serve-no-panic
+}
+
+pub fn bad_expect(v: Option<u32>) -> u32 {
+    v.expect("boom") // LINT:serve-no-panic
+}
+
+pub fn bad_panic() {
+    panic!("down"); // LINT:serve-no-panic
+}
+
+pub fn bad_unreachable(x: u8) -> u8 {
+    match x {
+        0 => 1,
+        _ => unreachable!(), // LINT:serve-no-panic
+    }
+}
+
+pub fn poisoned_lock_is_exempt(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+pub fn chained_lock_is_exempt(m: &Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap().len()
+}
+
+pub fn allowed(v: Option<u32>) -> u32 {
+    // xtask-allow: serve-no-panic — invariant: caller checked is_some()
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(1u32).unwrap(), 1);
+    }
+}

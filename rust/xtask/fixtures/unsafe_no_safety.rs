@@ -1,0 +1,33 @@
+// Fixture: rule `unsafe-safety-comment`. Lines tagged LINT:<rule> in a
+// trailing comment are the findings xtask's self-tests expect.
+
+pub fn bad(out: &mut [f32]) {
+    unsafe { // LINT:unsafe-safety-comment
+        std::ptr::write(out.as_mut_ptr(), 1.0);
+    }
+}
+
+pub fn good(out: &mut [f32]) {
+    // SAFETY: the pointer comes from a live mutable slice.
+    unsafe {
+        std::ptr::write(out.as_mut_ptr(), 2.0);
+    }
+}
+
+// SAFETY: contract — caller passes a pointer to at least one writable f32.
+pub unsafe fn good_fn(p: *mut f32) {
+    *p = 0.0;
+}
+
+/// Doc-style annotation also counts.
+///
+/// # Safety
+/// Caller guarantees `p` is valid for writes.
+pub unsafe fn good_doc_fn(p: *mut f32) {
+    *p = 3.0;
+}
+
+pub fn escape_hatch(out: &mut [f32]) {
+    // xtask-allow: unsafe-safety-comment — fixture exercises the escape hatch
+    unsafe { std::ptr::write(out.as_mut_ptr(), 4.0) }
+}

@@ -1,0 +1,105 @@
+//! `xtask` — repo automation, currently the invariant linter.
+//!
+//! Run from anywhere in the workspace:
+//!
+//! ```text
+//! cargo run -p xtask -- lint            # lint the repo (exit 1 on findings)
+//! cargo run -p xtask -- lint --root P   # lint an explicit checkout
+//! cargo run -p xtask -- rules           # list rule ids + descriptions
+//! ```
+//!
+//! The crate is std-only (like the vendored `anyhow` shim) so it builds
+//! with no registry access. See `rules.rs` for what each invariant
+//! protects and `scan.rs` for how source is tokenized; the README's
+//! "Static analysis & invariants" section is the user-facing summary.
+
+mod rules;
+mod scan;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: cargo run -p xtask -- <command>\n\
+commands:\n  \
+  lint [--root <path>]   lint the source tree against the repo invariants\n  \
+  rules                  list lint rule ids and what they protect";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint_cmd(&args[1..]),
+        Some("rules") => {
+            for (id, desc) in rules::RULES {
+                println!("{id:22} {desc}");
+            }
+            ExitCode::SUCCESS
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint_cmd(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => root = Some(PathBuf::from(p)),
+                    None => {
+                        eprintln!("--root needs a path\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            other => {
+                eprintln!("unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+    let root = root.unwrap_or_else(default_root);
+    match rules::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            ExitCode::from(2)
+        }
+        Ok(report) if report.findings.is_empty() => {
+            println!(
+                "xtask lint: clean ({} files, {} rules)",
+                report.files_checked,
+                rules::RULES.len()
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{}:{}: [{}] {}", f.rel, f.line, f.rule, f.msg);
+            }
+            eprintln!(
+                "xtask lint: {} violation(s) in {} files",
+                report.findings.len(),
+                report.files_checked
+            );
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// The repo root: two levels above this crate's manifest (`rust/xtask`),
+/// falling back to the current directory for a prebuilt binary run
+/// outside cargo.
+fn default_root() -> PathBuf {
+    if let Ok(md) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = PathBuf::from(md);
+        if let Some(r) = p.parent().and_then(|q| q.parent()) {
+            return r.to_path_buf();
+        }
+    }
+    PathBuf::from(".")
+}

@@ -1,0 +1,546 @@
+//! The repo invariants, as mechanical rules.
+//!
+//! Each rule has a machine-readable ID and an inline escape hatch:
+//! a `xtask-allow: <rule-id>` comment on the offending line (or the line
+//! directly above it) suppresses that rule there — always with a short
+//! justification, since the allow marker is the documentation. The
+//! `no-fma` rule additionally honors region markers (`xtask-allow-region:`
+//! … `xtask-end-region:`, id `no-fma`), but only inside
+//! `rust/src/tensor/simd.rs` (the pinned-DAG kernel file); region markers
+//! anywhere else are themselves violations.
+//!
+//! Why each invariant exists:
+//!
+//! - `unsafe-safety-comment` — the unsafe surface (SIMD kernels, the
+//!   lifetime-erased pool queue) is only auditable if every block states
+//!   the precondition that makes it sound.
+//! - `no-fma` — the SIMD contract pins one operation DAG (separate mul
+//!   then add, 8-lane split-sum reduction) so scalar/AVX2/NEON produce
+//!   bit-identical f32 results. A fused multiply-add rounds once instead
+//!   of twice and silently breaks every bit-identity test.
+//! - `no-raw-thread` — compute rides the scoped worker pool in
+//!   `tensor/pool.rs` (bounded threads, panic propagation, helping
+//!   waiters). Ad-hoc `std::thread` spawns escape the thread budget and
+//!   the pool's panic handling.
+//! - `serve-no-panic` — the serve hot path (`serve/`, `model/store.rs`,
+//!   `model/forward.rs`) must degrade by returning errors, not by
+//!   unwinding mid-batch with locks held. Poisoned-lock `unwrap()`s are
+//!   exempt: a poisoned lock means a worker already panicked, and
+//!   propagating that panic is the correct response.
+//! - `env-read-site` — `EAC_MOE_*` configuration is read once through
+//!   `util/env.rs` accessors. Scattered `std::env::var` reads caused the
+//!   PR 3 mid-run reconfiguration bug that the `OnceLock` latch fixed.
+
+use crate::scan::{scan_source, SourceFile};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// (rule id, one-line description) — the lint surface.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "unsafe-safety-comment",
+        "every `unsafe` needs a `SAFETY:` comment on it or directly above",
+    ),
+    (
+        "no-fma",
+        "no fused multiply-add: kernels pin separate mul+add for bit-identity",
+    ),
+    (
+        "no-raw-thread",
+        "no raw std::thread outside tensor/pool.rs: compute rides the pool",
+    ),
+    (
+        "serve-no-panic",
+        "no unwrap/expect/panic in the serve hot path (poisoned locks exempt)",
+    ),
+    (
+        "env-read-site",
+        "EAC_MOE_* env reads only in util/env.rs (config is read once)",
+    ),
+];
+
+/// Meta-rule id for marker misuse (unknown rule in a marker, region marker
+/// outside its allowlisted file, unclosed region).
+pub const META_RULE: &str = "xtask-marker";
+
+/// Files allowed to open an allow-region, per rule.
+const REGION_OK: &[(&str, &str)] = &[("no-fma", "rust/src/tensor/simd.rs")];
+
+/// Directories scanned by `lint_tree`, relative to the repo root.
+const SCAN_ROOTS: &[&str] = &[
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+    "rust/vendor",
+    "rust/xtask/src",
+    "examples",
+];
+
+pub struct Finding {
+    pub rel: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_checked: usize,
+}
+
+fn known_rule(id: &str) -> Option<&'static str> {
+    RULES.iter().map(|(r, _)| *r).find(|r| *r == id)
+}
+
+/// Extract every rule id following an occurrence of `marker` in comment
+/// text. Ids are `[A-Za-z0-9_-]+`; anything else (e.g. a `<rule>`
+/// placeholder in docs) is skipped.
+fn marker_ids(comment: &str, marker: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = comment[from..].find(marker) {
+        let abs = from + p + marker.len();
+        let rest = comment[abs..].trim_start();
+        let end = rest
+            .find(|c: char| !(c.is_ascii_alphanumeric() || c == '-' || c == '_'))
+            .unwrap_or(rest.len());
+        if end > 0 {
+            out.push(rest[..end].to_string());
+        }
+        from = abs;
+    }
+    out
+}
+
+/// Find whole-word occurrences of `word` in `code` (neighbors must not be
+/// identifier characters).
+fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find(word) {
+        let abs = from + p;
+        let before_ok = abs == 0 || !bytes[abs - 1].is_ascii_alphanumeric() && bytes[abs - 1] != b'_';
+        let after = abs + word.len();
+        let after_ok =
+            after >= bytes.len() || !bytes[after].is_ascii_alphanumeric() && bytes[after] != b'_';
+        if before_ok && after_ok {
+            return true;
+        }
+        from = abs + 1;
+    }
+    false
+}
+
+/// Does line `i` carry a SAFETY annotation, either on the line itself or
+/// on a run of comment/attribute/blank lines directly above it?
+fn has_safety(sf: &SourceFile, i: usize) -> bool {
+    let marked = |c: &str| c.contains("SAFETY:") || c.contains("# Safety");
+    if marked(&sf.lines[i].comment) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &sf.lines[j];
+        if marked(&l.comment) {
+            return true;
+        }
+        let code = l.code.trim();
+        if !(code.is_empty() || code.starts_with("#[") || code.starts_with("#!")) {
+            return false;
+        }
+    }
+    false
+}
+
+/// Is the `.unwrap()` whose `.` sits at byte `dot` in `code` hanging off a
+/// `lock(…)` / `wait(…)` / `wait_timeout(…)` call? Those unwraps only fire
+/// on lock poisoning — i.e. a worker already panicked — and are exempt
+/// from `serve-no-panic`. The receiver call must close on the same line;
+/// anything else is conservatively a violation.
+fn is_poison_unwrap(code: &str, dot: usize) -> bool {
+    let b: Vec<char> = code[..dot].chars().collect();
+    let mut i = b.len();
+    if i == 0 || b[i - 1] != ')' {
+        return false;
+    }
+    let mut depth = 0i32;
+    while i > 0 {
+        i -= 1;
+        match b[i] {
+            ')' => depth += 1,
+            '(' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        return false;
+    }
+    let end = i;
+    let mut s = i;
+    while s > 0 && is_ident_char(b[s - 1]) {
+        s -= 1;
+    }
+    let name: String = b[s..end].iter().collect();
+    matches!(name.as_str(), "lock" | "wait" | "wait_timeout")
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn serve_hot_path(rel: &str) -> bool {
+    rel.starts_with("rust/src/serve/")
+        || rel == "rust/src/model/store.rs"
+        || rel == "rust/src/model/forward.rs"
+}
+
+/// Lint one file's source text under the given repo-relative path (the
+/// path decides rule scoping, so tests can replay fixtures at synthetic
+/// locations).
+pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
+    let sf = scan_source(rel, text);
+    let n = sf.lines.len();
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // Pass 1: collect allow markers (inline + regions).
+    let mut allow: HashMap<&'static str, Vec<bool>> =
+        RULES.iter().map(|(id, _)| (*id, vec![false; n])).collect();
+    let mut regions_open: Vec<(&'static str, usize)> = Vec::new();
+    for i in 0..n {
+        let comment = sf.lines[i].comment.clone();
+        for id in marker_ids(&comment, "xtask-allow-region:") {
+            match known_rule(&id) {
+                None => findings.push(Finding {
+                    rel: rel.to_string(),
+                    line: i + 1,
+                    rule: META_RULE,
+                    msg: format!("unknown rule `{id}` in xtask-allow-region marker"),
+                }),
+                Some(rid) => {
+                    if REGION_OK.contains(&(rid, rel)) {
+                        regions_open.push((rid, i));
+                    } else {
+                        findings.push(Finding {
+                            rel: rel.to_string(),
+                            line: i + 1,
+                            rule: META_RULE,
+                            msg: format!("allow-region for `{rid}` is not permitted in {rel}"),
+                        });
+                    }
+                }
+            }
+        }
+        for (rid, _) in &regions_open {
+            allow.get_mut(rid).expect("known rule")[i] = true;
+        }
+        for id in marker_ids(&comment, "xtask-end-region:") {
+            if let Some(rid) = known_rule(&id) {
+                regions_open.retain(|(r, _)| *r != rid);
+            }
+        }
+        for id in marker_ids(&comment, "xtask-allow:") {
+            match known_rule(&id) {
+                None => findings.push(Finding {
+                    rel: rel.to_string(),
+                    line: i + 1,
+                    rule: META_RULE,
+                    msg: format!("unknown rule `{id}` in xtask-allow marker"),
+                }),
+                Some(rid) => {
+                    let v = allow.get_mut(rid).expect("known rule");
+                    v[i] = true;
+                    if i + 1 < n {
+                        v[i + 1] = true;
+                    }
+                }
+            }
+        }
+    }
+    for (rid, start) in regions_open {
+        findings.push(Finding {
+            rel: rel.to_string(),
+            line: start + 1,
+            rule: META_RULE,
+            msg: format!("unclosed xtask-allow-region for `{rid}`"),
+        });
+    }
+
+    // Pass 2: rules. Candidates are filtered through the allow mask.
+    let mut push = |i: usize, rule: &'static str, msg: String| {
+        if !allow[rule][i] {
+            findings.push(Finding { rel: rel.to_string(), line: i + 1, rule, msg });
+        }
+    };
+
+    let in_util_env = rel == "rust/src/util/env.rs";
+    let in_pool = rel == "rust/src/tensor/pool.rs";
+    let hot = serve_hot_path(rel);
+    const FMA_TOKENS: &[&str] = &["mul_add", "fmadd", "vfma", "fmla"];
+    const THREAD_TOKENS: &[&str] = &["thread::spawn", "thread::scope", "thread::Builder"];
+    const PANIC_TOKENS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+    for i in 0..n {
+        let code = &sf.lines[i].code;
+        let test = sf.is_test[i];
+
+        // Rule 1: unsafe-safety-comment (everywhere, tests included —
+        // unsafe in tests needs the same audit trail).
+        if contains_word(code, "unsafe") && !has_safety(&sf, i) {
+            push(
+                i,
+                "unsafe-safety-comment",
+                "`unsafe` without an immediately preceding SAFETY comment".to_string(),
+            );
+        }
+
+        // Rule 2: no-fma (everywhere — FMA breaks bit-identity in tests
+        // exactly as much as in kernels).
+        for tok in FMA_TOKENS {
+            if code.contains(tok) {
+                push(i, "no-fma", format!("fused multiply-add token `{tok}`"));
+                break;
+            }
+        }
+
+        // Rule 3: no-raw-thread (production code outside the pool).
+        if !test && !in_pool {
+            for tok in THREAD_TOKENS {
+                if code.contains(tok) {
+                    push(
+                        i,
+                        "no-raw-thread",
+                        format!("raw `{tok}` outside tensor/pool.rs"),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // Rule 4: serve-no-panic (hot-path files, non-test lines).
+        if hot && !test {
+            for tok in PANIC_TOKENS {
+                if code.contains(tok) {
+                    push(i, "serve-no-panic", format!("`{tok}` in the serve hot path"));
+                    break;
+                }
+            }
+            if code.contains(".expect(") {
+                push(i, "serve-no-panic", "`.expect(…)` in the serve hot path".to_string());
+            }
+            let mut from = 0usize;
+            while let Some(p) = code[from..].find(".unwrap()") {
+                let abs = from + p;
+                from = abs + 1;
+                if !is_poison_unwrap(code, abs) {
+                    push(
+                        i,
+                        "serve-no-panic",
+                        "`.unwrap()` in the serve hot path (not a poisoned-lock unwrap)"
+                            .to_string(),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // Rule 5: env-read-site. The EAC_MOE_ prefix lives inside a string
+        // literal, so it is matched against the raw line (plus a short
+        // lookahead for calls split across lines).
+        if !in_util_env && code.contains("env::var") {
+            let mut window = sf.lines[i].raw.clone();
+            for l in sf.lines.iter().take(n.min(i + 3)).skip(i + 1) {
+                window.push_str(&l.raw);
+            }
+            if window.contains("EAC_MOE_") {
+                push(
+                    i,
+                    "env-read-site",
+                    "EAC_MOE_* env read outside util/env.rs".to_string(),
+                );
+            }
+        }
+    }
+    findings
+}
+
+fn collect_rs(root: &Path, rel_dir: &str, out: &mut Vec<(String, PathBuf)>) {
+    let dir = root.join(rel_dir);
+    let Ok(rd) = std::fs::read_dir(&dir) else {
+        return;
+    };
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            // `fixtures` holds deliberate violations; `target` is build output.
+            if name == "target" || name == "fixtures" || name == ".git" {
+                continue;
+            }
+            collect_rs(root, &format!("{rel_dir}/{name}"), out);
+        } else if name.ends_with(".rs") {
+            out.push((format!("{rel_dir}/{name}"), path));
+        }
+    }
+}
+
+/// Lint every `.rs` file under the scan roots of the repo at `root`.
+pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
+    if !root.join("rust/src").is_dir() {
+        return Err(format!(
+            "{} does not look like the repo root (missing rust/src); pass --root",
+            root.display()
+        ));
+    }
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    for r in SCAN_ROOTS {
+        collect_rs(root, r, &mut files);
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    let files_checked = files.len();
+    for (rel, path) in files {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        findings.extend(lint_source(&rel, &text));
+    }
+    Ok(LintReport { findings, files_checked })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+    }
+
+    /// Fixtures self-describe their expected findings: a line whose
+    /// comment contains `LINT:<rule-id>` must produce exactly that
+    /// finding. Returns sorted (line, rule) pairs.
+    fn expected_markers(text: &str) -> Vec<(usize, String)> {
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let mut from = 0usize;
+            while let Some(p) = line[from..].find("LINT:") {
+                let abs = from + p + "LINT:".len();
+                let rest = &line[abs..];
+                let end = rest
+                    .find(|c: char| !(c.is_ascii_alphanumeric() || c == '-' || c == '_'))
+                    .unwrap_or(rest.len());
+                if end > 0 {
+                    out.push((i + 1, rest[..end].to_string()));
+                }
+                from = abs;
+            }
+        }
+        out.sort();
+        out
+    }
+
+    fn check_fixture(rel: &str, name: &str) {
+        let text = fixture(name);
+        let expected = expected_markers(&text);
+        let mut got: Vec<(usize, String)> = lint_source(rel, &text)
+            .into_iter()
+            .map(|f| (f.line, f.rule.to_string()))
+            .collect();
+        got.sort();
+        assert_eq!(got, expected, "fixture {name} linted at {rel}");
+    }
+
+    #[test]
+    fn fixture_unsafe_requires_safety_comment() {
+        check_fixture("rust/src/tensor/fixture.rs", "unsafe_no_safety.rs");
+    }
+
+    #[test]
+    fn fixture_fma_is_rejected_and_region_gated() {
+        check_fixture("rust/src/tensor/fixture.rs", "fma.rs");
+    }
+
+    #[test]
+    fn fixture_raw_threads_are_rejected_outside_pool() {
+        check_fixture("rust/src/serve/fixture.rs", "raw_thread.rs");
+        // The same source inside the pool file is fine (minus its own
+        // expectations, which assume a non-pool path), so just check the
+        // rule scoping directly:
+        let got = lint_source("rust/src/tensor/pool.rs", &fixture("raw_thread.rs"));
+        assert!(got.iter().all(|f| f.rule != "no-raw-thread"));
+    }
+
+    #[test]
+    fn fixture_serve_panics_are_rejected_in_scope_only() {
+        check_fixture("rust/src/serve/fixture.rs", "serve_panic.rs");
+        // Outside the hot path the same file is clean.
+        let got = lint_source("rust/src/quant/fixture.rs", &fixture("serve_panic.rs"));
+        assert!(got.is_empty(), "serve-no-panic leaked out of scope: {:?}", dump(&got));
+    }
+
+    #[test]
+    fn fixture_env_reads_are_confined() {
+        check_fixture("rust/src/report/fixture.rs", "env_read.rs");
+        let got = lint_source("rust/src/util/env.rs", &fixture("env_read.rs"));
+        assert!(got.is_empty(), "env-read-site flagged util/env.rs: {:?}", dump(&got));
+    }
+
+    #[test]
+    fn fixture_clean_file_has_no_findings() {
+        // Linted at a hot-path rel so every rule is in scope.
+        let got = lint_source("rust/src/serve/clean.rs", &fixture("clean.rs"));
+        assert!(got.is_empty(), "clean fixture tripped rules: {:?}", dump(&got));
+    }
+
+    #[test]
+    fn fixture_fma_region_is_honored_in_simd_only() {
+        // The same region-marked source is clean inside the pinned-DAG
+        // kernel file…
+        let got = lint_source("rust/src/tensor/simd.rs", &fixture("fma_region_ok.rs"));
+        assert!(got.is_empty(), "authorized region still flagged: {:?}", dump(&got));
+    }
+
+    #[test]
+    fn unclosed_region_is_flagged() {
+        let src = "// xtask-allow-region: no-fma\npub fn f() {}\n";
+        let got = lint_source("rust/src/tensor/simd.rs", src);
+        assert_eq!(got.len(), 1, "{:?}", dump(&got));
+        assert_eq!(got[0].rule, META_RULE);
+        assert_eq!(got[0].line, 1);
+    }
+
+    #[test]
+    fn unknown_rule_in_marker_is_flagged() {
+        let src = "// xtask-allow: not-a-rule\npub fn f() {}\n";
+        let got = lint_source("rust/src/quant/x.rs", src);
+        assert_eq!(got.len(), 1, "{:?}", dump(&got));
+        assert_eq!(got[0].rule, META_RULE);
+    }
+
+    #[test]
+    fn real_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .and_then(Path::parent)
+            .expect("xtask sits two levels under the repo root");
+        let report = lint_tree(root).expect("lint tree");
+        assert!(report.files_checked > 20, "scan roots missing files");
+        assert!(
+            report.findings.is_empty(),
+            "tree has violations:\n{}",
+            dump(&report.findings).join("\n")
+        );
+    }
+
+    fn dump(fs: &[Finding]) -> Vec<String> {
+        fs.iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.rel, f.line, f.rule, f.msg))
+            .collect()
+    }
+}

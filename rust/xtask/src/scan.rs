@@ -1,0 +1,347 @@
+//! Minimal Rust-aware source scanner for the invariant linter.
+//!
+//! For every line of a source file it produces three views:
+//!
+//! - `code`: the line with comments removed and the *contents* of string /
+//!   char literals blanked (the delimiters remain, so `"..."` scans as
+//!   `""`). Rule tokens are matched against this view only, which is what
+//!   makes the rules reliable: `unsafe` in a doc comment, `mul_add` in an
+//!   error-message string, or a quoted `env::var("EAC_MOE_X")` example can
+//!   never trip a rule.
+//! - `comment`: the concatenated comment text of the line (without the
+//!   `//` / `/* */` markers). Escape-hatch markers (`xtask-allow: <rule>`)
+//!   and `SAFETY:` annotations are read from this view only, so quoting a
+//!   marker inside a string cannot disable a rule.
+//! - `raw`: the original line, used only where a rule needs literal string
+//!   contents (the `EAC_MOE_` prefix of an env read).
+//!
+//! This is deliberately not a full lexer — just enough of one: nested
+//! block comments, escaped strings, raw strings (`r"…"`, `r#"…"#`, byte
+//! variants), char literals vs. lifetimes (`'a'` vs `'env`), multi-line
+//! literals. The `fixtures/clean.rs` self-test is the torture sheet.
+
+/// One scanned source line.
+pub struct Line {
+    pub raw: String,
+    pub code: String,
+    pub comment: String,
+}
+
+/// A scanned file: lines plus a per-line "is this test code?" mask.
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<Line>,
+    pub is_test: Vec<bool>,
+}
+
+pub fn scan_source(rel: &str, text: &str) -> SourceFile {
+    let lines = lex(text);
+    let is_test = mark_test_regions(&lines, rel);
+    SourceFile { rel: rel.to_string(), lines, is_test }
+}
+
+enum Mode {
+    Code,
+    LineComment,
+    /// Nesting depth (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Number of `#` marks that close this raw string.
+    RawStr(u32),
+    CharLit,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `true` if `ch[j..]` starts with `hashes` copies of `#` (the tail of a
+/// raw-string terminator whose `"` the caller already matched).
+fn ends_raw(ch: &[char], j: usize, hashes: u32) -> bool {
+    let h = hashes as usize;
+    j + h <= ch.len() && ch[j..j + h].iter().all(|&c| c == '#')
+}
+
+/// If `ch[i..]` opens a raw/byte string or byte-char literal (`r"`,
+/// `r#"`, `br"`, `b"`, `b'`), return (chars consumed through the opening
+/// delimiter, mode to enter).
+fn raw_or_byte_open(ch: &[char], i: usize) -> Option<(usize, Mode)> {
+    let mut j = i;
+    if ch[j] == 'b' {
+        match ch.get(j + 1) {
+            Some('"') => return Some((2, Mode::Str)),
+            Some('\'') => return Some((2, Mode::CharLit)),
+            Some('r') => j += 1,
+            _ => return None,
+        }
+    }
+    if ch[j] != 'r' {
+        return None;
+    }
+    let mut hashes = 0u32;
+    let mut k = j + 1;
+    while ch.get(k) == Some(&'#') {
+        hashes += 1;
+        k += 1;
+    }
+    if ch.get(k) == Some(&'"') {
+        Some((k + 1 - i, Mode::RawStr(hashes)))
+    } else {
+        None
+    }
+}
+
+fn lex(text: &str) -> Vec<Line> {
+    let ch: Vec<char> = text.chars().collect();
+    let n = ch.len();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut raw = String::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = ch[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            lines.push(Line {
+                raw: std::mem::take(&mut raw),
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        raw.push(c);
+        match mode {
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '*' && ch.get(i + 1) == Some(&'/') {
+                    raw.push('/');
+                    i += 2;
+                    if depth == 1 {
+                        mode = Mode::Code;
+                        code.push(' ');
+                    } else {
+                        mode = Mode::BlockComment(depth - 1);
+                    }
+                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                    raw.push('*');
+                    comment.push(' ');
+                    i += 2;
+                    mode = Mode::BlockComment(depth + 1);
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str | Mode::CharLit => {
+                let closer = if matches!(mode, Mode::Str) { '"' } else { '\'' };
+                if c == '\\' {
+                    // Consume the escape pair (keeps \" and \' from
+                    // closing the literal). A backslash-newline
+                    // continuation leaves the newline for the line loop.
+                    if let Some(&e) = ch.get(i + 1) {
+                        if e != '\n' {
+                            raw.push(e);
+                            i += 2;
+                            continue;
+                        }
+                    }
+                    i += 1;
+                } else if c == closer {
+                    code.push(closer);
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && ends_raw(&ch, i + 1, hashes) {
+                    for _ in 0..hashes {
+                        raw.push('#');
+                    }
+                    code.push('"');
+                    i += 1 + hashes as usize;
+                    mode = Mode::Code;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                let next = ch.get(i + 1).copied();
+                let prev_is_ident = code.chars().last().map(is_ident).unwrap_or(false);
+                if c == '/' && next == Some('/') {
+                    raw.push('/');
+                    code.push(' ');
+                    i += 2;
+                    mode = Mode::LineComment;
+                } else if c == '/' && next == Some('*') {
+                    raw.push('*');
+                    code.push(' ');
+                    i += 2;
+                    mode = Mode::BlockComment(1);
+                } else if c == '"' {
+                    code.push('"');
+                    i += 1;
+                    mode = Mode::Str;
+                } else if !prev_is_ident && (c == 'r' || c == 'b') {
+                    match raw_or_byte_open(&ch, i) {
+                        Some((consumed, m)) => {
+                            for k in 1..consumed {
+                                raw.push(ch[i + k]);
+                            }
+                            code.push(if matches!(m, Mode::CharLit) { '\'' } else { '"' });
+                            i += consumed;
+                            mode = m;
+                        }
+                        None => {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == '\'' {
+                    match next {
+                        // Escaped char literal: '\n', '\'', '\\', '\u{…}'.
+                        Some('\\') => {
+                            code.push('\'');
+                            i += 1;
+                            mode = Mode::CharLit;
+                        }
+                        // Plain one-char literal 'x' (consume it whole so
+                        // a quote or brace inside never reaches Code mode).
+                        Some(x) if x != '\'' && ch.get(i + 2) == Some(&'\'') => {
+                            raw.push(x);
+                            raw.push('\'');
+                            code.push('\'');
+                            code.push('\'');
+                            i += 3;
+                        }
+                        // Otherwise a lifetime / loop label tick.
+                        _ => {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    // Blank non-ASCII so byte-offset searches over `code`
+                    // can never land mid-codepoint.
+                    code.push(if c.is_ascii() { c } else { '_' });
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !raw.is_empty() || !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { raw, code, comment });
+    }
+    lines
+}
+
+/// Mark lines inside `#[cfg(test)]` items (and whole files under
+/// `rust/tests/`) as test code. Tracking is brace-based: the attribute
+/// arms a pending flag, the next `{` opens the region, and the matching
+/// `}` closes it. `mod tests;` (out-of-line test modules) is not handled
+/// — this repo keeps test modules inline.
+fn mark_test_regions(lines: &[Line], rel: &str) -> Vec<bool> {
+    if rel.starts_with("rust/tests/") {
+        return vec![true; lines.len()];
+    }
+    let mut out = vec![false; lines.len()];
+    let mut depth = 0usize;
+    let mut pending = false;
+    let mut region: Option<usize> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        if region.is_none() && line.code.contains("#[cfg(test)") {
+            pending = true;
+        }
+        if pending || region.is_some() {
+            out[idx] = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending && region.is_none() {
+                        region = Some(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if region == Some(depth) {
+                        region = None;
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                _ => {}
+            }
+        }
+        if region.is_some() {
+            out[idx] = true;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        lex(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let t = "let s = \"unsafe { }\"; // trailing unsafe\nlet c = 'x';";
+        let code = code_of(t);
+        assert!(!code[0].contains("unsafe"));
+        assert!(code[0].contains("let s = \"\";"));
+        assert_eq!(code[1], "let c = '';");
+        let lines = lex(t);
+        assert!(lines[0].comment.contains("trailing unsafe"));
+    }
+
+    #[test]
+    fn raw_strings_span_lines() {
+        let t = "let s = r#\"line1\nunsafe mul_add\n\"#; let x = 1;";
+        let code = code_of(t);
+        assert_eq!(code[0], "let s = r\"");
+        assert_eq!(code[1], "");
+        assert_eq!(code[2], "\"; let x = 1;");
+    }
+
+    #[test]
+    fn char_literal_with_quote_does_not_open_string() {
+        let t = "let q = '\"';\nlet tick = '\\'';\nlet bs = '\\\\';\nlet lt: &'static str = \"ok\";";
+        let code = code_of(t);
+        assert_eq!(code[0], "let q = '';");
+        assert_eq!(code[1], "let tick = '';");
+        assert_eq!(code[2], "let bs = '';");
+        assert!(code[3].contains("&'static str"));
+        assert!(code[3].ends_with("\"\";"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let t = "/* outer /* inner */ still comment */ let x = 1;";
+        let code = code_of(t);
+        assert!(code[0].contains("let x = 1;"));
+        assert!(!code[0].contains("inner"));
+    }
+
+    #[test]
+    fn test_regions_are_marked() {
+        let t = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn prod2() {}";
+        let sf = scan_source("rust/src/x.rs", t);
+        assert_eq!(sf.is_test, vec![false, true, true, true, true, false]);
+        let tf = scan_source("rust/tests/x.rs", "fn a() {}");
+        assert!(tf.is_test[0]);
+    }
+}
