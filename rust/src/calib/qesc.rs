@@ -131,11 +131,20 @@ pub fn qesc_compress(model: &Model, calib: &[Vec<u32>], cfg: &QescConfig) -> (Mo
             ..Default::default()
         };
         model.forward_with_hooks(seq, &h);
-        let captured = h.capture_router_logits.unwrap().into_inner();
-        for (li, m) in captured.into_iter().enumerate() {
-            append_rows(&mut fp_logits[li], &m.unwrap());
+        // Both hooks were installed just above; a None here would mean the
+        // forward pass dropped a capture cell.
+        debug_assert!(
+            h.capture_router_logits.is_some() && h.record_selections.is_some(),
+            "hooks installed above"
+        );
+        let Some(cells) = h.capture_router_logits else { continue };
+        for (li, m) in cells.into_inner().into_iter().enumerate() {
+            debug_assert!(m.is_some(), "layer {li} router logits captured");
+            let Some(m) = m else { continue };
+            append_rows(&mut fp_logits[li], &m);
         }
-        let rec = h.record_selections.unwrap().into_inner();
+        let Some(rec_cell) = h.record_selections else { continue };
+        let rec = rec_cell.into_inner();
         for li in 0..n_layers {
             fp_record.layers[li].extend(rec.layers[li].iter().cloned());
         }
@@ -301,6 +310,7 @@ fn quantize_expert(
 /// layer `li` (top-k of the current router on the given activations).
 fn route_tokens(model: &Model, moe_x: &Mat, li: usize) -> Vec<Vec<usize>> {
     let mcfg = model.cfg();
+    debug_assert!(li < model.weights.layers.len(), "layer {li} out of {}", model.weights.layers.len());
     let logits = crate::tensor::matmul(moe_x, &model.weights.layers[li].router);
     let mut routed: Vec<Vec<usize>> = vec![Vec::new(); mcfg.n_experts];
     for t in 0..logits.rows {
@@ -325,9 +335,30 @@ fn capture_layer_inputs(
     for seq in calib {
         let h = Hooks::capturing(n_layers);
         model.forward_with_hooks(seq, &h);
-        append_rows(&mut mhsa, h.capture_mhsa_inputs.as_ref().unwrap().borrow()[li].as_ref().unwrap());
-        append_rows(&mut wo, h.capture_wo_inputs.as_ref().unwrap().borrow()[li].as_ref().unwrap());
-        append_rows(&mut moe, h.capture_moe_inputs.as_ref().unwrap().borrow()[li].as_ref().unwrap());
+        // `Hooks::capturing` installs all three capture cells and the
+        // forward pass fills every layer slot; a miss here is a hook bug.
+        debug_assert!(
+            h.capture_mhsa_inputs.is_some()
+                && h.capture_wo_inputs.is_some()
+                && h.capture_moe_inputs.is_some(),
+            "capturing hooks installed above"
+        );
+        let (Some(mh), Some(woh), Some(moeh)) =
+            (&h.capture_mhsa_inputs, &h.capture_wo_inputs, &h.capture_moe_inputs)
+        else {
+            continue;
+        };
+        debug_assert!(
+            mh.borrow()[li].is_some() && woh.borrow()[li].is_some() && moeh.borrow()[li].is_some(),
+            "layer {li} activations captured"
+        );
+        if let (Some(a), Some(b), Some(c)) =
+            (&mh.borrow()[li], &woh.borrow()[li], &moeh.borrow()[li])
+        {
+            append_rows(&mut mhsa, a);
+            append_rows(&mut wo, b);
+            append_rows(&mut moe, c);
+        }
     }
     (mhsa, wo, moe)
 }

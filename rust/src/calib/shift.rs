@@ -104,7 +104,10 @@ pub fn shift_rank_analysis(fp_logits: &Mat, q_logits: &Mat, k: usize) -> Vec<Shi
         // Shifted experts: in fp_top but not q_top. Record their q-rank.
         for &e in &fp_top {
             if !q_top.contains(&e) {
-                let rank = q_order.iter().position(|&x| x == e).unwrap();
+                // `q_order` is a full ranking over all n experts, so every
+                // fp-selected expert appears somewhere in it.
+                debug_assert!(q_order.contains(&e), "expert {e} missing from full ranking");
+                let Some(rank) = q_order.iter().position(|&x| x == e) else { continue };
                 shifted_at_rank[rank] += 1;
                 total_shifted += 1;
             }

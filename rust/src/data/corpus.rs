@@ -127,6 +127,7 @@ impl CorpusGen {
         let family_base = SHARED_TOKENS + spec.family.index() * FAMILY_SPAN;
         let mut centers: Vec<usize> =
             (0..N_STATES).map(|_| family_rng.below_usize(FAMILY_SPAN)).collect();
+        debug_assert!(centers.len() == N_STATES);
         // ... with a small dataset-specific twist (2 of 12 states move).
         let mut ds_rng = Pcg64::new(9100 + f * 97 + spec.variant, 2);
         for _ in 0..2 {
@@ -160,6 +161,10 @@ impl CorpusGen {
 
     /// Next token.
     pub fn next_token(&mut self) -> u32 {
+        debug_assert!(
+            self.state < N_STATES && self.trans.len() == N_STATES * N_STATES,
+            "corpus chain state out of range"
+        );
         // Transition.
         let row = &self.trans[self.state * N_STATES..(self.state + 1) * N_STATES];
         self.state = self.rng.sample_weighted(row);

@@ -55,11 +55,15 @@ fn build_task(
     // task (the paper's task/expert coupling). Within-family negatives are
     // statistically near-ties by construction (the emission distributions
     // overlap), so they carry no usable signal and are not used.
-    let foreign: Vec<&DatasetSpec> = crate::data::corpus::TaskFamily::ALL
+    let foreign: Vec<&DatasetSpec> = TaskFamily::ALL
         .iter()
         .filter(|f| **f != primary.family)
-        .map(|f| DATASETS.iter().find(|d| d.family == *f).unwrap())
+        .filter_map(|f| DATASETS.iter().find(|d| d.family == *f))
         .collect();
+    debug_assert!(
+        foreign.len() == TaskFamily::ALL.len() - 1,
+        "every task family must have at least one dataset"
+    );
     for i in 0..n_items {
         let mut g = CorpusGen::new(primary, seed * 1000 + i as u64);
         let context = g.sequence(ctx_len);
@@ -78,9 +82,16 @@ fn build_task(
     ZeroShotTask { name, family: primary.family, items }
 }
 
+/// Dataset lookup for the static suite tables: every name below is a
+/// literal present in [`DATASETS`], so a miss is a programmer error —
+/// debug-asserted, with the first dataset as the release-mode fallback.
+fn d(n: &str) -> &'static DatasetSpec {
+    debug_assert!(dataset(n).is_some(), "unknown dataset {n}");
+    dataset(n).unwrap_or(&DATASETS[0])
+}
+
 /// The 8 zero-shot tasks of Table 2/3 (names mirror the paper's suite).
 pub fn zero_shot_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
-    let d = |n: &str| dataset(n).unwrap();
     vec![
         build_task("winogrande", d("winogrande"), n_items, 24, 8, seed + 1),
         build_task("piqa", d("piqa"), n_items, 24, 8, seed + 2),
@@ -96,7 +107,6 @@ pub fn zero_shot_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
 /// The "challenging tasks" of Appendix A.2: longer dependency chains,
 /// content-token heavy (GSM8K / HumanEval roles).
 pub fn challenging_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
-    let d = |n: &str| dataset(n).unwrap();
     vec![
         build_task("gsm8k", d("gsm8k"), n_items, 48, 16, seed + 11),
         build_task("humaneval", d("humaneval"), n_items, 48, 16, seed + 12),
@@ -106,7 +116,6 @@ pub fn challenging_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
 /// Per-family probe tasks for the Table-9 overfitting experiment:
 /// (hellaswag: QA/CR, mathqa: Math, lambada-fr: French, conala: Code).
 pub fn table9_suite(n_items: usize, seed: u64) -> Vec<ZeroShotTask> {
-    let d = |n: &str| dataset(n).unwrap();
     vec![
         build_task("hellaswag", d("hellaswag"), n_items, 24, 8, seed + 21),
         build_task("mathqa", d("mathqa"), n_items, 24, 8, seed + 22),

@@ -33,7 +33,10 @@ pub fn es_frequencies(
         let seq = gen.sequence(seq_len);
         model.forward_with_hooks(&seq, &hooks);
     }
-    let rec = hooks.take_selections().unwrap();
+    // `Hooks::recording` installed the selection cell above; the empty
+    // fallback record only triggers if that contract breaks.
+    let rec = hooks.take_selections().unwrap_or_default();
+    debug_assert!(!rec.layers.is_empty(), "recording hooks captured selections");
     EsProfile {
         dataset: spec.name.to_string(),
         family: spec.family.name(),

@@ -60,6 +60,13 @@
 //! budget; `serve --expert-budget-mb` bounds expert memory end to end.
 //! See [`model::store`] for the design.
 
+// Every unsafe operation inside an unsafe fn still needs its own unsafe
+// block (and SAFETY comment) — the fn signature alone is not a license.
+#![deny(unsafe_op_in_unsafe_fn)]
+// Items marked `pub` that are not actually reachable from outside the
+// crate should say `pub(crate)` so the public API surface stays honest.
+#![warn(unreachable_pub)]
+
 pub mod calib;
 pub mod coordinator;
 pub mod data;

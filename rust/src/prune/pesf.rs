@@ -257,7 +257,7 @@ impl PesfDecodeState {
         }
         self.window.push_back(token);
         while self.window.len() > self.cfg.window.max(1) {
-            let old = self.window.pop_front().unwrap();
+            let Some(old) = self.window.pop_front() else { break };
             for (li, experts) in old.iter().enumerate() {
                 for &e in experts {
                     self.counts[li][e as usize] -= 1;

@@ -132,6 +132,10 @@ fn pmq_allocate(
     freq: &[Vec<f32>],
     avg_bits: f64,
 ) -> Vec<Vec<u32>> {
+    debug_assert!(
+        freq.len() == n_layers && freq.iter().all(|r| r.len() == n_experts),
+        "frequency table shape must be n_layers x n_experts"
+    );
     let base = 2u32;
     let max_bits = 8u32;
     let total_budget = (avg_bits * (n_layers * n_experts) as f64).round() as i64;
@@ -164,7 +168,7 @@ fn pmq_allocate(
 /// Ordered f64 wrapper for use in a BinaryHeap (NaN-free inputs only).
 mod ordered {
     #[derive(PartialEq, PartialOrd)]
-    pub struct F64(pub f64);
+    pub(super) struct F64(pub(super) f64);
     impl Eq for F64 {}
     #[allow(clippy::derive_ord_xor_partial_ord)]
     impl Ord for F64 {
@@ -174,32 +178,46 @@ mod ordered {
     }
 }
 
+/// Parameter counts that [`model_average_bits`] accounts over, decoupled
+/// from `model::ModelConfig` so `quant` stays below `model` in the module
+/// layering (`ModelConfig::bit_dims()` builds one).
+#[derive(Clone, Copy, Debug)]
+pub struct BitDims {
+    pub n_layers: usize,
+    /// Parameters per (routed or shared) expert.
+    pub expert_params: usize,
+    /// Total MHSA parameters across all layers.
+    pub mhsa_params: usize,
+    /// Total router parameters across all layers.
+    pub router_params: usize,
+}
+
 /// Average-bit accounting for a whole model under a given expert allocation
 /// (Appendix A.5 / Table 12): MHSA at `mhsa_bits`, router at fp16,
 /// experts per `alloc`, group-overhead included.
 pub fn model_average_bits(
-    cfg: &crate::model::ModelConfig,
+    dims: &BitDims,
     alloc: &BitAlloc,
     mhsa_bits: u32,
     group_size: usize,
 ) -> f64 {
-    let expert_params = 3 * cfg.d_model * cfg.d_ff;
+    let expert_params = dims.expert_params;
     let overhead = 40.0 / group_size as f64; // f32 scale + u8 zero per group
     let mut bit_sum = 0f64;
     let mut param_sum = 0f64;
     // Experts.
-    for l in 0..cfg.n_layers {
+    for l in 0..dims.n_layers {
         for &b in alloc.bits[l].iter().chain(&alloc.shared_bits[l]) {
             bit_sum += (b as f64 + overhead) * expert_params as f64;
             param_sum += expert_params as f64;
         }
     }
     // MHSA.
-    let mhsa = cfg.mhsa_param_count() as f64;
+    let mhsa = dims.mhsa_params as f64;
     bit_sum += (mhsa_bits as f64 + overhead) * mhsa;
     param_sum += mhsa;
     // Router stays fp16.
-    let router = cfg.router_param_count() as f64;
+    let router = dims.router_params as f64;
     bit_sum += 16.0 * router;
     param_sum += router;
     bit_sum / param_sum
@@ -280,7 +298,7 @@ mod tests {
                     cfg.n_shared,
                     &flat_freq(cfg.n_layers, cfg.n_experts),
                 );
-                let avg = model_average_bits(&cfg, &a, 4, 128);
+                let avg = model_average_bits(&cfg.bit_dims(), &a, 4, 128);
                 // Minis have a higher MHSA fraction than the real models, so
                 // allow a looser band than the paper's ±0.01.
                 assert!(
@@ -295,7 +313,7 @@ mod tests {
                 cfg.n_shared,
                 &flat_freq(cfg.n_layers, cfg.n_experts),
             );
-            let avg = model_average_bits(&cfg, &half, 4, 128);
+            let avg = model_average_bits(&cfg.bit_dims(), &half, 4, 128);
             assert!((avg - 2.54).abs() < 0.45, "{}: 2.5-bit avg={avg:.3}", cfg.name);
         }
     }

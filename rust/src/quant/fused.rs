@@ -78,6 +78,7 @@ fn unpack_tile(w: &PackedMat, kb: usize, kc: usize, colbuf: &mut [f32], strip: &
     let n = w.cols;
     let bits = w.cfg.bits as usize;
     let cb = PackedMat::col_bytes(w.rows, w.cfg.bits);
+    debug_assert!(kb % 8 == 0 && w.packed.len() == cb * n, "unaligned or short packed tile");
     let g = if w.cfg.group_size == 0 { w.rows } else { w.cfg.group_size };
     // Tile start is byte-aligned because kb % 8 == 0.
     let b0 = kb * bits / 8;

@@ -78,6 +78,7 @@ fn cholesky(a: &Mat) -> Option<Mat> {
 
 /// Invert an SPD matrix via its Cholesky factor.
 fn spd_inverse(a: &Mat) -> Option<Mat> {
+    debug_assert!(a.rows == a.cols, "spd_inverse needs a square matrix");
     let n = a.rows;
     let l = cholesky(a)?;
     // Solve L y = e_i, then Lᵀ x = y, column by column.
@@ -144,8 +145,12 @@ pub fn gptq_quantize_mat(w: &Mat, hess: &Hessian, cfg: GptqConfig) -> GroupQuant
     // the diagonal d_j = U[j,j] and the row U[j, j+1..] such that the error
     // propagation w[j+1..] -= (w_j - q_j)/U[j,j] * U[j, j+1..] minimizes the
     // quadratic proxy. This matches torch.linalg.cholesky(Hinv, upper=True).
-    let hinv = spd_inverse(&h).expect("damped Hessian must be SPD");
-    let u = cholesky_upper(&hinv).expect("Hinv must be SPD");
+    // Damping makes H SPD in exact arithmetic; if float pathology still
+    // defeats the factorization, quantize this matrix plain-RTN instead of
+    // unwinding mid-calibration (RTN is GPTQ's no-compensation baseline).
+    let Some(u) = spd_inverse(&h).and_then(|hinv| cholesky_upper(&hinv)) else {
+        return GroupQuant::quantize(w, qcfg);
+    };
 
     let mut work = w.clone(); // compensated weights, mutated in place
     let mut codes = vec![0u8; d * n];

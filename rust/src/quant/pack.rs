@@ -34,6 +34,7 @@ impl PackedMat {
 
     /// Pack a [`GroupQuant`] into sub-byte storage.
     pub fn pack(gq: &GroupQuant) -> PackedMat {
+        debug_assert!(gq.codes.len() == gq.rows * gq.cols, "GroupQuant code buffer shape");
         let bits = gq.cfg.bits as usize;
         let cb = Self::col_bytes(gq.rows, gq.cfg.bits);
         let mut packed = vec![0u8; cb * gq.cols];
@@ -66,6 +67,7 @@ impl PackedMat {
     pub fn unpack(&self) -> GroupQuant {
         let bits = self.cfg.bits as usize;
         let cb = Self::col_bytes(self.rows, self.cfg.bits);
+        debug_assert!(self.packed.len() == cb * self.cols, "packed buffer shape");
         let mut codes = vec![0u8; self.rows * self.cols];
         for c in 0..self.cols {
             let col = &self.packed[c * cb..(c + 1) * cb];
@@ -131,6 +133,7 @@ fn lut4() -> &'static [[f32; 2]; 256] {
     static LUT: std::sync::OnceLock<[[f32; 2]; 256]> = std::sync::OnceLock::new();
     LUT.get_or_init(|| {
         let mut t = [[0f32; 2]; 256];
+        debug_assert!(t.len() == 256 && t[0].len() == 2);
         for (b, e) in t.iter_mut().enumerate() {
             e[0] = (b & 15) as f32;
             e[1] = (b >> 4) as f32;
@@ -140,6 +143,7 @@ fn lut4() -> &'static [[f32; 2]; 256] {
 }
 
 pub(crate) fn unpack2_lut(col: &[u8], out: &mut [f32]) {
+    debug_assert!(out.len() >= col.len() * 4, "unpack2 output buffer too small");
     let lut = lut2();
     for (i, &b) in col.iter().enumerate() {
         out[i * 4..i * 4 + 4].copy_from_slice(&lut[b as usize]);
@@ -147,6 +151,7 @@ pub(crate) fn unpack2_lut(col: &[u8], out: &mut [f32]) {
 }
 
 pub(crate) fn unpack4_lut(col: &[u8], out: &mut [f32]) {
+    debug_assert!(out.len() >= col.len() * 2, "unpack4 output buffer too small");
     let lut = lut4();
     for (i, &b) in col.iter().enumerate() {
         out[i * 2..i * 2 + 2].copy_from_slice(&lut[b as usize]);

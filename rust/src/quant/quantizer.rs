@@ -78,6 +78,7 @@ impl GroupQuant {
         let cols = w.cols;
         let g = if cfg.group_size == 0 { rows } else { cfg.group_size };
         let n_groups = rows.div_ceil(g);
+        debug_assert!(w.data.len() == rows * cols, "Mat shape contract");
         let qmax = cfg.qmax() as f32;
         let mut codes = vec![0u8; rows * cols];
         let mut scales = vec![0f32; n_groups * cols];
@@ -127,6 +128,7 @@ impl GroupQuant {
 
     /// Dequantize to f32.
     pub fn dequantize(&self) -> Mat {
+        debug_assert!(self.codes.len() == self.rows * self.cols, "code buffer shape");
         let g = if self.cfg.group_size == 0 { self.rows } else { self.cfg.group_size };
         let mut out = Mat::zeros(self.rows, self.cols);
         for r in 0..self.rows {

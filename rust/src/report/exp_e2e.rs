@@ -98,7 +98,8 @@ pub fn table4(scale: f64) -> Result<()> {
         }
         trials.sort_by(|a, b| a.total_cmp(b));
         let lat_tiered = trials[trials.len() / 2] / 1e3;
-        let tm = tm.expect("three tiered trials ran");
+        debug_assert!(tm.is_some(), "three tiered trials ran");
+        let Some(tm) = tm else { continue };
         let _ = std::fs::remove_file(&spill);
         // Decode rows: the same packed weights in a decode-heavy workload
         // at both KV precisions. The kv-f32 row is the decode baseline

@@ -99,7 +99,8 @@ pub fn fig10(scale: f64) -> Result<()> {
         let (model, _) = load_or_init_model(zoo);
         let n = model.cfg().n_experts as f32;
         for ds in ["openbookqa", "humaneval"] {
-            let spec = crate::data::corpus::dataset(ds).unwrap();
+            debug_assert!(crate::data::corpus::dataset(ds).is_some(), "unknown dataset {ds}");
+            let Some(spec) = crate::data::corpus::dataset(ds) else { continue };
             let prof = es_frequencies(&model, spec, n_seqs, 96, 23);
             let stats = sparsity_stats(&prof);
             let mx = stats.iter().map(|s| s.0).fold(0.0f32, f32::max);

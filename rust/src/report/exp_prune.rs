@@ -143,6 +143,7 @@ pub fn table3(scale: f64) -> Result<()> {
                 base_lat = lat;
             }
             let speedup = base_lat / lat;
+            debug_assert!(ri < rows.len(), "row {ri} out of {}", rows.len());
             rows[ri].push(format!("{acc:.2}"));
             rows[ri].push(format!("{speedup:.2}x"));
             let mut o = Json::obj();

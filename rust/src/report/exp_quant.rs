@@ -34,12 +34,22 @@ fn record_selections(
             ..Default::default()
         };
         model.forward_with_hooks(seq, &h);
-        let rec = h.record_selections.unwrap().into_inner();
+        // Both cells were installed on the hooks literal just above.
+        debug_assert!(
+            h.record_selections.is_some() && h.capture_router_logits.is_some(),
+            "hooks installed above"
+        );
+        let (Some(rec_cell), Some(logit_cell)) = (h.record_selections, h.capture_router_logits)
+        else {
+            continue;
+        };
+        let rec = rec_cell.into_inner();
         for li in 0..n_layers {
             all.layers[li].extend(rec.layers[li].iter().cloned());
         }
-        for (li, m) in h.capture_router_logits.unwrap().into_inner().into_iter().enumerate() {
-            let m = m.unwrap();
+        for (li, m) in logit_cell.into_inner().into_iter().enumerate() {
+            debug_assert!(m.is_some(), "layer {li} router logits captured");
+            let Some(m) = m else { continue };
             if logits[li].rows == 0 {
                 logits[li] = m;
             } else {
@@ -60,7 +70,8 @@ fn ppl_forced(model: &Model, seqs: &[Vec<u32>], donor: &Model) -> f64 {
     for seq in seqs {
         let rec_hooks = Hooks::recording(n_layers);
         donor.forward_with_hooks(seq, &rec_hooks);
-        let rec = rec_hooks.take_selections().unwrap();
+        let rec = rec_hooks.take_selections().unwrap_or_default();
+        debug_assert!(!rec.layers.is_empty(), "recording hooks captured selections");
         let hooks = Hooks::forcing(rec);
         let logits = model.forward_with_hooks(seq, &hooks);
         for t in 0..seq.len() - 1 {
@@ -192,6 +203,10 @@ pub fn fig4(scale: f64) -> Result<()> {
     let n = fp.cfg().n_experts;
     let mut fp_all = Mat::zeros(0, n);
     let mut q_all = Mat::zeros(0, n);
+    debug_assert!(
+        fp_logits.len() == fp.cfg().n_layers && q_logits.len() == fp_logits.len(),
+        "one captured logit matrix per layer"
+    );
     for li in 0..fp.cfg().n_layers {
         fp_all.data.extend_from_slice(&fp_logits[li].data);
         fp_all.rows += fp_logits[li].rows;
@@ -357,8 +372,13 @@ pub fn fig9(scale: f64) -> Result<()> {
                 }
                 // Use the last capture (aggregating all would need appends;
                 // the per-seq distribution is stationary enough here).
-                let mh = h.capture_mhsa_inputs.as_ref().unwrap().borrow()[li].clone().unwrap();
-                let wo = h.capture_wo_inputs.as_ref().unwrap().borrow()[li].clone().unwrap();
+                let mh = h.capture_mhsa_inputs.as_ref().and_then(|c| c.borrow()[li].clone());
+                let wo = h.capture_wo_inputs.as_ref().and_then(|c| c.borrow()[li].clone());
+                debug_assert!(
+                    mh.is_some() && wo.is_some(),
+                    "capturing hooks filled layer {li}"
+                );
+                let (Some(mh), Some(wo)) = (mh, wo) else { continue };
                 (mh, wo)
             };
             let gcfg = GptqConfig::new(bits, 128.min(fp.cfg().d_model));

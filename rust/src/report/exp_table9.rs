@@ -99,6 +99,7 @@ pub fn challenging(scale: f64) -> Result<()> {
         &["Bits", "Method", "gsm8k", "humaneval"],
     );
     let base = crate::eval::eval_suite(&fp, &suite, Hooks::none);
+    debug_assert!(base.tasks.len() >= 2, "challenging suite has two tasks");
     table.row(vec![
         "16.00".into(),
         "Full Precision".into(),

@@ -97,24 +97,29 @@ pub fn matmul_transb_on(pool: &ThreadPool, a: &Mat, b_t: &Mat) -> Mat {
         // split by row, n wide enough to matter).
         let nchunks = pool.threads().min(n.div_ceil(TRANSB_NC));
         let chunk_cols = n.div_ceil(nchunks);
-        let mut strips: Vec<Option<Vec<f32>>> = (0..nchunks).map(|_| None).collect();
         // Both bounds clamp to n so a ragged tail can only shorten (or
         // empty) the last chunks, never underflow.
         let bounds = |ci: usize| ((ci * chunk_cols).min(n), ((ci + 1) * chunk_cols).min(n));
+        // Pre-sized strips let the tasks fill them in place: the scope
+        // barrier then guarantees every strip is complete with no
+        // Option/unwrap needed on the join side.
+        let mut strips: Vec<Vec<f32>> = (0..nchunks)
+            .map(|ci| {
+                let (j0, j1) = bounds(ci);
+                vec![0f32; m * (j1 - j0)]
+            })
+            .collect();
         pool.scope(|s| {
-            for (ci, slot) in strips.iter_mut().enumerate() {
+            for (ci, strip) in strips.iter_mut().enumerate() {
                 s.spawn(move || {
                     let (j0, j1) = bounds(ci);
-                    let mut strip = vec![0f32; m * (j1 - j0)];
-                    transb_block(a, b_t, 0, m, j0, j1, &mut strip);
-                    *slot = Some(strip);
+                    transb_block(a, b_t, 0, m, j0, j1, strip);
                 });
             }
         });
-        for (ci, slot) in strips.into_iter().enumerate() {
+        for (ci, strip) in strips.into_iter().enumerate() {
             let (j0, j1) = bounds(ci);
             let w = j1 - j0;
-            let strip = slot.expect("column task completed");
             for r in 0..m {
                 c.row_mut(r)[j0..j1].copy_from_slice(&strip[r * w..(r + 1) * w]);
             }
@@ -137,6 +142,10 @@ pub fn matmul_transb_on(pool: &ThreadPool, a: &Mat, b_t: &Mat) -> Mat {
 fn transb_block(a: &Mat, b_t: &Mat, r0: usize, r1: usize, j0: usize, j1: usize, out: &mut [f32]) {
     let k = a.cols;
     let w = j1 - j0;
+    debug_assert!(
+        a.cols == b_t.cols && r1 <= a.rows && j1 <= b_t.rows && out.len() == (r1 - r0) * w,
+        "transb_block shape contract"
+    );
     for kb in (0..k).step_by(KC) {
         let kend = (kb + KC).min(k);
         for jb in (j0..j1).step_by(TRANSB_NC) {

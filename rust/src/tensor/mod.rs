@@ -47,28 +47,33 @@ impl Mat {
 
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols, "Mat::at({r},{c}) out of {}x{}", self.rows, self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols, "Mat::at_mut({r},{c}) out of {}x{}", self.rows, self.cols);
         &mut self.data[r * self.cols + c]
     }
 
     /// Borrow row `r` as a slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows, "Mat::row({r}) out of {} rows", self.rows);
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
     /// Borrow row `r` mutably.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows, "Mat::row_mut({r}) out of {} rows", self.rows);
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
     /// Transposed copy.
     pub fn transpose(&self) -> Mat {
+        debug_assert!(self.data.len() == self.rows * self.cols);
         let mut t = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
             for c in 0..self.cols {

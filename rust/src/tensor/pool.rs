@@ -114,12 +114,23 @@ impl ThreadPool {
             let mut handles = self.handles.lock().unwrap();
             for i in 0..self.threads - 1 {
                 let shared = self.shared.clone();
-                handles.push(
-                    std::thread::Builder::new()
-                        .name(format!("eac-moe-pool-{i}"))
-                        .spawn(move || worker_loop(&shared))
-                        .expect("spawn pool worker"),
-                );
+                let spawned = std::thread::Builder::new()
+                    .name(format!("eac-moe-pool-{i}"))
+                    .spawn(move || worker_loop(&shared));
+                match spawned {
+                    Ok(h) => handles.push(h),
+                    Err(e) => {
+                        // Degraded but correct: scope waiters help-execute
+                        // queued tasks, so every scope still completes with
+                        // fewer workers — even zero.
+                        eprintln!(
+                            "eac-moe pool: spawn worker {i} failed ({e}); \
+                             continuing with {} workers",
+                            handles.len()
+                        );
+                        break;
+                    }
+                }
             }
         });
     }

@@ -279,25 +279,25 @@ pub fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
 // ---------------------------------------------------------------------------
 
 mod scalar {
-    pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    pub(super) fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
         for (o, &v) in out.iter_mut().zip(x) {
             *o += a * v;
         }
     }
 
-    pub fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+    pub(super) fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
         for (o, &v) in out.iter_mut().zip(x) {
             *o += a * v as f32;
         }
     }
 
-    pub fn affine(buf: &mut [f32], zero: f32, scale: f32) {
+    pub(super) fn affine(buf: &mut [f32], zero: f32, scale: f32) {
         for v in buf.iter_mut() {
             *v = (*v - zero) * scale;
         }
     }
 
-    pub fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+    pub(super) fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
         for (d, &b) in dst.iter_mut().zip(src) {
             *d = b as f32;
         }
@@ -305,7 +305,7 @@ mod scalar {
 
     /// The 8-lane split + fixed reduction tree, in scalar form. This IS
     /// the definition the vector paths replicate.
-    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
         let n8 = n & !7;
         let mut acc = [0f32; 8];
@@ -323,7 +323,7 @@ mod scalar {
         s
     }
 
-    pub fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
+    pub(super) fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
         let n = a.len();
         let n8 = n & !7;
         let mut acc = [0f32; 8];
@@ -356,11 +356,11 @@ mod avx2 {
     /// Horizontal sum of [l0..l7] through the fixed tree
     /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the same DAG the scalar
     /// reference spells out.
-    // SAFETY: contract — caller must have verified the `avx2` feature
-    // (every caller is itself an avx2 target_feature fn). Register-only.
+    // Register-only, so safe under `target_feature` — callable without
+    // `unsafe` from the avx2 fns below, which share the feature contract.
     #[inline]
     #[target_feature(enable = "avx2")]
-    unsafe fn hsum(v: __m256) -> f32 {
+    fn hsum(v: __m256) -> f32 {
         let lo = _mm256_castps256_ps128(v);
         let hi = _mm256_extractf128_ps::<1>(v);
         let s = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
@@ -372,15 +372,19 @@ mod avx2 {
     // (the dispatch match does). Loads/stores stay in bounds: the vector
     // loop covers indices < n8 ≤ len in whole 8-lane strips.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    pub(super) unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
         let n = out.len();
         let n8 = n & !7;
         let va = _mm256_set1_ps(a);
         let mut i = 0;
         while i < n8 {
-            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
-            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
-            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            // SAFETY: i + 8 <= n8 ≤ len of both slices (x.len() == out.len()
+            // per all call sites), so the 8-lane load/store stay in bounds.
+            unsafe {
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+                let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            }
             i += 8;
         }
         for j in n8..n {
@@ -394,7 +398,8 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn load_i8_as_f32(p: *const i8) -> __m256 {
-        let bytes = _mm_loadl_epi64(p as *const __m128i);
+        // SAFETY: `p` is valid for 8 bytes per this fn's contract.
+        let bytes = unsafe { _mm_loadl_epi64(p as *const __m128i) };
         _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes))
     }
 
@@ -403,15 +408,19 @@ mod avx2 {
     // (out.len() == x.len() per the public wrapper's debug_assert and all
     // call sites).
     #[target_feature(enable = "avx2")]
-    pub unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+    pub(super) unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
         let n = out.len();
         let n8 = n & !7;
         let va = _mm256_set1_ps(a);
         let mut i = 0;
         while i < n8 {
-            let vx = load_i8_as_f32(x.as_ptr().add(i));
-            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
-            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            // SAFETY: i + 8 <= n8 ≤ len of both slices, so the 8-byte code
+            // load and the 8-lane f32 load/store stay in bounds.
+            unsafe {
+                let vx = load_i8_as_f32(x.as_ptr().add(i));
+                let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            }
             i += 8;
         }
         for j in n8..n {
@@ -422,15 +431,18 @@ mod avx2 {
     // SAFETY: contract — caller must have verified `avx2`. In-bounds:
     // 8-lane strips below n8 ≤ len, scalar tail after.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
+    pub(super) unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
         let n = buf.len();
         let n8 = n & !7;
         let vz = _mm256_set1_ps(zero);
         let vs = _mm256_set1_ps(scale);
         let mut i = 0;
         while i < n8 {
-            let v = _mm256_loadu_ps(buf.as_ptr().add(i));
-            _mm256_storeu_ps(buf.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_sub_ps(v, vz), vs));
+            // SAFETY: i + 8 <= n8 ≤ buf.len(), so load/store stay in bounds.
+            unsafe {
+                let v = _mm256_loadu_ps(buf.as_ptr().add(i));
+                _mm256_storeu_ps(buf.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_sub_ps(v, vz), vs));
+            }
             i += 8;
         }
         for v in &mut buf[n8..] {
@@ -442,14 +454,18 @@ mod avx2 {
     // reads 8-byte strips below n8 ≤ src.len(); writes below n8 ≤
     // dst.len() (dst.len() >= src.len() per the public wrapper).
     #[target_feature(enable = "avx2")]
-    pub unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+    pub(super) unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
         let n = src.len();
         let n8 = n & !7;
         let mut i = 0;
         while i < n8 {
-            let bytes = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
-            let v = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
-            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            // SAFETY: i + 8 <= n8 ≤ src.len() ≤ dst.len(), so the 8-byte
+            // load and 8-lane store stay in bounds.
+            unsafe {
+                let bytes = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+                let v = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            }
             i += 8;
         }
         for j in n8..n {
@@ -460,15 +476,18 @@ mod avx2 {
     // SAFETY: contract — caller must have verified `avx2`. In-bounds:
     // 8-lane strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
         let n8 = n & !7;
         let mut acc = _mm256_setzero_ps();
         let mut i = 0;
         while i < n8 {
-            let va = _mm256_loadu_ps(a.as_ptr().add(i));
-            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
-            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            // SAFETY: i + 8 <= n8 ≤ len of both equal-length slices.
+            unsafe {
+                let va = _mm256_loadu_ps(a.as_ptr().add(i));
+                let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            }
             i += 8;
         }
         let mut s = hsum(acc);
@@ -481,15 +500,18 @@ mod avx2 {
     // SAFETY: contract — caller must have verified `avx2`. In-bounds:
     // 8-lane strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
+    pub(super) unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
         let n = a.len();
         let n8 = n & !7;
         let mut acc = _mm256_setzero_ps();
         let mut i = 0;
         while i < n8 {
-            let va = _mm256_loadu_ps(a.as_ptr().add(i));
-            let vk = load_i8_as_f32(k.as_ptr().add(i));
-            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vk));
+            // SAFETY: i + 8 <= n8 ≤ len of both equal-length slices.
+            unsafe {
+                let va = _mm256_loadu_ps(a.as_ptr().add(i));
+                let vk = load_i8_as_f32(k.as_ptr().add(i));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vk));
+            }
             i += 8;
         }
         let mut s = hsum(acc);
@@ -512,15 +534,19 @@ mod neon {
     // SAFETY: contract — caller must have verified the `neon` feature
     // (the dispatch match does). In-bounds: 4-lane strips below n4 ≤ len.
     #[target_feature(enable = "neon")]
-    pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    pub(super) unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
         let n = out.len();
         let n4 = n & !3;
         let va = vdupq_n_f32(a);
         let mut i = 0;
         while i < n4 {
-            let vx = vld1q_f32(x.as_ptr().add(i));
-            let vo = vld1q_f32(out.as_ptr().add(i));
-            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(vo, vmulq_f32(va, vx)));
+            // SAFETY: i + 4 <= n4 ≤ len of both slices (x.len() == out.len()
+            // per all call sites), so the 4-lane load/store stay in bounds.
+            unsafe {
+                let vx = vld1q_f32(x.as_ptr().add(i));
+                let vo = vld1q_f32(out.as_ptr().add(i));
+                vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(vo, vmulq_f32(va, vx)));
+            }
             i += 4;
         }
         for j in n4..n {
@@ -534,7 +560,8 @@ mod neon {
     #[inline]
     #[target_feature(enable = "neon")]
     unsafe fn load_i8_as_f32x2(p: *const i8) -> (float32x4_t, float32x4_t) {
-        let wide = vmovl_s8(vld1_s8(p)); // 8 x i16
+        // SAFETY: `p` is valid for 8 bytes per this fn's contract.
+        let wide = vmovl_s8(unsafe { vld1_s8(p) }); // 8 x i16
         let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(wide)));
         let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(wide)));
         (lo, hi)
@@ -543,17 +570,21 @@ mod neon {
     // SAFETY: contract — caller must have verified `neon`. In-bounds:
     // 8-element strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "neon")]
-    pub unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
+    pub(super) unsafe fn axpy_i8(out: &mut [f32], a: f32, x: &[i8]) {
         let n = out.len();
         let n8 = n & !7;
         let va = vdupq_n_f32(a);
         let mut i = 0;
         while i < n8 {
-            let (lo, hi) = load_i8_as_f32x2(x.as_ptr().add(i));
-            let o0 = vld1q_f32(out.as_ptr().add(i));
-            let o1 = vld1q_f32(out.as_ptr().add(i + 4));
-            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(o0, vmulq_f32(va, lo)));
-            vst1q_f32(out.as_mut_ptr().add(i + 4), vaddq_f32(o1, vmulq_f32(va, hi)));
+            // SAFETY: i + 8 <= n8 ≤ len of both slices, so the 8-byte code
+            // load and both 4-lane f32 load/store pairs stay in bounds.
+            unsafe {
+                let (lo, hi) = load_i8_as_f32x2(x.as_ptr().add(i));
+                let o0 = vld1q_f32(out.as_ptr().add(i));
+                let o1 = vld1q_f32(out.as_ptr().add(i + 4));
+                vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(o0, vmulq_f32(va, lo)));
+                vst1q_f32(out.as_mut_ptr().add(i + 4), vaddq_f32(o1, vmulq_f32(va, hi)));
+            }
             i += 8;
         }
         for j in n8..n {
@@ -564,15 +595,18 @@ mod neon {
     // SAFETY: contract — caller must have verified `neon`. In-bounds:
     // 4-lane strips below n4 ≤ len, scalar tail after.
     #[target_feature(enable = "neon")]
-    pub unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
+    pub(super) unsafe fn affine(buf: &mut [f32], zero: f32, scale: f32) {
         let n = buf.len();
         let n4 = n & !3;
         let vz = vdupq_n_f32(zero);
         let vs = vdupq_n_f32(scale);
         let mut i = 0;
         while i < n4 {
-            let v = vld1q_f32(buf.as_ptr().add(i));
-            vst1q_f32(buf.as_mut_ptr().add(i), vmulq_f32(vsubq_f32(v, vz), vs));
+            // SAFETY: i + 4 <= n4 ≤ buf.len(), so load/store stay in bounds.
+            unsafe {
+                let v = vld1q_f32(buf.as_ptr().add(i));
+                vst1q_f32(buf.as_mut_ptr().add(i), vmulq_f32(vsubq_f32(v, vz), vs));
+            }
             i += 4;
         }
         for v in &mut buf[n4..] {
@@ -584,16 +618,20 @@ mod neon {
     // reads 8-byte strips below n8 ≤ src.len(); writes below n8 ≤
     // dst.len() (dst.len() >= src.len() per the public wrapper).
     #[target_feature(enable = "neon")]
-    pub unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+    pub(super) unsafe fn bytes_to_f32(src: &[u8], dst: &mut [f32]) {
         let n = src.len();
         let n8 = n & !7;
         let mut i = 0;
         while i < n8 {
-            let wide = vmovl_u8(vld1_u8(src.as_ptr().add(i)));
-            let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
-            let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
-            vst1q_f32(dst.as_mut_ptr().add(i), lo);
-            vst1q_f32(dst.as_mut_ptr().add(i + 4), hi);
+            // SAFETY: i + 8 <= n8 ≤ src.len() ≤ dst.len(), so the 8-byte
+            // load and both 4-lane stores stay in bounds.
+            unsafe {
+                let wide = vmovl_u8(vld1_u8(src.as_ptr().add(i)));
+                let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+                let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+                vst1q_f32(dst.as_mut_ptr().add(i), lo);
+                vst1q_f32(dst.as_mut_ptr().add(i + 4), hi);
+            }
             i += 8;
         }
         for j in n8..n {
@@ -602,10 +640,11 @@ mod neon {
     }
 
     /// Combine accumulators [l0..l3], [l4..l7] through the fixed tree.
-    // SAFETY: contract — caller must have verified `neon`. Register-only.
+    // Register-only, so safe under `target_feature` — callable without
+    // `unsafe` from the neon fns below, which share the feature contract.
     #[inline]
     #[target_feature(enable = "neon")]
-    unsafe fn combine(acc_lo: float32x4_t, acc_hi: float32x4_t) -> f32 {
+    fn combine(acc_lo: float32x4_t, acc_hi: float32x4_t) -> f32 {
         let s = vaddq_f32(acc_lo, acc_hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
         let t = vadd_f32(vget_low_f32(s), vget_high_f32(s)); // [(l0+l4)+(l2+l6), (l1+l5)+(l3+l7)]
         vget_lane_f32::<0>(t) + vget_lane_f32::<1>(t)
@@ -614,19 +653,22 @@ mod neon {
     // SAFETY: contract — caller must have verified `neon`. In-bounds:
     // 8-element strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "neon")]
-    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
         let n8 = n & !7;
         let mut acc_lo = vdupq_n_f32(0.0);
         let mut acc_hi = vdupq_n_f32(0.0);
         let mut i = 0;
         while i < n8 {
-            let a0 = vld1q_f32(a.as_ptr().add(i));
-            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
-            let b0 = vld1q_f32(b.as_ptr().add(i));
-            let b1 = vld1q_f32(b.as_ptr().add(i + 4));
-            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a0, b0));
-            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a1, b1));
+            // SAFETY: i + 8 <= n8 ≤ len of both equal-length slices.
+            unsafe {
+                let a0 = vld1q_f32(a.as_ptr().add(i));
+                let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+                let b0 = vld1q_f32(b.as_ptr().add(i));
+                let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+                acc_lo = vaddq_f32(acc_lo, vmulq_f32(a0, b0));
+                acc_hi = vaddq_f32(acc_hi, vmulq_f32(a1, b1));
+            }
             i += 8;
         }
         let mut s = combine(acc_lo, acc_hi);
@@ -639,18 +681,21 @@ mod neon {
     // SAFETY: contract — caller must have verified `neon`. In-bounds:
     // 8-element strips below n8 ≤ len of both equal-length slices.
     #[target_feature(enable = "neon")]
-    pub unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
+    pub(super) unsafe fn dot_i8(a: &[f32], k: &[i8]) -> f32 {
         let n = a.len();
         let n8 = n & !7;
         let mut acc_lo = vdupq_n_f32(0.0);
         let mut acc_hi = vdupq_n_f32(0.0);
         let mut i = 0;
         while i < n8 {
-            let a0 = vld1q_f32(a.as_ptr().add(i));
-            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
-            let (k0, k1) = load_i8_as_f32x2(k.as_ptr().add(i));
-            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a0, k0));
-            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a1, k1));
+            // SAFETY: i + 8 <= n8 ≤ len of both equal-length slices.
+            unsafe {
+                let a0 = vld1q_f32(a.as_ptr().add(i));
+                let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+                let (k0, k1) = load_i8_as_f32x2(k.as_ptr().add(i));
+                acc_lo = vaddq_f32(acc_lo, vmulq_f32(a0, k0));
+                acc_hi = vaddq_f32(acc_hi, vmulq_f32(a1, k1));
+            }
             i += 8;
         }
         let mut s = combine(acc_lo, acc_hi);

@@ -183,6 +183,9 @@ impl TensorFile {
                 dims.push(c.u64()? as usize);
             }
             let count: usize = dims.iter().product();
+            // `take` hands back exactly the requested bytes, so the
+            // chunks_exact(4) element indexing below stays in bounds.
+            debug_assert!(count.checked_mul(4).is_some(), "tensor payload size overflow");
             let payload = match dtype {
                 0 => {
                     let raw = c.take(count * 4)?;
@@ -450,6 +453,7 @@ impl IndexedTensorFile {
         let mut raw = vec![0u8; ie.byte_len];
         self.read_exact_at(&mut raw, ie.offset)
             .with_context(|| format!("read tensor '{name}' ({} B)", ie.byte_len))?;
+        debug_assert!(raw.len() == ie.byte_len, "short read survived read_exact_at");
         let payload = match ie.dtype {
             0 => Payload::F32(
                 raw.chunks_exact(4)
@@ -495,11 +499,13 @@ impl<'a> Cursor<'a> {
 
     fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
+        debug_assert!(b.len() == 4);
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn u64(&mut self) -> Result<u64> {
         let b = self.take(8)?;
+        debug_assert!(b.len() == 8);
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 }

@@ -38,13 +38,13 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
-    /// Insert into an object (panics if self is not an object).
+    /// Insert into an object. On a non-object this is a no-op in release
+    /// (a debug assertion catches the misuse in development) — report
+    /// builders run on the serve path and must not unwind mid-batch.
     pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
-        match self {
-            Json::Obj(m) => {
-                m.insert(key.to_string(), val);
-            }
-            _ => panic!("Json::set on non-object"),
+        debug_assert!(matches!(self, Json::Obj(_)), "Json::set on non-object");
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), val);
         }
         self
     }
@@ -284,7 +284,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn eat(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -334,7 +334,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object_body(&mut self) -> std::result::Result<Json, String> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -345,7 +345,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             let v = self.value()?;
             m.insert(k, v);
             self.skip_ws();
@@ -368,7 +368,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array_body(&mut self) -> std::result::Result<Json, String> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -390,7 +390,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -439,6 +439,7 @@ impl<'a> Parser<'a> {
     }
 
     fn number(&mut self) -> Result<Json, String> {
+        debug_assert!(self.i <= self.b.len(), "parser cursor past end");
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;

@@ -1,9 +1,14 @@
 // Fixture: rule `env-read-site`. EAC_MOE_* configuration is read once
 // through util/env.rs; scattered reads reintroduce the PR 3 mid-run
-// reconfiguration bug.
+// reconfiguration bug. `var_os` counts as a read, and the `vars` /
+// `vars_os` iterators enumerate every EAC_MOE_* variable implicitly.
 
 pub fn bad() -> Option<String> {
     std::env::var("EAC_MOE_THREADS").ok() // LINT:env-read-site
+}
+
+pub fn bad_os() -> Option<std::ffi::OsString> {
+    std::env::var_os("EAC_MOE_THREADS") // LINT:env-read-site
 }
 
 pub fn bad_split() -> Option<String> {
@@ -13,8 +18,20 @@ pub fn bad_split() -> Option<String> {
     .ok()
 }
 
+pub fn bad_enumerate() -> usize {
+    std::env::vars().count() // LINT:env-read-site
+}
+
+pub fn bad_enumerate_os() -> usize {
+    std::env::vars_os().count() // LINT:env-read-site
+}
+
 pub fn other_vars_are_fine() -> Option<String> {
     std::env::var("HOME").ok()
+}
+
+pub fn other_var_os_is_fine() -> Option<std::ffi::OsString> {
+    std::env::var_os("HOME")
 }
 
 pub fn allowed() -> Option<String> {

@@ -1,0 +1,49 @@
+// Fixture: rule `float-hash-order`. HashMap/HashSet iteration order is
+// nondeterministic; accumulating floats in that order breaks the pinned
+// operation DAG between runs. Ordered (sorted-key) reductions and
+// integer counters stay clean.
+
+use std::collections::HashMap;
+
+pub struct Acc {
+    weights: HashMap<usize, f32>,
+}
+
+impl Acc {
+    pub fn unordered_total(&self) -> f32 {
+        let mut total = 0.0f32;
+        for (_k, v) in &self.weights {
+            total += *v; // LINT:float-hash-order
+        }
+        total
+    }
+
+    pub fn unordered_sum_chain(&self) -> f32 {
+        self.weights.values().copied().sum::<f32>() // LINT:float-hash-order
+    }
+
+    pub fn count_is_fine(&self) -> usize {
+        let mut n = 0usize;
+        for _ in &self.weights {
+            n += 1;
+        }
+        n
+    }
+
+    pub fn sorted_total_is_fine(&self) -> f32 {
+        let mut keys: Vec<usize> = self.weights.keys().copied().collect();
+        keys.sort_unstable();
+        let mut total = 0.0f32;
+        for k in keys {
+            total += self.weights[&k];
+        }
+        total
+    }
+
+    pub fn allowed(&self) -> f32 {
+        let mut total = 0.0f32;
+        // xtask-allow: float-hash-order — fixture exercises the escape hatch
+        for (_k, v) in &self.weights { total += *v; }
+        total
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture: rule `no-fma-transitive`. Replayed by the self-tests at
+// rust/src/tensor/matmul.rs (a kernel contract file — every fn here is a
+// seed) and at rust/src/calib/fixture.rs (outside the contract region —
+// no seeds, so the same source lints clean). The inline `no-fma` allow
+// silences the token rule but must NOT launder FMA past the transitive
+// rule.
+
+pub fn matmul_entry(a: f32, b: f32, c: f32) -> f32 {
+    helper(a, b, c)
+}
+
+fn helper(a: f32, b: f32, c: f32) -> f32 {
+    // xtask-allow: no-fma — fixture: the allow covers the token rule only
+    a.mul_add(b, c) // LINT:no-fma-transitive
+}

@@ -1,45 +1,66 @@
-// Fixture: rule `serve-no-panic`. Linted by the self-tests at a
-// rust/src/serve/ rel path (in scope) and a rust/src/quant/ rel path
-// (out of scope, expecting zero findings).
+// Fixture: transitive `serve-no-panic` / `serve-unguarded-index`. The
+// graph analysis seeds at Engine::serve, decode_step_batch, and the pub
+// ExpertStore surface, then follows call edges; private fns nothing on
+// the serve path calls stay exempt — reachability, not path prefix,
+// decides.
 
 use std::sync::Mutex;
 
-pub fn bad_unwrap(v: Option<u32>) -> u32 {
-    v.unwrap() // LINT:serve-no-panic
-}
+pub struct Engine;
+pub struct ExpertStore;
 
-pub fn bad_expect(v: Option<u32>) -> u32 {
-    v.expect("boom") // LINT:serve-no-panic
-}
-
-pub fn bad_panic() {
-    panic!("down"); // LINT:serve-no-panic
-}
-
-pub fn bad_unreachable(x: u8) -> u8 {
-    match x {
-        0 => 1,
-        _ => unreachable!(), // LINT:serve-no-panic
+impl Engine {
+    pub fn serve(&self, m: &Mutex<u32>) -> usize {
+        let base = allowed_unwrap(Some(locked(m)));
+        dispatch(base as usize)
     }
 }
 
-pub fn poisoned_lock_is_exempt(m: &Mutex<u32>) -> u32 {
+impl ExpertStore {
+    pub fn fetch(&self, xs: &[f32]) -> f32 {
+        assert!(xs.len() > 1, "fetch needs at least two activations");
+        xs[0] + xs[1]
+    }
+}
+
+pub fn decode_step_batch(xs: &[f32]) -> f32 {
+    deep_helper(xs)
+}
+
+fn dispatch(n: usize) -> usize {
+    if n > 3 {
+        boom(n)
+    } else {
+        n
+    }
+}
+
+fn boom(n: usize) -> usize {
+    panic!("mid-batch failure: {n}"); // LINT:serve-no-panic
+}
+
+fn deep_helper(xs: &[f32]) -> f32 {
+    let head = xs.first().copied();
+    let head = head.unwrap(); // LINT:serve-no-panic
+    head + raw_index(xs)
+}
+
+fn raw_index(xs: &[f32]) -> f32 {
+    xs[2] * 2.0 // LINT:serve-unguarded-index
+}
+
+fn locked(m: &Mutex<u32>) -> u32 {
+    // Poisoned-lock unwraps propagate a worker panic — exempt.
     *m.lock().unwrap()
 }
 
-pub fn chained_lock_is_exempt(m: &Mutex<Vec<u32>>) -> usize {
-    m.lock().unwrap().len()
-}
-
-pub fn allowed(v: Option<u32>) -> u32 {
-    // xtask-allow: serve-no-panic — invariant: caller checked is_some()
+fn allowed_unwrap(v: Option<u32>) -> u32 {
+    // xtask-allow: serve-no-panic — invariant: serve() always passes Some
     v.unwrap()
 }
 
-#[cfg(test)]
-mod tests {
-    #[test]
-    fn unwrap_in_tests_is_fine() {
-        assert_eq!(Some(1u32).unwrap(), 1);
-    }
+fn dead_code(xs: &[f32]) -> f32 {
+    // Panic and unguarded index, but nothing on the serve path calls
+    // this fn — no findings here.
+    panic!("never reached: {}", xs[3]);
 }

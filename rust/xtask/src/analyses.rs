@@ -1,0 +1,754 @@
+//! Graph-aware analyses: transitive panic-freedom, unguarded indexing,
+//! float-determinism over hash iteration, transitive no-FMA, and module
+//! layering.
+//!
+//! These run on top of the call graph and module graph from
+//! [`crate::graph`], complementing the per-line rules in [`crate::rules`]:
+//!
+//! - `serve-no-panic` — seeded at `Engine::serve`, `decode_step_batch`,
+//!   the public `ExpertStore` surface, and every public fn under
+//!   `rust/src/serve/`; any *reachable* non-test function containing a
+//!   panic-family op (`panic!`/`todo!`/`unreachable!`/`unimplemented!`,
+//!   `.expect(…)`, non-poison `.unwrap()`) is flagged, with the call
+//!   chain that reaches it. This replaces the old path-prefix heuristic:
+//!   a panic three crates-worth of calls below `serve/` is just as fatal
+//!   mid-batch as one written in `serve/engine.rs`.
+//! - `serve-unguarded-index` — a reachable function that indexes slices
+//!   must carry a bounds guard somewhere in its body (an assert-family
+//!   macro, or a `.len(`/`.is_empty(` check feeding its control flow).
+//!   Guarding is judged per function, not per site: kernels assert their
+//!   dimension contract once and then index freely.
+//! - `float-hash-order` — `for` iteration over a `HashMap`/`HashSet`
+//!   whose body accumulates into an `f32`/`f64` (or a
+//!   `.sum::<f32>()` chain hanging off a hash receiver). Iteration order
+//!   is nondeterministic, so the accumulation order — and with float
+//!   rounding, the result — varies run to run, silently breaking the
+//!   bitwise-invariance contract.
+//! - `no-fma-transitive` — extends `no-fma` from tokens to reachability:
+//!   anything reachable from the kernel contract files (`tensor/simd.rs`,
+//!   `tensor/matmul.rs`, `tensor/ops.rs`, `quant/fused.rs`) must stay
+//!   FMA-free. Inline `xtask-allow: no-fma` markers do *not* exempt this
+//!   rule (only the pinned region in `tensor/simd.rs` does): an allow
+//!   placed on a helper must not silently launder FMA into the contract.
+//! - `module-layering` — the `use`/path graph between top-level modules
+//!   must match the allowed-edges manifest (`rust/xtask/layering.toml`)
+//!   and stay acyclic.
+
+use crate::graph::{CallGraph, ModuleGraph};
+use crate::items::FileItems;
+use crate::lexer::{Tok, TokKind};
+use crate::rules::Finding;
+use crate::scan::SourceFile;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// One scanned + extracted file with its allow masks, ready for analysis.
+pub struct Prepared {
+    pub sf: SourceFile,
+    pub items: FileItems,
+    pub allow: HashMap<&'static str, Vec<bool>>,
+}
+
+/// Files reachable code must not fuse from: the kernel contract region.
+const FMA_SEED_FILES: &[&str] = &[
+    "rust/src/tensor/simd.rs",
+    "rust/src/tensor/matmul.rs",
+    "rust/src/tensor/ops.rs",
+    "rust/src/quant/fused.rs",
+];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const ASSERT_MACROS: &[&str] =
+    &["assert", "assert_eq", "assert_ne", "debug_assert", "debug_assert_eq", "debug_assert_ne"];
+
+/// Run every graph analysis. `require_seeds` makes an empty seed set a
+/// hard error (the real tree must always have its entry points; a fixture
+/// tree that lost them is a broken fixture).
+pub fn run(
+    files: &[Prepared],
+    manifest: Option<&Manifest>,
+    require_seeds: bool,
+) -> Result<Vec<Finding>, String> {
+    // Graph scope: production sources only.
+    let graph_files: Vec<&Prepared> =
+        files.iter().filter(|p| p.items.rel.starts_with("rust/src/")).collect();
+    let items: Vec<&FileItems> = graph_files.iter().map(|p| &p.items).collect();
+    let graph = CallGraph::build(&items);
+
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // --- Seeds -----------------------------------------------------------
+    let mut serve_seeds: Vec<usize> = Vec::new();
+    let mut have_engine_serve = false;
+    let mut have_decode = false;
+    let mut have_store = false;
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let f = &items[node.file].fns[node.item];
+        if f.is_test {
+            continue;
+        }
+        let is_engine_serve = f.impl_type.as_deref() == Some("Engine") && f.name == "serve";
+        let is_decode = f.name == "decode_step_batch";
+        let is_store = f.impl_type.as_deref() == Some("ExpertStore") && f.is_pub;
+        let is_serve_pub = items[node.file].rel.starts_with("rust/src/serve/") && f.is_pub;
+        have_engine_serve |= is_engine_serve;
+        have_decode |= is_decode;
+        have_store |= is_store;
+        if is_engine_serve || is_decode || is_store || is_serve_pub {
+            serve_seeds.push(id);
+        }
+    }
+    if require_seeds {
+        if serve_seeds.is_empty() {
+            return Err("serve-no-panic: no entry-point seeds found \
+                 (Engine::serve / decode_step_batch / pub ExpertStore fns) — \
+                 the analyzer would silently check nothing"
+                .to_string());
+        }
+        if !(have_engine_serve && have_decode && have_store) {
+            return Err(format!(
+                "serve-no-panic: seed families missing (Engine::serve: {have_engine_serve}, \
+                 decode_step_batch: {have_decode}, ExpertStore pub fns: {have_store}) — \
+                 entry points moved without updating xtask/src/analyses.rs"
+            ));
+        }
+    }
+
+    let parent = graph.reach(&serve_seeds);
+
+    // --- serve-no-panic + serve-unguarded-index --------------------------
+    for (id, node) in graph.nodes.iter().enumerate() {
+        if parent[id].is_none() {
+            continue;
+        }
+        let prep = graph_files[node.file];
+        let f = &prep.items.fns[node.item];
+        if f.is_test {
+            continue;
+        }
+        let toks = &prep.items.toks;
+        let owned = |j: usize| graph.owner(node.file, j) == Some(node.item);
+        let chain = || graph.chain(&items, &parent, id);
+
+        // Panic-family ops.
+        let mut flagged_lines: HashSet<u32> = HashSet::new();
+        for j in f.body.clone() {
+            if !owned(j) {
+                continue;
+            }
+            let t = &toks[j];
+            let mut hit: Option<String> = None;
+            if t.kind == TokKind::Ident
+                && PANIC_MACROS.contains(&t.text.as_str())
+                && toks.get(j + 1).map(|n| n.is_punct("!")).unwrap_or(false)
+            {
+                hit = Some(format!("`{}!`", t.text));
+            } else if t.is_punct(".")
+                && toks.get(j + 1).map(|n| n.kind == TokKind::Ident).unwrap_or(false)
+                && toks.get(j + 2).map(|n| n.is_punct("(")).unwrap_or(false)
+            {
+                let name = toks[j + 1].text.as_str();
+                if name == "expect" {
+                    hit = Some("`.expect(…)`".to_string());
+                } else if name == "unwrap" && !is_poison_unwrap_tok(toks, j) {
+                    hit = Some("`.unwrap()` (not a poisoned-lock unwrap)".to_string());
+                }
+            }
+            if let Some(what) = hit {
+                let line = t.line;
+                if flagged_lines.insert(line) && !allowed(prep, "serve-no-panic", line) {
+                    findings.push(Finding {
+                        rel: prep.items.rel.clone(),
+                        line: line as usize,
+                        rule: "serve-no-panic",
+                        msg: format!(
+                            "{what} reachable from the serve entry points; chain: {}",
+                            chain()
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Unguarded indexing: one finding per fn, at the first site.
+        if !body_has_bounds_guard(toks, f.body.clone()) {
+            if let Some((line, recv)) = first_index_site(toks, f.body.clone(), &owned) {
+                if !allowed(prep, "serve-unguarded-index", line) {
+                    findings.push(Finding {
+                        rel: prep.items.rel.clone(),
+                        line: line as usize,
+                        rule: "serve-unguarded-index",
+                        msg: format!(
+                            "`{recv}[…]` in a serve-reachable fn with no bounds guard \
+                             (no assert/debug_assert/len/is_empty in `{}`); chain: {}",
+                            f.name,
+                            chain()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // --- no-fma-transitive -----------------------------------------------
+    let mut fma_seeds: Vec<usize> = Vec::new();
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let f = &items[node.file].fns[node.item];
+        if !f.is_test && FMA_SEED_FILES.contains(&items[node.file].rel.as_str()) {
+            fma_seeds.push(id);
+        }
+    }
+    if require_seeds && fma_seeds.is_empty() {
+        return Err("no-fma-transitive: kernel contract files have no functions — \
+             FMA_SEED_FILES in xtask/src/analyses.rs is stale"
+            .to_string());
+    }
+    let fma_parent = graph.reach(&fma_seeds);
+    for (id, node) in graph.nodes.iter().enumerate() {
+        if fma_parent[id].is_none() {
+            continue;
+        }
+        let prep = graph_files[node.file];
+        let f = &prep.items.fns[node.item];
+        if f.is_test {
+            continue;
+        }
+        let in_simd = prep.items.rel == "rust/src/tensor/simd.rs";
+        for j in f.body.clone() {
+            if graph.owner(node.file, j) != Some(node.item) {
+                continue;
+            }
+            let t = &prep.items.toks[j];
+            if t.kind == TokKind::Ident && is_fma_token(&t.text) {
+                let line = t.line;
+                // Only the pinned simd.rs region (which sets the no-fma
+                // mask there) and explicit no-fma-transitive allows exempt.
+                let exempt = allowed(prep, "no-fma-transitive", line)
+                    || (in_simd && allowed(prep, "no-fma", line));
+                if !exempt {
+                    findings.push(Finding {
+                        rel: prep.items.rel.clone(),
+                        line: line as usize,
+                        rule: "no-fma-transitive",
+                        msg: format!(
+                            "fused multiply-add `{}` reachable from the kernel contract \
+                             region; chain: {}",
+                            t.text,
+                            graph.chain(&items, &fma_parent, id)
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // --- float-hash-order (all non-test fns, reachable or not) -----------
+    for prep in &graph_files {
+        let hash_names = hash_typed_names(&prep.items.toks);
+        for f in &prep.items.fns {
+            if f.is_test {
+                continue;
+            }
+            for (line, name) in
+                float_accum_over_hash(&prep.items.toks, f.body.clone(), &hash_names)
+            {
+                if !allowed(prep, "float-hash-order", line) {
+                    findings.push(Finding {
+                        rel: prep.items.rel.clone(),
+                        line: line as usize,
+                        rule: "float-hash-order",
+                        msg: format!(
+                            "f32/f64 accumulation over `{name}` (HashMap/HashSet) iteration: \
+                             hash order is nondeterministic and breaks the pinned operation \
+                             DAG — iterate a sorted view instead"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // --- module-layering --------------------------------------------------
+    if let Some(man) = manifest {
+        let test_lines: Vec<Vec<bool>> =
+            graph_files.iter().map(|p| p.sf.is_test.clone()).collect();
+        let mg = ModuleGraph::build(&items, &test_lines);
+        findings.extend(check_layering(&mg, man));
+    }
+
+    // Dedup (nested fns can attribute one line to two functions).
+    findings.sort_by(|a, b| {
+        (a.rel.as_str(), a.line, a.rule).cmp(&(b.rel.as_str(), b.line, b.rule))
+    });
+    findings.dedup_by(|a, b| a.rel == b.rel && a.line == b.line && a.rule == b.rule);
+    Ok(findings)
+}
+
+fn allowed(prep: &Prepared, rule: &str, line: u32) -> bool {
+    prep.allow
+        .get(rule)
+        .and_then(|v| v.get(line.saturating_sub(1) as usize))
+        .copied()
+        .unwrap_or(false)
+}
+
+fn is_fma_token(text: &str) -> bool {
+    text == "mul_add" || text.contains("fmadd") || text.contains("vfma") || text.contains("fmla")
+}
+
+/// Token-level poison-unwrap check: `….lock().unwrap()` /
+/// `….wait(…).unwrap()` / `….wait_timeout(…).unwrap()`. `toks[dot]` is
+/// the `.` of `.unwrap(`; the receiver must be a call whose callee is one
+/// of the poison-returning names. Works across lines (an improvement over
+/// the old per-line check).
+fn is_poison_unwrap_tok(toks: &[Tok], dot: usize) -> bool {
+    if dot == 0 || !toks[dot - 1].is_punct(")") {
+        return false;
+    }
+    let mut depth = 0i32;
+    let mut k = dot - 1;
+    loop {
+        if toks[k].is_punct(")") {
+            depth += 1;
+        } else if toks[k].is_punct("(") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        if k == 0 {
+            return false;
+        }
+        k -= 1;
+    }
+    k.checked_sub(1)
+        .map(|m| {
+            toks[m].kind == TokKind::Ident
+                && matches!(toks[m].text.as_str(), "lock" | "wait" | "wait_timeout")
+        })
+        .unwrap_or(false)
+}
+
+/// Does the body contain any bounds-guard evidence: an assert-family
+/// macro, or a `.len(` / `.is_empty(` call?
+fn body_has_bounds_guard(toks: &[Tok], body: std::ops::Range<usize>) -> bool {
+    for j in body {
+        let t = &toks[j];
+        if t.kind == TokKind::Ident
+            && ASSERT_MACROS.contains(&t.text.as_str())
+            && toks.get(j + 1).map(|n| n.is_punct("!")).unwrap_or(false)
+        {
+            return true;
+        }
+        if t.is_punct(".")
+            && toks
+                .get(j + 1)
+                .map(|n| n.is_ident("len") || n.is_ident("is_empty"))
+                .unwrap_or(false)
+            && toks.get(j + 2).map(|n| n.is_punct("(")).unwrap_or(false)
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Identifier-receiver index sites (`recv[`, `x.field[`, `call()[`,
+/// `arr[i][j]`), skipping macro brackets (`vec![`), attributes (`#[`),
+/// array literals/types/patterns (previous token is punctuation), and
+/// array literals directly after expression keywords (`return [a, b]`).
+fn first_index_site(
+    toks: &[Tok],
+    body: std::ops::Range<usize>,
+    owned: &dyn Fn(usize) -> bool,
+) -> Option<(u32, String)> {
+    const EXPR_KEYWORDS: &[&str] = &["return", "break", "else", "in", "match", "if", "while"];
+    for j in body {
+        if !owned(j) || !toks[j].is_punct("[") {
+            continue;
+        }
+        let Some(k) = j.checked_sub(1) else {
+            continue;
+        };
+        let prev = &toks[k];
+        let ok = match prev.kind {
+            TokKind::Ident => !EXPR_KEYWORDS.contains(&prev.text.as_str()),
+            TokKind::Punct => prev.text == "]" || prev.text == ")",
+            _ => false,
+        };
+        if !ok {
+            continue;
+        }
+        // Name the receiver: walk back over a `a.b.c` chain to its head.
+        let mut m = k;
+        while m >= 2 && toks[m - 1].is_punct(".") && toks[m - 2].kind == TokKind::Ident {
+            m -= 2;
+        }
+        let recv = if toks[m].kind == TokKind::Ident {
+            toks[m].text.clone()
+        } else {
+            "expr".to_string()
+        };
+        return Some((toks[j].line, recv));
+    }
+    None
+}
+
+/// Names with a HashMap/HashSet type ascription or constructor assignment
+/// anywhere in the file (fields, params, lets — an over-approximation in
+/// the safe direction).
+fn hash_typed_names(toks: &[Tok]) -> HashSet<String> {
+    let mut out = HashSet::new();
+    let is_hash = |t: &Tok| t.is_ident("HashMap") || t.is_ident("HashSet");
+    for j in 0..toks.len() {
+        if toks[j].kind != TokKind::Ident {
+            continue;
+        }
+        let Some(next) = toks.get(j + 1) else {
+            continue;
+        };
+        if next.is_punct(":") {
+            // `name: … HashMap<…>` up to a terminator.
+            for t in toks.iter().skip(j + 2).take(8) {
+                if t.kind == TokKind::Punct
+                    && matches!(t.text.as_str(), "," | ";" | ")" | "{" | "}" | "=")
+                {
+                    break;
+                }
+                if is_hash(t) {
+                    out.insert(toks[j].text.clone());
+                    break;
+                }
+            }
+        } else if next.is_punct("=")
+            && toks
+                .get(j + 2)
+                .map(|t| t.is_ident("HashMap") || t.is_ident("HashSet"))
+                .unwrap_or(false)
+        {
+            out.insert(toks[j].text.clone());
+        }
+    }
+    out
+}
+
+/// Float-typed names in a token range: `name: f32`, `name = 0.5`,
+/// `name = -1.0f64`.
+fn float_typed_names(toks: &[Tok], range: std::ops::Range<usize>) -> HashSet<String> {
+    let mut out = HashSet::new();
+    for j in range {
+        if toks[j].kind != TokKind::Ident {
+            continue;
+        }
+        let Some(next) = toks.get(j + 1) else {
+            continue;
+        };
+        if next.is_punct(":") {
+            for t in toks.iter().skip(j + 2).take(4) {
+                if t.is_ident("f32") || t.is_ident("f64") {
+                    out.insert(toks[j].text.clone());
+                    break;
+                }
+                if t.kind == TokKind::Punct
+                    && !matches!(t.text.as_str(), "&" | "<" | "::")
+                    && t.text != "mut"
+                {
+                    break;
+                }
+            }
+        } else if next.is_punct("=") {
+            let mut k = j + 2;
+            if toks.get(k).map(|t| t.is_punct("-")).unwrap_or(false) {
+                k += 1;
+            }
+            if toks
+                .get(k)
+                .map(|t| t.kind == TokKind::Num && is_float_lit(&t.text))
+                .unwrap_or(false)
+            {
+                out.insert(toks[j].text.clone());
+            }
+        }
+    }
+    out
+}
+
+fn is_float_lit(text: &str) -> bool {
+    text.contains('.') || text.ends_with("f32") || text.ends_with("f64")
+}
+
+/// Find float accumulation inside hash-iterating loops (and
+/// `.sum::<f32>()` chains on hash receivers) within one fn body.
+/// Returns (line, hash name) per offense.
+fn float_accum_over_hash(
+    toks: &[Tok],
+    body: std::ops::Range<usize>,
+    hash_names: &HashSet<String>,
+) -> Vec<(u32, String)> {
+    let mut out = Vec::new();
+    let floats = float_typed_names(toks, body.clone());
+    let is_float_evidence = |t: &Tok| match t.kind {
+        TokKind::Num => is_float_lit(&t.text),
+        TokKind::Ident => {
+            t.text == "f32" || t.text == "f64" || floats.contains(&t.text)
+        }
+        _ => false,
+    };
+
+    // `for pat in <hash expr> { … accum … }`
+    let mut j = body.start;
+    while j < body.end {
+        if !toks[j].is_ident("for")
+            || toks.get(j + 1).map(|t| t.is_punct("<")).unwrap_or(false)
+        {
+            j += 1;
+            continue;
+        }
+        // Locate `in` at bracket depth 0, then the body `{`.
+        let mut depth = 0i32;
+        let mut k = j + 1;
+        let mut in_at = None;
+        while k < body.end {
+            let t = &toks[k];
+            match t.text.as_str() {
+                "(" | "[" if t.kind == TokKind::Punct => depth += 1,
+                ")" | "]" if t.kind == TokKind::Punct => depth -= 1,
+                "in" if t.kind == TokKind::Ident && depth == 0 => {
+                    in_at = Some(k);
+                }
+                "{" if t.kind == TokKind::Punct && depth == 0 => break,
+                _ => {}
+            }
+            if in_at.is_some() {
+                break;
+            }
+            k += 1;
+        }
+        let Some(in_at) = in_at else {
+            j += 1;
+            continue;
+        };
+        // Iterated expression: up to the loop brace.
+        let mut depth = 0i32;
+        let mut e = in_at + 1;
+        let mut brace = None;
+        while e < body.end {
+            let t = &toks[e];
+            match t.text.as_str() {
+                "(" | "[" if t.kind == TokKind::Punct => depth += 1,
+                ")" | "]" if t.kind == TokKind::Punct => depth -= 1,
+                "{" if t.kind == TokKind::Punct && depth == 0 => {
+                    brace = Some(e);
+                    break;
+                }
+                _ => {}
+            }
+            e += 1;
+        }
+        let Some(brace) = brace else {
+            j = in_at + 1;
+            continue;
+        };
+        let hash_in_expr = toks[in_at + 1..brace].iter().find_map(|t| {
+            (t.kind == TokKind::Ident
+                && (hash_names.contains(&t.text)
+                    || t.text == "HashMap"
+                    || t.text == "HashSet"))
+                .then(|| t.text.clone())
+        });
+        let loop_end = matching_brace(toks, brace).unwrap_or(body.end);
+        if let Some(hname) = hash_in_expr {
+            for a in brace..loop_end {
+                let t = &toks[a];
+                if t.kind == TokKind::Punct
+                    && matches!(t.text.as_str(), "+=" | "-=" | "*=")
+                {
+                    // LHS ident directly before the op, or float evidence
+                    // in the RHS up to `;`.
+                    let lhs_float = a
+                        .checked_sub(1)
+                        .map(|p| {
+                            toks[p].kind == TokKind::Ident && floats.contains(&toks[p].text)
+                        })
+                        .unwrap_or(false);
+                    let rhs_float = toks[a + 1..loop_end]
+                        .iter()
+                        .take_while(|t| !t.is_punct(";"))
+                        .any(|t| is_float_evidence(t));
+                    if lhs_float || rhs_float {
+                        out.push((t.line, hname.clone()));
+                    }
+                }
+            }
+        }
+        j = brace + 1;
+    }
+
+    // `<hash>.iter().map(…).sum::<f32>()` chains.
+    for j in body.clone() {
+        if !toks[j].is_ident("sum") {
+            continue;
+        }
+        let is_float_sum = toks.get(j + 1).map(|t| t.is_punct("::")).unwrap_or(false)
+            && toks.get(j + 2).map(|t| t.is_punct("<")).unwrap_or(false)
+            && toks
+                .get(j + 3)
+                .map(|t| t.is_ident("f32") || t.is_ident("f64"))
+                .unwrap_or(false);
+        if !is_float_sum {
+            continue;
+        }
+        // Statement start: walk back to `;` / `{` / `}`.
+        let mut s = j;
+        while s > body.start {
+            let t = &toks[s - 1];
+            if t.kind == TokKind::Punct && matches!(t.text.as_str(), ";" | "{" | "}") {
+                break;
+            }
+            s -= 1;
+        }
+        if let Some(h) = toks[s..j]
+            .iter()
+            .find(|t| t.kind == TokKind::Ident && hash_names.contains(&t.text))
+        {
+            out.push((toks[j].line, h.text.clone()));
+        }
+    }
+    out
+}
+
+/// Index just past the brace matching `toks[open]`.
+fn matching_brace(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("{") {
+            depth += 1;
+        } else if t.is_punct("}") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j + 1);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Layering manifest
+// ---------------------------------------------------------------------
+
+/// Parsed `layering.toml`: module → allowed dependency set (or `*`).
+pub struct Manifest {
+    pub rel: String,
+    /// module → (allowed targets or None for `*`, 1-based line).
+    pub entries: BTreeMap<String, (Option<Vec<String>>, u32)>,
+}
+
+/// Parse the layering manifest (a deliberate TOML subset: `# comments`,
+/// `name = []`, `name = ["a", "b"]`, `name = "*"`).
+pub fn parse_manifest(rel: &str, text: &str) -> Result<Manifest, String> {
+    let mut entries = BTreeMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name, value)) = line.split_once('=') else {
+            return Err(format!("{rel}:{}: expected `module = [...]`", i + 1));
+        };
+        let name = name.trim().to_string();
+        let value = value.trim();
+        let allowed = if value == "\"*\"" {
+            None
+        } else if value.starts_with('[') && value.ends_with(']') {
+            let inner = &value[1..value.len() - 1];
+            let mut list = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let part = part.trim_matches('"');
+                if part.is_empty() || part.contains(|c: char| !c.is_ascii_alphanumeric() && c != '_')
+                {
+                    return Err(format!("{rel}:{}: bad module name `{part}`", i + 1));
+                }
+                list.push(part.to_string());
+            }
+            Some(list)
+        } else {
+            return Err(format!("{rel}:{}: value must be a list or \"*\"", i + 1));
+        };
+        if entries.insert(name.clone(), (allowed, (i + 1) as u32)).is_some() {
+            return Err(format!("{rel}:{}: duplicate entry for `{name}`", i + 1));
+        }
+    }
+    Ok(Manifest { rel: rel.to_string(), entries })
+}
+
+/// Check the module graph against the manifest: unknown manifest entries,
+/// uncovered modules, disallowed edges, cycles.
+fn check_layering(mg: &ModuleGraph, man: &Manifest) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (name, (_, line)) in &man.entries {
+        if !mg.modules.contains(name) {
+            findings.push(Finding {
+                rel: man.rel.clone(),
+                line: *line as usize,
+                rule: "module-layering",
+                msg: format!("manifest entry `{name}` matches no module under rust/src"),
+            });
+        }
+    }
+    for m in &mg.modules {
+        if !man.entries.contains_key(m) {
+            findings.push(Finding {
+                rel: man.rel.clone(),
+                line: 1,
+                rule: "module-layering",
+                msg: format!("module `{m}` has no entry in the layering manifest"),
+            });
+        }
+    }
+    for (from, tos) in &mg.edges {
+        let Some((allowed, _)) = man.entries.get(from) else {
+            continue; // already reported as uncovered
+        };
+        let Some(allowed) = allowed else {
+            continue; // `*`
+        };
+        for (to, (rel, line)) in tos {
+            if !allowed.contains(to) {
+                findings.push(Finding {
+                    rel: rel.clone(),
+                    line: *line as usize,
+                    rule: "module-layering",
+                    msg: format!(
+                        "module `{from}` must not depend on `{to}` \
+                         (edge not allowed by {}); first use here",
+                        man.rel
+                    ),
+                });
+            }
+        }
+    }
+    if let Some(cycle) = mg.find_cycle() {
+        let head = cycle.first().cloned().unwrap_or_default();
+        let evidence = cycle
+            .first()
+            .zip(cycle.get(1))
+            .and_then(|(a, b)| mg.edges.get(a).and_then(|e| e.get(b)).cloned());
+        let (rel, line) =
+            evidence.unwrap_or_else(|| (man.rel.clone(), 1));
+        findings.push(Finding {
+            rel,
+            line: line as usize,
+            rule: "module-layering",
+            msg: format!(
+                "module dependency cycle: {} (layering must be a DAG); \
+                 first edge of the cycle from `{head}` shown",
+                cycle.join(" → ")
+            ),
+        });
+    }
+    findings
+}

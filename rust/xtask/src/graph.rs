@@ -1,0 +1,586 @@
+//! The two graphs the transitive analyses run on.
+//!
+//! **Call graph** — nodes are the functions extracted by [`crate::items`],
+//! edges come from call-site extraction over body tokens. Resolution is
+//! name-based and deliberately over-approximate in the safe direction
+//! (more edges → more reachability → more findings, never fewer):
+//!
+//! - `recv.name(…)` (method call) links to *every* crate method named
+//!   `name`;
+//! - `Qual::name(…)` prefers candidates whose `impl` type or module
+//!   matches the qualifier (`Self` resolves to the caller's impl type),
+//!   falling back to all candidates when nothing matches;
+//! - `name(…)` (free call) prefers same-file candidates (a local `fn`
+//!   cannot be shadowed by an import — that would be ambiguous), falling
+//!   back to all candidates.
+//!
+//! Unresolved names (std, vendored crates) produce no edges. Tokens owned
+//! by a nested `fn` are attributed to the nested function only.
+//!
+//! **Module graph** — top-level `rust/src` modules with an edge `a → b`
+//! for every non-test `use crate::b::…` declaration or inline
+//! `crate::b::…` path in a file of module `a` (`super::` paths are
+//! resolved against the file's module first). Each edge remembers its
+//! first evidence site for error reporting. `lib.rs` and `main.rs` are
+//! crate roots and exempt.
+//!
+//! Reachability ([`CallGraph::reach`]) is a BFS that records parent links,
+//! so every finding can print the call chain that makes it reachable —
+//! the analyzer's answer to "why is this function on the hot path?".
+
+use crate::items::{file_module, FileItems};
+use crate::lexer::{Tok, TokKind};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+
+/// One function node in the flattened call graph.
+pub struct FnNode {
+    /// Index into the `files` slice the graph was built from.
+    pub file: usize,
+    /// Index into that file's `fns`.
+    pub item: usize,
+}
+
+pub struct CallGraph {
+    pub nodes: Vec<FnNode>,
+    /// Adjacency: callee node ids per caller node id (deduped, sorted).
+    pub edges: Vec<Vec<usize>>,
+    /// Per file, per token: the innermost fn (local index) owning it.
+    owners: Vec<Vec<Option<usize>>>,
+}
+
+/// Human-readable label for a node: `Engine::serve` or `module::free_fn`.
+pub fn node_label(files: &[&FileItems], node: &FnNode) -> String {
+    let f = &files[node.file].fns[node.item];
+    match &f.impl_type {
+        Some(t) => format!("{t}::{}", f.name),
+        None => match f.module.last() {
+            Some(m) => format!("{m}::{}", f.name),
+            None => f.name.clone(),
+        },
+    }
+}
+
+enum CallKind {
+    Free,
+    Method,
+    Path(Vec<String>),
+}
+
+struct CallSite {
+    name: String,
+    kind: CallKind,
+}
+
+impl CallGraph {
+    pub fn build(files: &[&FileItems]) -> CallGraph {
+        let mut nodes: Vec<FnNode> = Vec::new();
+        for (fi, f) in files.iter().enumerate() {
+            for idx in 0..f.fns.len() {
+                nodes.push(FnNode { file: fi, item: idx });
+            }
+        }
+        let mut by_name: HashMap<&str, Vec<usize>> = HashMap::new();
+        for (id, n) in nodes.iter().enumerate() {
+            by_name.entry(&files[n.file].fns[n.item].name).or_default().push(id);
+        }
+
+        // Token ownership per file: innermost fn body wins, so a nested
+        // fn's calls are not attributed to its parent.
+        let owners: Vec<Vec<Option<usize>>> = files
+            .iter()
+            .map(|f| {
+                let mut own: Vec<Option<usize>> = vec![None; f.toks.len()];
+                let mut order: Vec<usize> = (0..f.fns.len()).collect();
+                // Wider bodies first, so inner (narrower) ranges overwrite.
+                order.sort_by_key(|&i| std::cmp::Reverse(f.fns[i].body.len()));
+                for i in order {
+                    for t in f.fns[i].body.clone() {
+                        own[t] = Some(i);
+                    }
+                }
+                own
+            })
+            .collect();
+
+        let mut edges: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+        for (id, node) in nodes.iter().enumerate() {
+            let f = &files[node.file];
+            let item = &f.fns[node.item];
+            for j in item.body.clone() {
+                if owners[node.file][j] != Some(node.item) {
+                    continue;
+                }
+                let Some(site) = call_site_at(&f.toks, j) else {
+                    continue;
+                };
+                let callees = resolve(&site, node, &nodes, &by_name, files);
+                for c in callees {
+                    if c != id {
+                        edges[id].push(c);
+                    }
+                }
+            }
+            edges[id].sort_unstable();
+            edges[id].dedup();
+        }
+        CallGraph { nodes, edges, owners }
+    }
+
+    /// Innermost fn (local index within its file) owning token `tok` of
+    /// file `file`.
+    pub fn owner(&self, file: usize, tok: usize) -> Option<usize> {
+        self.owners.get(file).and_then(|v| v.get(tok)).copied().flatten()
+    }
+
+    /// BFS from `seeds`; returns `parent[node] = Some(caller)` for every
+    /// reachable node (seeds map to themselves).
+    pub fn reach(&self, seeds: &[usize]) -> Vec<Option<usize>> {
+        let mut parent: Vec<Option<usize>> = vec![None; self.nodes.len()];
+        let mut seen = vec![false; self.nodes.len()];
+        let mut q: VecDeque<usize> = VecDeque::new();
+        for &s in seeds {
+            if !seen[s] {
+                seen[s] = true;
+                parent[s] = Some(s);
+                q.push_back(s);
+            }
+        }
+        while let Some(u) = q.pop_front() {
+            for &v in &self.edges[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    parent[v] = Some(u);
+                    q.push_back(v);
+                }
+            }
+        }
+        parent
+    }
+
+    /// Call chain from a seed to `node`, as `A::b → C::d` labels. Longest
+    /// chains are elided in the middle.
+    pub fn chain(&self, files: &[&FileItems], parent: &[Option<usize>], node: usize) -> String {
+        let mut path: Vec<usize> = vec![node];
+        let mut cur = node;
+        while let Some(p) = parent[cur] {
+            if p == cur {
+                break;
+            }
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+        let labels: Vec<String> =
+            path.iter().map(|&id| node_label(files, &self.nodes[id])).collect();
+        if labels.len() > 8 {
+            let head = &labels[..4];
+            let tail = &labels[labels.len() - 3..];
+            format!("{} → … → {}", head.join(" → "), tail.join(" → "))
+        } else {
+            labels.join(" → ")
+        }
+    }
+}
+
+/// If token `j` is the name of a call (`name(` with a non-definition,
+/// non-macro context), classify it.
+fn call_site_at(toks: &[Tok], j: usize) -> Option<CallSite> {
+    let t = toks.get(j)?;
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    if !toks.get(j + 1)?.is_punct("(") {
+        return None;
+    }
+    let prev = j.checked_sub(1).map(|k| &toks[k]);
+    if let Some(p) = prev {
+        if p.is_ident("fn") {
+            return None; // definition
+        }
+        if p.is_punct(".") {
+            return Some(CallSite { name: t.text.clone(), kind: CallKind::Method });
+        }
+        if p.is_punct("::") {
+            // Walk the qualifier path back: `a::b::name(` → [a, b].
+            let mut segs: Vec<String> = Vec::new();
+            let mut k = j - 1;
+            while k >= 1
+                && toks[k].is_punct("::")
+                && toks[k - 1].kind == TokKind::Ident
+            {
+                segs.push(toks[k - 1].text.clone());
+                if k < 2 {
+                    break;
+                }
+                k -= 2;
+            }
+            segs.reverse();
+            return Some(CallSite { name: t.text.clone(), kind: CallKind::Path(segs) });
+        }
+    }
+    Some(CallSite { name: t.text.clone(), kind: CallKind::Free })
+}
+
+fn resolve(
+    site: &CallSite,
+    caller: &FnNode,
+    nodes: &[FnNode],
+    by_name: &HashMap<&str, Vec<usize>>,
+    files: &[&FileItems],
+) -> Vec<usize> {
+    let Some(cands) = by_name.get(site.name.as_str()) else {
+        return Vec::new();
+    };
+    match &site.kind {
+        CallKind::Method => cands
+            .iter()
+            .copied()
+            .filter(|&c| files[nodes[c].file].fns[nodes[c].item].impl_type.is_some())
+            .collect(),
+        CallKind::Path(segs) => {
+            let caller_item = &files[caller.file].fns[caller.item];
+            let qual: Option<String> = match segs.last().map(String::as_str) {
+                Some("Self") | Some("self") => caller_item.impl_type.clone(),
+                Some(q) => Some(q.to_string()),
+                None => None,
+            };
+            let Some(q) = qual else {
+                return cands.clone();
+            };
+            let matched: Vec<usize> = cands
+                .iter()
+                .copied()
+                .filter(|&c| {
+                    let f = &files[nodes[c].file].fns[nodes[c].item];
+                    f.impl_type.as_deref() == Some(q.as_str())
+                        || f.module.last().map(String::as_str) == Some(q.as_str())
+                })
+                .collect();
+            if matched.is_empty() {
+                cands.clone()
+            } else {
+                matched
+            }
+        }
+        CallKind::Free => {
+            let same_file: Vec<usize> =
+                cands.iter().copied().filter(|&c| nodes[c].file == caller.file).collect();
+            if same_file.is_empty() {
+                cands.clone()
+            } else {
+                same_file
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Module graph
+// ---------------------------------------------------------------------
+
+/// Evidence for one module edge: (file, 1-based line) of its first use.
+pub type Evidence = (String, u32);
+
+pub struct ModuleGraph {
+    /// Top-level `rust/src` modules present in the tree, sorted.
+    pub modules: Vec<String>,
+    /// `from → to → first evidence`, both ends in `modules`.
+    pub edges: BTreeMap<String, BTreeMap<String, Evidence>>,
+}
+
+impl ModuleGraph {
+    /// Build from the extracted files. `test_lines[f][l]` marks 1-based
+    /// line `l+1` of file `f` as test code (inline `crate::` paths inside
+    /// test regions are skipped, matching the `use`-decl test flag).
+    pub fn build(files: &[&FileItems], test_lines: &[Vec<bool>]) -> ModuleGraph {
+        let mut modules: BTreeSet<String> = BTreeSet::new();
+        for f in files {
+            if let Some(top) = top_module(&f.rel) {
+                modules.insert(top);
+            }
+        }
+        let mut edges: BTreeMap<String, BTreeMap<String, Evidence>> = BTreeMap::new();
+        let mut add = |from: &str, to: &str, ev: Evidence| {
+            if from != to {
+                edges
+                    .entry(from.to_string())
+                    .or_default()
+                    .entry(to.to_string())
+                    .or_insert(ev);
+            }
+        };
+        for (fi, f) in files.iter().enumerate() {
+            let Some(own) = top_module(&f.rel) else {
+                continue; // lib.rs / main.rs / out-of-tree: crate roots, exempt
+            };
+            let is_test_line = |line: u32| {
+                test_lines
+                    .get(fi)
+                    .and_then(|v| v.get(line.saturating_sub(1) as usize))
+                    .copied()
+                    .unwrap_or(false)
+            };
+            // `use` declarations.
+            for u in &f.uses {
+                if u.is_test {
+                    continue;
+                }
+                if let Some(to) = resolve_target(&u.segments, &f.rel, &modules) {
+                    add(&own, &to, (f.rel.clone(), u.line));
+                }
+            }
+            // Inline qualified paths: `crate::x::…` / `super::…` in code.
+            for (j, t) in f.toks.iter().enumerate() {
+                if t.kind != TokKind::Ident || (t.text != "crate" && t.text != "super") {
+                    continue;
+                }
+                if !f.toks.get(j + 1).map(|n| n.is_punct("::")).unwrap_or(false) {
+                    continue;
+                }
+                // Skip the path head of a `use` (already handled) — a use
+                // keyword directly before, or before a brace group.
+                if j > 0 && f.toks[j - 1].is_ident("use") {
+                    continue;
+                }
+                if is_test_line(t.line) {
+                    continue;
+                }
+                let mut segs: Vec<String> = vec![t.text.clone()];
+                let mut k = j + 1;
+                while f.toks.get(k).map(|p| p.is_punct("::")).unwrap_or(false) {
+                    match f.toks.get(k + 1) {
+                        Some(n) if n.kind == TokKind::Ident => {
+                            segs.push(n.text.clone());
+                            k += 2;
+                        }
+                        _ => break,
+                    }
+                }
+                if let Some(to) = resolve_target(&segs, &f.rel, &modules) {
+                    add(&own, &to, (f.rel.clone(), t.line));
+                }
+            }
+        }
+        ModuleGraph { modules: modules.into_iter().collect(), edges }
+    }
+
+    /// First dependency cycle among the edges, as a module path
+    /// `a → b → a`, if any. Recursive DFS — module counts are tiny.
+    pub fn find_cycle(&self) -> Option<Vec<String>> {
+        fn dfs(
+            m: &str,
+            edges: &BTreeMap<String, BTreeMap<String, Evidence>>,
+            color: &mut BTreeMap<String, u8>, // 1 = on stack, 2 = done
+            path: &mut Vec<String>,
+        ) -> Option<Vec<String>> {
+            color.insert(m.to_string(), 1);
+            path.push(m.to_string());
+            if let Some(succ) = edges.get(m) {
+                for next in succ.keys() {
+                    match color.get(next).copied().unwrap_or(0) {
+                        1 => {
+                            // Back edge: the cycle is `path` from `next` on.
+                            let from = path.iter().position(|x| x == next).unwrap_or(0);
+                            let mut cyc: Vec<String> = path[from..].to_vec();
+                            cyc.push(next.clone());
+                            return Some(cyc);
+                        }
+                        0 => {
+                            if let Some(c) = dfs(next, edges, color, path) {
+                                return Some(c);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            path.pop();
+            color.insert(m.to_string(), 2);
+            None
+        }
+        let mut color: BTreeMap<String, u8> = BTreeMap::new();
+        let mut path: Vec<String> = Vec::new();
+        for m in &self.modules {
+            if color.get(m).copied().unwrap_or(0) == 0 {
+                if let Some(c) = dfs(m, &self.edges, &mut color, &mut path) {
+                    return Some(c);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Top-level module of a file under `rust/src` (None for crate roots).
+pub fn top_module(rel: &str) -> Option<String> {
+    let m = file_module(rel);
+    match m.first().map(String::as_str) {
+        None | Some("main") => None,
+        Some(top) => Some(top.to_string()),
+    }
+}
+
+/// Resolve a path's target top-level module, if it lands in a *different*
+/// known module: `crate::tensor::ops` → `tensor`; `super::…` walks up from
+/// the file's own module.
+fn resolve_target(segs: &[String], rel: &str, known: &BTreeSet<String>) -> Option<String> {
+    let mut base: Vec<String>;
+    let mut rest: &[String] = segs;
+    match segs.first().map(String::as_str) {
+        Some("crate") => {
+            base = Vec::new();
+            rest = &segs[1..];
+        }
+        Some("super") => {
+            base = file_module(rel);
+            base.pop();
+            rest = &segs[1..];
+            while rest.first().map(String::as_str) == Some("super") {
+                base.pop();
+                rest = &rest[1..];
+            }
+        }
+        Some("self") => {
+            base = file_module(rel);
+            rest = &segs[1..];
+        }
+        _ => return None, // std / vendored / relative-2015 paths
+    }
+    let full_head = base.first().cloned().or_else(|| rest.first().cloned())?;
+    known.contains(&full_head).then_some(full_head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::items::extract;
+
+    fn extract_all(files: &[(&str, &str)]) -> Vec<FileItems> {
+        files.iter().map(|(r, t)| extract(r, t)).collect()
+    }
+
+    fn find(files: &[&FileItems], g: &CallGraph, label: &str) -> usize {
+        (0..g.nodes.len())
+            .find(|&i| node_label(files, &g.nodes[i]) == label)
+            .unwrap_or_else(|| panic!("no node {label}"))
+    }
+
+    #[test]
+    fn free_and_method_calls_link() {
+        let items = extract_all(&[(
+            "rust/src/serve/engine.rs",
+            "pub struct Engine;\nimpl Engine {\n  pub fn serve(&self) { helper(); self.step(); }\n  fn step(&self) {}\n}\nfn helper() { leaf(); }\nfn leaf() {}\nfn unrelated() {}",
+        )]);
+        let files: Vec<&FileItems> = items.iter().collect();
+        let g = CallGraph::build(&files);
+        let serve = find(&files, &g, "Engine::serve");
+        let parent = g.reach(&[serve]);
+        let leaf = find(&files, &g, "engine::leaf");
+        let step = find(&files, &g, "Engine::step");
+        let unrelated = find(&files, &g, "engine::unrelated");
+        assert!(parent[leaf].is_some());
+        assert!(parent[step].is_some());
+        assert!(parent[unrelated].is_none());
+        let chain = g.chain(&files, &parent, leaf);
+        assert_eq!(chain, "Engine::serve → engine::helper → engine::leaf");
+    }
+
+    #[test]
+    fn cross_file_path_calls_prefer_qualifier() {
+        let items = extract_all(&[
+            (
+                "rust/src/serve/engine.rs",
+                "pub fn run() { crate::tensor::ops::apply(); Store::get(); }\npub struct X;",
+            ),
+            ("rust/src/tensor/ops.rs", "pub fn apply() {}"),
+            (
+                "rust/src/model/store.rs",
+                "pub struct Store;\nimpl Store { pub fn get() {} }\npub fn apply() {}",
+            ),
+        ]);
+        let files: Vec<&FileItems> = items.iter().collect();
+        let g = CallGraph::build(&files);
+        let run = find(&files, &g, "engine::run");
+        let parent = g.reach(&[run]);
+        let ops_apply = find(&files, &g, "ops::apply");
+        let store_apply = find(&files, &g, "store::apply");
+        let get = find(&files, &g, "Store::get");
+        assert!(parent[ops_apply].is_some(), "qualified path must match its module");
+        assert!(parent[store_apply].is_none(), "qualifier excludes other modules");
+        assert!(parent[get].is_some());
+    }
+
+    #[test]
+    fn nested_fn_calls_not_attributed_to_parent() {
+        let items = extract_all(&[(
+            "rust/src/a.rs",
+            "pub fn outer() { fn inner() { secret(); } inner(); }\nfn secret() {}",
+        )]);
+        let files: Vec<&FileItems> = items.iter().collect();
+        let g = CallGraph::build(&files);
+        let outer = find(&files, &g, "a::outer");
+        let inner = find(&files, &g, "a::inner");
+        let secret = find(&files, &g, "a::secret");
+        assert!(g.edges[outer].contains(&inner));
+        assert!(!g.edges[outer].contains(&secret));
+        assert!(g.edges[inner].contains(&secret));
+        // Still transitively reachable — through inner.
+        let parent = g.reach(&[outer]);
+        assert!(parent[secret].is_some());
+    }
+
+    #[test]
+    fn module_graph_sees_uses_and_inline_paths() {
+        let items = extract_all(&[
+            (
+                "rust/src/serve/engine.rs",
+                "use crate::model::Model;\npub fn f() { crate::tensor::ops::apply(); }\n#[cfg(test)]\nmod tests { use crate::report::Summary; }",
+            ),
+            ("rust/src/model/mod.rs", "pub struct Model;"),
+            ("rust/src/tensor/ops.rs", "pub fn apply() {}"),
+            ("rust/src/report/mod.rs", "pub struct Summary;"),
+        ]);
+        let files: Vec<&FileItems> = items.iter().collect();
+        // Test-line mask: mark the cfg(test) module lines of file 0.
+        let mut masks: Vec<Vec<bool>> = items.iter().map(|_| vec![false; 64]).collect();
+        for l in 2..5 {
+            masks[0][l] = true; // lines 3..=5 (0-based idx 2..) are the test mod
+        }
+        let mg = ModuleGraph::build(&files, &masks);
+        let serve = mg.edges.get("serve").expect("serve edges");
+        assert!(serve.contains_key("model"));
+        assert!(serve.contains_key("tensor"));
+        assert!(!serve.contains_key("report"), "test-only use must not create an edge");
+    }
+
+    #[test]
+    fn module_cycle_is_found() {
+        let items = extract_all(&[
+            ("rust/src/a/mod.rs", "use crate::b::X;"),
+            ("rust/src/b/mod.rs", "use crate::c::Y;\npub struct X;"),
+            ("rust/src/c/mod.rs", "use crate::a::Z;\npub struct Y;"),
+        ]);
+        let files: Vec<&FileItems> = items.iter().collect();
+        let masks: Vec<Vec<bool>> = items.iter().map(|_| vec![false; 8]).collect();
+        let mg = ModuleGraph::build(&files, &masks);
+        let cyc = mg.find_cycle().expect("cycle");
+        assert!(cyc.len() >= 3, "cycle {cyc:?}");
+        assert_eq!(cyc.first(), cyc.last());
+    }
+
+    #[test]
+    fn super_paths_resolve() {
+        let items = extract_all(&[
+            ("rust/src/model/forward.rs", "use super::store::Store;\nuse crate::quant::Q;"),
+            ("rust/src/model/store.rs", "pub struct Store;"),
+            ("rust/src/quant/mod.rs", "pub struct Q;"),
+        ]);
+        let files: Vec<&FileItems> = items.iter().collect();
+        let masks: Vec<Vec<bool>> = items.iter().map(|_| vec![false; 8]).collect();
+        let mg = ModuleGraph::build(&files, &masks);
+        // super:: stays inside `model` (self-edge, dropped); crate::quant links.
+        let model = mg.edges.get("model").expect("model edges");
+        assert!(model.contains_key("quant"));
+        assert_eq!(model.len(), 1);
+    }
+}

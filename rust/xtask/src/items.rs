@@ -1,0 +1,577 @@
+//! Item extraction — fn / impl / mod / use spans per file.
+//!
+//! Consumes the token stream from [`crate::lexer`] and produces the symbol
+//! inventory the graphs are built from: every function with its enclosing
+//! `impl` type and inline-module path, its body as a token range, its
+//! visibility, and whether it is test code; plus every `use` declaration
+//! with brace groups expanded into leaf paths.
+//!
+//! The extractor is a single pass with an explicit scope stack (`mod` /
+//! `impl`+`trait` / `fn` / plain block). It is *not* a parser — it only
+//! tracks the brace structure and the handful of keywords that delimit
+//! items, which is exactly enough to answer "which function does this
+//! token belong to" and "which modules does this file import from". The
+//! known simplifications (same spirit as `scan.rs`): out-of-line
+//! `mod x;` declarations are ignored (module structure comes from file
+//! paths), and `#[cfg(test)]` detection matches the literal `cfg(test…)` /
+//! `#[test]` shapes used in this repo.
+
+use crate::lexer::{tokenize, Tok, TokKind};
+
+/// One extracted function (or default trait method).
+pub struct FnItem {
+    pub name: String,
+    /// Enclosing `impl`/`trait` type name, if any (`ExpertStore`, `Engine`).
+    pub impl_type: Option<String>,
+    /// Module path: file-derived segments plus inline `mod` names.
+    pub module: Vec<String>,
+    pub is_pub: bool,
+    pub is_test: bool,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token range of the body, including both braces. Empty for
+    /// body-less declarations (which are not recorded).
+    pub body: std::ops::Range<usize>,
+}
+
+/// One leaf path of a `use` declaration (`use a::{b, c::d}` yields two).
+pub struct UseDecl {
+    /// 1-based line of the `use` keyword.
+    pub line: u32,
+    /// Path segments, `*` for globs; `as` aliases are dropped.
+    pub segments: Vec<String>,
+    pub is_test: bool,
+}
+
+/// The symbol inventory of one file.
+pub struct FileItems {
+    pub rel: String,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnItem>,
+    pub uses: Vec<UseDecl>,
+}
+
+/// Module path for a repo-relative file: `rust/src/tensor/ops.rs` →
+/// `[tensor, ops]`, `rust/src/report/mod.rs` → `[report]`,
+/// `rust/src/lib.rs` → `[]`.
+pub fn file_module(rel: &str) -> Vec<String> {
+    let Some(p) = rel.strip_prefix("rust/src/") else {
+        return Vec::new();
+    };
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let mut segs: Vec<String> = p.split('/').map(|s| s.to_string()).collect();
+    if segs.last().map(String::as_str) == Some("mod") {
+        segs.pop();
+    }
+    if segs.last().map(String::as_str) == Some("lib") {
+        segs.pop();
+    }
+    segs
+}
+
+enum ScopeKind {
+    Mod(String),
+    /// `impl`/`trait` block with the resolved type name.
+    Holder(Option<String>),
+    Fn(usize),
+    Block,
+}
+
+struct Scope {
+    kind: ScopeKind,
+    test: bool,
+}
+
+/// Extract items from one file's source.
+pub fn extract(rel: &str, text: &str) -> FileItems {
+    let toks = tokenize(text);
+    let file_is_test = rel.starts_with("rust/tests/") || rel.starts_with("rust/benches/");
+    let base_module = file_module(rel);
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut uses: Vec<UseDecl> = Vec::new();
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut pending_test = false;
+    let n = toks.len();
+    let mut i = 0usize;
+
+    let cur_test = |scopes: &[Scope], pending: bool| -> bool {
+        file_is_test || pending || scopes.iter().any(|s| s.test)
+    };
+    let cur_holder = |scopes: &[Scope]| -> Option<String> {
+        scopes.iter().rev().find_map(|s| match &s.kind {
+            ScopeKind::Holder(t) => Some(t.clone()),
+            _ => None,
+        })
+    };
+    let cur_module = |scopes: &[Scope], base: &[String]| -> Vec<String> {
+        let mut m = base.to_vec();
+        for s in scopes {
+            if let ScopeKind::Mod(name) = &s.kind {
+                m.push(name.clone());
+            }
+        }
+        m
+    };
+
+    while i < n {
+        let t = &toks[i];
+        match t.kind {
+            TokKind::Punct if t.text == "#" => {
+                // Attribute: `#[…]` arms the test flag when it is a
+                // `#[test]` / `#[cfg(test…)]` shape; `#![…]` never does.
+                let inner = toks.get(i + 1).map(|t| t.is_punct("!")).unwrap_or(false);
+                let open = i + 1 + usize::from(inner);
+                if toks.get(open).map(|t| t.is_punct("[")).unwrap_or(false) {
+                    let end = skip_balanced(&toks, open, "[", "]");
+                    if !inner && attr_is_test(&toks[open + 1..end.saturating_sub(1)]) {
+                        pending_test = true;
+                    }
+                    i = end;
+                } else {
+                    i += 1;
+                }
+            }
+            TokKind::Ident if t.text == "mod" => {
+                let name =
+                    toks.get(i + 1).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.clone());
+                // `mod name {` opens an inline module; `mod name;` is
+                // out-of-line and contributes nothing here.
+                if let (Some(name), Some(br)) = (name, toks.get(i + 2)) {
+                    if br.is_punct("{") {
+                        scopes.push(Scope {
+                            kind: ScopeKind::Mod(name),
+                            test: cur_test(&scopes, pending_test),
+                        });
+                        pending_test = false;
+                        i += 3;
+                        continue;
+                    }
+                }
+                pending_test = false;
+                i += 1;
+            }
+            TokKind::Ident if t.text == "impl" || t.text == "trait" => {
+                let (ty, body_open) = parse_holder_header(&toks, i);
+                match body_open {
+                    Some(open) => {
+                        scopes.push(Scope {
+                            kind: ScopeKind::Holder(ty),
+                            test: cur_test(&scopes, pending_test),
+                        });
+                        pending_test = false;
+                        i = open + 1;
+                    }
+                    None => {
+                        pending_test = false;
+                        i += 1;
+                    }
+                }
+            }
+            TokKind::Ident if t.text == "fn" => {
+                let name = toks
+                    .get(i + 1)
+                    .filter(|t| t.kind == TokKind::Ident)
+                    .map(|t| t.text.clone())
+                    .unwrap_or_default();
+                let is_pub = looks_pub(&toks, i);
+                match find_fn_body(&toks, i + 2) {
+                    Some(open) => {
+                        let idx = fns.len();
+                        fns.push(FnItem {
+                            name,
+                            impl_type: cur_holder(&scopes),
+                            module: cur_module(&scopes, &base_module),
+                            is_pub,
+                            is_test: cur_test(&scopes, pending_test),
+                            line: t.line,
+                            body: open..open, // end patched at the closing brace
+                        });
+                        scopes.push(Scope {
+                            kind: ScopeKind::Fn(idx),
+                            test: cur_test(&scopes, pending_test),
+                        });
+                        pending_test = false;
+                        i = open + 1;
+                    }
+                    None => {
+                        // Declaration without a body (trait signature).
+                        pending_test = false;
+                        i += 1;
+                    }
+                }
+            }
+            TokKind::Ident if t.text == "use" => {
+                let test = cur_test(&scopes, pending_test);
+                let (decls, next) = parse_use(&toks, i, test);
+                uses.extend(decls);
+                pending_test = false;
+                i = next;
+            }
+            TokKind::Punct if t.text == "{" => {
+                scopes.push(Scope { kind: ScopeKind::Block, test: cur_test(&scopes, false) });
+                i += 1;
+            }
+            TokKind::Punct if t.text == "}" => {
+                if let Some(s) = scopes.pop() {
+                    if let ScopeKind::Fn(idx) = s.kind {
+                        let start = fns[idx].body.start;
+                        fns[idx].body = start..i + 1;
+                    }
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    // Unterminated scopes (truncated input): close fn bodies at EOF.
+    while let Some(s) = scopes.pop() {
+        if let ScopeKind::Fn(idx) = s.kind {
+            let start = fns[idx].body.start;
+            fns[idx].body = start..n;
+        }
+    }
+    FileItems { rel: rel.to_string(), toks, fns, uses }
+}
+
+/// Does the attribute token body mark test code? Matches `test` alone
+/// (`#[test]`, `#[tokio::test]`-style suffixes are not used here) and any
+/// `cfg(… test …)` shape except `cfg(not(test))`.
+fn attr_is_test(body: &[Tok]) -> bool {
+    if body.len() == 1 && body[0].is_ident("test") {
+        return true;
+    }
+    if !body.first().map(|t| t.is_ident("cfg")).unwrap_or(false) {
+        return false;
+    }
+    let mut not_depth: i32 = -1;
+    let mut depth: i32 = 0;
+    for (k, t) in body.iter().enumerate() {
+        match t.kind {
+            TokKind::Punct if t.text == "(" => depth += 1,
+            TokKind::Punct if t.text == ")" => {
+                depth -= 1;
+                if not_depth >= 0 && depth < not_depth {
+                    not_depth = -1;
+                }
+            }
+            TokKind::Ident if t.text == "not" => {
+                if body.get(k + 1).map(|t| t.is_punct("(")).unwrap_or(false) {
+                    not_depth = depth;
+                }
+            }
+            TokKind::Ident if t.text == "test" && not_depth < 0 => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Skip a balanced bracket group starting at `open` (which holds `open_p`);
+/// returns the index just past the matching close.
+fn skip_balanced(toks: &[Tok], open: usize, open_p: &str, close_p: &str) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < toks.len() {
+        if toks[i].is_punct(open_p) {
+            depth += 1;
+        } else if toks[i].is_punct(close_p) {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Parse an `impl`/`trait` header starting at the keyword; returns the
+/// resolved type name (for `impl Trait for Type`, the `Type`) and the
+/// index of the body `{` (None for `impl Trait for Type;`-style or EOF).
+fn parse_holder_header(toks: &[Tok], kw: usize) -> (Option<String>, Option<usize>) {
+    let n = toks.len();
+    let mut i = kw + 1;
+    // Skip generic parameters, balancing shifts (`>>` closes two).
+    if toks.get(i).map(|t| t.is_punct("<")).unwrap_or(false) {
+        let mut depth = 0i32;
+        while i < n {
+            match toks[i].text.as_str() {
+                "<" if toks[i].kind == TokKind::Punct => depth += 1,
+                "<<" if toks[i].kind == TokKind::Punct => depth += 2,
+                ">" if toks[i].kind == TokKind::Punct => depth -= 1,
+                ">>" if toks[i].kind == TokKind::Punct => depth -= 2,
+                _ => {}
+            }
+            i += 1;
+            if depth <= 0 {
+                break;
+            }
+        }
+    }
+    // Collect the subject tokens; `for` (not HRTB `for<`) switches to the
+    // implementing type, `where` ends the subject.
+    let mut subject: Vec<&Tok> = Vec::new();
+    while i < n {
+        let t = &toks[i];
+        if t.is_punct("{") {
+            return (type_name(&subject), Some(i));
+        }
+        if t.is_punct(";") {
+            return (type_name(&subject), None);
+        }
+        if t.is_ident("for") && !toks.get(i + 1).map(|t| t.is_punct("<")).unwrap_or(false) {
+            subject.clear();
+            i += 1;
+            continue;
+        }
+        if t.is_ident("where") {
+            // Skip to the body brace.
+            while i < n && !toks[i].is_punct("{") {
+                i += 1;
+            }
+            continue;
+        }
+        subject.push(t);
+        i += 1;
+    }
+    (type_name(&subject), None)
+}
+
+/// Type name from a subject token list: the identifier before the first
+/// `<`, or the last identifier (`crate::model::Model` → `Model`).
+fn type_name(subject: &[&Tok]) -> Option<String> {
+    let mut last: Option<&str> = None;
+    for t in subject {
+        if t.kind == TokKind::Punct && (t.text == "<" || t.text == "<<") {
+            return last.map(|s| s.to_string());
+        }
+        if t.kind == TokKind::Ident {
+            last = Some(&t.text);
+        }
+    }
+    last.map(|s| s.to_string())
+}
+
+/// Find the body `{` of a fn whose parameter list starts at/after `from`;
+/// None when the signature ends in `;`. Braces can only open the body once
+/// parens/brackets are balanced (no brace-bearing const expressions appear
+/// in signatures in this tree).
+fn find_fn_body(toks: &[Tok], from: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut i = from;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => return Some(i),
+                ";" if depth == 0 => return None,
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Was the `fn` at `kw` preceded by `pub` within its qualifier run
+/// (`pub`, `pub(crate)`, `pub unsafe fn`, …)?
+fn looks_pub(toks: &[Tok], kw: usize) -> bool {
+    let mut j = kw;
+    while j > 0 {
+        let t = &toks[j - 1];
+        let qualifier = match t.kind {
+            TokKind::Ident => matches!(
+                t.text.as_str(),
+                "pub" | "crate" | "super" | "self" | "in" | "unsafe" | "const" | "async" | "extern"
+            ),
+            TokKind::Str => true, // extern "C"
+            TokKind::Punct => t.text == "(" || t.text == ")",
+            _ => false,
+        };
+        if !qualifier {
+            return false;
+        }
+        if t.is_ident("pub") {
+            return true;
+        }
+        j -= 1;
+    }
+    false
+}
+
+/// Parse a `use` declaration at `kw`; returns the expanded leaf decls and
+/// the index just past the terminating `;`.
+fn parse_use(toks: &[Tok], kw: usize, is_test: bool) -> (Vec<UseDecl>, usize) {
+    let line = toks[kw].line;
+    let n = toks.len();
+    let mut end = kw + 1;
+    while end < n && !toks[end].is_punct(";") {
+        end += 1;
+    }
+    let mut out = Vec::new();
+    expand_use_tree(&toks[kw + 1..end], line, is_test, &mut Vec::new(), &mut out);
+    (out, (end + 1).min(n))
+}
+
+/// Recursively expand a use tree (`a::{b, c::d}, e` …) into leaf paths.
+fn expand_use_tree(
+    toks: &[Tok],
+    line: u32,
+    is_test: bool,
+    prefix: &mut Vec<String>,
+    out: &mut Vec<UseDecl>,
+) {
+    let n = toks.len();
+    let mut i = 0usize;
+    let mut segs: Vec<String> = Vec::new();
+    while i <= n {
+        let at_end = i == n;
+        let t = toks.get(i);
+        if at_end || t.map(|t| t.is_punct(",")).unwrap_or(false) {
+            if !segs.is_empty() {
+                let mut full = prefix.clone();
+                full.append(&mut segs);
+                out.push(UseDecl { line, segments: full, is_test });
+            }
+            i += 1;
+            continue;
+        }
+        let t = t.expect("bounds checked");
+        match t.kind {
+            TokKind::Ident if t.text == "as" => {
+                // `x as y`: keep the path, drop the alias ident.
+                i += 2;
+            }
+            TokKind::Ident => {
+                segs.push(t.text.clone());
+                i += 1;
+            }
+            TokKind::Punct if t.text == "*" => {
+                segs.push("*".to_string());
+                i += 1;
+            }
+            TokKind::Punct if t.text == "{" => {
+                let close = skip_balanced(toks, i, "{", "}");
+                let mut full = prefix.clone();
+                full.extend(segs.drain(..));
+                expand_use_tree(&toks[i + 1..close.saturating_sub(1)], line, is_test, &mut full, out);
+                i = close;
+                // A brace group ends this branch; skip to the next comma.
+                while i < n && !toks[i].is_punct(",") {
+                    i += 1;
+                }
+            }
+            _ => i += 1, // `::` and stray tokens
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_module_paths() {
+        assert_eq!(file_module("rust/src/tensor/ops.rs"), vec!["tensor", "ops"]);
+        assert_eq!(file_module("rust/src/report/mod.rs"), vec!["report"]);
+        assert!(file_module("rust/src/lib.rs").is_empty());
+        assert_eq!(file_module("rust/src/main.rs"), vec!["main"]);
+    }
+
+    #[test]
+    fn extracts_fns_with_impl_and_module() {
+        let src = r#"
+pub struct Engine;
+impl Engine {
+    pub fn serve(&self) { helper(); }
+    fn private(&self) {}
+}
+mod inner {
+    pub fn nested() {}
+}
+fn free() {}
+"#;
+        let fi = extract("rust/src/serve/engine.rs", src);
+        let names: Vec<(String, Option<String>, bool)> =
+            fi.fns.iter().map(|f| (f.name.clone(), f.impl_type.clone(), f.is_pub)).collect();
+        assert_eq!(names[0], ("serve".into(), Some("Engine".into()), true));
+        assert_eq!(names[1], ("private".into(), Some("Engine".into()), false));
+        assert_eq!(names[2], ("nested".into(), None, true));
+        assert_eq!(fi.fns[2].module, vec!["serve", "engine", "inner"]);
+        assert_eq!(names[3], ("free".into(), None, false));
+        assert!(fi.fns[3].module == vec!["serve", "engine"]);
+    }
+
+    #[test]
+    fn impl_trait_for_type_resolves_to_type() {
+        let src = "impl<T: Clone> std::fmt::Debug for Wrapper<T> where T: Copy { fn fmt(&self) {} }";
+        let fi = extract("rust/src/x.rs", src);
+        assert_eq!(fi.fns[0].impl_type.as_deref(), Some("Wrapper"));
+    }
+
+    #[test]
+    fn trait_default_methods_and_sigs() {
+        let src = "trait Backend { fn run(&self); fn name(&self) -> &str { helper() } }";
+        let fi = extract("rust/src/x.rs", src);
+        // Only the default method (with a body) is recorded.
+        assert_eq!(fi.fns.len(), 1);
+        assert_eq!(fi.fns[0].name, "name");
+        assert_eq!(fi.fns[0].impl_type.as_deref(), Some("Backend"));
+    }
+
+    #[test]
+    fn cfg_test_marks_fns() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { prod(); }\n}\n#[test]\nfn unit() {}\nfn prod2() {}";
+        let fi = extract("rust/src/x.rs", src);
+        let flags: Vec<(String, bool)> =
+            fi.fns.iter().map(|f| (f.name.clone(), f.is_test)).collect();
+        assert_eq!(
+            flags,
+            vec![
+                ("prod".into(), false),
+                ("t".into(), true),
+                ("unit".into(), true),
+                ("prod2".into(), false)
+            ]
+        );
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test() {
+        let src = "#[cfg(not(test))]\nfn prod() {}";
+        let fi = extract("rust/src/x.rs", src);
+        assert!(!fi.fns[0].is_test);
+    }
+
+    #[test]
+    fn fn_body_ranges_cover_calls() {
+        let src = "fn a() { one(); }\nfn b() { two(); }";
+        let fi = extract("rust/src/x.rs", src);
+        let body_a: Vec<&str> =
+            fi.toks[fi.fns[0].body.clone()].iter().map(|t| t.text.as_str()).collect();
+        assert!(body_a.contains(&"one"));
+        assert!(!body_a.contains(&"two"));
+    }
+
+    #[test]
+    fn use_trees_expand() {
+        let src = "use crate::tensor::{ops, pool::ThreadPool};\nuse std::collections::HashMap as Map;\n#[cfg(test)]\nmod tests { use crate::model::ZooModel; }";
+        let fi = extract("rust/src/x.rs", src);
+        let paths: Vec<(Vec<String>, bool)> =
+            fi.uses.iter().map(|u| (u.segments.clone(), u.is_test)).collect();
+        assert_eq!(paths[0].0, vec!["crate", "tensor", "ops"]);
+        assert_eq!(paths[1].0, vec!["crate", "tensor", "pool", "ThreadPool"]);
+        assert_eq!(paths[2].0, vec!["std", "collections", "HashMap"]);
+        assert!(!paths[2].1);
+        assert_eq!(paths[3].0, vec!["crate", "model", "ZooModel"]);
+        assert!(paths[3].1, "use inside cfg(test) module must be test-scoped");
+    }
+
+    #[test]
+    fn tests_dir_is_all_test() {
+        let fi = extract("rust/tests/integration.rs", "fn probe() {}");
+        assert!(fi.fns[0].is_test);
+    }
+}

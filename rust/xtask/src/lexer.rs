@@ -1,0 +1,578 @@
+//! Hand-written Rust lexer — the token layer under the symbol analyses.
+//!
+//! [`tokenize`] turns source text into a flat `Vec<Tok>` with 1-based line
+//! numbers, skipping trivia (whitespace and comments). It exists so the
+//! item extractor ([`crate::items`]) and the graphs built on top of it
+//! ([`crate::graph`]) can reason about *symbols* — `fn` names, `impl`
+//! targets, call sites, `use` paths — instead of raw lines, which is what
+//! the PR 7 scanner was limited to.
+//!
+//! Lexical edge cases handled (and pinned by the property tests below —
+//! the same generated token soups also exercise `scan.rs`, so the two
+//! implementations cross-check each other):
+//!
+//! - nested block comments (`/* /* */ */` — Rust block comments nest);
+//! - raw strings with any hash depth (`r"…"`, `r#"…"#`, `r##"…"##`) and
+//!   their byte variants (`br#"…"#`), in which `\` is *not* an escape;
+//! - string escapes (`"\""`, `"\\"`) and backslash-newline continuations;
+//! - char/byte-char literals vs. lifetimes: `'"'`, `'/'`, `'\''`, `b'x'`
+//!   are literals, `'static` / `'env` are lifetime tokens;
+//! - raw identifiers (`r#match`) — lexed as identifiers, not raw strings.
+//!
+//! Deliberate simplifications (documented because the analyses tolerate
+//! them): numeric literals with exponents (`1e-5`) lex as number + punct +
+//! number, and float typedness is judged from the token text elsewhere.
+//! Neither affects symbol extraction.
+
+/// Token kind. `Punct` carries the joined spelling (`::`, `->`, `+=`, …).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `impl`, `for`, names, …).
+    Ident,
+    /// Lifetime or loop label (`'a`, `'env`) — the text excludes the tick.
+    Lifetime,
+    /// String literal (`"…"`, `r#"…"#`, `b"…"`); text is the *content*.
+    Str,
+    /// Char or byte-char literal; text is the content (escapes verbatim).
+    Char,
+    /// Numeric literal (integers, simple floats, with suffixes).
+    Num,
+    /// Punctuation, possibly multi-char (`::`, `..=`, `+=`, `&&`, …).
+    Punct,
+}
+
+/// One lexed token.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line of the token's first character.
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+    pub fn is_punct(&self, text: &str) -> bool {
+        self.is(TokKind::Punct, text)
+    }
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.is(TokKind::Ident, text)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || !c.is_ascii()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || !c.is_ascii()
+}
+
+/// Multi-char punctuation, longest-match-first. Joined spellings matter to
+/// the analyses: `..` must not look like two method dots, `!=` must not
+/// look like a macro bang, `+=` is how the float-accumulation lint finds
+/// compound assignment.
+const PUNCTS3: &[&str] = &["..=", "<<=", ">>=", "..."];
+const PUNCTS2: &[&str] = &[
+    "::", "->", "=>", "..", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>", "+=", "-=", "*=",
+    "/=", "%=", "^=", "&=", "|=",
+];
+
+/// Lex `src` into tokens, skipping comments and whitespace.
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    let ch: Vec<char> = src.chars().collect();
+    let n = ch.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+
+    // Count newlines in ch[from..to] into `line`.
+    let bump = |line: &mut u32, ch: &[char], from: usize, to: usize| {
+        *line += ch[from..to.min(ch.len())].iter().filter(|&&c| c == '\n').count() as u32;
+    };
+
+    while i < n {
+        let c = ch[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && ch.get(i + 1) == Some(&'/') {
+            while i < n && ch[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nesting).
+        if c == '/' && ch.get(i + 1) == Some(&'*') {
+            let start = i;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if ch[i] == '/' && ch.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if ch[i] == '*' && ch.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            bump(&mut line, &ch, start, i);
+            continue;
+        }
+        // Raw strings / byte strings / byte chars / raw identifiers.
+        if c == 'r' || c == 'b' {
+            if let Some((consumed, hashes, is_char)) = raw_or_byte_open(&ch, i) {
+                let start = i;
+                i += consumed;
+                let content_start = i;
+                if is_char {
+                    let (content, next) = lex_char_body(&ch, i);
+                    i = next;
+                    toks.push(Tok { kind: TokKind::Char, text: content, line });
+                    bump(&mut line, &ch, start, i);
+                    continue;
+                }
+                // String body: raw (no escapes, closed by `"` + hashes) or
+                // escaped (plain `b"…"`).
+                let mut content = String::new();
+                if let Some(h) = hashes {
+                    while i < n {
+                        if ch[i] == '"' && ends_hashes(&ch, i + 1, h) {
+                            i += 1 + h as usize;
+                            break;
+                        }
+                        content.push(ch[i]);
+                        i += 1;
+                    }
+                } else {
+                    let (s, next) = lex_str_body(&ch, i);
+                    content = s;
+                    i = next;
+                }
+                toks.push(Tok { kind: TokKind::Str, text: content, line });
+                bump(&mut line, &ch, content_start.saturating_sub(1), i);
+                continue;
+            }
+        }
+        if c == '"' {
+            let start = i;
+            let (content, next) = lex_str_body(&ch, i + 1);
+            i = next;
+            toks.push(Tok { kind: TokKind::Str, text: content, line });
+            bump(&mut line, &ch, start, i);
+            continue;
+        }
+        // Tick: char literal or lifetime. Same disambiguation as scan.rs:
+        // an escape (`'\…`) or a one-char body closed by `'` is a literal;
+        // otherwise it is a lifetime/label tick.
+        if c == '\'' {
+            match ch.get(i + 1) {
+                Some('\\') => {
+                    let (content, next) = lex_char_body(&ch, i + 1);
+                    i = next;
+                    toks.push(Tok { kind: TokKind::Char, text: content, line });
+                    continue;
+                }
+                Some(&x) if x != '\'' && ch.get(i + 2) == Some(&'\'') => {
+                    toks.push(Tok { kind: TokKind::Char, text: x.to_string(), line });
+                    i += 3;
+                    continue;
+                }
+                _ => {
+                    let mut j = i + 1;
+                    let mut name = String::new();
+                    while j < n && is_ident_continue(ch[j]) {
+                        name.push(ch[j]);
+                        j += 1;
+                    }
+                    toks.push(Tok { kind: TokKind::Lifetime, text: name, line });
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Number: digits, then idents/underscores (suffixes, hex), and a
+        // dot only when followed by a digit (so `0..n` stays a range).
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n {
+                let d = ch[j];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    text.push(d);
+                    j += 1;
+                } else if d == '.' && ch.get(j + 1).map(|x| x.is_ascii_digit()).unwrap_or(false) {
+                    text.push(d);
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text, line });
+            i = j;
+            continue;
+        }
+        // Identifier / keyword (including raw identifiers handled above).
+        if is_ident_start(c) {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && is_ident_continue(ch[j]) {
+                text.push(ch[j]);
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text, line });
+            i = j;
+            continue;
+        }
+        // Punctuation, longest match first.
+        let rest3: String = ch[i..n.min(i + 3)].iter().collect();
+        let rest2: String = ch[i..n.min(i + 2)].iter().collect();
+        if PUNCTS3.contains(&rest3.as_str()) {
+            toks.push(Tok { kind: TokKind::Punct, text: rest3, line });
+            i += 3;
+        } else if PUNCTS2.contains(&rest2.as_str()) {
+            toks.push(Tok { kind: TokKind::Punct, text: rest2, line });
+            i += 2;
+        } else {
+            toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+/// `true` if `ch[j..]` starts with `hashes` copies of `#`.
+fn ends_hashes(ch: &[char], j: usize, hashes: u32) -> bool {
+    let h = hashes as usize;
+    j + h <= ch.len() && ch[j..j + h].iter().all(|&c| c == '#')
+}
+
+/// If `ch[i..]` opens a raw/byte string or byte-char literal, return
+/// (chars consumed through the opening delimiter, raw-hash count if raw,
+/// whether it is a char literal). Mirrors `scan.rs::raw_or_byte_open`.
+fn raw_or_byte_open(ch: &[char], i: usize) -> Option<(usize, Option<u32>, bool)> {
+    let mut j = i;
+    if ch[j] == 'b' {
+        match ch.get(j + 1) {
+            Some('"') => return Some((2, None, false)),
+            Some('\'') => return Some((2, None, true)),
+            Some('r') => j += 1,
+            _ => return None,
+        }
+    }
+    if ch[j] != 'r' {
+        return None;
+    }
+    let mut hashes = 0u32;
+    let mut k = j + 1;
+    while ch.get(k) == Some(&'#') {
+        hashes += 1;
+        k += 1;
+    }
+    if ch.get(k) == Some(&'"') {
+        Some((k + 1 - i, Some(hashes), false))
+    } else {
+        None
+    }
+}
+
+/// Lex a (non-raw) string body starting *after* the opening `"`; returns
+/// (content with escapes verbatim, index after the closing quote).
+fn lex_str_body(ch: &[char], mut i: usize) -> (String, usize) {
+    let n = ch.len();
+    let mut out = String::new();
+    while i < n {
+        let c = ch[i];
+        if c == '\\' {
+            if let Some(&e) = ch.get(i + 1) {
+                out.push(c);
+                out.push(e);
+                i += 2;
+                continue;
+            }
+            i += 1;
+        } else if c == '"' {
+            i += 1;
+            break;
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    (out, i)
+}
+
+/// Lex a char-literal body starting *after* the opening `'`; returns
+/// (content, index after the closing tick).
+fn lex_char_body(ch: &[char], mut i: usize) -> (String, usize) {
+    let n = ch.len();
+    let mut out = String::new();
+    while i < n {
+        let c = ch[i];
+        if c == '\\' {
+            if let Some(&e) = ch.get(i + 1) {
+                out.push(c);
+                out.push(e);
+                i += 2;
+                continue;
+            }
+            i += 1;
+        } else if c == '\'' {
+            i += 1;
+            break;
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    (out, i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan_source;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let toks = tokenize("fn foo() {\n    bar::baz(1);\n}");
+        assert!(toks[0].is_ident("fn"));
+        assert!(toks[1].is_ident("foo"));
+        assert_eq!(toks[1].line, 1);
+        let baz = toks.iter().find(|t| t.is_ident("baz")).unwrap();
+        assert_eq!(baz.line, 2);
+        assert!(toks.iter().any(|t| t.is_punct("::")));
+    }
+
+    #[test]
+    fn raw_strings_do_not_leak_tokens() {
+        let src = "let s = r#\"unsafe { mul_add } \"quoted\" \"#; call();";
+        let ids = idents(src);
+        assert!(!ids.contains(&"unsafe".to_string()));
+        assert!(!ids.contains(&"mul_add".to_string()));
+        assert!(ids.contains(&"call".to_string()));
+        let s = tokenize(src).into_iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert!(s.text.contains("mul_add"));
+    }
+
+    #[test]
+    fn deep_hash_raw_strings() {
+        let src = "let s = r##\"inner \"# quote\"##; after();";
+        let ids = idents(src);
+        assert!(!ids.contains(&"inner".to_string()));
+        assert!(ids.contains(&"after".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* a /* b */ still */ fn live() {}";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["fn", "live"]);
+    }
+
+    #[test]
+    fn char_literals_with_quote_slash_backslash() {
+        for src in ["let q = '\"'; f();", "let s = '/'; f();", "let b = '\\''; f();",
+                    "let w = '\\\\'; f();", "let y = b'x'; f();", "let z = b'\\''; f();"] {
+            let ids = idents(src);
+            assert!(ids.contains(&"f".to_string()), "f() lost in {src:?}");
+            assert!(
+                tokenize(src).iter().any(|t| t.kind == TokKind::Char),
+                "no char literal found in {src:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let toks = tokenize("fn f<'a>(x: &'a str, y: &'static u8) {}");
+        let lts: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text.clone()).collect();
+        assert_eq!(lts, vec!["a", "a", "static"]);
+        assert!(!toks.iter().any(|t| t.kind == TokKind::Char));
+    }
+
+    #[test]
+    fn ranges_are_not_method_dots() {
+        let toks = tokenize("for i in 0..n.len() {}");
+        assert!(toks.iter().any(|t| t.is_punct("..")));
+        // Exactly one bare `.` (the method dot before len).
+        assert_eq!(toks.iter().filter(|t| t.is_punct(".")).count(), 1);
+    }
+
+    #[test]
+    fn floats_and_tuple_fields() {
+        let toks = tokenize("let a = 0.5; let b = x.0; let c = 1f32;");
+        let nums: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Num).map(|t| t.text.clone()).collect();
+        assert_eq!(nums, vec!["0.5", "0", "1f32"]);
+    }
+
+    #[test]
+    fn compound_assign_is_one_token() {
+        let toks = tokenize("total += v; total -= v; a != b; m!();");
+        assert!(toks.iter().any(|t| t.is_punct("+=")));
+        assert!(toks.iter().any(|t| t.is_punct("-=")));
+        assert!(toks.iter().any(|t| t.is_punct("!=")));
+        // Macro bang is a lone `!` directly after the ident.
+        let i = toks.iter().position(|t| t.is_ident("m")).unwrap();
+        assert!(toks[i + 1].is_punct("!"));
+    }
+
+    // -------------------------------------------------------------------
+    // Property tests over generated token soups. A tiny deterministic
+    // LCG drives a generator that emits source fragments while tracking
+    // ground truth: which marker identifiers are real code and which are
+    // buried in strings/comments/char literals. The lexer must recover
+    // exactly the code markers; `scan.rs` (the line scanner the rules use)
+    // must agree — this is the shared test bed for both implementations.
+    // -------------------------------------------------------------------
+
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0 >> 33
+        }
+        fn below(&mut self, n: u64) -> u64 {
+            self.next() % n
+        }
+    }
+
+    /// Emit one fragment; push code-visible markers into `code_marks`,
+    /// buried ones into `hidden_marks`.
+    fn gen_fragment(
+        rng: &mut Lcg,
+        idx: usize,
+        src: &mut String,
+        code_marks: &mut Vec<String>,
+        hidden_marks: &mut Vec<String>,
+    ) {
+        let code_mark = format!("CODEMARK{idx}");
+        let hid_mark = format!("HIDDENMARK{idx}");
+        match rng.below(10) {
+            0 => {
+                src.push_str(&format!("let {code_mark} = 1;\n"));
+                code_marks.push(code_mark);
+            }
+            1 => {
+                src.push_str(&format!("// line comment {hid_mark}\n"));
+                hidden_marks.push(hid_mark);
+            }
+            2 => {
+                src.push_str(&format!("/* outer /* inner {hid_mark} */ tail */\n"));
+                hidden_marks.push(hid_mark);
+            }
+            3 => {
+                let hashes = "#".repeat(rng.below(3) as usize);
+                src.push_str(&format!(
+                    "let s{idx} = r{hashes}\"raw {hid_mark} \"{hashes}; {code_mark}();\n"
+                ));
+                code_marks.push(code_mark);
+                hidden_marks.push(hid_mark);
+            }
+            4 => {
+                src.push_str(&format!("let s{idx} = \"esc \\\" {hid_mark} \\\\\"; \n"));
+                hidden_marks.push(hid_mark);
+            }
+            5 => {
+                let lit = ["'\"'", "'/'", "'\\''", "'\\\\'", "b'q'"][rng.below(5) as usize];
+                src.push_str(&format!("let c{idx} = {lit}; {code_mark}();\n"));
+                code_marks.push(code_mark);
+            }
+            6 => {
+                src.push_str(&format!("fn {code_mark}<'a>(x: &'a str) {{ x.len(); }}\n"));
+                code_marks.push(code_mark);
+            }
+            7 => {
+                src.push_str(&format!(
+                    "let m{idx} = r#\"multi\nline {hid_mark}\n\"#; {code_mark}();\n"
+                ));
+                code_marks.push(code_mark);
+                hidden_marks.push(hid_mark);
+            }
+            8 => {
+                src.push_str(&format!("for i{idx} in 0..{code_mark} {{}}\n"));
+                code_marks.push(code_mark);
+            }
+            _ => {
+                src.push_str(&format!("let b{idx} = b\"bytes {hid_mark}\"; {code_mark}!();\n"));
+                code_marks.push(code_mark);
+                hidden_marks.push(hid_mark);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_lexer_and_scanner_agree_on_token_soups() {
+        for seed in 0..24u64 {
+            let mut rng = Lcg(seed * 7919 + 3);
+            let mut src = String::new();
+            let mut code_marks = Vec::new();
+            let mut hidden_marks = Vec::new();
+            let count = 8 + rng.below(24) as usize;
+            for idx in 0..count {
+                gen_fragment(&mut rng, idx, &mut src, &mut code_marks, &mut hidden_marks);
+            }
+
+            // Lexer view: every code marker is an Ident token, no hidden
+            // marker ever surfaces as one.
+            let ids: std::collections::HashSet<String> = tokenize(&src)
+                .into_iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text)
+                .collect();
+            for m in &code_marks {
+                assert!(ids.contains(m), "seed {seed}: lexer lost code marker {m}\n{src}");
+            }
+            for m in &hidden_marks {
+                assert!(!ids.contains(m), "seed {seed}: lexer leaked hidden marker {m}\n{src}");
+            }
+
+            // Scanner view: the blanked `code` lines must agree.
+            let sf = scan_source("rust/src/soup.rs", &src);
+            let all_code: String = sf.lines.iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+            for m in &code_marks {
+                assert!(all_code.contains(m), "seed {seed}: scanner lost code marker {m}\n{src}");
+            }
+            for m in &hidden_marks {
+                assert!(!all_code.contains(m), "seed {seed}: scanner leaked hidden marker {m}\n{src}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_lexer_never_panics_on_truncated_soups() {
+        // Truncating mid-literal must not panic or loop forever.
+        let mut rng = Lcg(99);
+        let mut src = String::new();
+        let (mut cm, mut hm) = (Vec::new(), Vec::new());
+        for idx in 0..16 {
+            gen_fragment(&mut rng, idx, &mut src, &mut cm, &mut hm);
+        }
+        for cut in 0..src.len() {
+            if src.is_char_boundary(cut) {
+                let _ = tokenize(&src[..cut]);
+            }
+        }
+    }
+}

@@ -3,25 +3,37 @@
 //! Run from anywhere in the workspace:
 //!
 //! ```text
-//! cargo run -p xtask -- lint            # lint the repo (exit 1 on findings)
-//! cargo run -p xtask -- lint --root P   # lint an explicit checkout
-//! cargo run -p xtask -- rules           # list rule ids + descriptions
+//! cargo run -p xtask -- lint                  # lint the repo (exit 1 on findings)
+//! cargo run -p xtask -- lint --root P         # lint an explicit checkout
+//! cargo run -p xtask -- lint --sarif out.sarif  # also write SARIF 2.1.0
+//! cargo run -p xtask -- lint --budget-ms 5000   # fail if linting takes longer
+//! cargo run -p xtask -- rules                 # list rule ids + descriptions
 //! ```
 //!
 //! The crate is std-only (like the vendored `anyhow` shim) so it builds
-//! with no registry access. See `rules.rs` for what each invariant
-//! protects and `scan.rs` for how source is tokenized; the README's
-//! "Static analysis & invariants" section is the user-facing summary.
+//! with no registry access. The pipeline: `scan.rs` strips comments and
+//! string/char literals per line, `lexer.rs` tokenizes, `items.rs`
+//! extracts fns/impls/uses, `graph.rs` builds the call graph and module
+//! graph, and `rules.rs`/`analyses.rs` run the line rules and the
+//! graph-transitive analyses over them. The README's "Static analysis &
+//! invariants" section is the user-facing summary.
 
+mod analyses;
+mod graph;
+mod items;
+mod lexer;
 mod rules;
+mod sarif;
 mod scan;
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::time::Instant;
 
 const USAGE: &str = "usage: cargo run -p xtask -- <command>\n\
 commands:\n  \
-  lint [--root <path>]   lint the source tree against the repo invariants\n  \
+  lint [--root <path>] [--sarif <file>] [--budget-ms <n>]\n                         \
+lint the source tree against the repo invariants\n  \
   rules                  list lint rule ids and what they protect";
 
 fn main() -> ExitCode {
@@ -43,6 +55,8 @@ fn main() -> ExitCode {
 
 fn lint_cmd(args: &[String]) -> ExitCode {
     let mut root: Option<PathBuf> = None;
+    let mut sarif_out: Option<PathBuf> = None;
+    let mut budget_ms: Option<u128> = None;
     let mut i = 0usize;
     while i < args.len() {
         match args[i].as_str() {
@@ -56,6 +70,26 @@ fn lint_cmd(args: &[String]) -> ExitCode {
                     }
                 }
             }
+            "--sarif" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => sarif_out = Some(PathBuf::from(p)),
+                    None => {
+                        eprintln!("--sarif needs an output path\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--budget-ms" => {
+                i += 1;
+                match args.get(i).and_then(|s| s.parse::<u128>().ok()) {
+                    Some(ms) => budget_ms = Some(ms),
+                    None => {
+                        eprintln!("--budget-ms needs a number of milliseconds\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
             other => {
                 eprintln!("unknown argument `{other}`\n{USAGE}");
                 return ExitCode::from(2);
@@ -64,30 +98,53 @@ fn lint_cmd(args: &[String]) -> ExitCode {
         i += 1;
     }
     let root = root.unwrap_or_else(default_root);
-    match rules::lint_tree(&root) {
+    let started = Instant::now();
+    let report = match rules::lint_tree(&root) {
         Err(e) => {
             eprintln!("xtask lint: {e}");
-            ExitCode::from(2)
+            return ExitCode::from(2);
         }
-        Ok(report) if report.findings.is_empty() => {
-            println!(
-                "xtask lint: clean ({} files, {} rules)",
-                report.files_checked,
-                rules::RULES.len()
-            );
-            ExitCode::SUCCESS
+        Ok(r) => r,
+    };
+    let elapsed_ms = started.elapsed().as_millis();
+    // SARIF is written even when clean: CI uploads the artifact and
+    // validates it against the 2.1.0 schema on every run.
+    if let Some(path) = &sarif_out {
+        let doc = sarif::render(&report.findings);
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("xtask lint: write {}: {e}", path.display());
+            return ExitCode::from(2);
         }
-        Ok(report) => {
-            for f in &report.findings {
-                println!("{}:{}: [{}] {}", f.rel, f.line, f.rule, f.msg);
-            }
-            eprintln!(
-                "xtask lint: {} violation(s) in {} files",
-                report.findings.len(),
-                report.files_checked
-            );
-            ExitCode::FAILURE
+        println!("xtask lint: wrote SARIF to {}", path.display());
+    }
+    let over_budget = matches!(budget_ms, Some(ms) if elapsed_ms > ms);
+    if over_budget {
+        eprintln!(
+            "xtask lint: took {elapsed_ms}ms, over the {}ms budget — the \
+             analyzer must stay fast enough to run as the first tier-1 step",
+            budget_ms.unwrap_or(0)
+        );
+    }
+    if report.findings.is_empty() {
+        println!(
+            "xtask lint: clean ({} files, {} rules, {elapsed_ms}ms)",
+            report.files_checked,
+            rules::RULES.len()
+        );
+        if over_budget {
+            return ExitCode::FAILURE;
         }
+        ExitCode::SUCCESS
+    } else {
+        for f in &report.findings {
+            println!("{}:{}: [{}] {}", f.rel, f.line, f.rule, f.msg);
+        }
+        eprintln!(
+            "xtask lint: {} violation(s) in {} files ({elapsed_ms}ms)",
+            report.findings.len(),
+            report.files_checked
+        );
+        ExitCode::FAILURE
     }
 }
 

@@ -1,5 +1,17 @@
 //! The repo invariants, as mechanical rules.
 //!
+//! Two layers share this module's `Finding` type and allow-marker
+//! machinery:
+//!
+//! - **line rules** (here) — token/word checks over the scanned `code`
+//!   view of each line: SAFETY comments on `unsafe`, no FMA tokens, no
+//!   raw threads outside the pool, `EAC_MOE_*` env reads confined to
+//!   `util/env.rs`.
+//! - **graph analyses** ([`crate::analyses`]) — reachability-based checks
+//!   over the call graph and module graph: transitive `serve-no-panic`
+//!   (with printed call chains), `serve-unguarded-index`,
+//!   `float-hash-order`, `no-fma-transitive`, `module-layering`.
+//!
 //! Each rule has a machine-readable ID and an inline escape hatch:
 //! a `xtask-allow: <rule-id>` comment on the offending line (or the line
 //! directly above it) suppresses that rule there — always with a short
@@ -7,30 +19,42 @@
 //! `no-fma` rule additionally honors region markers (`xtask-allow-region:`
 //! … `xtask-end-region:`, id `no-fma`), but only inside
 //! `rust/src/tensor/simd.rs` (the pinned-DAG kernel file); region markers
-//! anywhere else are themselves violations.
+//! anywhere else are themselves violations. The transitive FMA rule
+//! deliberately ignores inline `no-fma` allows outside that file: an
+//! allow on a helper must not launder FMA into the kernel contract.
 //!
 //! Why each invariant exists:
 //!
 //! - `unsafe-safety-comment` — the unsafe surface (SIMD kernels, the
 //!   lifetime-erased pool queue) is only auditable if every block states
 //!   the precondition that makes it sound.
-//! - `no-fma` — the SIMD contract pins one operation DAG (separate mul
-//!   then add, 8-lane split-sum reduction) so scalar/AVX2/NEON produce
-//!   bit-identical f32 results. A fused multiply-add rounds once instead
-//!   of twice and silently breaks every bit-identity test.
+//! - `no-fma` / `no-fma-transitive` — the SIMD contract pins one
+//!   operation DAG (separate mul then add, 8-lane split-sum reduction) so
+//!   scalar/AVX2/NEON produce bit-identical f32 results. A fused
+//!   multiply-add rounds once instead of twice and silently breaks every
+//!   bit-identity test — wherever it sits in the call tree.
 //! - `no-raw-thread` — compute rides the scoped worker pool in
 //!   `tensor/pool.rs` (bounded threads, panic propagation, helping
 //!   waiters). Ad-hoc `std::thread` spawns escape the thread budget and
 //!   the pool's panic handling.
-//! - `serve-no-panic` — the serve hot path (`serve/`, `model/store.rs`,
-//!   `model/forward.rs`) must degrade by returning errors, not by
+//! - `serve-no-panic` / `serve-unguarded-index` — anything reachable from
+//!   the serve entry points must degrade by returning errors, not by
 //!   unwinding mid-batch with locks held. Poisoned-lock `unwrap()`s are
 //!   exempt: a poisoned lock means a worker already panicked, and
 //!   propagating that panic is the correct response.
+//! - `float-hash-order` — HashMap/HashSet iteration order is
+//!   nondeterministic; accumulating floats in that order breaks the
+//!   pinned operation DAG between runs on the *same* machine.
 //! - `env-read-site` — `EAC_MOE_*` configuration is read once through
 //!   `util/env.rs` accessors. Scattered `std::env::var` reads caused the
-//!   PR 3 mid-run reconfiguration bug that the `OnceLock` latch fixed.
+//!   PR 3 mid-run reconfiguration bug that the `OnceLock` latch fixed;
+//!   `var_os` and the `vars`/`vars_os` iterators (which enumerate every
+//!   `EAC_MOE_*` variable implicitly) count as reads too.
+//! - `module-layering` — the module DAG in `rust/xtask/layering.toml` is
+//!   the architecture; an edge outside it (or a cycle) is drift.
 
+use crate::analyses;
+use crate::items;
 use crate::scan::{scan_source, SourceFile};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -46,16 +70,32 @@ pub const RULES: &[(&str, &str)] = &[
         "no fused multiply-add: kernels pin separate mul+add for bit-identity",
     ),
     (
+        "no-fma-transitive",
+        "no FMA anywhere reachable from the kernel contract files",
+    ),
+    (
         "no-raw-thread",
         "no raw std::thread outside tensor/pool.rs: compute rides the pool",
     ),
     (
         "serve-no-panic",
-        "no unwrap/expect/panic in the serve hot path (poisoned locks exempt)",
+        "no unwrap/expect/panic reachable from the serve entry points (poisoned locks exempt)",
+    ),
+    (
+        "serve-unguarded-index",
+        "serve-reachable fns that index slices need a bounds guard in the body",
+    ),
+    (
+        "float-hash-order",
+        "no f32/f64 accumulation over HashMap/HashSet iteration order",
     ),
     (
         "env-read-site",
-        "EAC_MOE_* env reads only in util/env.rs (config is read once)",
+        "EAC_MOE_* env reads (var/var_os/vars) only in util/env.rs",
+    ),
+    (
+        "module-layering",
+        "module deps must match rust/xtask/layering.toml and stay acyclic",
     ),
 ];
 
@@ -75,6 +115,9 @@ const SCAN_ROOTS: &[&str] = &[
     "rust/xtask/src",
     "examples",
 ];
+
+/// Repo-relative path of the layering manifest.
+pub const MANIFEST_REL: &str = "rust/xtask/layering.toml";
 
 pub struct Finding {
     pub rel: String,
@@ -154,62 +197,14 @@ fn has_safety(sf: &SourceFile, i: usize) -> bool {
     false
 }
 
-/// Is the `.unwrap()` whose `.` sits at byte `dot` in `code` hanging off a
-/// `lock(…)` / `wait(…)` / `wait_timeout(…)` call? Those unwraps only fire
-/// on lock poisoning — i.e. a worker already panicked — and are exempt
-/// from `serve-no-panic`. The receiver call must close on the same line;
-/// anything else is conservatively a violation.
-fn is_poison_unwrap(code: &str, dot: usize) -> bool {
-    let b: Vec<char> = code[..dot].chars().collect();
-    let mut i = b.len();
-    if i == 0 || b[i - 1] != ')' {
-        return false;
-    }
-    let mut depth = 0i32;
-    while i > 0 {
-        i -= 1;
-        match b[i] {
-            ')' => depth += 1,
-            '(' => {
-                depth -= 1;
-                if depth == 0 {
-                    break;
-                }
-            }
-            _ => {}
-        }
-    }
-    if depth != 0 {
-        return false;
-    }
-    let end = i;
-    let mut s = i;
-    while s > 0 && is_ident_char(b[s - 1]) {
-        s -= 1;
-    }
-    let name: String = b[s..end].iter().collect();
-    matches!(name.as_str(), "lock" | "wait" | "wait_timeout")
-}
-
-fn is_ident_char(c: char) -> bool {
-    c.is_ascii_alphanumeric() || c == '_'
-}
-
-fn serve_hot_path(rel: &str) -> bool {
-    rel.starts_with("rust/src/serve/")
-        || rel == "rust/src/model/store.rs"
-        || rel == "rust/src/model/forward.rs"
-}
-
-/// Lint one file's source text under the given repo-relative path (the
-/// path decides rule scoping, so tests can replay fixtures at synthetic
-/// locations).
-pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
-    let sf = scan_source(rel, text);
+/// Pass 1: collect allow markers (inline + regions) into per-rule line
+/// masks, reporting marker misuse as findings.
+pub(crate) fn allow_masks(
+    sf: &SourceFile,
+    rel: &str,
+) -> (HashMap<&'static str, Vec<bool>>, Vec<Finding>) {
     let n = sf.lines.len();
     let mut findings: Vec<Finding> = Vec::new();
-
-    // Pass 1: collect allow markers (inline + regions).
     let mut allow: HashMap<&'static str, Vec<bool>> =
         RULES.iter().map(|(id, _)| (*id, vec![false; n])).collect();
     let mut regions_open: Vec<(&'static str, usize)> = Vec::new();
@@ -271,8 +266,17 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
             msg: format!("unclosed xtask-allow-region for `{rid}`"),
         });
     }
+    (allow, findings)
+}
 
-    // Pass 2: rules. Candidates are filtered through the allow mask.
+/// Pass 2: the per-line rules, filtered through the allow masks.
+fn line_rules(
+    sf: &SourceFile,
+    rel: &str,
+    allow: &HashMap<&'static str, Vec<bool>>,
+) -> Vec<Finding> {
+    let n = sf.lines.len();
+    let mut findings: Vec<Finding> = Vec::new();
     let mut push = |i: usize, rule: &'static str, msg: String| {
         if !allow[rule][i] {
             findings.push(Finding { rel: rel.to_string(), line: i + 1, rule, msg });
@@ -281,18 +285,16 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
 
     let in_util_env = rel == "rust/src/util/env.rs";
     let in_pool = rel == "rust/src/tensor/pool.rs";
-    let hot = serve_hot_path(rel);
     const FMA_TOKENS: &[&str] = &["mul_add", "fmadd", "vfma", "fmla"];
     const THREAD_TOKENS: &[&str] = &["thread::spawn", "thread::scope", "thread::Builder"];
-    const PANIC_TOKENS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
 
     for i in 0..n {
         let code = &sf.lines[i].code;
         let test = sf.is_test[i];
 
-        // Rule 1: unsafe-safety-comment (everywhere, tests included —
+        // Rule: unsafe-safety-comment (everywhere, tests included —
         // unsafe in tests needs the same audit trail).
-        if contains_word(code, "unsafe") && !has_safety(&sf, i) {
+        if contains_word(code, "unsafe") && !has_safety(sf, i) {
             push(
                 i,
                 "unsafe-safety-comment",
@@ -300,7 +302,7 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
             );
         }
 
-        // Rule 2: no-fma (everywhere — FMA breaks bit-identity in tests
+        // Rule: no-fma (everywhere — FMA breaks bit-identity in tests
         // exactly as much as in kernels).
         for tok in FMA_TOKENS {
             if code.contains(tok) {
@@ -309,7 +311,7 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
             }
         }
 
-        // Rule 3: no-raw-thread (production code outside the pool).
+        // Rule: no-raw-thread (production code outside the pool).
         if !test && !in_pool {
             for tok in THREAD_TOKENS {
                 if code.contains(tok) {
@@ -323,51 +325,75 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
             }
         }
 
-        // Rule 4: serve-no-panic (hot-path files, non-test lines).
-        if hot && !test {
-            for tok in PANIC_TOKENS {
-                if code.contains(tok) {
-                    push(i, "serve-no-panic", format!("`{tok}` in the serve hot path"));
-                    break;
-                }
-            }
-            if code.contains(".expect(") {
-                push(i, "serve-no-panic", "`.expect(…)` in the serve hot path".to_string());
-            }
-            let mut from = 0usize;
-            while let Some(p) = code[from..].find(".unwrap()") {
-                let abs = from + p;
-                from = abs + 1;
-                if !is_poison_unwrap(code, abs) {
-                    push(
-                        i,
-                        "serve-no-panic",
-                        "`.unwrap()` in the serve hot path (not a poisoned-lock unwrap)"
-                            .to_string(),
-                    );
-                    break;
-                }
-            }
-        }
-
-        // Rule 5: env-read-site. The EAC_MOE_ prefix lives inside a string
-        // literal, so it is matched against the raw line (plus a short
-        // lookahead for calls split across lines).
-        if !in_util_env && code.contains("env::var") {
-            let mut window = sf.lines[i].raw.clone();
-            for l in sf.lines.iter().take(n.min(i + 3)).skip(i + 1) {
-                window.push_str(&l.raw);
-            }
-            if window.contains("EAC_MOE_") {
+        // Rule: env-read-site. `env::vars`/`vars_os` enumerate the whole
+        // environment — every EAC_MOE_* variable implicitly — so they are
+        // flagged outright. `env::var`/`var_os` are flagged when the read
+        // names an EAC_MOE_ key; the prefix lives inside a string literal,
+        // so it is matched against the raw line (plus a short lookahead
+        // for calls split across lines).
+        if !in_util_env {
+            if code.contains("env::vars") {
                 push(
                     i,
                     "env-read-site",
-                    "EAC_MOE_* env read outside util/env.rs".to_string(),
+                    "`env::vars` enumerates the environment (EAC_MOE_* included) \
+                     outside util/env.rs"
+                        .to_string(),
                 );
+            } else if code.contains("env::var") {
+                let mut window = sf.lines[i].raw.clone();
+                for l in sf.lines.iter().take(n.min(i + 3)).skip(i + 1) {
+                    window.push_str(&l.raw);
+                }
+                if window.contains("EAC_MOE_") {
+                    push(
+                        i,
+                        "env-read-site",
+                        "EAC_MOE_* env read outside util/env.rs".to_string(),
+                    );
+                }
             }
         }
     }
     findings
+}
+
+/// Lint one file's source text with the line rules only (the path decides
+/// rule scoping, so tests can replay fixtures at synthetic locations).
+/// Graph analyses need the whole file set — see [`lint_files`].
+pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
+    let sf = scan_source(rel, text);
+    let (allow, mut findings) = allow_masks(&sf, rel);
+    findings.extend(line_rules(&sf, rel, &allow));
+    findings
+}
+
+/// Lint a set of files: line rules on every file, graph analyses over the
+/// `rust/src/` subset, layering against `manifest` (repo-relative path +
+/// text) when given. Findings come back sorted by (file, line, rule).
+pub fn lint_files(
+    inputs: &[(String, String)],
+    manifest: Option<(&str, &str)>,
+    require_seeds: bool,
+) -> Result<Vec<Finding>, String> {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut prepared: Vec<analyses::Prepared> = Vec::new();
+    for (rel, text) in inputs {
+        let sf = scan_source(rel, text);
+        let (allow, marker_findings) = allow_masks(&sf, rel);
+        findings.extend(marker_findings);
+        findings.extend(line_rules(&sf, rel, &allow));
+        prepared.push(analyses::Prepared { sf, items: items::extract(rel, text), allow });
+    }
+    let man = match manifest {
+        Some((rel, text)) => Some(analyses::parse_manifest(rel, text)?),
+        None => None,
+    };
+    findings.extend(analyses::run(&prepared, man.as_ref(), require_seeds)?);
+    findings.sort_by(|a, b| {
+        (a.rel.as_str(), a.line, a.rule).cmp(&(b.rel.as_str(), b.line, b.rule))
+    });
+    Ok(findings)
 }
 
 fn collect_rs(root: &Path, rel_dir: &str, out: &mut Vec<(String, PathBuf)>) {
@@ -375,9 +401,14 @@ fn collect_rs(root: &Path, rel_dir: &str, out: &mut Vec<(String, PathBuf)>) {
     let Ok(rd) = std::fs::read_dir(&dir) else {
         return;
     };
-    for entry in rd.flatten() {
-        let path = entry.path();
-        let name = entry.file_name().to_string_lossy().into_owned();
+    // Sort entries by name: readdir order is filesystem-dependent, and
+    // stable finding order keeps CI lint output diffable across runners.
+    let mut entries: Vec<(String, PathBuf)> = rd
+        .flatten()
+        .map(|e| (e.file_name().to_string_lossy().into_owned(), e.path()))
+        .collect();
+    entries.sort();
+    for (name, path) in entries {
         if path.is_dir() {
             // `fixtures` holds deliberate violations; `target` is build output.
             if name == "target" || name == "fixtures" || name == ".git" {
@@ -390,7 +421,9 @@ fn collect_rs(root: &Path, rel_dir: &str, out: &mut Vec<(String, PathBuf)>) {
     }
 }
 
-/// Lint every `.rs` file under the scan roots of the repo at `root`.
+/// Lint every `.rs` file under the scan roots of the repo at `root`,
+/// including the graph analyses and the layering manifest (which must
+/// exist — a tree without its architecture manifest fails the lint).
 pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
     if !root.join("rust/src").is_dir() {
         return Err(format!(
@@ -403,13 +436,17 @@ pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
         collect_rs(root, r, &mut files);
     }
     files.sort();
-    let mut findings = Vec::new();
     let files_checked = files.len();
+    let mut inputs: Vec<(String, String)> = Vec::with_capacity(files.len());
     for (rel, path) in files {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
-        findings.extend(lint_source(&rel, &text));
+        inputs.push((rel, text));
     }
+    let manifest_path = root.join(MANIFEST_REL);
+    let manifest_text = std::fs::read_to_string(&manifest_path)
+        .map_err(|e| format!("read {} (layering manifest is required): {e}", manifest_path.display()))?;
+    let findings = lint_files(&inputs, Some((MANIFEST_REL, &manifest_text)), true)?;
     Ok(LintReport { findings, files_checked })
 }
 
@@ -456,6 +493,19 @@ mod tests {
         assert_eq!(got, expected, "fixture {name} linted at {rel}");
     }
 
+    /// Like `check_fixture`, but through the full pipeline (line rules +
+    /// graph analyses), which the reachability rules need.
+    fn check_graph_fixture(rel: &str, name: &str) {
+        let text = fixture(name);
+        let expected = expected_markers(&text);
+        let findings =
+            lint_files(&[(rel.to_string(), text)], None, false).expect("lint_files");
+        let mut got: Vec<(usize, String)> =
+            findings.into_iter().map(|f| (f.line, f.rule.to_string())).collect();
+        got.sort();
+        assert_eq!(got, expected, "fixture {name} linted at {rel}");
+    }
+
     #[test]
     fn fixture_unsafe_requires_safety_comment() {
         check_fixture("rust/src/tensor/fixture.rs", "unsafe_no_safety.rs");
@@ -477,11 +527,136 @@ mod tests {
     }
 
     #[test]
-    fn fixture_serve_panics_are_rejected_in_scope_only() {
-        check_fixture("rust/src/serve/fixture.rs", "serve_panic.rs");
-        // Outside the hot path the same file is clean.
-        let got = lint_source("rust/src/quant/fixture.rs", &fixture("serve_panic.rs"));
-        assert!(got.is_empty(), "serve-no-panic leaked out of scope: {:?}", dump(&got));
+    fn fixture_serve_panics_are_found_transitively() {
+        check_graph_fixture("rust/src/serve/fixture.rs", "serve_panic.rs");
+    }
+
+    #[test]
+    fn serve_reachability_is_path_independent() {
+        // The graph rule keys on entry points, not directory prefixes:
+        // the same fixture replayed *outside* serve/ still has Engine::serve
+        // and decode_step_batch, so the findings survive relocation —
+        // exactly what the old path-prefix heuristic got wrong.
+        let text = fixture("serve_panic.rs");
+        let findings = lint_files(&[("rust/src/quant/fixture.rs".to_string(), text)], None, false)
+            .expect("lint_files");
+        assert!(
+            findings.iter().any(|f| f.rule == "serve-no-panic"),
+            "relocated fixture lost its reachability findings"
+        );
+    }
+
+    #[test]
+    fn serve_finding_messages_carry_the_call_chain() {
+        let text = fixture("serve_panic.rs");
+        let findings = lint_files(&[("rust/src/serve/fixture.rs".to_string(), text)], None, false)
+            .expect("lint_files");
+        let boom = findings
+            .iter()
+            .find(|f| f.rule == "serve-no-panic" && f.msg.contains("panic!"))
+            .expect("panic finding");
+        assert!(
+            boom.msg.contains("Engine::serve → fixture::dispatch → fixture::boom"),
+            "chain missing or wrong: {}",
+            boom.msg
+        );
+    }
+
+    #[test]
+    fn missing_seeds_error_when_required() {
+        let files =
+            vec![("rust/src/quant/alone.rs".to_string(), "pub fn f() {}".to_string())];
+        let err = lint_files(&files, None, true).unwrap_err();
+        assert!(err.contains("seed"), "unexpected error: {err}");
+        // Without the requirement the same tree lints clean.
+        assert!(lint_files(&files, None, false).expect("lint").is_empty());
+    }
+
+    #[test]
+    fn fixture_float_hash_order() {
+        check_graph_fixture("rust/src/calib/fixture.rs", "float_hash.rs");
+    }
+
+    #[test]
+    fn fixture_fma_transitive_ignores_inline_allows() {
+        // Replayed at a kernel contract file: the inline `no-fma` allow
+        // silences the line rule but not the transitive one.
+        check_graph_fixture("rust/src/tensor/matmul.rs", "fma_transitive.rs");
+        // Outside the contract region the transitive rule has no seeds
+        // here, so only the (allowed) line rule applies → clean.
+        let text = fixture("fma_transitive.rs");
+        let findings = lint_files(&[("rust/src/calib/fixture.rs".to_string(), text)], None, false)
+            .expect("lint_files");
+        assert!(
+            findings.is_empty(),
+            "transitive FMA leaked outside the contract region: {:?}",
+            dump(&findings)
+        );
+    }
+
+    #[test]
+    fn layering_edge_and_coverage_violations() {
+        let files = vec![
+            (
+                "rust/src/util/env.rs".to_string(),
+                "pub fn threads() -> usize { 1 }".to_string(),
+            ),
+            (
+                "rust/src/tensor/ops.rs".to_string(),
+                "use crate::serve::Engine;\npub fn f() {}".to_string(),
+            ),
+            (
+                "rust/src/serve/engine.rs".to_string(),
+                "pub struct Engine;".to_string(),
+            ),
+        ];
+        let manifest = "util = []\ntensor = [\"util\"]\nserve = \"*\"\nghost = []\n";
+        let findings = lint_files(&files, Some(("rust/xtask/layering.toml", manifest)), false)
+            .expect("lint_files");
+        let msgs: Vec<&str> = findings.iter().map(|f| f.msg.as_str()).collect();
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.rule == "module-layering"
+                    && f.rel == "rust/src/tensor/ops.rs"
+                    && f.line == 1
+                    && f.msg.contains("must not depend on `serve`")),
+            "missing disallowed-edge finding: {msgs:?}"
+        );
+        assert!(
+            findings.iter().any(|f| f.msg.contains("`ghost` matches no module")),
+            "missing unknown-entry finding: {msgs:?}"
+        );
+    }
+
+    #[test]
+    fn layering_uncovered_module_and_cycle() {
+        let files = vec![
+            ("rust/src/a/mod.rs".to_string(), "use crate::b::X;\npub struct Z;".to_string()),
+            ("rust/src/b/mod.rs".to_string(), "use crate::a::Z;\npub struct X;".to_string()),
+        ];
+        let manifest = "a = [\"b\"]\n";
+        let findings = lint_files(&files, Some(("rust/xtask/layering.toml", manifest)), false)
+            .expect("lint_files");
+        assert!(
+            findings.iter().any(|f| f.msg.contains("`b` has no entry")),
+            "missing uncovered-module finding: {:?}",
+            dump(&findings)
+        );
+        assert!(
+            findings.iter().any(|f| f.msg.contains("dependency cycle")),
+            "missing cycle finding: {:?}",
+            dump(&findings)
+        );
+    }
+
+    #[test]
+    fn bad_manifest_is_an_error() {
+        let files =
+            vec![("rust/src/a/mod.rs".to_string(), "pub fn f() {}".to_string())];
+        let err = lint_files(&files, Some(("rust/xtask/layering.toml", "a = 7\n")), false)
+            .unwrap_err();
+        assert!(err.contains("layering.toml"), "unexpected error: {err}");
     }
 
     #[test]
@@ -493,9 +668,12 @@ mod tests {
 
     #[test]
     fn fixture_clean_file_has_no_findings() {
-        // Linted at a hot-path rel so every rule is in scope.
-        let got = lint_source("rust/src/serve/clean.rs", &fixture("clean.rs"));
-        assert!(got.is_empty(), "clean fixture tripped rules: {:?}", dump(&got));
+        // Through the full pipeline, at a serve path, so every rule is in
+        // scope.
+        let text = fixture("clean.rs");
+        let findings = lint_files(&[("rust/src/serve/clean.rs".to_string(), text)], None, false)
+            .expect("lint_files");
+        assert!(findings.is_empty(), "clean fixture tripped rules: {:?}", dump(&findings));
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! SARIF 2.1.0 output for the linter, so findings surface as GitHub
+//! code-scanning annotations.
+//!
+//! Hand-rolled JSON (the crate is std-only by design): a minimal but
+//! schema-valid document — `version`, `$schema`, one run with the tool
+//! driver's rule table, and one `result` per finding with `ruleId`,
+//! `ruleIndex`, `level`, `message.text`, and a physical location
+//! (repo-relative URI + 1-based `startLine`). CI validates the emitted
+//! file against the official SARIF 2.1.0 JSON schema.
+
+use crate::rules::{Finding, META_RULE, RULES};
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a full SARIF document for the findings.
+pub fn render(findings: &[Finding]) -> String {
+    // Rule table: the declared rules plus the marker meta-rule; ruleIndex
+    // in each result points into this array.
+    let mut rule_ids: Vec<(&str, &str)> = RULES.to_vec();
+    rule_ids.push((META_RULE, "xtask-allow/region marker misuse"));
+
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(
+        "  \"$schema\": \"https://json.schemastore.org/sarif-2.1.0.json\",\n  \"version\": \"2.1.0\",\n",
+    );
+    out.push_str("  \"runs\": [\n    {\n      \"tool\": {\n        \"driver\": {\n");
+    out.push_str("          \"name\": \"xtask-lint\",\n");
+    out.push_str("          \"informationUri\": \"https://example.invalid/eac-moe/xtask\",\n");
+    out.push_str("          \"version\": \"0.1.0\",\n");
+    out.push_str("          \"rules\": [\n");
+    for (i, (id, desc)) in rule_ids.iter().enumerate() {
+        out.push_str(&format!(
+            "            {{ \"id\": \"{}\", \"shortDescription\": {{ \"text\": \"{}\" }} }}{}\n",
+            esc(id),
+            esc(desc),
+            if i + 1 < rule_ids.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("          ]\n        }\n      },\n");
+    out.push_str("      \"results\": [\n");
+    for (i, f) in findings.iter().enumerate() {
+        let rule_index = rule_ids
+            .iter()
+            .position(|(id, _)| *id == f.rule)
+            .map(|p| p as i64)
+            .unwrap_or(-1);
+        out.push_str("        {\n");
+        out.push_str(&format!("          \"ruleId\": \"{}\",\n", esc(f.rule)));
+        if rule_index >= 0 {
+            out.push_str(&format!("          \"ruleIndex\": {rule_index},\n"));
+        }
+        out.push_str("          \"level\": \"error\",\n");
+        out.push_str(&format!(
+            "          \"message\": {{ \"text\": \"{}\" }},\n",
+            esc(&f.msg)
+        ));
+        out.push_str("          \"locations\": [\n            {\n");
+        out.push_str("              \"physicalLocation\": {\n");
+        out.push_str(&format!(
+            "                \"artifactLocation\": {{ \"uri\": \"{}\" }},\n",
+            esc(&f.rel)
+        ));
+        out.push_str(&format!(
+            "                \"region\": {{ \"startLine\": {} }}\n",
+            f.line.max(1)
+        ));
+        out.push_str("              }\n            }\n          ]\n");
+        out.push_str(&format!(
+            "        }}{}\n",
+            if i + 1 < findings.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("      ]\n    }\n  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![
+            Finding {
+                rel: "rust/src/serve/engine.rs".into(),
+                line: 12,
+                rule: "serve-no-panic",
+                msg: "`panic!` with \"quotes\" and a\nnewline".into(),
+            },
+            Finding {
+                rel: "rust/xtask/layering.toml".into(),
+                line: 1,
+                rule: "module-layering",
+                msg: "module `a` has no entry".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn renders_required_fields() {
+        let doc = render(&sample());
+        for needle in [
+            "\"version\": \"2.1.0\"",
+            "sarif-2.1.0.json",
+            "\"name\": \"xtask-lint\"",
+            "\"ruleId\": \"serve-no-panic\"",
+            "\"startLine\": 12",
+            "rust/src/serve/engine.rs",
+        ] {
+            assert!(doc.contains(needle), "missing {needle} in:\n{doc}");
+        }
+    }
+
+    #[test]
+    fn escapes_message_text() {
+        let doc = render(&sample());
+        assert!(doc.contains("\\\"quotes\\\""));
+        assert!(doc.contains("a\\nnewline"));
+        assert!(!doc.contains("a\nnewline"), "raw newline leaked into a JSON string");
+    }
+
+    #[test]
+    fn empty_findings_still_valid_shape() {
+        let doc = render(&[]);
+        assert!(doc.contains("\"results\": [\n      ]"));
+        // Every declared rule appears in the driver table.
+        for (id, _) in RULES {
+            assert!(doc.contains(&format!("\"id\": \"{id}\"")), "rule {id} missing");
+        }
+    }
+
+    /// A structural brace/bracket/quote balance check — not a JSON parser,
+    /// but enough to catch an unbalanced emitter. CI validates the real
+    /// document against the official schema.
+    #[test]
+    fn braces_balance() {
+        let doc = render(&sample());
+        let mut depth = 0i32;
+        let mut in_str = false;
+        let mut prev_escape = false;
+        for c in doc.chars() {
+            if in_str {
+                if prev_escape {
+                    prev_escape = false;
+                } else if c == '\\' {
+                    prev_escape = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' | '[' => depth += 1,
+                '}' | ']' => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0);
+        assert!(!in_str);
+    }
+}
