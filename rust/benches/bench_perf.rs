@@ -596,6 +596,77 @@ fn main() {
         json.set("kv_cache/decode_ppl", o);
     }
 
+    // --- Expert merging (`merge/*`): decode throughput and routed-expert
+    // footprint at merge thresholds {1.0, 0.9, 0.7} on synthesized
+    // near-duplicate expert pairs. Threshold 1.0 is the bit-identity
+    // anchor (asserted against the unmerged model before timing); lower
+    // thresholds halve the routed expert count and report the byte and
+    // tok/s effect of serving cluster bases + low-rank deltas.
+    {
+        use eac_moe::model::hooks::Hooks;
+        use eac_moe::prune::{
+            merge_experts, synthesize_mergeable_pairs, uniform_frequencies, MergeConfig,
+        };
+        let mut base_w = model.weights.clone();
+        synthesize_mergeable_pairs(&mut base_w, 0.05, 3);
+        let base = Model::new(base_w.clone());
+        let bsz = 4usize;
+        let prompts: Vec<Vec<u32>> = (0..bsz)
+            .map(|b| (0..64u32).map(|i| (i * 7 + b as u32 * 13) % 512).collect())
+            .collect();
+        let toks: Vec<u32> = (0..bsz as u32).map(|b| b * 31 % 512).collect();
+        let prefill_on = |m: &Model| -> Vec<eac_moe::model::KvCache> {
+            prompts
+                .iter()
+                .map(|p| {
+                    let mut c = eac_moe::model::KvCache::new(m.cfg());
+                    m.prefill_into_cache(p, &Hooks::none(), &mut c);
+                    c
+                })
+                .collect()
+        };
+        let mut ref_caches = prefill_on(&base);
+        let ref_logits = base.decode_step_batch(&toks, &mut ref_caches, &Hooks::none());
+        for &threshold in &[1.0f32, 0.9, 0.7] {
+            let mut w = base_w.clone();
+            let rep = merge_experts(
+                &mut w,
+                &uniform_frequencies(cfg.n_layers, cfg.n_experts),
+                &MergeConfig::at_threshold(threshold),
+            );
+            let routed_bytes = w.routed_expert_bytes();
+            let mm = Model::new(w);
+            let mut caches = prefill_on(&mm);
+            let ctx_len = caches[0].len;
+            if threshold >= 1.0 {
+                let a = mm.decode_step_batch(&toks, &mut caches, &Hooks::none());
+                assert_eq!(
+                    a.data, ref_logits.data,
+                    "threshold=1.0 merged decode differs from unmerged"
+                );
+            }
+            let r = bench(&format!("decode step B={bsz} merged t={threshold}"), || {
+                for c in caches.iter_mut() {
+                    c.len = ctx_len;
+                }
+                std::hint::black_box(mm.decode_step_batch(&toks, &mut caches, &Hooks::none()));
+            });
+            let tps = bsz as f64 / (r.mean_ns / 1e9);
+            println!(
+                "    -> t={threshold}: {} -> {} experts, {:.2} MB routed, {tps:.0} decode tok/s",
+                rep.experts_before,
+                rep.experts_after,
+                routed_bytes as f64 / 1e6
+            );
+            let mut o = Json::obj();
+            o.set("experts_before", Json::Num(rep.experts_before as f64))
+                .set("experts_after", Json::Num(rep.experts_after as f64))
+                .set("routed_bytes", Json::Num(routed_bytes as f64))
+                .set("tokens_per_sec", Json::Num(tps));
+            json.set(&format!("merge/t{threshold}"), o);
+        }
+    }
+
     // --- Decode step (kv-cache path; quantization's bandwidth-bound case).
     let mut cache = eac_moe::model::KvCache::new(model.cfg());
     for &t in tokens.iter().take(64) {

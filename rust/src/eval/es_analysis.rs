@@ -130,4 +130,80 @@ mod tests {
             assert!(mx >= mn);
         }
     }
+
+    /// Hand-built profile with a known flat frequency vector (no model).
+    fn fixture(name: &str, family: &'static str, profile: Vec<f32>) -> EsProfile {
+        EsProfile { dataset: name.to_string(), family, per_layer: vec![profile.clone()], profile }
+    }
+
+    /// Pinned cosine values: identical profiles → 1, orthogonal (disjoint
+    /// support) → 0, anti-correlated (mean-centered mirror) → the exact
+    /// hand-computed negative value.
+    #[test]
+    fn similarity_matrix_pinned_fixtures() {
+        let a = fixture("a", "web", vec![0.5, 0.5, 0.0, 0.0]);
+        let b = fixture("b", "web", vec![0.5, 0.5, 0.0, 0.0]); // identical to a
+        let c = fixture("c", "code", vec![0.0, 0.0, 0.5, 0.5]); // orthogonal to a
+        // cos(d, a) = (0.5*0.1 + 0.5*0.1) / (|a| * |d|)
+        //           = 0.1 / (sqrt(0.5) * sqrt(0.34)) = 0.24253563
+        let d = fixture("d", "code", vec![0.1, 0.1, 0.4, 0.4]);
+        let sim = es_similarity_matrix(&[a, b, c, d]);
+        assert!((sim[0][1] - 1.0).abs() < 1e-6, "identical: {}", sim[0][1]);
+        assert!(sim[0][2].abs() < 1e-6, "orthogonal: {}", sim[0][2]);
+        assert!((sim[0][3] - 0.242_536).abs() < 1e-5, "partial overlap: {}", sim[0][3]);
+        for i in 0..4 {
+            assert!((sim[i][i] - 1.0).abs() < 1e-6);
+            for j in 0..4 {
+                assert!((sim[i][j] - sim[j][i]).abs() < 1e-7, "symmetry at ({i},{j})");
+            }
+        }
+    }
+
+    /// Anti-correlated profiles: cosine of [1,-1] vs [-1,1] is exactly -1.
+    /// (Selection frequencies are nonnegative, but the matrix itself is
+    /// generic — pin the negative branch of the f64 accumulator too.)
+    #[test]
+    fn similarity_matrix_anti_correlated_pins_minus_one() {
+        let p = fixture("p", "web", vec![1.0, -1.0]);
+        let q = fixture("q", "web", vec![-1.0, 1.0]);
+        let sim = es_similarity_matrix(&[p, q]);
+        assert!((sim[0][1] + 1.0).abs() < 1e-6, "anti-correlated: {}", sim[0][1]);
+    }
+
+    /// intra/inter means over a 2-family fixture, hand-computed:
+    /// intra pairs: (a,b)=1.0 and (c,d)=cos(c,d); inter pairs: the four
+    /// cross-family cosines, all 0 or the known partial value.
+    #[test]
+    fn intra_inter_summary_pinned() {
+        let profiles = vec![
+            fixture("a", "web", vec![0.5, 0.5, 0.0, 0.0]),
+            fixture("b", "web", vec![0.5, 0.5, 0.0, 0.0]),
+            fixture("c", "code", vec![0.0, 0.0, 0.5, 0.5]),
+            fixture("d", "code", vec![0.1, 0.1, 0.4, 0.4]),
+        ];
+        let sim = es_similarity_matrix(&profiles);
+        let (intra, inter) = intra_inter_summary(&profiles, &sim);
+        // intra = mean(1.0, cos(c,d)); cos(c,d) = (0.2+0.2)/(sqrt(0.5)*sqrt(0.34))
+        //       = 0.97014250 → intra = 0.98507125
+        assert!((intra - 0.985_071).abs() < 1e-5, "intra {intra}");
+        // inter = mean(cos(a,c)=0, cos(a,d)=0.24253563, cos(b,c)=0, cos(b,d)=0.24253563)
+        //       = 0.12126781
+        assert!((inter - 0.121_268).abs() < 1e-5, "inter {inter}");
+        assert!(intra > inter, "families separate in the fixture");
+    }
+
+    /// Degenerate inputs: a single family yields zero inter pairs (the
+    /// max(1) guard), and a zero profile cosines to 0 against everything.
+    #[test]
+    fn intra_inter_summary_degenerate_inputs() {
+        let profiles = vec![
+            fixture("a", "web", vec![1.0, 0.0]),
+            fixture("z", "web", vec![0.0, 0.0]), // zero profile → cosine 0
+        ];
+        let sim = es_similarity_matrix(&profiles);
+        assert_eq!(sim[0][1], 0.0);
+        let (intra, inter) = intra_inter_summary(&profiles, &sim);
+        assert_eq!(intra, 0.0);
+        assert_eq!(inter, 0.0); // no inter pairs; guarded division
+    }
 }

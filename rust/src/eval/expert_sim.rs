@@ -1,0 +1,284 @@
+//! Expert *weight* similarity and utilization analysis — the measurement
+//! side of the expert-merging axis (`prune::merge`), and the MC#-style
+//! pseudo- vs native-MoE diagnostic (SNIPPETS.md §3).
+//!
+//! Two signals per MoE layer:
+//!
+//! * **Weight similarity** — pairwise cosine over each expert's
+//!   concatenated dense `w1‖w2‖w3`
+//!   ([`crate::model::ExpertWeights::concat_dense`]). High off-diagonal
+//!   mass means experts are redundant in weight space and merging will be
+//!   near-lossless; the per-threshold "mergeable pair" counts predict what
+//!   `prune::merge` would collapse.
+//! * **Utilization** — Eq.-3 selection frequencies from a recording
+//!   forward pass over a seeded synthetic corpus, plus the raw counts
+//!   PESF's Eq.-6 thresholds on.
+//!
+//! The pseudo-MoE flag follows the chuk-mlx exemplar: a router whose
+//! weight matrix has low effective rank (gate logits live in a small
+//! subspace) or whose experts are mostly pairwise-similar is behaving
+//! like a dense FFN with extra steps — merging is the right compression,
+//! not per-expert quantization effort.
+
+use crate::data::corpus::DatasetSpec;
+use crate::eval::es_analysis::es_frequencies;
+use crate::model::{LayerWeights, Model};
+use crate::tensor::linalg::effective_rank;
+use crate::tensor::ops::cosine;
+use crate::util::json::Json;
+
+/// Effective-rank tolerance for the router weight matrix (singular values
+/// below `tol * sigma_max` don't count toward the gate-logit rank).
+const ROUTER_RANK_TOL: f32 = 1e-3;
+
+/// Off-diagonal mean similarity above which a layer's experts are "mostly
+/// redundant" (the MC# >70%-similarity observation).
+const REDUNDANT_SIM: f32 = 0.7;
+
+/// One MoE layer's similarity/utilization analysis.
+#[derive(Clone, Debug)]
+pub struct ExpertSimLayer {
+    pub layer: usize,
+    /// Routed expert count as the router sees it ([`LayerWeights::n_routed`]).
+    pub n_experts: usize,
+    /// Pairwise weight-cosine matrix, `n_experts x n_experts`.
+    pub sim: Vec<Vec<f32>>,
+    /// Mean / max off-diagonal similarity.
+    pub mean_offdiag: f32,
+    pub max_offdiag: f32,
+    /// Pairs (i<j) at cosine >= 0.9 / >= 0.7 — what `prune::merge` would
+    /// consider collapsing at those thresholds.
+    pub mergeable_at_090: usize,
+    pub mergeable_at_070: usize,
+    /// Eq.-3 selection frequency per expert (sums to 1 when any token routed).
+    pub utilization: Vec<f32>,
+    /// Effective rank of the router weight matrix (gate-logit rank proxy).
+    pub router_rank: usize,
+    /// Low router rank or mostly-redundant experts: this layer routes like
+    /// a pseudo-MoE.
+    pub pseudo_moe: bool,
+}
+
+/// Whole-model analysis, emitted by `analyze --expert-sim`.
+#[derive(Clone, Debug)]
+pub struct ExpertSimReport {
+    pub model: String,
+    pub dataset: String,
+    pub layers: Vec<ExpertSimLayer>,
+    /// Majority of layers flagged pseudo.
+    pub pseudo_moe: bool,
+}
+
+/// Pairwise weight-cosine matrix over one layer's resident routed experts.
+pub fn weight_similarity_matrix(layer: &LayerWeights) -> Vec<Vec<f32>> {
+    let flats: Vec<Vec<f32>> = layer.experts().iter().map(|e| e.concat_dense()).collect();
+    let n = flats.len();
+    let mut m = vec![vec![0f32; n]; n];
+    for i in 0..n {
+        m[i][i] = 1.0;
+        for j in 0..i {
+            let c = cosine(&flats[i], &flats[j]);
+            m[i][j] = c;
+            m[j][i] = c;
+        }
+    }
+    m
+}
+
+/// Run the full per-layer analysis: weight similarity from the resident
+/// weights, utilization from a recording forward pass over `n_seqs`
+/// sequences of `spec`. Requires a resident (non-tiered) model — the
+/// analysis reads every expert's weights.
+pub fn analyze_expert_sim(
+    model: &Model,
+    spec: &DatasetSpec,
+    n_seqs: usize,
+    seq_len: usize,
+    seed: u64,
+) -> ExpertSimReport {
+    let cfg = model.cfg();
+    let profile = es_frequencies(model, spec, n_seqs, seq_len, seed);
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for (li, layer) in model.weights.layers.iter().enumerate() {
+        let n = layer.n_routed();
+        assert_eq!(
+            layer.experts().len(),
+            n,
+            "layer {li}: expert-sim analysis needs resident experts (store=resident)"
+        );
+        let sim = weight_similarity_matrix(layer);
+        let (mut sum, mut mx, mut pairs) = (0f64, f32::NEG_INFINITY, 0usize);
+        let (mut at90, mut at70) = (0usize, 0usize);
+        for i in 0..n {
+            for j in 0..i {
+                sum += sim[i][j] as f64;
+                mx = mx.max(sim[i][j]);
+                pairs += 1;
+                if sim[i][j] >= 0.9 {
+                    at90 += 1;
+                }
+                if sim[i][j] >= 0.7 {
+                    at70 += 1;
+                }
+            }
+        }
+        let mean_offdiag = if pairs == 0 { 0.0 } else { (sum / pairs as f64) as f32 };
+        let max_offdiag = if pairs == 0 { 0.0 } else { mx };
+        let router_rank = effective_rank(&layer.router, ROUTER_RANK_TOL);
+        let pseudo_moe = router_rank * 2 < n || mean_offdiag > REDUNDANT_SIM;
+        // The recorded frequency row is width n: merged layers route over
+        // merged ids, so old-id slots past n never appear in the record.
+        let mut utilization = profile.per_layer[li].clone();
+        utilization.truncate(n);
+        layers.push(ExpertSimLayer {
+            layer: li,
+            n_experts: n,
+            sim,
+            mean_offdiag,
+            max_offdiag,
+            mergeable_at_090: at90,
+            mergeable_at_070: at70,
+            utilization,
+            router_rank,
+            pseudo_moe,
+        });
+    }
+    let pseudo_count = layers.iter().filter(|l| l.pseudo_moe).count();
+    ExpertSimReport {
+        model: cfg.name.clone(),
+        dataset: spec.name.to_string(),
+        pseudo_moe: pseudo_count * 2 > layers.len(),
+        layers,
+    }
+}
+
+impl ExpertSimReport {
+    /// Machine-readable document for `results/analyze_expert_sim.json`.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("model", Json::Str(self.model.clone()));
+        root.set("dataset", Json::Str(self.dataset.clone()));
+        root.set("pseudo_moe", Json::Bool(self.pseudo_moe));
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut o = Json::obj();
+                o.set("layer", Json::Num(l.layer as f64));
+                o.set("n_experts", Json::Num(l.n_experts as f64));
+                o.set("mean_offdiag_sim", Json::Num(l.mean_offdiag as f64));
+                o.set("max_offdiag_sim", Json::Num(l.max_offdiag as f64));
+                o.set("mergeable_pairs_at_0.9", Json::Num(l.mergeable_at_090 as f64));
+                o.set("mergeable_pairs_at_0.7", Json::Num(l.mergeable_at_070 as f64));
+                o.set("router_rank", Json::Num(l.router_rank as f64));
+                o.set("pseudo_moe", Json::Bool(l.pseudo_moe));
+                o.set(
+                    "similarity",
+                    Json::Arr(
+                        l.sim
+                            .iter()
+                            .map(|row| {
+                                Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect())
+                            })
+                            .collect(),
+                    ),
+                );
+                o.set(
+                    "utilization",
+                    Json::Arr(l.utilization.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+                o
+            })
+            .collect();
+        root.set("layers", Json::Arr(layers));
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::DATASETS;
+    use crate::model::{ModelConfig, Weights};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 4,
+            top_k: 2,
+            n_shared: 0,
+            n_heads: 2,
+            vocab: 512,
+            max_seq: 64,
+        }
+    }
+
+    /// Duplicate expert `src` into `dst` (exact copy) on one layer.
+    fn duplicate_expert(w: &mut Weights, li: usize, src: usize, dst: usize) {
+        let copy = (*w.layers[li].expert_arc(src)).clone();
+        *w.layers[li].expert_mut(dst) = copy;
+    }
+
+    #[test]
+    fn duplicated_experts_hit_similarity_one() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 51);
+        duplicate_expert(&mut w, 0, 0, 1);
+        let sim = weight_similarity_matrix(&w.layers[0]);
+        assert!((sim[0][1] - 1.0).abs() < 1e-6, "copied pair cosine {}", sim[0][1]);
+        assert!((sim[1][0] - 1.0).abs() < 1e-6);
+        // Independently initialized experts are near-orthogonal.
+        assert!(sim[2][3].abs() < 0.5, "random pair cosine {}", sim[2][3]);
+        for (i, row) in sim.iter().enumerate() {
+            assert!((row[i] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn analysis_counts_mergeable_pairs_and_emits_json() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 52);
+        duplicate_expert(&mut w, 0, 0, 1);
+        let m = Model::new(w);
+        let rep = analyze_expert_sim(&m, &DATASETS[0], 2, 24, 9);
+        assert_eq!(rep.layers.len(), 2);
+        let l0 = &rep.layers[0];
+        assert!(l0.mergeable_at_090 >= 1, "copied pair counted at 0.9");
+        assert!(l0.max_offdiag > 0.99);
+        assert_eq!(l0.utilization.len(), cfg.n_experts);
+        assert_eq!(l0.sim.len(), cfg.n_experts);
+        assert!(l0.router_rank >= 1 && l0.router_rank <= cfg.n_experts);
+        let j = rep.to_json();
+        let layers = j.get("layers").and_then(|l| l.as_arr()).expect("layers array");
+        assert_eq!(layers.len(), 2);
+        assert!(layers[0].get("mergeable_pairs_at_0.9").is_some());
+        assert!(layers[0].get("utilization").is_some());
+        assert!(j.get("pseudo_moe").is_some());
+    }
+
+    /// A rank-1 router (all rows identical up to scale) is flagged pseudo.
+    #[test]
+    fn low_rank_router_flags_pseudo() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 53);
+        for li in 0..w.layers.len() {
+            let r = &mut w.layers[li].router;
+            for row in 0..r.rows {
+                let base = r.at(row, 0);
+                for c in 0..r.cols {
+                    *r.at_mut(row, c) = base;
+                }
+            }
+        }
+        let m = Model::new(w);
+        let rep = analyze_expert_sim(&m, &DATASETS[0], 1, 16, 9);
+        for l in &rep.layers {
+            assert_eq!(l.router_rank, 1);
+            assert!(l.pseudo_moe);
+        }
+        assert!(rep.pseudo_moe);
+    }
+}

@@ -1,10 +1,13 @@
-//! Evaluation stack: perplexity, zero-shot likelihood scoring, and
-//! expert-selection analysis (Fig 2 / Fig 10-13).
+//! Evaluation stack: perplexity, zero-shot likelihood scoring,
+//! expert-selection analysis (Fig 2 / Fig 10-13), and expert *weight*
+//! similarity/utilization analysis for the merging axis.
 
 pub mod es_analysis;
+pub mod expert_sim;
 pub mod ppl;
 pub mod zeroshot;
 
 pub use es_analysis::{es_frequencies, es_similarity_matrix, EsProfile};
+pub use expert_sim::{analyze_expert_sim, weight_similarity_matrix, ExpertSimReport};
 pub use ppl::{perplexity, perplexity_with_hooks};
 pub use zeroshot::{eval_task, eval_suite, SuiteResult, TaskResult};

@@ -10,7 +10,8 @@
 //!                   [--requests N] [--len L] [--decode D] [--expert-budget-mb B]
 //!                   [--kv-bits <32|8>]
 //! eac-moe analyze-es --model <key> [--scale S]
-//! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|all
+//! eac-moe analyze    --expert-sim --model <key> [--dataset D] [--scale S]
+//! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|merge|all
 //! ```
 
 use eac_moe::coordinator::{load_or_init_model, ExperimentContext};
@@ -32,6 +33,7 @@ fn main() {
         "eval" => cmd_eval(&opts),
         "serve" => cmd_serve(&opts),
         "analyze-es" => cmd_analyze_es(&opts),
+        "analyze" => cmd_analyze(&opts),
         "experiment" => {
             let id = args.get(1).map(|s| s.as_str()).unwrap_or("all");
             let opts = parse_opts(&args[2..]);
@@ -73,8 +75,13 @@ fn usage() {
          \x20             --kv-bits 8 stores decode KV caches as int8 per head with\n\
          \x20             per-position scales — ~4x smaller caches, tolerance-pinned)\n\
          \x20 analyze-es --model <key> [--scale S]\n\
+         \x20 analyze    --expert-sim --model <key> [--dataset D] [--scale S]\n\
+         \x20            (per-layer expert weight-similarity + utilization + pseudo-MoE\n\
+         \x20             detection; writes results/analyze_expert_sim.json for\n\
+         \x20             `prune::merge` threshold selection)\n\
          \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
-         \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|all)\n\
+         \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|\n\
+         \x20                               merge|all)\n\
          \n\
          MODELS: mixtral-mini | phi-mini | deepseek-mini | qwen-mini\n\
          SCALE:  data-volume multiplier for experiments (default 1.0; use 0.2 for quick runs)"
@@ -321,6 +328,59 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     );
     let (_resps, metrics) = engine.serve(reqs);
     println!("{}", metrics.summary());
+    Ok(())
+}
+
+/// `analyze --expert-sim`: per-layer expert weight-similarity /
+/// utilization / pseudo-MoE analysis — the measurement side of the
+/// expert-merging axis (`prune::merge` consumes the thresholds this
+/// surfaces). Emits `results/analyze_expert_sim.json`.
+fn cmd_analyze(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
+    use eac_moe::data::corpus::DATASETS;
+    if !opts.contains_key("expert-sim") {
+        anyhow::bail!("analyze requires a mode flag: `analyze --expert-sim` (see --help)");
+    }
+    let zoo = model_key(opts);
+    let (model, pretrained) = load_or_init_model(zoo);
+    if !pretrained {
+        eprintln!(
+            "warning: random-init experts are near-orthogonal; similarity \
+             structure only appears on pretrained weights"
+        );
+    }
+    let spec = match opts.get("dataset") {
+        None => &DATASETS[0],
+        Some(name) => DATASETS.iter().find(|d| d.name == name.as_str()).ok_or_else(|| {
+            let known: Vec<&str> = DATASETS.iter().map(|d| d.name).collect();
+            anyhow::anyhow!("unknown dataset '{name}' (one of: {})", known.join("|"))
+        })?,
+    };
+    let s = scale(opts);
+    let n_seqs = ((6.0 * s) as usize).max(2);
+    let rep = eac_moe::eval::analyze_expert_sim(&model, spec, n_seqs, 96, 17);
+    let mut table = eac_moe::report::Table::new(
+        &format!("expert similarity — {} on {}", zoo.key(), spec.name),
+        &["layer", "experts", "mean sim", "max sim", "pairs>=0.9", "pairs>=0.7", "rank", "pseudo"],
+    );
+    for l in &rep.layers {
+        table.row(vec![
+            format!("{}", l.layer),
+            format!("{}", l.n_experts),
+            format!("{:.3}", l.mean_offdiag),
+            format!("{:.3}", l.max_offdiag),
+            format!("{}", l.mergeable_at_090),
+            format!("{}", l.mergeable_at_070),
+            format!("{}", l.router_rank),
+            if l.pseudo_moe { "yes".into() } else { "no".into() },
+        ]);
+    }
+    table.print();
+    println!(
+        "model verdict: {} (majority of layers {} like a pseudo-MoE)",
+        if rep.pseudo_moe { "PSEUDO-MoE" } else { "native MoE" },
+        if rep.pseudo_moe { "route" } else { "do not route" },
+    );
+    eac_moe::report::save_result("analyze_expert_sim", &rep.to_json())?;
     Ok(())
 }
 

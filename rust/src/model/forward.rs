@@ -33,10 +33,11 @@
 use super::config::ModelConfig;
 use super::hooks::{Hooks, TokenSelection};
 use super::store::ExpertStore;
-use super::weights::{ExpertWeights, LayerWeights, Weights};
+use super::weights::{ExpertDelta, ExpertWeights, LayerWeights, RemapReduce, RouterRemap, Weights};
 use crate::tensor::ops::{rmsnorm, silu, softmax_inplace, topk_indices};
 use crate::tensor::pool::ThreadPool;
 use crate::tensor::{matmul_on, matmul_transb_on, simd, Mat};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Diagnostic output of one MoE layer (used by tests/analysis).
@@ -447,6 +448,12 @@ impl Model {
 
     /// Route tokens, execute (unpruned) experts grouped by expert, and add
     /// shared experts. Returns (output, diagnostics).
+    ///
+    /// A layer with an installed router remap (expert merging) dispatches
+    /// to [`Model::moe_layer_merged`] on its first line; the unmerged body
+    /// below is untouched by that feature, which is what makes the
+    /// threshold=1.0 "merge nothing" contract structurally bit-identical
+    /// rather than merely numerically so.
     pub fn moe_layer(
         &self,
         x: &Mat,
@@ -454,6 +461,9 @@ impl Model {
         li: usize,
         hooks: &Hooks,
     ) -> (Mat, MoeLayerOut) {
+        if let Some(rm) = layer.remap() {
+            return self.moe_layer_merged(x, layer, rm, li, hooks);
+        }
         let cfg = &self.weights.cfg;
         let seq = x.rows;
         let n = cfg.n_experts;
@@ -633,6 +643,232 @@ impl Model {
         (out, MoeLayerOut { expert_tokens })
     }
 
+    /// MoE layer over a **merged** expert set (see `prune::merge`): the
+    /// router still emits one logit per original expert; this path reduces
+    /// those to one logit per merged cluster (max or sum per the remap),
+    /// routes softmax/top-k/PESF over the merged width, and executes each
+    /// selected cluster as its base expert plus the low-rank delta of the
+    /// cluster member whose raw logit won for that token — so a cluster of
+    /// near-duplicates still specializes per token at a fraction of the
+    /// weight bytes.
+    ///
+    /// Everything downstream of routing sees merged ids: selection
+    /// records, PESF masks, `seq_expert_masks` rows and
+    /// `MoeLayerOut::expert_tokens` are all `n_merged` wide.
+    ///
+    /// Determinism contract matches [`Model::moe_layer`]: grouping is by
+    /// `(merged id, winning old id)` in a BTreeMap, execution parallelism
+    /// never splits a group, and the scatter walks groups in ascending key
+    /// order — bit-identical at every pool size and store budget.
+    fn moe_layer_merged(
+        &self,
+        x: &Mat,
+        layer: &LayerWeights,
+        rm: &RouterRemap,
+        li: usize,
+        hooks: &Hooks,
+    ) -> (Mat, MoeLayerOut) {
+        let cfg = &self.weights.cfg;
+        let seq = x.rows;
+        let n_old = rm.map.len();
+        let n = rm.n_merged;
+        // A merge can leave fewer clusters than top_k in a layer.
+        let k = cfg.top_k.min(n);
+        if let Some(rows) = &hooks.seq_expert_masks {
+            assert_eq!(rows.len(), seq, "one seq-mask slot per row");
+        }
+
+        let pool = &*self.pool;
+        let raw = matmul_on(pool, x, &layer.router);
+        debug_assert!(raw.cols == n_old, "router width {} != remap width {n_old}", raw.cols);
+        // Calibration captures see the raw per-old-expert logits — the
+        // gate itself is unchanged by merging.
+        if let Some(cap) = &hooks.capture_router_logits {
+            cap.borrow_mut()[li] = Some(raw.clone());
+        }
+        // Reduce old-id logits to merged-id logits, remembering per
+        // (token, merged id) which member's raw logit won — that member's
+        // delta is applied on top of the cluster base. Strict `>` keeps
+        // the lowest old id on ties, deterministically.
+        let mut scores = Mat::zeros(seq, n);
+        let mut winners: Vec<u16> = vec![0; seq * n];
+        let mut best: Vec<f32> = vec![f32::NEG_INFINITY; n];
+        for t in 0..seq {
+            best.iter_mut().for_each(|b| *b = f32::NEG_INFINITY);
+            let row = raw.row(t);
+            let srow = scores.row_mut(t);
+            for (o, &logit) in row.iter().enumerate() {
+                let m = rm.map[o] as usize;
+                debug_assert!(m < n, "remap target {m} out of {n}");
+                if logit > best[m] {
+                    best[m] = logit;
+                    winners[t * n + m] = o as u16;
+                }
+                match rm.reduce {
+                    // First member seen for m overwrites the zero init;
+                    // `best` doubles as the "seen" flag (still -inf).
+                    RemapReduce::Max => srow[m] = best[m],
+                    RemapReduce::Sum => srow[m] += logit,
+                }
+            }
+            softmax_inplace(srow);
+        }
+
+        // Per-token selections over merged ids (or forced replay, which by
+        // contract was recorded against this same merged width).
+        let mut selections: Vec<TokenSelection> = Vec::with_capacity(seq);
+        for t in 0..seq {
+            let mut sel = if let Some(forced) = &hooks.force_selections {
+                forced.record.layers[li][t].clone()
+            } else {
+                let idx = topk_indices(scores.row(t), k);
+                TokenSelection {
+                    experts: idx.iter().map(|&e| e as u16).collect(),
+                    scores: idx.iter().map(|&e| scores.at(t, e)).collect(),
+                }
+            };
+            if let Some(filter) = &hooks.selection_filter {
+                let before = sel.experts.len();
+                filter(li, t, x.row(t), &mut sel);
+                if let Some(stats) = &hooks.filter_drops {
+                    let mut s = stats.borrow_mut();
+                    s.seen += before as u64;
+                    s.dropped += (before - sel.experts.len()) as u64;
+                }
+            }
+            selections.push(sel);
+        }
+        if let Some(rec) = &hooks.record_selections {
+            let mut rec = rec.borrow_mut();
+            rec.layers[li].extend(selections.iter().cloned());
+        }
+
+        // PESF (Eq. 6) over the merged width: the threshold divisor is the
+        // number of ids a token can actually select here, `n_merged`.
+        let pesf_mask: Option<Vec<bool>> = hooks.pesf_alpha.map(|alpha| {
+            let mut counts = vec![0u64; n];
+            for sel in &selections {
+                for &e in &sel.experts {
+                    debug_assert!((e as usize) < n, "merged selection id {e} out of {n}");
+                    counts[e as usize] += 1;
+                }
+            }
+            let thr = (seq * k) as f32 / n as f32 * alpha;
+            counts.iter().map(|&c| alpha > 0.0 && (c as f32) < thr).collect()
+        });
+        if let (Some(stats), Some(mask)) = (&hooks.pesf_pruned, &pesf_mask) {
+            stats.borrow_mut()[li] = mask.iter().filter(|&&m| m).count();
+        }
+
+        // Same mask semantics as the unmerged path; all indices are merged
+        // ids (mask providers must build rows of width >= n_merged).
+        let masked = |t: usize, e: usize| {
+            hooks.expert_mask.as_ref().map(|m| m[li][e]).unwrap_or(false)
+                || pesf_mask.as_ref().map(|m| m[e]).unwrap_or(false)
+                || hooks
+                    .seq_expert_masks
+                    .as_ref()
+                    .and_then(|rows| rows[t].as_ref())
+                    .map(|m| m[li][e])
+                    .unwrap_or(false)
+        };
+
+        // Group tokens by (merged id, winning old id): every token in a
+        // group runs the same base + the same delta, as one gathered GEMM
+        // chain. BTreeMap iteration gives ascending key order for both the
+        // prefetch lists and the scatter below.
+        let mut out = Mat::zeros(seq, cfg.d_model);
+        let mut groups: BTreeMap<(usize, usize), Vec<(usize, f32)>> = BTreeMap::new();
+        for (t, sel) in selections.iter().enumerate() {
+            let survivors: Vec<(usize, f32)> = sel
+                .experts
+                .iter()
+                .zip(&sel.scores)
+                .filter(|(e, _)| !masked(t, **e as usize))
+                .map(|(&e, &s)| (e as usize, s))
+                .collect();
+            let denom: f32 = survivors.iter().map(|(_, s)| *s).sum();
+            if denom <= 0.0 {
+                continue; // all selected clusters pruned: MoE contributes 0
+            }
+            for (m, s) in survivors {
+                debug_assert!(m < n, "selected merged id {m} out of {n}");
+                let o = winners[t * n + m] as usize;
+                groups.entry((m, o)).or_default().push((t, s / denom));
+            }
+        }
+
+        // Prefetch bases (by merged id) and deltas (by winning old id) in
+        // one batch each. Bases are always resident — even under a tiered
+        // store only deltas tier — so the base fetch is an Arc clone;
+        // the delta fetch is the tiered load point and feeds the store's
+        // frequency signal with per-old-id routed-token counts.
+        let mut m_counts = vec![0usize; n];
+        let mut o_counts: BTreeMap<usize, usize> = BTreeMap::new();
+        for (&(m, o), g) in &groups {
+            m_counts[m] += g.len();
+            *o_counts.entry(o).or_insert(0) += g.len();
+        }
+        let base_wants: Vec<(usize, usize)> = m_counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(m, &c)| (m, c))
+            .collect();
+        let delta_wants: Vec<(usize, usize)> = o_counts.into_iter().collect();
+        let fetched = self.experts_for_layer(li, &base_wants);
+        let mut base_handles: Vec<Option<Arc<ExpertWeights>>> = (0..n).map(|_| None).collect();
+        for (&(m, _), h) in base_wants.iter().zip(fetched) {
+            base_handles[m] = Some(h);
+        }
+        let dfetched = self.deltas_for_layer(li, &delta_wants);
+        let mut delta_handles: BTreeMap<usize, Option<Arc<ExpertDelta>>> = BTreeMap::new();
+        for (&(o, _), d) in delta_wants.iter().zip(dfetched) {
+            delta_handles.insert(o, d);
+        }
+
+        // Execute each (base, delta) group as one pool task; scatter
+        // sequentially in ascending (merged, old) order.
+        let shared = layer.shared();
+        let group_list: Vec<(&(usize, usize), &Vec<(usize, f32)>)> = groups.iter().collect();
+        let mut group_out: Vec<Option<Mat>> = (0..group_list.len()).map(|_| None).collect();
+        let mut shared_out: Vec<Mat> = (0..shared.len()).map(|_| Mat::zeros(0, 0)).collect();
+        pool.scope(|s| {
+            for ((&(m, o), group), slot) in group_list.iter().copied().zip(group_out.iter_mut()) {
+                // The prefetch loops above covered every group key; a miss
+                // means those tokens fall back to shared experts only,
+                // which beats unwinding mid-batch.
+                debug_assert!(base_handles[m].is_some(), "prefetch missed merged expert {m}");
+                let Some(h) = base_handles[m].as_ref() else { continue };
+                let delta = delta_handles.get(&o).and_then(|d| d.as_deref());
+                s.spawn(move || {
+                    let token_ids: Vec<usize> = group.iter().map(|(t, _)| *t).collect();
+                    let gathered = x.gather_rows(&token_ids);
+                    *slot = Some(expert_forward_delta_on(pool, &gathered, h, delta));
+                });
+            }
+            for (sh, slot) in shared.iter().zip(shared_out.iter_mut()) {
+                s.spawn(move || *slot = expert_forward_on(pool, x, sh));
+            }
+        });
+        let mut expert_tokens = vec![0usize; n];
+        for ((&(m, _), group), y) in group_list.iter().copied().zip(group_out) {
+            let Some(y) = y else { continue };
+            expert_tokens[m] += group.len();
+            for (row, &(t, w)) in group.iter().enumerate() {
+                crate::tensor::ops::axpy(out.row_mut(t), w, y.row(row));
+            }
+        }
+        for y in shared_out {
+            debug_assert!(y.rows == seq, "shared expert output shape");
+            for t in 0..seq {
+                crate::tensor::ops::add_inplace(out.row_mut(t), y.row(t));
+            }
+        }
+
+        (out, MoeLayerOut { expert_tokens })
+    }
+
     /// Single-token decode step with kv cache (generate stage). PESF
     /// reaches decode through the hooks: `Hooks::seq_expert_masks` (one
     /// row here) and the global masks all apply. Thin wrapper over
@@ -798,6 +1034,54 @@ pub fn expert_forward_on(pool: &ThreadPool, x: &Mat, e: &ExpertWeights) -> Mat {
         *av = silu(*av) * bv;
     }
     e.w2.matmul_on(pool, &a)
+}
+
+/// Accumulate the low-rank correction `x @ (u·v)` into `acc`, computed as
+/// `(x@u)@v` — two skinny GEMMs instead of materializing the dense
+/// `u·v`, and exact: `x@(W + u·v) = x@W + (x@u)@v`.
+fn add_lowrank_on(pool: &ThreadPool, acc: &mut Mat, x: &Mat, u: &Mat, v: &Mat) {
+    let xu = matmul_on(pool, x, u);
+    let corr = matmul_on(pool, &xu, v);
+    debug_assert!(
+        acc.rows == corr.rows && acc.cols == corr.cols,
+        "low-rank correction shape {}x{} vs {}x{}",
+        corr.rows,
+        corr.cols,
+        acc.rows,
+        acc.cols
+    );
+    for (a, &c) in acc.data.iter_mut().zip(&corr.data) {
+        *a += c;
+    }
+}
+
+/// [`expert_forward_on`] for a merged cluster: the base expert's SwiGLU
+/// with the absorbed member's per-projection low-rank corrections folded
+/// in *before* each nonlinearity/product, so a delta that fully captures
+/// its member's residual reproduces the original expert exactly. With
+/// `delta = None` the GEMM sequence and elementwise loop are identical to
+/// [`expert_forward_on`] — singleton clusters are bit-identical to their
+/// unmerged expert.
+pub fn expert_forward_delta_on(
+    pool: &ThreadPool,
+    x: &Mat,
+    base: &ExpertWeights,
+    delta: Option<&ExpertDelta>,
+) -> Mat {
+    let mut a = base.w1.matmul_on(pool, x);
+    let mut b = base.w3.matmul_on(pool, x);
+    if let Some(d) = delta {
+        add_lowrank_on(pool, &mut a, x, &d.u1, &d.v1);
+        add_lowrank_on(pool, &mut b, x, &d.u3, &d.v3);
+    }
+    for (av, &bv) in a.data.iter_mut().zip(&b.data) {
+        *av = silu(*av) * bv;
+    }
+    let mut y = base.w2.matmul_on(pool, &a);
+    if let Some(d) = delta {
+        add_lowrank_on(pool, &mut y, &a, &d.u2, &d.v2);
+    }
+    y
 }
 
 #[cfg(test)]

@@ -14,4 +14,6 @@ pub use config::{ModelConfig, ZooModel};
 pub use forward::{expert_forward, expert_forward_on, KvCache, KvPrecision, Model, MoeLayerOut};
 pub use hooks::{FilterDropStats, ForcedSelections, Hooks, SelectionRecord, SeqExpertMask};
 pub use store::{ExpertStore, ExpertStoreStats, TieredStore};
-pub use weights::{ExpertWeights, LayerWeights, WeightMat, Weights};
+pub use weights::{
+    ExpertDelta, ExpertWeights, LayerWeights, RemapReduce, RouterRemap, WeightMat, Weights,
+};

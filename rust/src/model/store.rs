@@ -57,7 +57,7 @@
 
 use super::config::ModelConfig;
 use super::forward::Model;
-use super::weights::{read_expert_from, ExpertWeights, Weights};
+use super::weights::{read_delta_from, read_expert_from, ExpertDelta, ExpertWeights, Weights};
 use crate::tensor::pool::ThreadPool;
 use crate::util::binio::IndexedTensorFile;
 use anyhow::{Context, Result};
@@ -118,18 +118,37 @@ impl ExpertStore {
     }
 }
 
-/// On-disk location + size of one expert's tensors.
+/// On-disk location + size of one tierable unit's tensors (a routed
+/// expert, or one merged layer's per-old-expert delta).
 struct ExpertSpec {
-    /// Tensor-name prefix (`layer{i}.expert{e}`).
+    /// Tensor-name prefix (`layer{i}.expert{e}` / `layer{i}.delta{o}`).
     prefix: String,
     /// Payload bytes across its tensors (codes+scales+zeros for packed,
-    /// plain f32 for dense) — equals the loaded
-    /// [`ExpertWeights::storage_bytes`], so budget accounting is exact.
+    /// plain f32 for dense/deltas) — equals the loaded unit's
+    /// `storage_bytes`, so budget accounting is exact.
     bytes: usize,
 }
 
+/// One layer's tierable units. A layer is either unmerged (every routed
+/// expert tiers) or merged (cluster bases stay resident in [`Weights`];
+/// only the per-**old**-expert low-rank deltas tier — `None` where the
+/// checkpoint has no delta, i.e. the base alone is that member).
+enum LayerSpecs {
+    Experts(Vec<ExpertSpec>),
+    Deltas(Vec<Option<ExpertSpec>>),
+}
+
+/// A cached tierable unit. The key space `(layer, id)` is shared safely:
+/// a layer is either unmerged (ids are expert ids, units are `Expert`) or
+/// merged (ids are old expert ids, units are `Delta`) — never both.
+#[derive(Clone)]
+enum Unit {
+    Expert(Arc<ExpertWeights>),
+    Delta(Arc<ExpertDelta>),
+}
+
 struct CacheEntry {
-    w: Arc<ExpertWeights>,
+    u: Unit,
     bytes: usize,
     last_tick: u64,
 }
@@ -159,7 +178,7 @@ pub struct TieredStore {
     file: IndexedTensorFile,
     cfg: ModelConfig,
     budget: usize,
-    specs: Vec<Vec<ExpertSpec>>,
+    specs: Vec<LayerSpecs>,
     total_bytes: usize,
     max_expert_bytes: usize,
     inner: Mutex<Inner>,
@@ -184,16 +203,43 @@ impl Drop for TieredStore {
 }
 
 impl TieredStore {
-    /// Build the store over an already-opened indexed checkpoint.
-    /// Validates up front that every expert's tensors are present in the
+    /// Build the store over an already-opened indexed checkpoint, with the
+    /// (skeleton-)loaded `weights` determining each layer's tierable unit:
+    /// routed experts for unmerged layers, per-old-expert merge deltas for
+    /// merged ones (whose cluster bases stay resident in `weights`).
+    /// Validates up front that every unit's tensors are present in the
     /// index (a packed expert missing a `.q.codes`/`.q.scales`/`.q.zeros`
     /// sidecar is an error *here*, not a mid-serve panic) and that the
-    /// budget can hold at least the largest single expert.
-    pub fn new(file: IndexedTensorFile, cfg: &ModelConfig, budget_bytes: usize) -> Result<Self> {
+    /// budget can hold at least the largest single unit.
+    pub fn new(file: IndexedTensorFile, weights: &Weights, budget_bytes: usize) -> Result<Self> {
+        let cfg = &weights.cfg;
         let mut specs = Vec::with_capacity(cfg.n_layers);
         let mut total = 0usize;
         let mut max_expert = 0usize;
         for li in 0..cfg.n_layers {
+            if weights.layers[li].remap().is_some() {
+                let mut layer = Vec::with_capacity(cfg.n_experts);
+                for o in 0..cfg.n_experts {
+                    let prefix = format!("layer{li}.delta{o}");
+                    if !file.index.contains_key(&format!("{prefix}.w1.u")) {
+                        // No delta for this old id: its cluster base alone
+                        // is the member — nothing to tier.
+                        layer.push(None);
+                        continue;
+                    }
+                    let mut bytes = 0usize;
+                    for t in ["w1.u", "w1.v", "w2.u", "w2.v", "w3.u", "w3.v"] {
+                        bytes += file.entry_bytes(&format!("{prefix}.{t}")).with_context(|| {
+                            format!("merge delta '{prefix}': missing low-rank factor tensor")
+                        })?;
+                    }
+                    total += bytes;
+                    max_expert = max_expert.max(bytes);
+                    layer.push(Some(ExpertSpec { prefix, bytes }));
+                }
+                specs.push(LayerSpecs::Deltas(layer));
+                continue;
+            }
             let mut layer = Vec::with_capacity(cfg.n_experts);
             for e in 0..cfg.n_experts {
                 let prefix = format!("layer{li}.expert{e}");
@@ -219,7 +265,7 @@ impl TieredStore {
                 max_expert = max_expert.max(bytes);
                 layer.push(ExpertSpec { prefix, bytes });
             }
-            specs.push(layer);
+            specs.push(LayerSpecs::Experts(layer));
         }
         anyhow::ensure!(
             budget_bytes >= max_expert,
@@ -264,14 +310,62 @@ impl TieredStore {
         self.max_expert_bytes
     }
 
-    /// Fetch guard handles for one layer's about-to-run experts, loading
-    /// misses from disk and evicting to budget. `wants` is
-    /// `(expert, routed_token_count)` — the token counts are the same
+    /// Fetch guard handles for one **unmerged** layer's about-to-run
+    /// experts, loading misses from disk and evicting to budget. `wants`
+    /// is `(expert, routed_token_count)` — the token counts are the same
     /// selection-frequency signal PESF thresholds (Eq. 6's counts) and
     /// feed the eviction policy. Call once per MoE layer, *before* the
     /// expert GEMMs: the router's top-k has just determined exactly which
     /// experts run, so this is the router-score-driven prefetch point.
     pub fn fetch(&self, layer: usize, wants: &[(usize, usize)]) -> Result<Vec<Arc<ExpertWeights>>> {
+        debug_assert!(layer < self.specs.len(), "layer {layer} out of {}", self.specs.len());
+        anyhow::ensure!(
+            matches!(self.specs.get(layer), Some(LayerSpecs::Experts(_))),
+            "layer {layer} is merged; its tierable units are deltas (use fetch_deltas)"
+        );
+        let units = self.fetch_units(layer, wants)?;
+        units
+            .into_iter()
+            .map(|u| match u {
+                Some(Unit::Expert(w)) => Ok(w),
+                _ => anyhow::bail!("internal: non-expert unit cached under unmerged layer {layer}"),
+            })
+            .collect()
+    }
+
+    /// Fetch guard handles for one **merged** layer's about-to-run deltas,
+    /// by old expert id. `None` entries mean the checkpoint has no delta
+    /// for that member (the cluster base alone serves it) — not an error.
+    /// Same budget/eviction/frequency machinery as [`TieredStore::fetch`];
+    /// the token counts feed the per-old-id frequency signal.
+    pub fn fetch_deltas(
+        &self,
+        layer: usize,
+        wants: &[(usize, usize)],
+    ) -> Result<Vec<Option<Arc<ExpertDelta>>>> {
+        debug_assert!(layer < self.specs.len(), "layer {layer} out of {}", self.specs.len());
+        anyhow::ensure!(
+            matches!(self.specs.get(layer), Some(LayerSpecs::Deltas(_))),
+            "layer {layer} is not merged; it has no tiered deltas (use fetch)"
+        );
+        let units = self.fetch_units(layer, wants)?;
+        units
+            .into_iter()
+            .map(|u| match u {
+                None => Ok(None),
+                Some(Unit::Delta(d)) => Ok(Some(d)),
+                Some(Unit::Expert(_)) => {
+                    anyhow::bail!("internal: expert unit cached under merged layer {layer}")
+                }
+            })
+            .collect()
+    }
+
+    /// Shared fetch core over tierable units (experts or deltas). Returns
+    /// one entry per want: `Some(unit)`, or `None` for a merged-layer id
+    /// with no delta spec (still counted into the frequency signal — the
+    /// router routed tokens there).
+    fn fetch_units(&self, layer: usize, wants: &[(usize, usize)]) -> Result<Vec<Option<Unit>>> {
         let batch: Vec<(u32, u32)> =
             wants.iter().map(|&(e, _)| (layer as u32, e as u32)).collect();
         let mut out = Vec::with_capacity(wants.len());
@@ -287,16 +381,34 @@ impl TieredStore {
         }
         for &(e, tokens) in wants {
             inner.freq[layer][e] += tokens as u64;
+            // Resolve the unit's on-disk spec; a merged-layer id with no
+            // delta has nothing to load or cache.
+            let (spec, is_delta) = match &self.specs[layer] {
+                LayerSpecs::Experts(v) => {
+                    anyhow::ensure!(e < v.len(), "expert {e} out of range for layer {layer}");
+                    (&v[e], false)
+                }
+                LayerSpecs::Deltas(v) => {
+                    anyhow::ensure!(e < v.len(), "old expert {e} out of range for layer {layer}");
+                    match &v[e] {
+                        Some(s) => (s, true),
+                        None => {
+                            out.push(None);
+                            continue;
+                        }
+                    }
+                }
+            };
             let key = (layer as u32, e as u32);
             loop {
                 if let Some(ent) = inner.cache.get_mut(&key) {
                     ent.last_tick = tick;
-                    let w = ent.w.clone();
+                    let u = ent.u.clone();
                     inner.hits += 1;
-                    out.push(w);
+                    out.push(Some(u));
                     break;
                 }
-                // Another thread is already reading this expert: wait for
+                // Another thread is already reading this unit: wait for
                 // its insert instead of duplicating the disk IO, then
                 // re-check (it may also have failed, or been evicted).
                 if inner.loading.contains(&key) {
@@ -305,21 +417,27 @@ impl TieredStore {
                 }
                 // This thread loads it. The disk read + decode run
                 // *outside* the lock so concurrent fetches — cache hits
-                // and loads of other experts — proceed during the IO;
+                // and loads of other units — proceed during the IO;
                 // `loading` keeps the key claimed meanwhile.
                 inner.misses += 1;
                 inner.loading.insert(key);
                 drop(inner);
-                let spec = &self.specs[layer][e];
                 let t0 = Instant::now();
-                let res = read_expert_from(&self.file, &spec.prefix, &self.cfg)
-                    .with_context(|| format!("loading expert '{}' on demand", spec.prefix));
+                let res = if is_delta {
+                    read_delta_from(&self.file, &spec.prefix, &self.cfg)
+                        .map(|d| Unit::Delta(Arc::new(d)))
+                        .with_context(|| format!("loading merge delta '{}' on demand", spec.prefix))
+                } else {
+                    read_expert_from(&self.file, &spec.prefix, &self.cfg)
+                        .map(|w| Unit::Expert(Arc::new(w)))
+                        .with_context(|| format!("loading expert '{}' on demand", spec.prefix))
+                };
                 let stall = t0.elapsed().as_secs_f64();
                 inner = self.inner.lock().unwrap();
                 inner.loading.remove(&key);
                 inner.stall_secs += stall;
-                let w = match res {
-                    Ok(w) => Arc::new(w),
+                let u = match res {
+                    Ok(u) => u,
                     Err(err) => {
                         // Waiters must wake even on failure (they will
                         // retry the load themselves and surface the same
@@ -330,11 +448,11 @@ impl TieredStore {
                 };
                 inner
                     .cache
-                    .insert(key, CacheEntry { w: w.clone(), bytes: spec.bytes, last_tick: tick });
+                    .insert(key, CacheEntry { u: u.clone(), bytes: spec.bytes, last_tick: tick });
                 inner.resident += spec.bytes;
                 // Enforce the budget immediately after each insert, never
                 // evicting the entry just added (the budget admits any
-                // single expert, so other residents always cover the
+                // single unit, so other residents always cover the
                 // overshoot). Current-batch residents are only evicted as
                 // a last resort — the caller's guard handle keeps them
                 // usable either way.
@@ -359,7 +477,7 @@ impl TieredStore {
                 }
                 inner.peak_resident = inner.peak_resident.max(inner.resident);
                 self.loaded.notify_all();
-                out.push(w);
+                out.push(Some(u));
                 break;
             }
         }
@@ -408,7 +526,7 @@ impl Model {
     ) -> Result<Model> {
         let file = IndexedTensorFile::open(path)?;
         let weights = Weights::from_source(&file, name, false)?;
-        let store = TieredStore::new(file, &weights.cfg, budget_bytes)?;
+        let store = TieredStore::new(file, &weights, budget_bytes)?;
         Ok(Model { weights, store: ExpertStore::Tiered(store), pool })
     }
 
@@ -420,6 +538,8 @@ impl Model {
     pub fn into_tiered(self, budget_bytes: usize, spill: &Path) -> Result<Model> {
         // Validate the budget *before* writing a model-sized checkpoint:
         // an infeasible budget must not cost a multi-GB spill first.
+        // `max_expert_bytes` is the largest tierable unit — a routed
+        // expert, or a merge delta for merged layers.
         let min = self.weights.max_expert_bytes();
         anyhow::ensure!(
             budget_bytes >= min,
@@ -448,9 +568,11 @@ impl Model {
     }
 
     /// Guard handles for one layer's routed experts. `wants` is
-    /// `(expert index, routed token count)`. Resident store: `Arc` clones
-    /// out of [`Weights`]. Tiered store: cache hits or on-demand loads
-    /// under the byte budget.
+    /// `(expert index, routed token count)` — merged ids for merged
+    /// layers. Resident store: `Arc` clones out of [`Weights`]. Tiered
+    /// store: cache hits or on-demand loads under the byte budget —
+    /// except for merged layers, whose cluster bases stay resident in
+    /// [`Weights`] in every store mode (only their deltas tier).
     pub(crate) fn experts_for_layer(
         &self,
         li: usize,
@@ -461,40 +583,30 @@ impl Model {
             ExpertStore::Resident => {
                 wants.iter().map(|&(e, _)| self.weights.layers[li].expert_arc(e)).collect()
             }
-            // The store was fully validated at open (index complete,
-            // budget feasible), so an error here is an IO failure on the
-            // checkpoint mid-serve. Transient hiccups get a bounded retry
-            // (already-cached experts hit on the retry; only the failed
-            // load re-runs); a persistent failure still panics — the
-            // forward pass cannot produce correct output without the
-            // expert's weights.
-            ExpertStore::Tiered(t) => {
-                let mut last_err = None;
-                for attempt in 0..3u32 {
-                    match t.fetch(li, wants) {
-                        Ok(handles) => return handles,
-                        Err(e) => {
-                            last_err = Some(e);
-                            if attempt < 2 {
-                                std::thread::sleep(std::time::Duration::from_millis(
-                                    10 << attempt,
-                                ));
-                            }
-                        }
-                    }
-                }
-                let err = match last_err {
-                    Some(e) => format!("{e:#}"),
-                    None => "no error recorded".to_string(),
-                };
-                // Deliberate abort: continuing without the expert's weights
-                // would silently produce wrong logits for every token
-                // routed to it, and unwinding mid-batch through the pool
-                // scope is no better. The retry loop above already absorbed
-                // transient IO hiccups, so terminate without unwinding.
-                eprintln!("tiered expert store: on-demand load failed after 3 attempts: {err}");
-                std::process::abort()
+            ExpertStore::Tiered(_) if self.weights.layers[li].remap().is_some() => {
+                wants.iter().map(|&(e, _)| self.weights.layers[li].expert_arc(e)).collect()
             }
+            ExpertStore::Tiered(t) => fetch_or_abort(|| t.fetch(li, wants)),
+        }
+    }
+
+    /// Guard handles for one **merged** layer's per-old-expert deltas.
+    /// `wants` is `(old expert id, routed token count)`; `None` entries
+    /// mean the member has no delta (its cluster base is exact). Resident
+    /// store: `Arc` clones of the weights' resident deltas. Tiered store:
+    /// the deltas are the layer's eviction unit — same budget/retry/abort
+    /// discipline as [`Model::experts_for_layer`].
+    pub(crate) fn deltas_for_layer(
+        &self,
+        li: usize,
+        wants: &[(usize, usize)],
+    ) -> Vec<Option<Arc<ExpertDelta>>> {
+        debug_assert!(li < self.weights.layers.len(), "layer {li} out of {}", self.weights.layers.len());
+        match &self.store {
+            ExpertStore::Resident => {
+                wants.iter().map(|&(o, _)| self.weights.layers[li].delta_arc(o)).collect()
+            }
+            ExpertStore::Tiered(t) => fetch_or_abort(|| t.fetch_deltas(li, wants)),
         }
     }
 
@@ -537,6 +649,36 @@ impl Model {
             ExpertStore::Tiered(t) => base + t.stats().resident_bytes,
         }
     }
+}
+
+/// Run a tiered-store fetch with a bounded retry, aborting the process on
+/// persistent failure. The store was fully validated at open (index
+/// complete, budget feasible), so an error here is an IO failure on the
+/// checkpoint mid-serve. Transient hiccups get the retry (already-cached
+/// units hit on the retry; only the failed load re-runs); continuing
+/// without the unit's weights would silently produce wrong logits for
+/// every token routed to it, and unwinding mid-batch through the pool
+/// scope is no better — so a persistent failure terminates without
+/// unwinding.
+fn fetch_or_abort<T>(mut op: impl FnMut() -> Result<T>) -> T {
+    let mut last_err = None;
+    for attempt in 0..3u32 {
+        match op() {
+            Ok(v) => return v,
+            Err(e) => {
+                last_err = Some(e);
+                if attempt < 2 {
+                    std::thread::sleep(std::time::Duration::from_millis(10 << attempt));
+                }
+            }
+        }
+    }
+    let err = match last_err {
+        Some(e) => format!("{e:#}"),
+        None => "no error recorded".to_string(),
+    };
+    eprintln!("tiered expert store: on-demand load failed after 3 attempts: {err}");
+    std::process::abort()
 }
 
 #[cfg(test)]

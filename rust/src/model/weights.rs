@@ -29,6 +29,15 @@
 //! group_size, rows, cols]`), `{name}.q.codes` (u8 packed bit-stream),
 //! `{name}.q.scales` (f32 `(n_groups, cols)`) and `{name}.q.zeros`
 //! (u8 `(n_groups, cols)` — zero-points are integers in `0..=qmax`).
+//!
+//! A layer whose experts were merged (`prune::merge`) adds two sidecar
+//! entries — `layer{i}.remap` (u32 `[n_old]`, old expert id → merged id)
+//! and `layer{i}.remap.meta` (u32 `[n_merged, reduce_code]`) — stores
+//! only `n_merged` cluster bases under `layer{i}.expert{m}`, and stores
+//! each absorbed expert's optional low-rank correction as six plain-f32
+//! entries `layer{i}.delta{o}.w{1,2,3}.{u,v}`. The `config` entry keeps
+//! the **original** expert count; the remap sidecar is what narrows the
+//! routed width, so unmerged checkpoints are untouched byte-for-byte.
 
 use super::config::ModelConfig;
 use crate::quant::pack::PackedMat;
@@ -170,6 +179,91 @@ impl ExpertWeights {
     pub fn storage_bytes(&self) -> usize {
         self.w1.storage_bytes() + self.w2.storage_bytes() + self.w3.storage_bytes()
     }
+
+    /// All three matrices materialized dense and flattened into one vector
+    /// (w1 ‖ w2 ‖ w3) — the representation expert-similarity analysis and
+    /// the merge clustering compare with cosine. Calibration-time only.
+    pub fn concat_dense(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.param_count());
+        for w in [&self.w1, &self.w2, &self.w3] {
+            v.extend(w.to_dense().data);
+        }
+        v
+    }
+}
+
+/// How raw router logits of old expert ids that map to the same merged id
+/// combine into the merged id's logit before softmax/top-k.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemapReduce {
+    /// Merged logit = max over cluster members (default: a cluster is
+    /// selected exactly when its strongest member would have been).
+    Max,
+    /// Merged logit = sum over cluster members.
+    Sum,
+}
+
+impl RemapReduce {
+    pub fn code(self) -> u32 {
+        match self {
+            RemapReduce::Max => 0,
+            RemapReduce::Sum => 1,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Result<Self> {
+        match c {
+            0 => Ok(RemapReduce::Max),
+            1 => Ok(RemapReduce::Sum),
+            other => anyhow::bail!("remap reduce code {other} unknown (expected 0=max, 1=sum)"),
+        }
+    }
+}
+
+/// Per-layer router remap installed by `prune::merge::merge_experts`:
+/// the router matrix keeps its original `n_old` columns, and this table
+/// folds those logits down to `n_merged` cluster logits at forward time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouterRemap {
+    /// `map[old_expert_id] = merged_id`, length = original expert count.
+    pub map: Vec<u16>,
+    /// Number of merged (cluster) experts; every `map` entry is below this.
+    pub n_merged: usize,
+    pub reduce: RemapReduce,
+}
+
+/// Low-rank correction for one absorbed expert: its original weights are
+/// approximated as `base + u·v` per projection, so the forward pass
+/// computes `x@(W + u·v) = x@W + (x@u)@v` exactly. Deltas are always
+/// dense f32 (they are small — rank·(rows+cols) params — and packing
+/// them would reintroduce the dequant error the delta exists to remove).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpertDelta {
+    pub u1: Mat, // (d_model, r1)
+    pub v1: Mat, // (r1, d_ff)
+    pub u2: Mat, // (d_ff, r2)
+    pub v2: Mat, // (r2, d_model)
+    pub u3: Mat, // (d_model, r3)
+    pub v3: Mat, // (r3, d_ff)
+}
+
+impl ExpertDelta {
+    pub fn param_count(&self) -> usize {
+        [&self.u1, &self.v1, &self.u2, &self.v2, &self.u3, &self.v3]
+            .iter()
+            .map(|m| m.data.len())
+            .sum()
+    }
+
+    /// Resident bytes (dense f32).
+    pub fn storage_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Largest of the three per-projection ranks.
+    pub fn rank(&self) -> usize {
+        self.u1.cols.max(self.u2.cols).max(self.u3.cols)
+    }
 }
 
 /// One transformer layer.
@@ -193,6 +287,14 @@ pub struct LayerWeights {
     pub router: Mat, // (d_model, n_experts); stays f32 (paper Table 11)
     experts: Vec<Arc<ExpertWeights>>,
     shared: Vec<Arc<ExpertWeights>>,
+    /// Installed by expert merging; `None` means the layer routes over its
+    /// original experts and the merged forward path is never entered.
+    remap: Option<RouterRemap>,
+    /// Per-**old**-expert low-rank corrections (length = original expert
+    /// count when a remap is installed and the deltas are resident; empty
+    /// otherwise — in particular under a tiered store, where deltas are
+    /// the eviction unit and live in the store, not here).
+    deltas: Vec<Option<Arc<ExpertDelta>>>,
 }
 
 impl LayerWeights {
@@ -230,6 +332,57 @@ impl LayerWeights {
     pub fn set_shared(&mut self, shared: Vec<ExpertWeights>) {
         self.shared = shared.into_iter().map(Arc::new).collect();
     }
+
+    /// The router remap installed by expert merging, if any.
+    pub fn remap(&self) -> Option<&RouterRemap> {
+        self.remap.as_ref()
+    }
+
+    /// Width of the routed expert set this layer actually dispatches over:
+    /// `n_merged` after merging, else the router's column count. This is
+    /// the width selection records, PESF masks and `MoeLayerOut` use.
+    pub fn n_routed(&self) -> usize {
+        match &self.remap {
+            Some(rm) => rm.n_merged,
+            None => self.router.cols,
+        }
+    }
+
+    /// Resident per-old-expert merge deltas (empty when unmerged or when
+    /// a tiered store owns the deltas).
+    pub fn deltas(&self) -> &[Option<Arc<ExpertDelta>>] {
+        &self.deltas
+    }
+
+    /// Guard handle to the resident delta for old expert `o`, if one
+    /// exists (cheap `Arc` clone; `None` for exact-by-base members, out of
+    /// range ids, and tiered skeletons).
+    pub fn delta_arc(&self, o: usize) -> Option<Arc<ExpertDelta>> {
+        self.deltas.get(o).and_then(|d| d.clone())
+    }
+
+    /// Install a merge: replace the routed expert set with `bases`
+    /// (indexed by merged id), record `deltas` (indexed by old id) and the
+    /// remap table. The router matrix is left untouched — logits are
+    /// reduced at forward time, so the transform is reversible in spirit
+    /// and serialization keeps the original gate.
+    pub fn install_merge(
+        &mut self,
+        remap: RouterRemap,
+        bases: Vec<Arc<ExpertWeights>>,
+        deltas: Vec<Option<ExpertDelta>>,
+    ) {
+        assert_eq!(remap.map.len(), self.router.cols, "remap width != router width");
+        assert_eq!(bases.len(), remap.n_merged, "one base per merged id");
+        assert_eq!(deltas.len(), remap.map.len(), "one delta slot per old id");
+        assert!(
+            remap.map.iter().all(|&m| (m as usize) < remap.n_merged),
+            "remap target out of range"
+        );
+        self.experts = bases;
+        self.deltas = deltas.into_iter().map(|d| d.map(Arc::new)).collect();
+        self.remap = Some(remap);
+    }
 }
 
 /// Full model weights.
@@ -261,6 +414,8 @@ impl Weights {
                 shared: (0..cfg.n_shared)
                     .map(|_| Arc::new(ExpertWeights::randn(cfg, &mut rng)))
                     .collect(),
+                remap: None,
+                deltas: Vec::new(),
             })
             .collect();
         Weights {
@@ -279,6 +434,9 @@ impl Weights {
             n += l.router.data.len();
             for e in l.experts.iter().chain(&l.shared) {
                 n += e.param_count();
+            }
+            for d in l.deltas.iter().flatten() {
+                n += d.param_count();
             }
         }
         n
@@ -299,42 +457,62 @@ impl Weights {
             for e in l.experts.iter().chain(&l.shared) {
                 n += e.storage_bytes();
             }
+            for d in l.deltas.iter().flatten() {
+                n += d.storage_bytes();
+            }
         }
         n
     }
 
     /// Resident bytes of routed + shared expert weights only (the paper's
-    /// headline memory axis).
+    /// headline memory axis), including any resident merge deltas.
     pub fn expert_storage_bytes(&self) -> usize {
         self.layers
             .iter()
-            .flat_map(|l| l.experts.iter().chain(&l.shared))
-            .map(|e| e.storage_bytes())
+            .map(|l| {
+                l.experts
+                    .iter()
+                    .chain(&l.shared)
+                    .map(|e| e.storage_bytes())
+                    .sum::<usize>()
+                    + l.deltas.iter().flatten().map(|d| d.storage_bytes()).sum::<usize>()
+            })
             .sum()
     }
 
     /// Resident bytes of **routed** experts only — the set a tiered
     /// [`crate::model::store::ExpertStore`] manages (shared experts are
-    /// always-on and stay pinned outside the budget). This is the "total"
-    /// every budget fraction and store stat is measured against; use
+    /// always-on and stay pinned outside the budget). For merged layers
+    /// this counts cluster bases **and** per-old-expert deltas: it is the
+    /// full routed footprint the "total" of every budget fraction and
+    /// store stat is measured against. Use
     /// [`Weights::expert_storage_bytes`] when shared experts should count.
     pub fn routed_expert_bytes(&self) -> usize {
         self.layers
             .iter()
-            .flat_map(|l| l.experts.iter())
-            .map(|e| e.storage_bytes())
+            .map(|l| {
+                l.experts.iter().map(|e| e.storage_bytes()).sum::<usize>()
+                    + l.deltas.iter().flatten().map(|d| d.storage_bytes()).sum::<usize>()
+            })
             .sum()
     }
 
-    /// Storage bytes of the largest single routed expert — the smallest
-    /// feasible byte budget for a tiered [`crate::model::store::ExpertStore`]
-    /// over these weights (any budget below this cannot hold even one
-    /// expert resident).
+    /// Storage bytes of the largest single **tierable unit** — the
+    /// smallest feasible byte budget for a tiered
+    /// [`crate::model::store::ExpertStore`] over these weights. For an
+    /// unmerged layer the unit is a routed expert; for a merged layer the
+    /// cluster bases stay resident and only per-old-expert deltas tier,
+    /// so the unit is a delta (0 if the layer has none).
     pub fn max_expert_bytes(&self) -> usize {
         self.layers
             .iter()
-            .flat_map(|l| l.experts.iter())
-            .map(|e| e.storage_bytes())
+            .map(|l| {
+                if l.remap.is_some() {
+                    l.deltas.iter().flatten().map(|d| d.storage_bytes()).max().unwrap_or(0)
+                } else {
+                    l.experts.iter().map(|e| e.storage_bytes()).max().unwrap_or(0)
+                }
+            })
             .max()
             .unwrap_or(0)
     }
@@ -383,6 +561,23 @@ impl Weights {
                 put_weight(&mut tf, &format!("{p}.{nm}"), m);
             }
             tf.put_f32(&format!("{p}.router"), vec![c.d_model, c.n_experts], l.router.data.clone());
+            if let Some(rm) = &l.remap {
+                tf.put_u32(
+                    &format!("{p}.remap"),
+                    vec![rm.map.len()],
+                    rm.map.iter().map(|&m| m as u32).collect(),
+                );
+                tf.put_u32(
+                    &format!("{p}.remap.meta"),
+                    vec![2],
+                    vec![rm.n_merged as u32, rm.reduce.code()],
+                );
+            }
+            for (o, d) in l.deltas.iter().enumerate() {
+                if let Some(d) = d {
+                    put_delta(&mut tf, &format!("{p}.delta{o}"), d);
+                }
+            }
             for (e, ew) in l.experts.iter().enumerate() {
                 let ep = format!("{p}.expert{e}");
                 put_weight(&mut tf, &format!("{ep}.w1"), &ew.w1);
@@ -442,10 +637,29 @@ impl Weights {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let p = format!("layer{i}");
-            let experts = if load_experts {
-                (0..cfg.n_experts)
+            let remap = read_remap(src, &p, cfg.n_experts)?;
+            let n_routed = remap.as_ref().map_or(cfg.n_experts, |rm| rm.n_merged);
+            // Merged layers keep their cluster bases resident in every
+            // store mode (only deltas tier), so bases load even for the
+            // tiered skeleton; unmerged routed experts are skipped there.
+            let experts = if load_experts || remap.is_some() {
+                (0..n_routed)
                     .map(|e| -> Result<Arc<ExpertWeights>> {
                         Ok(Arc::new(read_expert_from(src, &format!("{p}.expert{e}"), &cfg)?))
+                    })
+                    .collect::<Result<_>>()?
+            } else {
+                Vec::new()
+            };
+            let deltas = if remap.is_some() && load_experts {
+                (0..cfg.n_experts)
+                    .map(|o| -> Result<Option<Arc<ExpertDelta>>> {
+                        let dp = format!("{p}.delta{o}");
+                        if src.contains(&format!("{dp}.w1.u")) {
+                            Ok(Some(Arc::new(read_delta_from(src, &dp, &cfg)?)))
+                        } else {
+                            Ok(None)
+                        }
                     })
                     .collect::<Result<_>>()?
             } else {
@@ -465,6 +679,8 @@ impl Weights {
                         Ok(Arc::new(read_expert_from(src, &format!("{p}.shared{s}"), &cfg)?))
                     })
                     .collect::<Result<_>>()?,
+                remap,
+                deltas,
             });
         }
         Ok(Weights {
@@ -560,6 +776,78 @@ pub(crate) fn read_expert_from<S: TensorSource>(
     })
 }
 
+/// Write one [`ExpertDelta`] as six plain-f32 entries under `prefix`.
+fn put_delta(tf: &mut TensorFile, prefix: &str, d: &ExpertDelta) {
+    for (nm, m) in [
+        ("w1.u", &d.u1),
+        ("w1.v", &d.v1),
+        ("w2.u", &d.u2),
+        ("w2.v", &d.v2),
+        ("w3.u", &d.u3),
+        ("w3.v", &d.v3),
+    ] {
+        tf.put_f32(&format!("{prefix}.{nm}"), vec![m.rows, m.cols], m.data.clone());
+    }
+}
+
+/// Read one merge delta (`layer{i}.delta{o}`) from a [`TensorSource`].
+/// Like [`read_expert_from`], this is both the eager loader and the
+/// tiered store's on-demand path — one decode path, bit-identical loads.
+pub(crate) fn read_delta_from<S: TensorSource>(
+    src: &S,
+    prefix: &str,
+    cfg: &ModelConfig,
+) -> Result<ExpertDelta> {
+    let pair = |nm: &str, urows: usize, vcols: usize| -> Result<(Mat, Mat)> {
+        let (ud, u) = src.fetch_f32(&format!("{prefix}.{nm}.u"))?;
+        anyhow::ensure!(
+            ud.len() == 2 && ud[0] == urows,
+            "{prefix}.{nm}.u: dims {ud:?} incompatible with {urows} rows"
+        );
+        let r = ud[1];
+        let (vd, v) = src.fetch_f32(&format!("{prefix}.{nm}.v"))?;
+        anyhow::ensure!(
+            vd == [r, vcols],
+            "{prefix}.{nm}.v: dims {vd:?} != [{r}, {vcols}] (rank mismatch with .u)"
+        );
+        Ok((Mat::from_vec(urows, r, u), Mat::from_vec(r, vcols, v)))
+    };
+    let (u1, v1) = pair("w1", cfg.d_model, cfg.d_ff)?;
+    let (u2, v2) = pair("w2", cfg.d_ff, cfg.d_model)?;
+    let (u3, v3) = pair("w3", cfg.d_model, cfg.d_ff)?;
+    Ok(ExpertDelta { u1, v1, u2, v2, u3, v3 })
+}
+
+/// Read the optional router remap sidecar for one layer prefix. Returns
+/// `Ok(None)` when the layer is unmerged (no `.remap` entry).
+fn read_remap<S: TensorSource>(
+    src: &S,
+    layer_prefix: &str,
+    n_old: usize,
+) -> Result<Option<RouterRemap>> {
+    let name = format!("{layer_prefix}.remap");
+    if !src.contains(&name) {
+        return Ok(None);
+    }
+    let (dims, raw) = src.fetch_u32(&name)?;
+    anyhow::ensure!(dims == [n_old], "{name}: dims {dims:?} != [{n_old}]");
+    let (mdims, meta) = src.fetch_u32(&format!("{name}.meta"))?;
+    anyhow::ensure!(mdims == [2], "{name}.meta: bad dims {mdims:?}");
+    let n_merged = meta[0] as usize;
+    anyhow::ensure!(
+        n_merged >= 1 && n_merged <= n_old,
+        "{name}.meta: n_merged {n_merged} outside 1..={n_old}"
+    );
+    let map = raw
+        .iter()
+        .map(|&m| -> Result<u16> {
+            anyhow::ensure!((m as usize) < n_merged, "{name}: target {m} >= n_merged {n_merged}");
+            Ok(m as u16)
+        })
+        .collect::<Result<Vec<u16>>>()?;
+    Ok(Some(RouterRemap { map, n_merged, reduce: RemapReduce::from_code(meta[1])? }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -648,6 +936,62 @@ mod tests {
         // Non-expert tensors are still f32.
         let non_expert = w.storage_bytes() - packed;
         assert_eq!(non_expert, (w.param_count() - expert_params) * 4);
+    }
+
+    /// A merged layer's remap table, cluster bases and low-rank deltas
+    /// survive a TensorFile roundtrip byte-for-byte, and the skeleton
+    /// loader (`load_experts = false`) still materializes the bases while
+    /// leaving the deltas to the tiered store.
+    #[test]
+    fn tensor_file_roundtrip_merged() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 11);
+        let mut rng = Pcg64::seeded(12);
+        // Merge experts {0,1} and {2,3} of layer 0 into two bases, with a
+        // rank-1 delta on old ids 1 and 3.
+        let bases =
+            vec![w.layers[0].expert_arc(0), w.layers[0].expert_arc(2)];
+        let mk_delta = |rng: &mut Pcg64| ExpertDelta {
+            u1: Mat::randn(cfg.d_model, 1, 1.0, rng),
+            v1: Mat::randn(1, cfg.d_ff, 1.0, rng),
+            u2: Mat::randn(cfg.d_ff, 1, 1.0, rng),
+            v2: Mat::randn(1, cfg.d_model, 1.0, rng),
+            u3: Mat::randn(cfg.d_model, 1, 1.0, rng),
+            v3: Mat::randn(1, cfg.d_ff, 1.0, rng),
+        };
+        let deltas = vec![None, Some(mk_delta(&mut rng)), None, Some(mk_delta(&mut rng))];
+        let remap =
+            RouterRemap { map: vec![0, 0, 1, 1], n_merged: 2, reduce: RemapReduce::Max };
+        w.layers[0].install_merge(remap.clone(), bases, deltas);
+        assert_eq!(w.layers[0].n_routed(), 2);
+        assert_eq!(w.layers[1].n_routed(), cfg.n_experts);
+
+        let tf = w.to_tensor_file();
+        let back = Weights::from_tensor_file(&tf, "tiny").unwrap();
+        assert_eq!(back.layers[0].remap(), Some(&remap));
+        assert_eq!(back.layers[0].experts().len(), 2);
+        assert_eq!(back.layers[0].experts()[1].w1, w.layers[0].experts()[1].w1);
+        assert_eq!(back.layers[0].deltas().len(), cfg.n_experts);
+        assert!(back.layers[0].deltas()[0].is_none());
+        assert_eq!(
+            back.layers[0].delta_arc(3).unwrap().u2,
+            w.layers[0].delta_arc(3).unwrap().u2
+        );
+        assert!(back.layers[1].remap().is_none());
+        assert_eq!(back.routed_expert_bytes(), w.routed_expert_bytes());
+        // max_expert_bytes for layer 0 is now the largest delta, which is
+        // far smaller than a full expert (layer 1's unit).
+        let delta_bytes = w.layers[0].delta_arc(1).unwrap().storage_bytes();
+        let expert_bytes = w.layers[1].experts()[0].storage_bytes();
+        assert!(delta_bytes < expert_bytes);
+        assert_eq!(w.max_expert_bytes(), expert_bytes);
+
+        // Skeleton load: bases resident for the merged layer, routed
+        // experts dropped for the unmerged one, deltas left to the store.
+        let skel = Weights::from_source(&tf, "tiny", false).unwrap();
+        assert_eq!(skel.layers[0].experts().len(), 2);
+        assert!(skel.layers[0].deltas().is_empty());
+        assert!(skel.layers[1].experts().is_empty());
     }
 
     /// Packed and dense forms compute the same product through the

@@ -1,0 +1,429 @@
+//! Expert merging — the third compression axis, alongside QESC (bytes per
+//! expert) and PESF (experts per task): permanently reduce the *expert
+//! count* by clustering pairwise-similar experts and collapsing each
+//! cluster into one base expert plus optional per-member low-rank deltas.
+//!
+//! MC# (arXiv 2510.10962) and the chuk-mlx exemplar (SNIPPETS.md §2–3)
+//! observe that many checkpoints carry experts that are >70%
+//! pairwise-similar in weight space — merging them loses little quality
+//! while cutting expert bytes and routing width at once. The transform
+//! here:
+//!
+//! 1. **Cluster** greedily in expert-id order: an expert joins the first
+//!    existing cluster whose *representative* (first member) it matches at
+//!    cosine ≥ threshold over the concatenated dense w1‖w2‖w3
+//!    ([`crate::model::ExpertWeights::concat_dense`]); otherwise it opens
+//!    a new cluster. Deterministic, order-stable, O(n²) in experts — this
+//!    runs at compression time, never while serving.
+//! 2. **Merge** each multi-member cluster into a frequency-weighted
+//!    average of its members (Eq. 3/4-style selection frequencies as the
+//!    weights; uniform when the cluster saw no traffic), and factor each
+//!    member's residual into a rank-limited [`ExpertDelta`] via the
+//!    deterministic truncated SVD ([`crate::tensor::linalg`]).
+//! 3. **Remap** the router: install a [`RouterRemap`] so the forward pass
+//!    reduces old-id logits to merged-id logits (max or sum) before
+//!    softmax/top-k — `model/forward.rs::moe_layer_merged`.
+//!
+//! Contract: `threshold >= 1.0` merges nothing and installs nothing — the
+//! model is byte-identical to its input and the forward pass never leaves
+//! the unmerged code path. Singleton clusters keep their original
+//! [`WeightMat`] (packed stays packed, no dequant round-trip) and carry no
+//! delta, so a merge that only forms singletons is also exact.
+
+use crate::model::weights::{ExpertDelta, ExpertWeights, RemapReduce, RouterRemap, Weights};
+use crate::tensor::linalg::svd_truncated;
+use crate::tensor::{ops, Mat, Pcg64};
+use std::sync::Arc;
+
+/// Parameters of the merge transform.
+#[derive(Clone, Copy, Debug)]
+pub struct MergeConfig {
+    /// Cosine-similarity threshold for joining a cluster; `>= 1.0` merges
+    /// nothing (the bit-identity sentinel).
+    pub threshold: f32,
+    /// Max rank of each absorbed member's per-projection residual delta;
+    /// 0 drops residuals entirely (pure averaging, lossy).
+    pub delta_rank: usize,
+    /// How cluster members' router logits combine into the merged logit.
+    pub reduce: RemapReduce,
+}
+
+impl Default for MergeConfig {
+    fn default() -> Self {
+        MergeConfig { threshold: 1.0, delta_rank: 4, reduce: RemapReduce::Max }
+    }
+}
+
+impl MergeConfig {
+    /// Config at a given threshold with the default rank/reduce.
+    pub fn at_threshold(threshold: f32) -> Self {
+        MergeConfig { threshold, ..Default::default() }
+    }
+}
+
+/// Per-layer outcome of [`merge_experts`].
+#[derive(Clone, Debug)]
+pub struct MergeLayerReport {
+    pub layer: usize,
+    pub experts_before: usize,
+    pub experts_after: usize,
+    /// Old expert ids per cluster, in merged-id order (singletons
+    /// included). Empty when the layer was left unmerged.
+    pub clusters: Vec<Vec<usize>>,
+}
+
+/// Whole-model outcome of [`merge_experts`].
+#[derive(Clone, Debug)]
+pub struct MergeReport {
+    pub per_layer: Vec<MergeLayerReport>,
+    pub experts_before: usize,
+    pub experts_after: usize,
+    /// Routed-expert bytes (bases + deltas) before/after the transform.
+    pub bytes_before: usize,
+    pub bytes_after: usize,
+}
+
+impl MergeReport {
+    /// True if any layer actually installed a remap.
+    pub fn merged_any(&self) -> bool {
+        self.per_layer.iter().any(|l| l.experts_after < l.experts_before)
+    }
+}
+
+/// Uniform per-layer selection frequencies — the merge weighting to use
+/// when no calibration traffic is available (every member contributes
+/// equally to its cluster base).
+pub fn uniform_frequencies(n_layers: usize, n_experts: usize) -> Vec<Vec<f32>> {
+    vec![vec![1.0; n_experts]; n_layers]
+}
+
+/// Merge each layer's routed experts in place per `cfg`, installing the
+/// router remap, cluster bases and per-member low-rank deltas. `freq` is
+/// one selection-frequency row per layer (width = that layer's expert
+/// count; see [`uniform_frequencies`]); it weights the cluster average so
+/// the merged base leans toward the members the router actually uses.
+///
+/// Layers where every cluster is a singleton (including every layer when
+/// `threshold >= 1.0`) are left untouched — no remap, no new tensors, and
+/// the forward pass stays on the unmerged code path.
+pub fn merge_experts(w: &mut Weights, freq: &[Vec<f32>], cfg: &MergeConfig) -> MergeReport {
+    assert_eq!(freq.len(), w.layers.len(), "one frequency row per layer");
+    let bytes_before = w.routed_expert_bytes();
+    let mut experts_before = 0usize;
+    let mut experts_after = 0usize;
+    let mut per_layer = Vec::with_capacity(w.layers.len());
+    for li in 0..w.layers.len() {
+        let layer = &mut w.layers[li];
+        assert!(layer.remap().is_none(), "layer {li} is already merged");
+        let n = layer.experts().len();
+        assert_eq!(freq[li].len(), n, "layer {li}: frequency width != expert count");
+        experts_before += n;
+        let identity = |experts_after: &mut usize| {
+            *experts_after += n;
+            MergeLayerReport {
+                layer: li,
+                experts_before: n,
+                experts_after: n,
+                clusters: Vec::new(),
+            }
+        };
+        if cfg.threshold >= 1.0 || n == 0 {
+            per_layer.push(identity(&mut experts_after));
+            continue;
+        }
+        // Greedy clustering against each cluster's representative.
+        let flats: Vec<Vec<f32>> = layer.experts().iter().map(|e| e.concat_dense()).collect();
+        let mut clusters: Vec<Vec<usize>> = Vec::new();
+        for e in 0..n {
+            let mut placed = false;
+            for c in clusters.iter_mut() {
+                if ops::cosine(&flats[e], &flats[c[0]]) >= cfg.threshold {
+                    c.push(e);
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                clusters.push(vec![e]);
+            }
+        }
+        if clusters.len() == n {
+            per_layer.push(identity(&mut experts_after));
+            continue;
+        }
+        let mut map = vec![0u16; n];
+        for (m, c) in clusters.iter().enumerate() {
+            for &o in c {
+                map[o] = m as u16;
+            }
+        }
+        let mut bases: Vec<Arc<ExpertWeights>> = Vec::with_capacity(clusters.len());
+        let mut deltas: Vec<Option<ExpertDelta>> = (0..n).map(|_| None).collect();
+        for c in &clusters {
+            if c.len() == 1 {
+                // Singleton: keep the original storage form (packed stays
+                // packed — no dequant round-trip), no delta. Exact.
+                bases.push(layer.expert_arc(c[0]));
+                continue;
+            }
+            let (base, member_deltas) = merge_cluster(layer.experts(), c, &freq[li], cfg);
+            for (&o, d) in c.iter().zip(member_deltas) {
+                deltas[o] = d;
+            }
+            bases.push(Arc::new(base));
+        }
+        experts_after += clusters.len();
+        let remap = RouterRemap { map, n_merged: clusters.len(), reduce: cfg.reduce };
+        layer.install_merge(remap, bases, deltas);
+        per_layer.push(MergeLayerReport {
+            layer: li,
+            experts_before: n,
+            experts_after: clusters.len(),
+            clusters: clusters.clone(),
+        });
+    }
+    MergeReport {
+        per_layer,
+        experts_before,
+        experts_after,
+        bytes_before,
+        bytes_after: w.routed_expert_bytes(),
+    }
+}
+
+/// Merge one multi-member cluster: frequency-weighted average base (dense
+/// f32) plus each member's rank-limited residual delta (`None` when the
+/// residual is numerically negligible or `delta_rank == 0`).
+fn merge_cluster(
+    experts: &[Arc<ExpertWeights>],
+    members: &[usize],
+    freq: &[f32],
+    cfg: &MergeConfig,
+) -> (ExpertWeights, Vec<Option<ExpertDelta>>) {
+    let dense: Vec<(Mat, Mat, Mat)> = members
+        .iter()
+        .map(|&o| {
+            let e = &experts[o];
+            (e.w1.to_dense(), e.w2.to_dense(), e.w3.to_dense())
+        })
+        .collect();
+    // Frequency weights, uniform when the cluster's mass is zero.
+    let mut ws: Vec<f32> = members.iter().map(|&o| freq[o].max(0.0)).collect();
+    if ws.iter().sum::<f32>() <= 0.0 {
+        ws.iter_mut().for_each(|x| *x = 1.0);
+    }
+    let total: f32 = ws.iter().sum();
+    let avg = |pick: fn(&(Mat, Mat, Mat)) -> &Mat| -> Mat {
+        let first = pick(&dense[0]);
+        let mut acc = Mat::zeros(first.rows, first.cols);
+        for (mem, &wt) in dense.iter().zip(&ws) {
+            let frac = wt / total;
+            for (a, &v) in acc.data.iter_mut().zip(&pick(mem).data) {
+                *a += v * frac;
+            }
+        }
+        acc
+    };
+    let (b1, b2, b3) = (avg(|d| &d.0), avg(|d| &d.1), avg(|d| &d.2));
+    let deltas = dense
+        .iter()
+        .map(|(m1, m2, m3)| {
+            if cfg.delta_rank == 0 {
+                return None;
+            }
+            let r1 = sub(m1, &b1);
+            let r2 = sub(m2, &b2);
+            let r3 = sub(m3, &b3);
+            // Skip a delta whose residual is noise relative to the base —
+            // e.g. a member that IS the (weighted) average.
+            let resid = r1.fro_norm() + r2.fro_norm() + r3.fro_norm();
+            let scale = b1.fro_norm() + b2.fro_norm() + b3.fro_norm();
+            if resid <= 1e-7 * (scale + 1.0) {
+                return None;
+            }
+            let (u1, v1) = svd_truncated(&r1, cfg.delta_rank);
+            let (u2, v2) = svd_truncated(&r2, cfg.delta_rank);
+            let (u3, v3) = svd_truncated(&r3, cfg.delta_rank);
+            Some(ExpertDelta { u1, v1, u2, v2, u3, v3 })
+        })
+        .collect();
+    let base =
+        ExpertWeights { w1: b1.into(), w2: b2.into(), w3: b3.into() };
+    (base, deltas)
+}
+
+fn sub(a: &Mat, b: &Mat) -> Mat {
+    debug_assert!(a.rows == b.rows && a.cols == b.cols, "residual shape mismatch");
+    let mut out = a.clone();
+    for (x, &y) in out.data.iter_mut().zip(&b.data) {
+        *x -= y;
+    }
+    out
+}
+
+/// Test/bench workload synthesizer: overwrite expert `2i+1` of every
+/// layer with expert `2i` plus a small seeded perturbation, so pairwise
+/// cosine within each pair is ≈ `1/sqrt(1 + noise²)` while cross-pair
+/// cosine stays near zero (random-init experts are near-orthogonal, and
+/// without this nothing would merge at any realistic threshold). The
+/// perturbation keeps residuals nonzero, so merge deltas exist and the
+/// delta-tiering path is actually exercised.
+pub fn synthesize_mergeable_pairs(w: &mut Weights, noise: f32, seed: u64) {
+    let mut rng = Pcg64::new(seed, 7);
+    for li in 0..w.layers.len() {
+        let n = w.layers[li].experts().len();
+        let mut e = 0;
+        while e + 1 < n {
+            let src = {
+                let s = &w.layers[li].experts()[e];
+                (s.w1.to_dense(), s.w2.to_dense(), s.w3.to_dense())
+            };
+            let mut perturb = |m: &Mat| {
+                // Noise sigma relative to the matrix's RMS entry, so
+                // `noise` directly controls the pairwise cosine.
+                let rms = m.fro_norm() / (m.data.len().max(1) as f32).sqrt();
+                let nz = Mat::randn(m.rows, m.cols, noise * rms.max(1e-6), &mut rng);
+                let mut out = m.clone();
+                for (a, &b) in out.data.iter_mut().zip(&nz.data) {
+                    *a += b;
+                }
+                crate::model::weights::WeightMat::Dense(out)
+            };
+            *w.layers[li].expert_mut(e + 1) = ExpertWeights {
+                w1: perturb(&src.0),
+                w2: perturb(&src.1),
+                w3: perturb(&src.2),
+            };
+            e += 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            d_ff: 8,
+            n_experts: 4,
+            top_k: 2,
+            n_shared: 1,
+            n_heads: 2,
+            vocab: 32,
+            max_seq: 64,
+        }
+    }
+
+    #[test]
+    fn threshold_one_merges_nothing() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 31);
+        synthesize_mergeable_pairs(&mut w, 0.01, 1);
+        let before = w.clone();
+        let rep = merge_experts(
+            &mut w,
+            &uniform_frequencies(cfg.n_layers, cfg.n_experts),
+            &MergeConfig::at_threshold(1.0),
+        );
+        assert!(!rep.merged_any());
+        assert_eq!(rep.experts_before, rep.experts_after);
+        assert_eq!(rep.bytes_before, rep.bytes_after);
+        for (l, lb) in w.layers.iter().zip(&before.layers) {
+            assert!(l.remap().is_none());
+            assert_eq!(l.experts().len(), lb.experts().len());
+            for (a, b) in l.experts().iter().zip(lb.experts()) {
+                assert_eq!(a.w1, b.w1);
+                assert_eq!(a.w2, b.w2);
+                assert_eq!(a.w3, b.w3);
+            }
+        }
+    }
+
+    #[test]
+    fn synthesized_pairs_cluster_at_090() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 32);
+        synthesize_mergeable_pairs(&mut w, 0.01, 2);
+        let rep = merge_experts(
+            &mut w,
+            &uniform_frequencies(cfg.n_layers, cfg.n_experts),
+            &MergeConfig::at_threshold(0.9),
+        );
+        assert!(rep.merged_any());
+        assert_eq!(rep.experts_before, cfg.n_layers * cfg.n_experts);
+        assert_eq!(rep.experts_after, cfg.n_layers * cfg.n_experts / 2);
+        assert!(rep.bytes_after < rep.bytes_before);
+        for l in &w.layers {
+            let rm = l.remap().expect("remap installed");
+            assert_eq!(rm.n_merged, cfg.n_experts / 2);
+            assert_eq!(rm.map, vec![0, 0, 1, 1]);
+            assert_eq!(l.n_routed(), cfg.n_experts / 2);
+            // Perturbed members differ from the average, so both cluster
+            // members carry a delta.
+            assert!(l.deltas().iter().all(|d| d.is_some()));
+        }
+    }
+
+    /// The frequency-weighted average is exactly Σ f_i·W_i / Σ f_i, and a
+    /// member's base + full-rank delta reconstructs the member.
+    #[test]
+    fn weighted_average_and_delta_reconstruction() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 33);
+        synthesize_mergeable_pairs(&mut w, 0.05, 3);
+        let orig: Vec<Mat> =
+            w.layers[0].experts().iter().map(|e| e.w1.to_dense()).collect();
+        // Uneven frequencies: expert 0 carries 3x the weight of expert 1.
+        let mut freq = uniform_frequencies(cfg.n_layers, cfg.n_experts);
+        freq[0][0] = 3.0;
+        freq[0][1] = 1.0;
+        let rank = cfg.d_model.min(cfg.d_ff); // full rank: delta is exact
+        let mc = MergeConfig { threshold: 0.9, delta_rank: rank, reduce: RemapReduce::Max };
+        merge_experts(&mut w, &freq, &mc);
+        let base = w.layers[0].experts()[0].w1.to_dense();
+        for (i, (&a, &b)) in orig[0].data.iter().zip(&orig[1].data).enumerate() {
+            let want = (3.0 * a + b) / 4.0;
+            assert!(
+                (base.data[i] - want).abs() <= 1e-5,
+                "base[{i}] = {} want {want}",
+                base.data[i]
+            );
+        }
+        // Reconstruct member 1: base + u1·v1 ≈ original w1.
+        let d = w.layers[0].delta_arc(1).expect("delta for absorbed member");
+        let mut recon = base.clone();
+        for r in 0..recon.rows {
+            for c in 0..recon.cols {
+                let mut corr = 0f32;
+                for t in 0..d.u1.cols {
+                    corr += d.u1.at(r, t) * d.v1.at(t, c);
+                }
+                *recon.at_mut(r, c) += corr;
+            }
+        }
+        let err = recon.mse(&orig[1]).sqrt();
+        let scale = orig[1].fro_norm() / (orig[1].data.len() as f32).sqrt();
+        assert!(err <= 1e-4 * scale.max(1.0), "reconstruction rmse {err}");
+    }
+
+    #[test]
+    fn zero_frequency_cluster_falls_back_to_uniform() {
+        let cfg = tiny_cfg();
+        let mut w = Weights::init(&cfg, 34);
+        synthesize_mergeable_pairs(&mut w, 0.01, 4);
+        let orig: Vec<Mat> =
+            w.layers[0].experts().iter().map(|e| e.w1.to_dense()).collect();
+        let freq = vec![vec![0.0; cfg.n_experts]; cfg.n_layers];
+        merge_experts(&mut w, &freq, &MergeConfig::at_threshold(0.9));
+        let base = w.layers[0].experts()[0].w1.to_dense();
+        for (i, (&a, &b)) in orig[0].data.iter().zip(&orig[1].data).enumerate() {
+            let want = (a + b) / 2.0;
+            assert!((base.data[i] - want).abs() <= 1e-5, "base[{i}]");
+        }
+    }
+}

@@ -9,11 +9,19 @@
 //!   the top expert falls under a calibrated median threshold.
 //! * [`odp`] — Online Dynamic Pruning (Huang et al., 2024a): EES plus a
 //!   significance-aware critical-token protection mechanism.
+//! * [`merge`] — static expert *merging* (the third compression axis):
+//!   cluster pairwise-similar experts, collapse each cluster into a
+//!   frequency-weighted base plus low-rank per-member deltas, and remap
+//!   the router onto the reduced expert set.
 
 pub mod ees;
+pub mod merge;
 pub mod odp;
 pub mod pesf;
 
 pub use ees::{calibrate_ees_threshold, EesPruner};
+pub use merge::{
+    merge_experts, synthesize_mergeable_pairs, uniform_frequencies, MergeConfig, MergeReport,
+};
 pub use odp::OdpPruner;
 pub use pesf::{pesf_mask, PesfConfig, PesfDecodeState, PesfStats};

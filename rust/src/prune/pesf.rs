@@ -162,7 +162,11 @@ pub fn pesf_mask_from_counts(
     let mut mask = Vec::with_capacity(counts.len());
     let mut stats = PesfStats { pruned_per_layer: Vec::new(), n_experts };
     for (layer_counts, &l) in counts.iter().zip(lens) {
-        let threshold = (l * top_k) as f32 / n_experts as f32 * cfg.alpha;
+        // Eq. 6's N is this layer's routed width — the counts row's own
+        // length. Under expert merging layers can be narrower than the
+        // config's n_experts; for unmerged layers the two are equal.
+        let n = layer_counts.len().max(1);
+        let threshold = (l * top_k) as f32 / n as f32 * cfg.alpha;
         let layer_mask: Vec<bool> = layer_counts
             .iter()
             .map(|&c| cfg.alpha > 0.0 && (c as f32) < threshold)
@@ -182,7 +186,9 @@ pub fn pesf_mask_from_counts(
 #[derive(Clone, Debug)]
 pub struct PesfDecodeState {
     cfg: PesfConfig,
-    n_experts: usize,
+    /// Routed-expert width per layer ([`crate::model::LayerWeights::n_routed`]);
+    /// uniform `n_experts` for unmerged models, narrower on merged layers.
+    widths: Vec<usize>,
     top_k: usize,
     /// Most recent `cfg.window` tokens: each entry is one token's selected
     /// experts per layer (`entry[layer]`), prompt tail first.
@@ -205,17 +211,34 @@ impl PesfDecodeState {
         top_k: usize,
         cfg: PesfConfig,
     ) -> Self {
+        Self::from_prefill_widths(record, &vec![n_experts; record.layers.len()], top_k, cfg)
+    }
+
+    /// Like [`Self::from_prefill`] but with a per-layer routed-expert
+    /// width: under expert merging (`prune::merge`) a layer's routing —
+    /// and therefore its PESF mask — is over the *merged* ids, so the
+    /// engine passes `layers.map(n_routed)` instead of a uniform
+    /// `cfg.n_experts`.
+    pub fn from_prefill_widths(
+        record: &SelectionRecord,
+        widths: &[usize],
+        top_k: usize,
+        cfg: PesfConfig,
+    ) -> Self {
         let n_layers = record.layers.len();
-        let counts: Vec<Vec<u64>> = (0..n_layers).map(|li| record.counts(li, n_experts)).collect();
+        assert_eq!(widths.len(), n_layers, "one routed width per layer");
+        let counts: Vec<Vec<u64>> =
+            (0..n_layers).map(|li| record.counts(li, widths[li])).collect();
         let lens: Vec<usize> = (0..n_layers).map(|li| record.n_tokens(li)).collect();
-        let (mask, stats) = pesf_mask_from_counts(&counts, &lens, n_experts, top_k, cfg);
+        let n_stat = widths.iter().copied().max().unwrap_or(0);
+        let (mask, stats) = pesf_mask_from_counts(&counts, &lens, n_stat, top_k, cfg);
         let l = lens.iter().copied().min().unwrap_or(0);
         let start = l.saturating_sub(cfg.window.max(1));
         let mut window: VecDeque<Vec<Vec<u16>>> = VecDeque::with_capacity(l - start);
         for t in start..l {
             window.push_back(record.token_experts(t));
         }
-        let mut wcounts = vec![vec![0u64; n_experts]; n_layers];
+        let mut wcounts: Vec<Vec<u64>> = widths.iter().map(|&n| vec![0u64; n]).collect();
         for tok in &window {
             for (li, experts) in tok.iter().enumerate() {
                 for &e in experts {
@@ -225,7 +248,7 @@ impl PesfDecodeState {
         }
         PesfDecodeState {
             cfg,
-            n_experts,
+            widths: widths.to_vec(),
             top_k,
             window,
             counts: wcounts,
@@ -274,8 +297,9 @@ impl PesfDecodeState {
     /// Re-derive the mask from the window counts (Eq. 6, `l` = window len).
     fn refresh(&mut self) {
         let lens = vec![self.window.len(); self.counts.len()];
+        let n_stat = self.widths.iter().copied().max().unwrap_or(0);
         let (mask, stats) =
-            pesf_mask_from_counts(&self.counts, &lens, self.n_experts, self.top_k, self.cfg);
+            pesf_mask_from_counts(&self.counts, &lens, n_stat, self.top_k, self.cfg);
         self.mask = Arc::new(mask);
         self.prune_rate = stats.prune_rate();
     }
@@ -434,6 +458,37 @@ mod tests {
         let (want, wstats) = pesf_mask(&rec, 4, 1, cfg);
         assert_eq!(*st.mask(), want);
         assert!((st.prune_rate() - wstats.prune_rate()).abs() < 1e-6);
+    }
+
+    /// Per-layer widths: a merged layer (width 2) thresholds over N=2, not
+    /// the config's N=4, and the mask rows have the layer's own width.
+    #[test]
+    fn decode_state_prefill_widths_threshold_per_layer() {
+        let mut rec = SelectionRecord::with_layers(2);
+        // Layer 0 (unmerged, 4 experts): counts [3,1,0,0] over 4 tokens.
+        for e in [0u16, 0, 0, 1] {
+            rec.layers[0].push(TokenSelection { experts: vec![e], scores: vec![1.0] });
+        }
+        // Layer 1 (merged, 2 experts): counts [3,1] over the same tokens.
+        for e in [0u16, 0, 0, 1] {
+            rec.layers[1].push(TokenSelection { experts: vec![e], scores: vec![1.0] });
+        }
+        let cfg = PesfConfig { alpha: 1.0, refresh_every: 0, window: 8 };
+        let st = PesfDecodeState::from_prefill_widths(&rec, &[4, 2], 1, cfg);
+        let mask = st.mask();
+        assert_eq!(mask.len(), 2);
+        assert_eq!(mask[0].len(), 4);
+        assert_eq!(mask[1].len(), 2);
+        // Layer 0: threshold = 4*1/4 = 1 -> prune c<1 (experts 2,3).
+        assert_eq!(mask[0], vec![false, false, true, true]);
+        // Layer 1: threshold = 4*1/2 = 2 -> prune c<2 (merged expert 1).
+        // With the old uniform-N divisor (N=4) the threshold would be 1
+        // and nothing in layer 1 would be pruned.
+        assert_eq!(mask[1], vec![false, true]);
+        // Uniform widths delegate: identical to from_prefill.
+        let a = PesfDecodeState::from_prefill_widths(&rec, &[4, 4], 1, cfg);
+        let b = PesfDecodeState::from_prefill(&rec, 4, 1, cfg);
+        assert_eq!(*a.mask(), *b.mask());
     }
 
     #[test]

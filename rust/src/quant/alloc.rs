@@ -33,22 +33,43 @@ impl BitAlloc {
         }
     }
 
-    /// Average bits per expert weight (routed + shared uniformly weighted by
-    /// parameter count, which is equal per expert here).
-    pub fn average_bits(&self) -> f64 {
-        let mut total = 0f64;
-        let mut count = 0usize;
+    /// Average bits per expert *parameter*: each expert's bit-width is
+    /// weighted by its parameter count, so routed and shared experts with
+    /// different shapes (and layers with different expert counts, e.g.
+    /// after expert merging) average to the true storage cost rather than
+    /// a head-count mean. An all-empty alloc averages to 0.0.
+    pub fn average_bits_weighted(&self, expert_params: usize, shared_params: usize) -> f64 {
+        debug_assert_eq!(
+            self.bits.len(),
+            self.shared_bits.len(),
+            "bits and shared_bits must cover the same layers"
+        );
+        let mut bit_sum = 0f64;
+        let mut param_sum = 0f64;
         for (l, s) in self.bits.iter().zip(&self.shared_bits) {
-            for &b in l.iter().chain(s) {
-                total += b as f64;
-                count += 1;
+            for &b in l {
+                bit_sum += b as f64 * expert_params as f64;
+                param_sum += expert_params as f64;
+            }
+            for &b in s {
+                bit_sum += b as f64 * shared_params as f64;
+                param_sum += shared_params as f64;
             }
         }
-        if count == 0 {
+        if param_sum == 0.0 {
             0.0
         } else {
-            total / count as f64
+            bit_sum / param_sum
         }
+    }
+
+    /// Head-count average bits per expert. Equals the parameter-weighted
+    /// average only because this codebase's routed and shared experts
+    /// share one shape (the d_model x d_ff SwiGLU triple) — stated here
+    /// instead of silently assumed; use [`Self::average_bits_weighted`]
+    /// when the shapes differ.
+    pub fn average_bits(&self) -> f64 {
+        self.average_bits_weighted(1, 1)
     }
 }
 
@@ -236,6 +257,32 @@ mod tests {
     fn uniform_alloc() {
         let a = Allocator::Uniform { bits: 3 }.allocate(2, 4, 1, &flat_freq(2, 4));
         assert_eq!(a.average_bits(), 3.0);
+    }
+
+    /// Unequal shared counts per layer + shared params != expert params:
+    /// the parameter-weighted average diverges from the head-count mean by
+    /// exactly the hand-computed amount.
+    #[test]
+    fn average_bits_weights_by_parameter_count() {
+        let a = BitAlloc {
+            bits: vec![vec![2, 2], vec![4, 4]],
+            // Layer 0 has one shared expert, layer 1 has three.
+            shared_bits: vec![vec![8], vec![8, 8, 8]],
+        };
+        // Head-count: (2+2+4+4 + 8*4) / 8 = 44/8 = 5.5.
+        assert!((a.average_bits() - 5.5).abs() < 1e-12);
+        // Shared experts 10x the params of routed ones:
+        // bit_sum = (2+2+4+4)*100 + 8*4*1000 = 1200 + 32000 = 33200
+        // params  = 4*100 + 4*1000 = 4400 -> 33200/4400 = 7.5454545...
+        let w = a.average_bits_weighted(100, 1000);
+        assert!((w - 33_200.0 / 4_400.0).abs() < 1e-12, "weighted {w}");
+        assert!(w > a.average_bits(), "heavier shared experts pull the average up");
+        // Equal params reduces to the head-count mean.
+        assert!((a.average_bits_weighted(7, 7) - 5.5).abs() < 1e-12);
+        // Empty alloc stays a defined 0.0, not NaN.
+        let empty = BitAlloc { bits: vec![], shared_bits: vec![] };
+        assert_eq!(empty.average_bits(), 0.0);
+        assert_eq!(empty.average_bits_weighted(10, 10), 0.0);
     }
 
     #[test]

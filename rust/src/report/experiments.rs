@@ -26,10 +26,12 @@ pub fn run(id: &str, scale: f64) -> Result<()> {
         "table7" => super::exp_e2e::table7(scale)?,
         "table8" | "challenging" => super::exp_table9::challenging(scale)?,
         "table9" => super::exp_table9::table9(scale)?,
+        "merge" => super::exp_merge::merge_table(scale)?,
         "all" => {
             for id in [
                 "fig2", "fig10", "table1", "fig4", "fig6", "table2", "fig7", "table3",
                 "table4", "table5", "table6", "table7", "table8", "table9", "fig8", "fig9",
+                "merge",
             ] {
                 println!("\n################ experiment {id} ################");
                 run(id, scale)?;

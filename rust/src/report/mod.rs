@@ -5,6 +5,7 @@
 pub mod exp_common;
 pub mod exp_e2e;
 pub mod exp_es;
+pub mod exp_merge;
 pub mod exp_prune;
 pub mod exp_quant;
 pub mod exp_table9;

@@ -202,6 +202,12 @@ impl Engine {
             // this is actual allocation, not the max_seq worst case).
             peak_kv_cache_bytes: peak_kv.load(Ordering::Relaxed),
             kv_bits: self.cfg.kv_bits,
+            // Total routed experts actually served (sum of per-layer
+            // widths): under expert merging this is smaller than
+            // n_layers * n_experts and is the denominator that makes the
+            // merged model's footprint legible in the summary line.
+            routed_expert_count: self.model.weights.layers.iter().map(|l| l.n_routed()).sum(),
+            original_expert_count: self.model.cfg().n_layers * self.model.cfg().n_experts,
             ..Default::default()
         };
         let mut prune_sum = 0f32;
@@ -499,9 +505,13 @@ fn prefill_request(
             }
             let logits = run(&hooks, &mut cache);
             if let Some(rec) = hooks.record_selections.take() {
-                pesf_state = Some(PesfDecodeState::from_prefill(
+                // Per-layer routed widths: merged layers route (and mask)
+                // over merged ids, which can be fewer than cfg.n_experts.
+                let widths: Vec<usize> =
+                    model.weights.layers.iter().map(|l| l.n_routed()).collect();
+                pesf_state = Some(PesfDecodeState::from_prefill_widths(
                     &rec.into_inner(),
-                    mcfg.n_experts,
+                    &widths,
                     mcfg.top_k,
                     pc,
                 ));

@@ -1,0 +1,317 @@
+//! Small dense linear-algebra helpers: deterministic truncated SVD and
+//! effective rank, used by expert merging (`prune::merge` factors each
+//! absorbed expert's residual into a low-rank delta) and by the
+//! pseudo-vs-native MoE analysis (`eval::expert_sim` ranks the router's
+//! gate matrix). Calibration/analysis-time only — never on the serving
+//! path.
+//!
+//! The SVD is computed from the Gram matrix of the smaller side
+//! (`M·Mᵀ` when `rows <= cols`, else `Mᵀ·M`) via cyclic Jacobi rotations
+//! with f64 internals. Jacobi is quadratically convergent, needs no
+//! pivoting heuristics, and — crucially for this repo's bit-identity
+//! discipline — is fully deterministic: fixed sweep order, fixed
+//! accumulation order, no data-dependent branching beyond the scalar
+//! rotation tests. The same input always factors to the same bits on
+//! every pool size and SIMD level (it runs on neither).
+
+use super::Mat;
+
+/// Convergence threshold on the sum of squared off-diagonal entries,
+/// relative to the trace norm; plus a hard sweep cap so a pathological
+/// matrix terminates rather than spinning.
+const JACOBI_MAX_SWEEPS: usize = 64;
+
+/// Symmetric eigendecomposition of the `n×n` row-major matrix `a` by
+/// cyclic Jacobi rotations, in place. Returns `(eigenvalues, v)` where
+/// column `j` of the row-major `n×n` matrix `v` is the eigenvector for
+/// `eigenvalues[j]`. Order is whatever the rotations leave; callers sort.
+fn jacobi_eigh(a: &mut [f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    debug_assert_eq!(a.len(), n * n, "square matrix required");
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let scale: f64 = (0..n).map(|i| a[i * n + i].abs()).sum::<f64>().max(1e-300);
+    for _sweep in 0..JACOBI_MAX_SWEEPS {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += a[p * n + q] * a[p * n + q];
+            }
+        }
+        if off <= (1e-26 * scale * scale).max(f64::MIN_POSITIVE) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (theta * theta + 1.0).sqrt())
+                } else {
+                    -1.0 / (-theta + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate columns p,q then rows p,q of `a`, and columns
+                // p,q of the accumulated eigenvector matrix.
+                for i in 0..n {
+                    let aip = a[i * n + p];
+                    let aiq = a[i * n + q];
+                    a[i * n + p] = c * aip - s * aiq;
+                    a[i * n + q] = s * aip + c * aiq;
+                }
+                for i in 0..n {
+                    let api = a[p * n + i];
+                    let aqi = a[q * n + i];
+                    a[p * n + i] = c * api - s * aqi;
+                    a[q * n + i] = s * api + c * aqi;
+                }
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let vals = (0..n).map(|i| a[i * n + i]).collect();
+    (vals, v)
+}
+
+/// Gram matrix of the smaller side of `m`, in f64: `M·Mᵀ` (rows×rows)
+/// when `rows <= cols`, else `Mᵀ·M` (cols×cols).
+fn gram_small_side(m: &Mat) -> (Vec<f64>, usize) {
+    let (rows, cols) = (m.rows, m.cols);
+    let n = rows.min(cols);
+    let mut g = vec![0f64; n * n];
+    if rows <= cols {
+        for i in 0..rows {
+            for j in i..rows {
+                let mut acc = 0f64;
+                for t in 0..cols {
+                    acc += m.at(i, t) as f64 * m.at(j, t) as f64;
+                }
+                g[i * n + j] = acc;
+                g[j * n + i] = acc;
+            }
+        }
+    } else {
+        for i in 0..cols {
+            for j in i..cols {
+                let mut acc = 0f64;
+                for t in 0..rows {
+                    acc += m.at(t, i) as f64 * m.at(t, j) as f64;
+                }
+                g[i * n + j] = acc;
+                g[j * n + i] = acc;
+            }
+        }
+    }
+    (g, n)
+}
+
+/// Eigenvalues of the small-side Gram matrix, sorted descending. These
+/// are the squared singular values of `m`.
+fn gram_eigvals_desc(m: &Mat) -> Vec<f64> {
+    let (mut g, n) = gram_small_side(m);
+    if n == 0 {
+        return Vec::new();
+    }
+    let (vals, _) = jacobi_eigh(&mut g, n);
+    let mut sorted = vals;
+    sorted.sort_by(|a, b| b.total_cmp(a));
+    sorted
+}
+
+/// Deterministic truncated SVD: returns `(u, v)` with `u` of shape
+/// `(rows, r)` and `v` of shape `(r, cols)` such that `u @ v` is the best
+/// rank-`r` approximation of `m`, where `r = min(rank, numerically
+/// significant singular values)` but at least 1 (an all-zero `m` yields
+/// zero factors of rank 1, so downstream GEMMs never see a 0-wide
+/// matrix). The singular values are folded into the factors — callers
+/// only ever multiply `u @ v`.
+pub fn svd_truncated(m: &Mat, rank: usize) -> (Mat, Mat) {
+    let (rows, cols) = (m.rows, m.cols);
+    let want = rank.max(1);
+    if rows == 0 || cols == 0 {
+        return (Mat::zeros(rows, 1), Mat::zeros(1, cols));
+    }
+    let (mut g, n) = gram_small_side(m);
+    let (vals, vecs) = jacobi_eigh(&mut g, n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| vals[j].total_cmp(&vals[i]));
+    let lmax = vals[order[0]].max(0.0);
+    // Keep eigen-directions whose λ clears both an absolute floor and a
+    // relative one (λ = σ², so 1e-14·λmax ≈ 1e-7·σmax on σ).
+    let kept: Vec<usize> = order
+        .into_iter()
+        .filter(|&i| vals[i] > (1e-14 * lmax).max(1e-24))
+        .take(want)
+        .collect();
+    let r = kept.len();
+    if r == 0 {
+        return (Mat::zeros(rows, 1), Mat::zeros(1, cols));
+    }
+    let mut u = Mat::zeros(rows, r);
+    let mut v = Mat::zeros(r, cols);
+    if rows <= cols {
+        // Eigenvectors of M·Mᵀ are the left singular vectors; the i-th
+        // row of `v` is then uᵢᵀ·M (σ folded into v).
+        for (ri, &ei) in kept.iter().enumerate() {
+            for row in 0..rows {
+                *u.at_mut(row, ri) = vecs[row * n + ei] as f32;
+            }
+            for col in 0..cols {
+                let mut acc = 0f64;
+                for row in 0..rows {
+                    acc += vecs[row * n + ei] * m.at(row, col) as f64;
+                }
+                *v.at_mut(ri, col) = acc as f32;
+            }
+        }
+    } else {
+        // Eigenvectors of Mᵀ·M are the right singular vectors; the i-th
+        // column of `u` is M·vᵢ (σ folded into u).
+        for (ri, &ei) in kept.iter().enumerate() {
+            for col in 0..cols {
+                *v.at_mut(ri, col) = vecs[col * n + ei] as f32;
+            }
+            for row in 0..rows {
+                let mut acc = 0f64;
+                for col in 0..cols {
+                    acc += m.at(row, col) as f64 * vecs[col * n + ei];
+                }
+                *u.at_mut(row, ri) = acc as f32;
+            }
+        }
+    }
+    (u, v)
+}
+
+/// Number of singular values exceeding `tol` times the largest — the
+/// numerical rank at tolerance `tol`. Used to flag pseudo-MoE models: a
+/// gate matrix whose effective rank is far below the expert count routes
+/// in a low-dimensional subspace, i.e. its experts are not independently
+/// addressed (SNIPPETS §3's gate-logit-rank diagnostic).
+pub fn effective_rank(m: &Mat, tol: f32) -> usize {
+    if m.rows == 0 || m.cols == 0 {
+        return 0;
+    }
+    let vals = gram_eigvals_desc(m);
+    let lmax = vals.first().copied().unwrap_or(0.0).max(0.0);
+    if lmax <= 1e-24 {
+        return 0;
+    }
+    let cut = (tol as f64) * (tol as f64) * lmax;
+    vals.iter().filter(|&&l| l > cut.max(1e-24)).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0f64;
+                for t in 0..a.cols {
+                    acc += a.at(i, t) as f64 * b.at(t, j) as f64;
+                }
+                *out.at_mut(i, j) = acc as f32;
+            }
+        }
+        out
+    }
+
+    fn max_abs_diff(a: &Mat, b: &Mat) -> f32 {
+        a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    /// A rank-2 matrix is recovered exactly (to f32 noise) at rank 2,
+    /// in both the rows<=cols and rows>cols Gram branches.
+    #[test]
+    fn exact_low_rank_recovery_both_branches() {
+        let mut rng = Pcg64::seeded(41);
+        for (rows, cols) in [(6usize, 10usize), (10, 6)] {
+            let a = Mat::randn(rows, 2, 1.0, &mut rng);
+            let b = Mat::randn(2, cols, 1.0, &mut rng);
+            let m = matmul_naive(&a, &b);
+            let (u, v) = svd_truncated(&m, 2);
+            assert_eq!(u.rows, rows);
+            assert_eq!(u.cols, 2, "{rows}x{cols}: rank-2 input keeps 2 directions");
+            assert_eq!(v.cols, cols);
+            let back = matmul_naive(&u, &v);
+            let scale = m.data.iter().fold(0f32, |s, &x| s.max(x.abs())).max(1e-6);
+            assert!(
+                max_abs_diff(&m, &back) / scale < 1e-4,
+                "{rows}x{cols}: reconstruction error {}",
+                max_abs_diff(&m, &back) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_error_shrinks_with_rank() {
+        let mut rng = Pcg64::seeded(42);
+        let m = Mat::randn(8, 12, 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for r in [1usize, 2, 4, 8] {
+            let (u, v) = svd_truncated(&m, r);
+            let back = matmul_naive(&u, &v);
+            let err: f32 = m
+                .data
+                .iter()
+                .zip(&back.data)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                .sqrt();
+            assert!(err <= last + 1e-4, "rank {r}: error {err} grew past {last}");
+            last = err;
+        }
+        // Full rank reconstructs the matrix (f32 noise floor).
+        assert!(last / m.fro_norm().max(1e-6) < 1e-4, "full-rank residual {last}");
+    }
+
+    #[test]
+    fn zero_matrix_yields_zero_rank_one_factors() {
+        let m = Mat::zeros(5, 7);
+        let (u, v) = svd_truncated(&m, 3);
+        assert_eq!((u.rows, u.cols), (5, 1));
+        assert_eq!((v.rows, v.cols), (1, 7));
+        assert!(u.data.iter().all(|&x| x == 0.0));
+        assert!(v.data.iter().all(|&x| x == 0.0));
+        assert_eq!(effective_rank(&m, 1e-3), 0);
+    }
+
+    #[test]
+    fn effective_rank_matches_construction() {
+        let mut rng = Pcg64::seeded(43);
+        let a = Mat::randn(9, 3, 1.0, &mut rng);
+        let b = Mat::randn(3, 7, 1.0, &mut rng);
+        let m = matmul_naive(&a, &b);
+        assert_eq!(effective_rank(&m, 1e-3), 3);
+        // A random dense matrix is (numerically) full rank.
+        let full = Mat::randn(6, 11, 1.0, &mut rng);
+        assert_eq!(effective_rank(&full, 1e-3), 6);
+    }
+
+    #[test]
+    fn svd_is_deterministic() {
+        let mut rng = Pcg64::seeded(44);
+        let m = Mat::randn(7, 5, 1.0, &mut rng);
+        let (u1, v1) = svd_truncated(&m, 3);
+        let (u2, v2) = svd_truncated(&m, 3);
+        assert_eq!(u1.data, u2.data);
+        assert_eq!(v1.data, v2.data);
+    }
+}

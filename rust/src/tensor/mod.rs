@@ -8,6 +8,7 @@
 //! the persistent scoped worker pool in [`pool`] (no per-call thread
 //! spawns); see that module for the sizing and determinism contract.
 
+pub mod linalg;
 pub mod matmul;
 pub mod ops;
 pub mod pool;

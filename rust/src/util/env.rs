@@ -58,6 +58,19 @@ pub fn expert_budget_mb() -> Option<f64> {
     })
 }
 
+/// `EAC_MOE_MERGE_THRESHOLD`: expert-merge cosine threshold for the
+/// integration tests' merged-model rerun (`tests/integration_serving.rs`
+/// applies `prune::merge` at this threshold before serving). Same
+/// loud-failure contract as the budget: a set-but-unparseable value
+/// panics instead of silently serving the unmerged model green.
+pub fn merge_threshold() -> Option<f32> {
+    var("EAC_MOE_MERGE_THRESHOLD").map(|v| {
+        v.parse().unwrap_or_else(|_| {
+            panic!("EAC_MOE_MERGE_THRESHOLD must be a number in (0, 1], got `{v}`")
+        })
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +86,17 @@ mod tests {
         assert_eq!(bench_scale(), None);
         std::env::remove_var("EAC_MOE_BENCH_SCALE");
         assert_eq!(bench_scale(), None);
+    }
+
+    #[test]
+    fn merge_threshold_rejects_garbage_loudly() {
+        std::env::set_var("EAC_MOE_MERGE_THRESHOLD", "0.7");
+        assert_eq!(merge_threshold(), Some(0.7));
+        std::env::set_var("EAC_MOE_MERGE_THRESHOLD", "high");
+        let r = std::panic::catch_unwind(merge_threshold);
+        std::env::remove_var("EAC_MOE_MERGE_THRESHOLD");
+        assert!(r.is_err(), "unparseable threshold must panic, not be ignored");
+        assert_eq!(merge_threshold(), None);
     }
 
     #[test]

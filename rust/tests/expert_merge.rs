@@ -1,0 +1,262 @@
+//! Integration: expert merging as a third compression axis — the
+//! analyze → merge → remap pipeline end to end.
+//!
+//! Pins the issue's acceptance contracts:
+//! - threshold = 1.0 is bit-identical to the unmerged model (dense and
+//!   packed experts, pool sizes 1 and 4);
+//! - the merged forward pass equals a manually-remapped reference on a
+//!   toy model with duplicated experts;
+//! - selection records and PESF masks run over merged ids at the merged
+//!   width;
+//! - a tiered store at a 50% routed-byte budget (deltas are the eviction
+//!   unit; bases stay resident) is bit-identical to resident serving;
+//! - a merged model survives a TensorFile save/load round trip with
+//!   bit-identical outputs, and serving metrics surface the reduced
+//!   expert count.
+
+use eac_moe::model::{Hooks, Model, ModelConfig, Weights};
+use eac_moe::prune::pesf::{PesfConfig, PesfDecodeState};
+use eac_moe::prune::{merge_experts, synthesize_mergeable_pairs, uniform_frequencies, MergeConfig};
+use eac_moe::serve::{Engine, EngineConfig, Request};
+use eac_moe::tensor::ops::{add_inplace, axpy, softmax_inplace, topk_indices};
+use eac_moe::tensor::{matmul, Mat, Pcg64, ThreadPool};
+use std::sync::Arc;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "merge-itest".into(),
+        n_layers: 2,
+        d_model: 32,
+        d_ff: 16,
+        n_experts: 8,
+        top_k: 2,
+        n_shared: 1,
+        n_heads: 4,
+        vocab: 64,
+        max_seq: 64,
+    }
+}
+
+fn seqs() -> Vec<Vec<u32>> {
+    (0..4u32).map(|i| (0..24).map(|t| (t * 13 + i * 7) % 64).collect()).collect()
+}
+
+/// Merge at `threshold` with uniform frequencies, asserting it actually
+/// merged when expected to.
+fn merged_weights(base: &Weights, threshold: f32) -> Weights {
+    let mut w = base.clone();
+    let rep = merge_experts(
+        &mut w,
+        &uniform_frequencies(w.cfg.n_layers, w.cfg.n_experts),
+        &MergeConfig::at_threshold(threshold),
+    );
+    assert_eq!(rep.merged_any(), threshold < 1.0, "merge outcome at threshold {threshold}");
+    w
+}
+
+/// Threshold 1.0 installs nothing: forward outputs are bit-identical to
+/// the unmerged model, for dense and packed experts, at pool sizes 1 and 4.
+#[test]
+fn threshold_one_bit_identical_dense_and_packed() {
+    let c = cfg();
+    for packed in [false, true] {
+        let mut w = Weights::init(&c, 41);
+        synthesize_mergeable_pairs(&mut w, 0.05, 5);
+        if packed {
+            w.pack_experts_rtn(4, 16);
+        }
+        let wm = merged_weights(&w, 1.0);
+        assert!(wm.layers.iter().all(|l| l.remap().is_none()));
+        assert_eq!(wm.routed_expert_bytes(), w.routed_expert_bytes());
+        for threads in [1usize, 4] {
+            let pool = || Arc::new(ThreadPool::new(threads));
+            let base = Model::with_pool(w.clone(), pool());
+            let merged = Model::with_pool(wm.clone(), pool());
+            for s in seqs() {
+                let a = base.forward(&s);
+                let b = merged.forward(&s);
+                assert_eq!(a.data, b.data, "packed={packed} threads={threads}");
+            }
+        }
+    }
+}
+
+/// On a toy model with exactly duplicated experts (pairs (0,1) and (2,3),
+/// …) the merged MoE layer must equal a reference computed by hand from
+/// the remap: reduce old-id logits with max, softmax/top-k over merged
+/// ids, renormalize survivors, run each selected cluster base, add shared
+/// experts. Duplicates merge without deltas, so the reference needs no
+/// low-rank math.
+#[test]
+fn merged_forward_matches_manual_remap_reference() {
+    let c = cfg();
+    let mut w = Weights::init(&c, 42);
+    for l in &mut w.layers {
+        for e in (0..c.n_experts).step_by(2) {
+            let src = (*l.expert_arc(e)).clone();
+            *l.expert_mut(e + 1) = src;
+        }
+    }
+    let wm = merged_weights(&w, 0.99);
+    let m = Model::new(wm);
+    let layer = &m.weights.layers[0];
+    let rm = layer.remap().expect("remap installed");
+    assert_eq!(rm.n_merged, c.n_experts / 2);
+    // Exact duplicates leave zero residuals: no deltas anywhere.
+    assert!(layer.deltas().iter().all(|d| d.is_none()));
+
+    let mut rng = Pcg64::seeded(43);
+    let x = Mat::randn(6, c.d_model, 1.0, &mut rng);
+    let (got, diag) = m.moe_layer(&x, layer, 0, &Hooks::none());
+    assert_eq!(diag.expert_tokens.len(), rm.n_merged, "diagnostics at merged width");
+
+    let n = rm.n_merged;
+    let k = c.top_k.min(n);
+    let raw = matmul(&x, &layer.router);
+    let mut want = Mat::zeros(x.rows, c.d_model);
+    for t in 0..x.rows {
+        let mut scores = vec![f32::NEG_INFINITY; n];
+        for (o, &logit) in raw.row(t).iter().enumerate() {
+            let mi = rm.map[o] as usize;
+            scores[mi] = scores[mi].max(logit);
+        }
+        softmax_inplace(&mut scores);
+        let idx = topk_indices(&scores, k);
+        // Denominator in selection (top-k) order, like the survivor loop.
+        let denom: f32 = idx.iter().map(|&i| scores[i]).sum();
+        // Accumulation in ascending merged-id order, like the scatter.
+        let mut sel = idx.clone();
+        sel.sort_unstable();
+        for mi in sel {
+            let y = eac_moe::model::expert_forward(&x.gather_rows(&[t]), &layer.experts()[mi]);
+            axpy(want.row_mut(t), scores[mi] / denom, y.row(0));
+        }
+    }
+    for sh in layer.shared() {
+        let y = eac_moe::model::expert_forward(&x, sh);
+        for t in 0..x.rows {
+            add_inplace(want.row_mut(t), y.row(t));
+        }
+    }
+    assert_eq!(got.data, want.data, "merged moe_layer != manual remap reference");
+}
+
+/// Selection records and PESF masks operate over merged ids: every
+/// recorded id is below the merged width, per-layer counts live at that
+/// width, and `PesfDecodeState::from_prefill_widths` thresholds each
+/// layer by its own routed width.
+#[test]
+fn selection_records_and_pesf_masks_use_merged_width() {
+    let c = cfg();
+    let mut w = Weights::init(&c, 44);
+    synthesize_mergeable_pairs(&mut w, 0.05, 6);
+    let m = Model::new(merged_weights(&w, 0.9));
+    let widths: Vec<usize> = m.weights.layers.iter().map(|l| l.n_routed()).collect();
+    assert!(widths.iter().all(|&n| n == c.n_experts / 2));
+
+    let hooks = Hooks::recording(c.n_layers);
+    m.forward_with_hooks(&seqs()[0], &hooks);
+    let rec = hooks.take_selections().unwrap();
+    for (li, layer) in rec.layers.iter().enumerate() {
+        for sel in layer {
+            assert!(
+                sel.experts.iter().all(|&e| (e as usize) < widths[li]),
+                "layer {li}: selection id beyond merged width"
+            );
+        }
+    }
+    let st = PesfDecodeState::from_prefill_widths(
+        &rec,
+        &widths,
+        c.top_k,
+        PesfConfig { alpha: 0.9, ..Default::default() },
+    );
+    let mask = st.mask();
+    assert_eq!(mask.len(), c.n_layers);
+    for (li, row) in mask.iter().enumerate() {
+        assert_eq!(row.len(), widths[li], "layer {li}: mask row at merged width");
+    }
+    // A merged-width mask row drives the forward pass without panicking
+    // and with finite outputs.
+    let masked_hooks = Hooks::with_seq_masks(vec![Some(st.mask())]);
+    let mut cache = eac_moe::model::KvCache::new(m.cfg());
+    m.prefill_into_cache(&seqs()[0], &Hooks::none(), &mut cache);
+    let logits = m.decode_step_batch(&[3], std::slice::from_mut(&mut cache), &masked_hooks);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+}
+
+/// A merged model under a tiered store at 50% of its routed bytes serves
+/// bit-identically to the resident model: cluster bases stay resident,
+/// deltas are the (evicting) tiered unit.
+#[test]
+fn tiered_store_at_half_budget_bit_identical_with_deltas_tiered() {
+    let c = cfg();
+    let mut w = Weights::init(&c, 45);
+    synthesize_mergeable_pairs(&mut w, 0.05, 8);
+    let wm = merged_weights(&w, 0.9);
+    // The synthesized residuals are nonzero, so deltas exist to tier.
+    assert!(wm.layers.iter().any(|l| l.deltas().iter().any(|d| d.is_some())));
+    let resident = Model::new(wm.clone());
+
+    // Two budgets: the issue's 50%-of-routed-bytes configuration (holds
+    // every delta comfortably — bases dominate the routed footprint), and
+    // the minimum feasible budget (one largest delta), which forces
+    // eviction/reload churn on every layer.
+    let half = (wm.routed_expert_bytes() / 2).max(wm.max_expert_bytes());
+    let tight = wm.max_expert_bytes();
+    assert!(tight > 0, "synthesized merge produced no deltas to tier");
+    for (tag, budget) in [("half", half), ("tight", tight)] {
+        let spill = std::env::temp_dir()
+            .join(format!("eac_moe_merge_itest_{}_{tag}.bin", std::process::id()));
+        let tiered =
+            Model::new(wm.clone()).into_tiered(budget, &spill).expect("tiered merged model");
+        let _ = std::fs::remove_file(&spill);
+        assert!(tiered.store.is_tiered());
+        for (li, l) in tiered.weights.layers.iter().enumerate() {
+            assert_eq!(l.experts().len(), l.n_routed(), "layer {li}: bases stay resident");
+            assert!(l.deltas().is_empty(), "layer {li}: deltas owned by the store");
+        }
+        for s in seqs() {
+            let a = resident.forward(&s);
+            let b = tiered.forward(&s);
+            assert_eq!(a.data, b.data, "tiered({tag}) merged forward drifted from resident");
+        }
+    }
+}
+
+/// A merged model (remap + bases + deltas) round-trips through TensorFile
+/// save/load with bit-identical outputs, and the serving engine reports
+/// the reduced expert count.
+#[test]
+fn merged_model_roundtrips_and_serves_with_reduced_expert_count() {
+    let c = cfg();
+    let mut w = Weights::init(&c, 46);
+    synthesize_mergeable_pairs(&mut w, 0.05, 9);
+    let wm = merged_weights(&w, 0.7);
+    let path = std::env::temp_dir()
+        .join(format!("eac_moe_merge_ckpt_{}.bin", std::process::id()));
+    wm.save(&path).expect("save merged checkpoint");
+    let back = Weights::load(&path, "merge-itest").expect("load merged checkpoint");
+    let _ = std::fs::remove_file(&path);
+    let a = Model::new(wm);
+    let b = Model::new(back);
+    for s in seqs() {
+        assert_eq!(a.forward(&s).data, b.forward(&s).data, "roundtrip drifted");
+    }
+
+    let routed: usize = b.weights.layers.iter().map(|l| l.n_routed()).sum();
+    let original = c.n_layers * c.n_experts;
+    assert!(routed < original);
+    let engine = Engine::new(b, EngineConfig { workers: 2, ..Default::default() });
+    let rs: Vec<Request> = (0..6u64)
+        .map(|i| {
+            Request::new(i, (0..20u32).map(|t| (t * 11 + i as u32) % 64).collect()).with_decode(4)
+        })
+        .collect();
+    let (resps, metrics) = engine.serve(rs);
+    assert_eq!(resps.len(), 6);
+    assert!(resps.iter().all(|r| r.generated.len() == 4));
+    assert_eq!(metrics.routed_expert_count, routed);
+    assert_eq!(metrics.original_expert_count, original);
+    assert!(metrics.summary().contains("(merged)"), "summary surfaces the merge");
+}

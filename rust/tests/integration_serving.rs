@@ -32,6 +32,36 @@ fn maybe_tiered(m: Model) -> Model {
     m
 }
 
+/// When `EAC_MOE_MERGE_THRESHOLD` is set (CI's merged-model rerun), make
+/// the random-init experts mergeable (pairs at ~0.999 cosine — random
+/// experts are near-orthogonal, so nothing would merge otherwise) and
+/// permanently merge them at that threshold before serving. Every
+/// assertion in this suite then exercises the remapped `moe_layer` path,
+/// merged-width selection records/PESF masks, and (combined with
+/// `EAC_MOE_EXPERT_BUDGET_MB`) the deltas-only tiered store.
+///
+/// Mask widths in this file stay at the *original* expert count (16):
+/// merged selection ids are always below `n_routed`, so wider mask rows
+/// and count buffers are valid by the merged-id mask contract.
+fn maybe_merged(mut m: Model) -> Model {
+    // The accessor panics on a set-but-unparseable value — the merged
+    // rerun must not silently serve the unmerged model.
+    let Some(t) = eac_moe::util::env::merge_threshold() else { return m };
+    use eac_moe::prune::{merge_experts, synthesize_mergeable_pairs, uniform_frequencies, MergeConfig};
+    synthesize_mergeable_pairs(&mut m.weights, 0.05, 23);
+    let cfg = m.weights.cfg.clone();
+    let rep = merge_experts(
+        &mut m.weights,
+        &uniform_frequencies(cfg.n_layers, cfg.n_experts),
+        &MergeConfig::at_threshold(t),
+    );
+    assert!(
+        t >= 1.0 || rep.merged_any(),
+        "EAC_MOE_MERGE_THRESHOLD={t} merged nothing on synthesized pairs"
+    );
+    m
+}
+
 fn model() -> Model {
     let cfg = ModelConfig {
         name: "itest".into(),
@@ -45,7 +75,7 @@ fn model() -> Model {
         vocab: 128,
         max_seq: 256,
     };
-    maybe_tiered(Model::new(Weights::init(&cfg, 7)))
+    maybe_tiered(maybe_merged(Model::new(Weights::init(&cfg, 7))))
 }
 
 fn reqs(n: u64, len: usize) -> Vec<Request> {
