@@ -11,8 +11,10 @@
 //! PESF (`decode_pesf/*`: alpha ∈ {0, 0.3, 0.7} × B ∈ {1,4}, plus an
 //! engine run reporting the decode-phase prune rate), forced-scalar vs
 //! SIMD-dispatched decode with a bitwise-equality gate (`simd_gemm/b{1,4}`),
-//! and KV-cache bytes / decode tok/s / decode-path ppl at f32 vs int8
-//! storage (`kv_cache/*`), same shape as the bench_tables outputs. CI runs
+//! KV-cache bytes / decode tok/s / decode-path ppl at f32 vs int8
+//! storage (`kv_cache/*`), and open-loop Poisson-burst serving tails —
+//! TTFT/ITL p50/p95/p99 with monolithic vs chunked-interleaved prefill
+//! (`serve_slo/*`), same shape as the bench_tables outputs. CI runs
 //! this in smoke mode (`EAC_MOE_BENCH_MS=25`), uploads the JSON, and
 //! appends the run's summary to the repo-root `BENCH_TRAJECTORY.json` so
 //! the perf trajectory is tracked per PR.
@@ -693,6 +695,101 @@ fn main() {
             &eac_moe::model::hooks::Hooks::none(),
         ));
     });
+
+    // --- Streaming/SLO serving (`serve_slo/*`): one small open-loop
+    // Poisson burst (bimodal prompts) served twice on the same schedule —
+    // monolithic prefill vs chunked-and-interleaved — reporting the
+    // p50/p95/p99 TTFT and ITL tails plus the short-request p99 TTFT the
+    // chunking exists to move. Outputs are asserted token-identical across
+    // the two runs (chunking is scheduling-only), so the entries measure
+    // pure latency shape. CI asserts these keys exist before appending to
+    // BENCH_TRAJECTORY.json.
+    {
+        use eac_moe::serve::workload::{self, LenDist, WorkloadSpec};
+        use eac_moe::serve::{BatchPolicy, Engine, EngineConfig};
+        use std::time::Duration;
+        let spec = WorkloadSpec {
+            n_requests: 12,
+            rate_per_sec: 400.0,
+            prompt_len: LenDist::Bimodal { short: 8, long: 96, p_short: 0.75 },
+            decode_len: LenDist::Fixed(4),
+            tenants: 1,
+            vocab: 512,
+            seed: 11,
+            deadline_budget: None,
+        };
+        let arrivals = workload::generate(&spec);
+        let short_ids: Vec<u64> = arrivals
+            .iter()
+            .filter(|t| t.req.tokens.len() == 8)
+            .map(|t| t.req.id)
+            .collect();
+        let pctl = |mut v: Vec<f64>, p: f64| -> f64 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            v.sort_by(|a, b| a.total_cmp(b));
+            v[((p * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)]
+        };
+        let mut outputs = Vec::new();
+        let mut short_p99 = Vec::new();
+        for (name, chunk) in [("monolithic", 0usize), ("chunk32", 32)] {
+            let engine = Engine::new(
+                Model::new(model.weights.clone()),
+                EngineConfig {
+                    batch: BatchPolicy {
+                        max_batch: 4,
+                        max_wait: Duration::from_micros(100),
+                        ..Default::default()
+                    },
+                    workers: 1,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                },
+            );
+            let (resps, m) = engine.serve_timed(arrivals.clone());
+            assert_eq!(resps.len(), spec.n_requests);
+            let mut out: Vec<(u64, u32, Vec<u32>)> =
+                resps.iter().map(|r| (r.id, r.next_token, r.generated.clone())).collect();
+            out.sort_by_key(|(id, _, _)| *id);
+            outputs.push(out);
+            let sp99 = pctl(
+                resps
+                    .iter()
+                    .filter(|r| short_ids.contains(&r.id))
+                    .map(|r| r.ttft_secs * 1e3)
+                    .collect(),
+                0.99,
+            );
+            short_p99.push(sp99);
+            println!(
+                "serve_slo {name}: ttft p50={:.1} p95={:.1} p99={:.1}ms | itl p99={:.1}ms | short p99={sp99:.1}ms",
+                m.ttft.percentile_ms(0.5),
+                m.ttft.percentile_ms(0.95),
+                m.ttft.percentile_ms(0.99),
+                m.itl.percentile_ms(0.99),
+            );
+            let mut o = Json::obj();
+            o.set("ttft_p50_ms", Json::Num(m.ttft.percentile_ms(0.5)))
+                .set("ttft_p95_ms", Json::Num(m.ttft.percentile_ms(0.95)))
+                .set("ttft_p99_ms", Json::Num(m.ttft.percentile_ms(0.99)))
+                .set("itl_p50_ms", Json::Num(m.itl.percentile_ms(0.5)))
+                .set("itl_p95_ms", Json::Num(m.itl.percentile_ms(0.95)))
+                .set("itl_p99_ms", Json::Num(m.itl.percentile_ms(0.99)))
+                .set("short_ttft_p99_ms", Json::Num(sp99));
+            json.set(&format!("serve_slo/{name}"), o);
+        }
+        assert_eq!(
+            outputs[0], outputs[1],
+            "chunked prefill changed tokens — it must be scheduling-only"
+        );
+        let mut o = Json::obj();
+        o.set(
+            "chunked_over_monolithic",
+            Json::Num(short_p99[1] / short_p99[0].max(1e-9)),
+        );
+        json.set("serve_slo/short_ttft_p99", o);
+    }
 
     if let Err(e) = eac_moe::report::save_result("bench_perf", &json) {
         eprintln!("warning: could not write results/bench_perf.json: {e:#}");

@@ -97,4 +97,99 @@ fn main() {
         let gen_toks = 8.0 * 24.0;
         println!("    -> {:.0} decode tok/s", gen_toks / (r.mean_ns / 1e9));
     }
+
+    // --- Open-loop Poisson burst: p50/p95/p99 TTFT and ITL under a
+    // bimodal short/long prompt mix, chunked prefill vs the monolithic
+    // baseline on the *same* arrival schedule. The SLO story in one
+    // number: monolithically, a short prompt that lands behind a long one
+    // waits out the entire long prefill before its first token; chunking
+    // bounds that head-of-line blocking at one chunk, so short-request
+    // p99 TTFT drops while the outputs stay token-identical (asserted —
+    // chunking is a scheduling change, not a math change).
+    {
+        use eac_moe::serve::workload::{self, LenDist, WorkloadSpec};
+        let spec = WorkloadSpec {
+            n_requests: 24,
+            rate_per_sec: 300.0,
+            prompt_len: LenDist::Bimodal { short: 8, long: 192, p_short: 0.75 },
+            decode_len: LenDist::Fixed(8),
+            tenants: 1,
+            vocab: 512,
+            seed: 7,
+            deadline_budget: None,
+        };
+        let arrivals = workload::generate(&spec);
+        let short_ids: Vec<u64> = arrivals
+            .iter()
+            .filter(|t| t.req.tokens.len() == 8)
+            .map(|t| t.req.id)
+            .collect();
+        println!(
+            "poisson burst: {} reqs @ {:.0}/s ({} short x8, {} long x192), +8 decode each",
+            spec.n_requests,
+            spec.rate_per_sec,
+            short_ids.len(),
+            spec.n_requests - short_ids.len()
+        );
+        let pctl = |mut v: Vec<f64>, p: f64| -> f64 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            v.sort_by(|a, b| a.total_cmp(b));
+            v[((p * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)]
+        };
+        let mut short_p99 = Vec::new(); // (name, ms)
+        let mut outputs = Vec::new(); // sorted (id, next_token, generated) per run
+        for (name, chunk) in [("monolithic", 0usize), ("chunk=32", 32)] {
+            let engine = Engine::new(
+                Model::new(m.weights.clone()),
+                EngineConfig {
+                    batch: BatchPolicy {
+                        max_batch: 4,
+                        max_wait: Duration::from_micros(100),
+                        ..Default::default()
+                    },
+                    workers: 1,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                },
+            );
+            let (resps, metrics) = engine.serve_timed(arrivals.clone());
+            assert_eq!(resps.len(), spec.n_requests);
+            assert!(
+                resps.iter().all(|r| !r.finish_reason.is_rejection()),
+                "burst workload must serve every request"
+            );
+            let mut out: Vec<(u64, u32, Vec<u32>)> =
+                resps.iter().map(|r| (r.id, r.next_token, r.generated.clone())).collect();
+            out.sort_by_key(|(id, _, _)| *id);
+            outputs.push(out);
+            let short_ttft_ms: Vec<f64> = resps
+                .iter()
+                .filter(|r| short_ids.contains(&r.id))
+                .map(|r| r.ttft_secs * 1e3)
+                .collect();
+            let sp99 = pctl(short_ttft_ms, 0.99);
+            short_p99.push((name, sp99));
+            println!(
+                "    {name:>10}: ttft p50={:.1}ms p95={:.1}ms p99={:.1}ms | itl p50={:.1}ms p95={:.1}ms p99={:.1}ms | short-req ttft p99={sp99:.1}ms",
+                metrics.ttft.percentile_ms(0.5),
+                metrics.ttft.percentile_ms(0.95),
+                metrics.ttft.percentile_ms(0.99),
+                metrics.itl.percentile_ms(0.5),
+                metrics.itl.percentile_ms(0.95),
+                metrics.itl.percentile_ms(0.99),
+            );
+        }
+        assert_eq!(
+            outputs[0], outputs[1],
+            "chunked prefill changed tokens — it must be scheduling-only"
+        );
+        let (mono, chunked) = (short_p99[0].1, short_p99[1].1);
+        println!(
+            "    -> short-request p99 TTFT: chunked {chunked:.1}ms vs monolithic {mono:.1}ms ({:.2}x){}",
+            chunked / mono.max(1e-9),
+            if chunked < mono { "" } else { "  [WARN: chunking did not help on this host]" }
+        );
+    }
 }

@@ -8,10 +8,13 @@
 //! eac-moe eval      --model <key> [--alpha A] [--scale S]
 //! eac-moe serve     --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]
 //!                   [--requests N] [--len L] [--decode D] [--expert-budget-mb B]
-//!                   [--kv-bits <32|8>]
+//!                   [--kv-bits <32|8>] [--prefill-chunk C]
+//!                   [--workload <poisson|trace.json>] [--rate R] [--deadline-ms D]
+//!                   [--tenants T] [--seed S]
 //! eac-moe analyze-es --model <key> [--scale S]
 //! eac-moe analyze    --expert-sim --model <key> [--dataset D] [--scale S]
-//! eac-moe experiment <id> [--scale S]   table1|table2|...|fig9|merge|all
+//! eac-moe experiment <id> [--scale S] [--from-analysis <json>]
+//!                                       table1|table2|...|fig9|merge|all
 //! ```
 
 use eac_moe::coordinator::{load_or_init_model, ExperimentContext};
@@ -37,7 +40,10 @@ fn main() {
         "experiment" => {
             let id = args.get(1).map(|s| s.as_str()).unwrap_or("all");
             let opts = parse_opts(&args[2..]);
-            eac_moe::report::experiments::run(id, scale(&opts))
+            let run_opts = eac_moe::report::experiments::RunOpts {
+                from_analysis: opts.get("from-analysis").map(std::path::PathBuf::from),
+            };
+            eac_moe::report::experiments::run_opts(id, scale(&opts), &run_opts)
         }
         "--help" | "-h" | "help" => {
             usage();
@@ -67,13 +73,21 @@ fn usage() {
          \x20 eval       --model <key> [--alpha A] [--scale S]\n\
          \x20 serve      --model <key> [--pesf-alpha A] [--pesf-refresh R] [--pesf-window W]\n\
          \x20            [--requests N] [--len L] [--decode D] [--workers W] [--threads T]\n\
-         \x20            [--expert-budget-mb B] [--kv-bits {{32|8}}]\n\
+         \x20            [--expert-budget-mb B] [--kv-bits {{32|8}}] [--prefill-chunk C]\n\
+         \x20            [--workload {{poisson|<trace.json>}}] [--rate R] [--deadline-ms D]\n\
+         \x20            [--tenants T] [--seed S]\n\
          \x20            (PESF prunes prefill AND decode; --pesf-refresh 0 freezes the\n\
          \x20             decode mask at prompt statistics; --alpha aliases --pesf-alpha;\n\
          \x20             --expert-budget-mb serves experts from disk under a hard cache\n\
          \x20             budget — bit-identical outputs, bounded expert memory;\n\
          \x20             --kv-bits 8 stores decode KV caches as int8 per head with\n\
-         \x20             per-position scales — ~4x smaller caches, tolerance-pinned)\n\
+         \x20             per-position scales — ~4x smaller caches, tolerance-pinned;\n\
+         \x20             --prefill-chunk C interleaves prompt prefill in C-token chunks\n\
+         \x20             with decode steps — same outputs, lower tail TTFT;\n\
+         \x20             --workload poisson replays an open-loop Poisson burst at\n\
+         \x20             --rate req/s (bimodal short/long prompts around --len, with\n\
+         \x20             --deadline-ms SLO shedding across --tenants fairness domains);\n\
+         \x20             --workload <trace.json> replays an explicit arrival trace)\n\
          \x20 analyze-es --model <key> [--scale S]\n\
          \x20 analyze    --expert-sim --model <key> [--dataset D] [--scale S]\n\
          \x20            (per-layer expert weight-similarity + utilization + pseudo-MoE\n\
@@ -82,6 +96,8 @@ fn usage() {
          \x20 experiment <id> [--scale S]  (table1|table2|table3|table4|table5|table6|\n\
          \x20                               table7|table9|fig2|fig4|fig6|fig7|fig8|fig9|\n\
          \x20                               merge|all)\n\
+         \x20            (merge also takes --from-analysis <json> to derive its\n\
+         \x20             threshold sweep from an `analyze --expert-sim` result)\n\
          \n\
          MODELS: mixtral-mini | phi-mini | deepseek-mini | qwen-mini\n\
          SCALE:  data-volume multiplier for experiments (default 1.0; use 0.2 for quick runs)"
@@ -250,7 +266,7 @@ fn cmd_eval(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
 }
 
 fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
-    use eac_moe::serve::{Engine, EngineConfig, PrunePolicy, Request};
+    use eac_moe::serve::{workload, Engine, EngineConfig, LenDist, PrunePolicy, Request, WorkloadSpec};
     let zoo = model_key(opts);
     let (model, _) = load_or_init_model(zoo);
     // `--pesf-alpha` is the canonical spelling; `--alpha` stays as an
@@ -317,8 +333,57 @@ fn cmd_serve(opts: &HashMap<String, String>) -> eac_moe::Result<()> {
     } else {
         PrunePolicy::None
     };
-    let cfg = EngineConfig { workers, prune, threads, kv_bits, ..Default::default() };
+    // Chunked prefill: interleave prompt prefill in C-token chunks with
+    // decode steps (bit-identical outputs; see serve::engine docs).
+    let prefill_chunk: usize = opts.get("prefill-chunk").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let cfg =
+        EngineConfig { workers, prune, threads, kv_bits, prefill_chunk, ..Default::default() };
+    let vocab = model.cfg().vocab;
     let engine = Engine::new(model, cfg);
+    // Open-loop workload mode: Poisson arrivals (or an explicit JSON
+    // trace) through serve_timed, reporting tail TTFT/ITL under load.
+    if let Some(mode) = opts.get("workload") {
+        let arrivals = match mode.as_str() {
+            "poisson" | "true" => {
+                let rate: f64 = opts.get("rate").and_then(|s| s.parse().ok()).unwrap_or(50.0);
+                let tenants: u32 = opts.get("tenants").and_then(|s| s.parse().ok()).unwrap_or(1);
+                let seed: u64 = opts.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+                let deadline_budget = opts
+                    .get("deadline-ms")
+                    .and_then(|s| s.parse::<f64>().ok())
+                    .filter(|ms| ms.is_finite() && *ms > 0.0)
+                    .map(|ms| std::time::Duration::from_secs_f64((ms / 1e3).min(1e6)));
+                let spec = WorkloadSpec {
+                    n_requests: n as usize,
+                    rate_per_sec: rate,
+                    // Bimodal short/long mix around --len: the chunked-
+                    // prefill stressor (short requests queue behind the
+                    // occasional long prompt).
+                    prompt_len: LenDist::Bimodal {
+                        short: (len / 4).max(4),
+                        long: len.max(8),
+                        p_short: 0.75,
+                    },
+                    decode_len: LenDist::Fixed(decode),
+                    tenants,
+                    vocab,
+                    seed,
+                    deadline_budget,
+                };
+                workload::generate(&spec)
+            }
+            path => workload::load_trace(std::path::Path::new(path))?,
+        };
+        println!(
+            "open-loop workload: {} arrivals over {:.2}s on {} (chunk={prefill_chunk}, workers={workers})",
+            arrivals.len(),
+            arrivals.last().map(|t| t.at_secs).unwrap_or(0.0),
+            zoo.key()
+        );
+        let (_resps, metrics) = engine.serve_timed(arrivals);
+        println!("{}", metrics.summary());
+        return Ok(());
+    }
     let mut mix = eac_moe::data::corpus::WikiMixture::new(21);
     let reqs: Vec<Request> =
         (0..n).map(|i| Request::new(i, mix.sequence(len)).with_decode(decode)).collect();

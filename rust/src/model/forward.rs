@@ -236,14 +236,17 @@ impl KvCache {
         }
     }
 
-    /// Prefill export: store all `k.rows` positions of layer `li` (the
-    /// whole-prompt K/V projections), growing capacity as needed. Int8
-    /// caches quantize here too, so decode continues from exactly the
-    /// same stored representation a token-by-token append would build.
-    fn export_layer(&mut self, li: usize, k: &Mat, v: &Mat) {
-        self.ensure_capacity(k.rows);
+    /// Prefill export: store `k.rows` positions of layer `li` (the K/V
+    /// projections of one prompt span) starting at position `base`,
+    /// growing capacity as needed. Whole-prompt prefill exports at
+    /// `base == 0`; chunked prefill exports each chunk at the number of
+    /// positions already cached. Int8 caches quantize here too, so decode
+    /// continues from exactly the same stored representation a
+    /// token-by-token append would build.
+    fn export_layer(&mut self, li: usize, base: usize, k: &Mat, v: &Mat) {
+        self.ensure_capacity(base + k.rows);
         for r in 0..k.rows {
-            self.write_row(li, r, k.row(r), v.row(r));
+            self.write_row(li, base + r, k.row(r), v.row(r));
         }
     }
 
@@ -329,6 +332,149 @@ impl Model {
         logits
     }
 
+    /// Resumable chunked prefill: forward `chunk` (the next span of a
+    /// prompt) against the `cache.len` positions already prefilled into
+    /// `cache`, exporting the chunk's K/V at that offset and advancing
+    /// `cache.len`. Returns logits `(chunk.len(), vocab)` for the chunk's
+    /// positions. Calling this over a prompt split at any chunk
+    /// boundaries produces — bit for bit — the same logits rows, cache
+    /// contents, and subsequent decode as one [`Model::prefill_into_cache`]
+    /// pass: chunk size changes *scheduling only*, never the math. That
+    /// holds because every per-position value depends only on positions
+    /// `<= t`: the chunk's Q/K/V projections are row-independent GEMMs,
+    /// attention reads prior K/V verbatim from the f32 cache (why this
+    /// entry point requires [`KvPrecision::F32`] — an int8 cache would
+    /// make the chunked pass read dequantized history the monolithic pass
+    /// never sees), the causal mask keeps masked score entries exactly
+    /// 0.0 (skipped identically by the GEMM accumulate at any width), and
+    /// the MoE block is per-token.
+    ///
+    /// Hooks are applied per chunk: sequence-level statistics (PESF's
+    /// Eq. 6 counts, selection records) would see each chunk as its own
+    /// sequence, so callers that prune during prefill must use the
+    /// monolithic path — the engine only chunks under `PrunePolicy::None`.
+    pub fn prefill_chunk_into_cache(
+        &self,
+        chunk: &[u32],
+        hooks: &Hooks,
+        cache: &mut KvCache,
+    ) -> Mat {
+        let cfg = &self.weights.cfg;
+        let base = cache.len;
+        assert!(!chunk.is_empty(), "empty prefill chunk");
+        assert!(base + chunk.len() <= cfg.max_seq, "sequence too long");
+        assert!(
+            cache.precision() == KvPrecision::F32,
+            "chunked prefill requires an f32 KV cache (int8 history is not \
+             bit-identical to the monolithic prefill's f32 reads)"
+        );
+        // Grow once, before the layer loop: capacity is shared across
+        // layers, so per-layer exports below are plain writes.
+        cache.ensure_capacity(base + chunk.len());
+        let mut x = Mat::zeros(chunk.len(), cfg.d_model);
+        for (i, &t) in chunk.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.weights.embed.row(t as usize));
+        }
+        for (li, layer) in self.weights.layers.iter().enumerate() {
+            let normed = rmsnorm(&x, &layer.attn_norm, 1e-6);
+            let attn = self.attention_chunk(&normed, layer, li, base, cache);
+            for r in 0..x.rows {
+                crate::tensor::ops::add_inplace(x.row_mut(r), attn.row(r));
+            }
+            let normed = rmsnorm(&x, &layer.ffn_norm, 1e-6);
+            let (moe, _diag) = self.moe_layer(&normed, layer, li, hooks);
+            for r in 0..x.rows {
+                crate::tensor::ops::add_inplace(x.row_mut(r), moe.row(r));
+            }
+        }
+        cache.len = base + chunk.len();
+        let normed = rmsnorm(&x, &self.weights.final_norm, 1e-6);
+        matmul_transb_on(&self.pool, &normed, &self.weights.embed)
+    }
+
+    /// Causal MHSA for one prefill chunk: queries are the chunk's
+    /// `x.rows` positions; keys/values are the `base` cached positions
+    /// plus the chunk's own projections (exported into `cache` at offset
+    /// `base` first). Same head-parallel GEMM formulation as
+    /// [`Model::attention`]; the causal boundary for chunk row `i` is the
+    /// absolute position `base + i`.
+    fn attention_chunk(
+        &self,
+        x: &Mat,
+        layer: &LayerWeights,
+        li: usize,
+        base: usize,
+        cache: &mut KvCache,
+    ) -> Mat {
+        let cfg = &self.weights.cfg;
+        let (rows, d) = (x.rows, cfg.d_model);
+        let total = base + rows;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let pool = &*self.pool;
+        let q = layer.wq.matmul_on(pool, x);
+        let k = layer.wk.matmul_on(pool, x);
+        let v = layer.wv.matmul_on(pool, x);
+        cache.export_layer(li, base, &k, &v);
+        debug_assert!(h * hd == d && q.cols == d, "n_heads * head_dim must equal d_model");
+        let scale = 1.0 / (hd as f32).sqrt();
+        // Prior K/V come back out of the cache verbatim (f32 rows, checked
+        // by the caller), so the assembled per-head kh/vh equal what a
+        // monolithic pass would have projected for those positions.
+        let cache: &KvCache = cache;
+        let mut head_ctx: Vec<Mat> = (0..h).map(|_| Mat::zeros(0, 0)).collect();
+        pool.scope(|s| {
+            for (head, slot) in head_ctx.iter_mut().enumerate() {
+                let (q, k, v) = (&q, &k, &v);
+                s.spawn(move || {
+                    let off = head * hd;
+                    let mut qh = Mat::zeros(rows, hd);
+                    let mut kh = Mat::zeros(total, hd);
+                    let mut vh = Mat::zeros(total, hd);
+                    if let KvLayerView::F32 { k: ck, v: cv } = cache.layer(li) {
+                        for r in 0..base {
+                            kh.row_mut(r).copy_from_slice(&ck.row(r)[off..off + hd]);
+                            vh.row_mut(r).copy_from_slice(&cv.row(r)[off..off + hd]);
+                        }
+                    }
+                    for r in 0..rows {
+                        qh.row_mut(r).copy_from_slice(&q.row(r)[off..off + hd]);
+                        kh.row_mut(base + r).copy_from_slice(&k.row(r)[off..off + hd]);
+                        vh.row_mut(base + r).copy_from_slice(&v.row(r)[off..off + hd]);
+                    }
+                    // S = Q Kᵀ (scaled), causal mask at the absolute
+                    // position, row softmax over j <= base + i. Masked
+                    // entries are exactly 0.0, so the P V accumulate sums
+                    // the same nonzero term set in the same ascending-k
+                    // order as the monolithic pass: bit-identical rows.
+                    let mut scores = matmul_transb_on(pool, &qh, &kh);
+                    for i in 0..rows {
+                        let limit = base + i;
+                        let row = scores.row_mut(i);
+                        for s in row[..=limit].iter_mut() {
+                            *s *= scale;
+                        }
+                        softmax_inplace(&mut row[..=limit]);
+                        for s in row[limit + 1..].iter_mut() {
+                            *s = 0.0; // masked out: contributes nothing to P V
+                        }
+                    }
+                    *slot = matmul_on(pool, &scores, &vh);
+                });
+            }
+        });
+        let mut ctx = Mat::zeros(rows, d);
+        for (head, ctx_h) in head_ctx.into_iter().enumerate() {
+            let off = head * hd;
+            // The scope above barriers until every head task replaced its
+            // placeholder; a 0x0 entry here would be a scheduler bug.
+            debug_assert!(ctx_h.rows == rows && ctx_h.cols == hd, "head {head} output shape");
+            for r in 0..rows {
+                ctx.row_mut(r)[off..off + hd].copy_from_slice(ctx_h.row(r));
+            }
+        }
+        layer.wo.matmul_on(pool, &ctx)
+    }
+
     fn forward_full(&self, tokens: &[u32], hooks: &Hooks, mut cache: Option<&mut KvCache>) -> Mat {
         let cfg = &self.weights.cfg;
         assert!(tokens.len() <= cfg.max_seq, "sequence too long");
@@ -392,7 +538,7 @@ impl Model {
         let k = layer.wk.matmul_on(pool, x);
         let v = layer.wv.matmul_on(pool, x);
         if let Some(c) = kv_export {
-            c.export_layer(li, &k, &v);
+            c.export_layer(li, 0, &k, &v);
         }
         // Head strips `off..off + hd` stay inside the d_model projection
         // rows only under this contract; it also bounds the copies below.
@@ -1216,6 +1362,42 @@ mod tests {
         let a = m.decode_step(1, &mut exported, &Hooks::none());
         let b = m.decode_step(1, &mut replayed, &Hooks::none());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_bitwise() {
+        // Splitting a prompt at any chunk boundaries must reproduce the
+        // monolithic prefill exactly: same per-position logits, same
+        // cache rows, same subsequent decode. Chunk size is scheduling,
+        // not math.
+        let m = tiny_model();
+        let tokens = [4u32, 9, 14, 19, 23, 2, 7, 30, 12];
+        let mut mono = KvCache::new(m.cfg());
+        let mono_logits = m.prefill_into_cache(&tokens, &Hooks::none(), &mut mono);
+        for chunk_size in [1usize, 2, 3, 4, tokens.len()] {
+            let mut cache = KvCache::new(m.cfg());
+            let mut logits_rows: Vec<Vec<f32>> = Vec::new();
+            for chunk in tokens.chunks(chunk_size) {
+                let l = m.prefill_chunk_into_cache(chunk, &Hooks::none(), &mut cache);
+                for r in 0..l.rows {
+                    logits_rows.push(l.row(r).to_vec());
+                }
+            }
+            assert_eq!(cache.len, tokens.len(), "chunk={chunk_size}");
+            for (t, row) in logits_rows.iter().enumerate() {
+                assert_eq!(&row[..], mono_logits.row(t), "chunk={chunk_size} logits row {t}");
+            }
+            for li in 0..m.cfg().n_layers {
+                for r in 0..tokens.len() {
+                    assert_eq!(cache.k_row(li, r), mono.k_row(li, r), "chunk={chunk_size} k {li}/{r}");
+                    assert_eq!(cache.v_row(li, r), mono.v_row(li, r), "chunk={chunk_size} v {li}/{r}");
+                }
+            }
+            let a = m.decode_step(1, &mut cache, &Hooks::none());
+            let mut mono2 = mono.clone();
+            let b = m.decode_step(1, &mut mono2, &Hooks::none());
+            assert_eq!(a, b, "chunk={chunk_size} decode after chunked prefill");
+        }
     }
 
     #[test]

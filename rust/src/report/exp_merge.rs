@@ -20,8 +20,42 @@ use crate::serve::{Engine, EngineConfig, Request};
 use crate::util::json::Json;
 use crate::Result;
 
-/// Merge thresholds swept, high to low (1.0 = merge nothing).
+/// Default merge thresholds swept, high to low (1.0 = merge nothing).
 pub const THRESHOLDS: [f32; 3] = [1.0, 0.9, 0.7];
+
+/// Derive a threshold sweep from an `analyze --expert-sim` result
+/// (`results/analyze_expert_sim.json`) instead of the fixed default:
+/// the sweep always anchors at 1.0 (the bit-identity row), then adds a
+/// tight threshold just under the largest measured off-diagonal
+/// similarity (merges only the most redundant pairs) and a mid threshold
+/// halfway to the mean similarity (merges the broader redundant mass).
+/// Values snap down to a 0.05 grid and clamp to [0.05, 0.95]; duplicates
+/// collapse, so near-orthogonal models yield a short sweep.
+pub fn thresholds_from_analysis(doc: &Json) -> Result<Vec<f32>> {
+    use anyhow::Context;
+    let layers = doc.req_arr("layers")?;
+    if layers.is_empty() {
+        anyhow::bail!("analysis document has an empty `layers` array");
+    }
+    let mut max_sim = 0f64;
+    let mut mean_sum = 0f64;
+    for (i, l) in layers.iter().enumerate() {
+        let mx = l.req_f64("max_offdiag_sim").with_context(|| format!("analysis layer #{i}"))?;
+        let mn =
+            l.req_f64("mean_offdiag_sim").with_context(|| format!("analysis layer #{i}"))?;
+        if !mx.is_finite() || !mn.is_finite() {
+            anyhow::bail!("analysis layer #{i}: non-finite similarity");
+        }
+        max_sim = max_sim.max(mx.clamp(0.0, 1.0));
+        mean_sum += mn.clamp(0.0, 1.0);
+    }
+    let mean_sim = mean_sum / layers.len() as f64;
+    let grid = |v: f64| (((v * 20.0).floor() / 20.0).clamp(0.05, 0.95)) as f32;
+    let mut out = vec![1.0f32, grid(max_sim), grid((max_sim + mean_sim) / 2.0)];
+    out.sort_by(|a, b| b.total_cmp(a));
+    out.dedup();
+    Ok(out)
+}
 
 /// Decode throughput of a model on a small decode-heavy workload
 /// (warmup + median-of-3, the Table-4 protocol).
@@ -42,8 +76,28 @@ fn decode_tps(model: Model, n_reqs: usize, len: usize) -> f64 {
     rates[rates.len() / 2]
 }
 
-/// The merge-threshold sweep (`eac-moe experiment merge`).
+/// The merge-threshold sweep (`eac-moe experiment merge`) at the fixed
+/// default thresholds.
 pub fn merge_table(scale: f64) -> Result<()> {
+    merge_table_with_thresholds(scale, &THRESHOLDS)
+}
+
+/// `eac-moe experiment merge --from-analysis <json>`: run the sweep at
+/// thresholds derived from a measured expert-similarity analysis.
+pub fn merge_table_from_analysis(scale: f64, path: &std::path::Path) -> Result<()> {
+    let doc = crate::util::json::load(path)?;
+    let thresholds = thresholds_from_analysis(&doc)?;
+    println!(
+        "[merge] thresholds derived from {}: {:?}",
+        path.display(),
+        thresholds
+    );
+    merge_table_with_thresholds(scale, &thresholds)
+}
+
+/// The merge-threshold sweep over an explicit threshold list (high to
+/// low; a 1.0 entry is pinned bit-identical to the unmerged model).
+pub fn merge_table_with_thresholds(scale: f64, thresholds: &[f32]) -> Result<()> {
     let ctx = ExperimentContext::new(59, scale);
     let (n_reqs, len) = serve_workload(scale);
     let mut table = Table::new(
@@ -62,7 +116,7 @@ pub fn merge_table(scale: f64) -> Result<()> {
         let ppl_base = crate::eval::perplexity(&base, &ctx.ppl_eval);
         let experts_base: usize = base_w.layers.iter().map(|l| l.n_routed()).sum();
         let mut o = Json::obj();
-        for (row, &t) in THRESHOLDS.iter().enumerate() {
+        for (row, &t) in thresholds.iter().enumerate() {
             let mut w = base_w.clone();
             let cfg = w.cfg.clone();
             let rep = merge_experts(
@@ -97,7 +151,7 @@ pub fn merge_table(scale: f64) -> Result<()> {
                 .set("ppl", Json::Num(ppl))
                 .set("ppl_delta", Json::Num(ppl - ppl_base))
                 .set("decode_tps", Json::Num(tps));
-            o.set(&format!("threshold_{t:.1}"), tj);
+            o.set(&format!("threshold_{t:.2}"), tj);
         }
         json.set(zoo.key(), o);
     }
@@ -110,4 +164,71 @@ pub fn merge_table(scale: f64) -> Result<()> {
     );
     super::save_result("merge", &json)?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shape of `analyze --expert-sim` output
+    /// ([`crate::eval::expert_sim::ExpertSimReport::to_json`]), trimmed
+    /// to the fields the derivation reads.
+    fn fixture(layer_sims: &[(f64, f64)]) -> Json {
+        let layers: Vec<String> = layer_sims
+            .iter()
+            .enumerate()
+            .map(|(i, (mean, max))| {
+                format!(
+                    r#"{{"layer": {i}, "n_experts": 8, "mean_offdiag_sim": {mean},
+                        "max_offdiag_sim": {max}, "mergeable_pairs_at_0.9": 0,
+                        "mergeable_pairs_at_0.7": 0, "router_rank": 8,
+                        "pseudo_moe": false}}"#
+                )
+            })
+            .collect();
+        let doc = format!(
+            r#"{{"model": "tiny", "dataset": "wiki", "pseudo_moe": false,
+                "layers": [{}]}}"#,
+            layers.join(",")
+        );
+        Json::parse(&doc).unwrap()
+    }
+
+    #[test]
+    fn redundant_analysis_yields_tight_and_mid_thresholds() {
+        // Max similarity 0.99, mean 0.10 (the synthesized-pairs regime):
+        // tight = floor(0.99 * 20)/20 = 0.95, mid = floor(0.545 * 20)/20
+        // = 0.50, anchored at 1.0.
+        let doc = fixture(&[(0.10, 0.99), (0.10, 0.98)]);
+        assert_eq!(thresholds_from_analysis(&doc).unwrap(), vec![1.0, 0.95, 0.50]);
+    }
+
+    #[test]
+    fn orthogonal_analysis_collapses_to_short_sweep() {
+        // Near-orthogonal experts: both derived values clamp to the 0.05
+        // floor and dedupe — the sweep is just the anchor + one row that
+        // (correctly) still merges nothing on such a model.
+        let doc = fixture(&[(0.0, 0.02), (0.01, 0.03)]);
+        assert_eq!(thresholds_from_analysis(&doc).unwrap(), vec![1.0, 0.05]);
+    }
+
+    #[test]
+    fn thresholds_are_sorted_desc_with_leading_anchor() {
+        let doc = fixture(&[(0.4, 0.8)]);
+        let ts = thresholds_from_analysis(&doc).unwrap();
+        assert_eq!(ts.first().copied(), Some(1.0), "1.0 anchor always leads");
+        assert!(ts.windows(2).all(|w| w[0] > w[1]), "strictly descending: {ts:?}");
+        assert!(ts.iter().all(|&t| (0.05..=1.0).contains(&t)));
+    }
+
+    #[test]
+    fn malformed_analysis_is_an_error_not_a_panic() {
+        assert!(thresholds_from_analysis(&Json::obj()).is_err(), "missing layers");
+        let empty = Json::parse(r#"{"layers": []}"#).unwrap();
+        assert!(thresholds_from_analysis(&empty).is_err(), "empty layers");
+        let missing_key =
+            Json::parse(r#"{"layers": [{"mean_offdiag_sim": 0.1}]}"#).unwrap();
+        let err = format!("{:#}", thresholds_from_analysis(&missing_key).unwrap_err());
+        assert!(err.contains("layer #0"), "error names the layer: {err}");
+    }
 }

@@ -5,9 +5,23 @@
 
 use crate::Result;
 
+/// Optional per-experiment inputs threaded from the CLI.
+#[derive(Clone, Debug, Default)]
+pub struct RunOpts {
+    /// `experiment merge --from-analysis <json>`: derive the merge
+    /// threshold sweep from a measured `analyze --expert-sim` result
+    /// instead of the fixed default list.
+    pub from_analysis: Option<std::path::PathBuf>,
+}
+
 /// Run one experiment id (or "all"). `scale` shrinks data volume (items,
 /// sequences, request counts) for quick runs.
 pub fn run(id: &str, scale: f64) -> Result<()> {
+    run_opts(id, scale, &RunOpts::default())
+}
+
+/// [`run`] with explicit [`RunOpts`].
+pub fn run_opts(id: &str, scale: f64, opts: &RunOpts) -> Result<()> {
     let t0 = std::time::Instant::now();
     match id {
         "fig2" => super::exp_es::fig2(scale)?,
@@ -26,7 +40,10 @@ pub fn run(id: &str, scale: f64) -> Result<()> {
         "table7" => super::exp_e2e::table7(scale)?,
         "table8" | "challenging" => super::exp_table9::challenging(scale)?,
         "table9" => super::exp_table9::table9(scale)?,
-        "merge" => super::exp_merge::merge_table(scale)?,
+        "merge" => match &opts.from_analysis {
+            Some(path) => super::exp_merge::merge_table_from_analysis(scale, path)?,
+            None => super::exp_merge::merge_table(scale)?,
+        },
         "all" => {
             for id in [
                 "fig2", "fig10", "table1", "fig4", "fig6", "table2", "fig7", "table3",
@@ -34,7 +51,7 @@ pub fn run(id: &str, scale: f64) -> Result<()> {
                 "merge",
             ] {
                 println!("\n################ experiment {id} ################");
-                run(id, scale)?;
+                run_opts(id, scale, opts)?;
             }
         }
         other => anyhow::bail!(

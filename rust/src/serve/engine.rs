@@ -25,16 +25,46 @@
 //! sequences retire as they finish and queued requests are admitted into
 //! the freed slots (continuous batching).
 //!
+//! **Chunked prefill** ([`EngineConfig::prefill_chunk`] > 0): instead of
+//! forwarding a whole prompt in one monolithic pass, prompts advance in
+//! fixed token-budget chunks via [`Model::prefill_chunk_into_cache`],
+//! interleaved round-robin with decode steps — admitting a long prompt no
+//! longer freezes every active sequence for its full prefill. Chunking
+//! changes *scheduling only*: the per-chunk attention reuses the same
+//! GEMM partial-sum chains as the monolithic pass, so logits, KV rows,
+//! `mean_logprob` and every generated token are bit-identical at any
+//! chunk size (pinned by tests). Chunking engages only where that pin can
+//! hold: `PrunePolicy::None` (PESF's Eq. 6 threshold depends on the
+//! per-call sequence length) and f32 KV (int8 rows are requantized per
+//! export). Other configurations fall back to monolithic prefill.
+//!
+//! **Streaming** ([`Request::stream`]): each sequence emits
+//! [`StreamEvent::Started`] when its first token commits (TTFT),
+//! [`StreamEvent::Token`] per decoded token, and [`StreamEvent::Finished`]
+//! with the full [`Response`]. The blocking [`Engine::serve`] collects
+//! whole responses exactly as before — streaming is an additive surface.
+//! Per-request TTFT and inter-token gaps derive from one shared `Instant`
+//! per decode step (not per-row clock reads) and aggregate into
+//! [`ServeMetrics::ttft`] / [`ServeMetrics::itl`] percentiles.
+//!
+//! **SLO admission**: the batcher drains by priority / deadline / tenant
+//! round-robin (see `serve::batcher`), and workers shed requests whose
+//! deadline already passed at admission ([`FinishReason::DeadlineExceeded`])
+//! without running prefill. [`Engine::serve_timed`] replays an open-loop
+//! arrival schedule (see `serve::workload`) against the running engine.
+//!
 //! Requests the model cannot forward (over-long prompts, empty prompts,
 //! out-of-vocabulary token ids) are rejected at admission with a
 //! [`FinishReason`] instead of panicking a worker — one malformed request
-//! can no longer abort the engine and lose every in-flight response. Compute parallelism (GEMM rows, experts,
-//! attention heads) comes from the model's persistent
-//! [`crate::tensor::ThreadPool`], sized via [`EngineConfig::threads`].
+//! can no longer abort the engine and lose every in-flight response.
+//! Compute parallelism (GEMM rows, experts, attention heads) comes from
+//! the model's persistent [`crate::tensor::ThreadPool`], sized via
+//! [`EngineConfig::threads`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServeMetrics;
-use super::request::{FinishReason, Request, Response};
+use super::request::{FinishReason, Request, Response, StreamEvent, StreamSink};
+use super::workload::TimedRequest;
 use crate::model::hooks::{FilterDropStats, Hooks, SelectionFilter, SelectionRecord};
 use crate::model::{KvCache, KvPrecision, Model};
 use crate::prune::ees::EesPruner;
@@ -44,7 +74,7 @@ use crate::tensor::ops::log_softmax_into;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which dynamic pruning to apply. PESF prunes prefill *and* decode (the
 /// mask follows each sequence through the batched decode loop, refreshed
@@ -75,6 +105,13 @@ pub struct EngineConfig {
     /// serving) or 8 (symmetric int8 per head per position, ~4x smaller
     /// resident decode caches; CLI `serve --kv-bits 8`).
     pub kv_bits: u8,
+    /// Prefill chunk size in tokens: 0 (default) runs each prompt as one
+    /// monolithic pass; N > 0 advances prompts N tokens at a time,
+    /// interleaved with decode steps, so a long prompt cannot stall
+    /// running sequences for its whole prefill. Scheduling-only — outputs
+    /// are bit-identical at any chunk size. Requires `PrunePolicy::None`
+    /// and f32 KV; other configurations silently stay monolithic.
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -85,6 +122,7 @@ impl Default for EngineConfig {
             prune: PrunePolicy::None,
             threads: None,
             kv_bits: 32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -105,10 +143,65 @@ impl Engine {
 
     /// Serve a closed set of requests to completion; returns responses
     /// (unordered) and aggregated metrics. This is the offline-benchmark
-    /// entry point.
+    /// entry point: every request is pushed as fast as the queue bound
+    /// allows (blocking on backpressure rather than shedding).
     pub fn serve(&self, requests: Vec<Request>) -> (Vec<Response>, ServeMetrics) {
+        let cap = requests.len();
+        self.serve_inner(cap, move |batcher| {
+            for mut req in requests {
+                // Offline entry point, closed request set: honor the queue
+                // bound by waiting for the workers to drain a slot rather
+                // than shedding (an online producer would retry or shed
+                // itself). The batcher is only closed after the producer
+                // returns, so rejection here always means "queue full".
+                while let Err(r) = batcher.push(req) {
+                    req = r;
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+        })
+    }
+
+    /// Serve an open-loop timed arrival schedule (e.g. from
+    /// `serve::workload`): each request is pushed at its `at_secs` offset
+    /// from the call start, with `arrival` re-stamped at the actual push
+    /// so queue/TTFT measure true in-system time, and any deadline budget
+    /// applied relative to that arrival. Backpressure briefly blocks the
+    /// producer; requests whose deadline lapses while queued are shed by
+    /// the workers at admission ([`FinishReason::DeadlineExceeded`]).
+    pub fn serve_timed(&self, arrivals: Vec<TimedRequest>) -> (Vec<Response>, ServeMetrics) {
+        let cap = arrivals.len();
+        self.serve_inner(cap, move |batcher| {
+            let t0 = Instant::now();
+            for tr in arrivals {
+                let offset = Duration::from_secs_f64(tr.at_secs.max(0.0));
+                let elapsed = t0.elapsed();
+                if offset > elapsed {
+                    std::thread::sleep(offset - elapsed);
+                }
+                let mut req = tr.req;
+                let now = Instant::now();
+                req.arrival = now;
+                if let Some(budget) = tr.deadline_budget {
+                    req.deadline = Some(now + budget);
+                }
+                while let Err(r) = batcher.push(req) {
+                    req = r;
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+            }
+        })
+    }
+
+    /// Shared serve loop: spawn workers, run `producer` to feed the
+    /// batcher, close it, join, and assemble metrics.
+    fn serve_inner(
+        &self,
+        cap: usize,
+        producer: impl FnOnce(&Batcher),
+    ) -> (Vec<Response>, ServeMetrics) {
         let batcher = Arc::new(Batcher::new(self.cfg.batch));
-        let responses = Arc::new(Mutex::new(Vec::with_capacity(requests.len())));
+        let responses = Arc::new(Mutex::new(Vec::with_capacity(cap)));
         let prompt_tokens = Arc::new(AtomicUsize::new(0));
         let generated_tokens = Arc::new(AtomicUsize::new(0));
         // Expert-store traffic counters are cumulative on the store;
@@ -133,29 +226,27 @@ impl Engine {
                 let model = self.model.clone();
                 let prune = self.cfg.prune;
                 let max_batch = self.cfg.batch.max_batch;
+                let chunk = self.cfg.prefill_chunk;
                 let prompt = prompt_tokens.clone();
                 let generated = generated_tokens.clone();
                 let peak = peak_kv.clone();
                 workers.push(s.spawn(move || {
+                    let ctx = WorkerCtx {
+                        model: &model,
+                        prune,
+                        kv,
+                        chunk,
+                        max_batch,
+                        prompt_tokens: &prompt,
+                        generated_tokens: &generated,
+                        peak_kv: &peak,
+                    };
                     while let Some(batch) = b.next_batch() {
-                        process_batch(
-                            &model, prune, batch, &b, max_batch, &out, &prompt, &generated,
-                            kv, &peak,
-                        );
+                        process_batch(&ctx, batch, &b, &out);
                     }
                 }));
             }
-            for mut req in requests {
-                // Offline entry point, closed request set: honor the queue
-                // bound by waiting for the workers to drain a slot rather
-                // than shedding (an online producer would retry or shed
-                // itself). The batcher is only closed below, after this
-                // loop, so rejection here always means "queue full".
-                while let Err(r) = batcher.push(req) {
-                    req = r;
-                    std::thread::sleep(std::time::Duration::from_micros(50));
-                }
-            }
+            producer(&batcher);
             batcher.close();
             for w in workers {
                 // A worker that panicked poisons nothing the results need;
@@ -221,6 +312,7 @@ impl Engine {
             // prune rate, so they are excluded from that mean too.
             if !r.finish_reason.is_rejection() {
                 metrics.prefill.record(r.prefill_secs);
+                metrics.ttft.record(r.ttft_secs);
                 prune_sum += r.prune_rate;
                 prefilled += 1;
             }
@@ -232,6 +324,12 @@ impl Engine {
             // requests have empty `generated` and stay out.
             if !r.generated.is_empty() {
                 metrics.decode.record(r.decode_secs);
+            }
+            for &gap in &r.itl_secs {
+                metrics.itl.record(gap);
+            }
+            if r.finish_reason == FinishReason::DeadlineExceeded {
+                metrics.deadline_shed += 1;
             }
             // Decode-phase prune rate averages over requests that took at
             // least one batched decode step (the first generated token is
@@ -249,6 +347,20 @@ impl Engine {
     }
 }
 
+/// Per-worker shared context for [`process_batch`] (read-only model plus
+/// the engine-wide counters every batch contributes to).
+struct WorkerCtx<'a> {
+    model: &'a Model,
+    prune: PrunePolicy,
+    kv: KvPrecision,
+    /// Prefill chunk size (0 = monolithic).
+    chunk: usize,
+    max_batch: usize,
+    prompt_tokens: &'a AtomicUsize,
+    generated_tokens: &'a AtomicUsize,
+    peak_kv: &'a AtomicUsize,
+}
+
 /// A sequence that survived prefill and still has decode budget.
 struct DecodeSeq {
     resp: Response,
@@ -261,6 +373,13 @@ struct DecodeSeq {
     decode_secs: f64,
     /// Request arrival, for true arrival-to-completion e2e.
     arrival: Instant,
+    /// Timestamp of this sequence's last committed token: the shared
+    /// step `Instant` (or prefill completion for the first token).
+    /// Inter-token gaps derive from these shared stamps, so equal-length
+    /// batch-mates report identical gaps.
+    last_token_at: Instant,
+    /// Per-token event sink (None = blocking-collect only).
+    stream: Option<StreamSink>,
     /// Decode-time PESF: this sequence's mask + rolling-window state
     /// (None for unpruned policies).
     pesf: Option<PesfDecodeState>,
@@ -270,11 +389,19 @@ struct DecodeSeq {
 }
 
 impl DecodeSeq {
-    /// Commit `cur` to the output, then decide whether the sequence is done:
-    /// budget reached → `Length`; KV cache at capacity with budget left →
-    /// `CacheFull` (truncation, now observable instead of silent).
+    /// Commit `cur` to the output (emitting a [`StreamEvent::Token`]),
+    /// then decide whether the sequence is done: budget reached →
+    /// `Length`; KV cache at capacity with budget left → `CacheFull`
+    /// (truncation, now observable instead of silent).
     fn commit_and_check(&mut self, cache_len: usize, max_seq: usize) -> Option<FinishReason> {
         self.resp.generated.push(self.cur);
+        if let Some(s) = &self.stream {
+            s.send(StreamEvent::Token {
+                id: self.resp.id,
+                token: self.cur,
+                index: self.resp.generated.len() - 1,
+            });
+        }
         if self.resp.generated.len() >= self.decode_tokens {
             Some(FinishReason::Length)
         } else if cache_len >= max_seq {
@@ -292,171 +419,374 @@ impl DecodeSeq {
                 (self.decode_prune_sum / self.decode_steps as f64) as f32;
         }
         self.resp.e2e_secs = self.arrival.elapsed().as_secs_f64();
+        if let Some(s) = &self.stream {
+            s.send(StreamEvent::Finished(Box::new(self.resp.clone())));
+        }
         self.resp
     }
 }
 
-/// Process one drained batch as a unit: prefill each request once
-/// (exporting KV when it will decode), then run the continuous batched
-/// decode loop, admitting queued requests into freed slots.
-#[allow(clippy::too_many_arguments)]
-fn process_batch(
-    model: &Model,
-    prune: PrunePolicy,
-    batch: Vec<Request>,
-    batcher: &Batcher,
-    max_batch: usize,
-    out: &Mutex<Vec<Response>>,
-    prompt_tokens: &AtomicUsize,
-    generated_tokens: &AtomicUsize,
-    kv: KvPrecision,
-    peak_kv: &AtomicUsize,
-) {
-    let max_seq = model.cfg().max_seq;
-    let vocab = model.cfg().vocab;
-    let mut active: Vec<DecodeSeq> = Vec::new();
-    let mut caches: Vec<KvCache> = Vec::new();
-    let mut finished: Vec<Response> = Vec::new();
-    let note_kv = |caches: &[KvCache]| {
-        peak_kv.fetch_max(caches.iter().map(|c| c.bytes()).sum(), Ordering::Relaxed);
-    };
+/// A prompt mid-chunked-prefill: its cache holds `consumed` of
+/// `req.tokens.len()` positions; `mean_lp_sum` accumulates next-token
+/// log-probs in ascending position order (the same f32 addition sequence
+/// as the monolithic pass, so the final mean is bitwise identical).
+struct PrefillingSeq {
+    req: Request,
+    cache: KvCache,
+    consumed: usize,
+    mean_lp_sum: f32,
+    prefill_secs: f64,
+    /// Queue wait measured when the request was admitted (entered the
+    /// worker), matching the monolithic path's measurement point.
+    queue_secs: f64,
+}
 
-    let admit = |req: Request,
-                     active: &mut Vec<DecodeSeq>,
-                     caches: &mut Vec<KvCache>,
-                     finished: &mut Vec<Response>| {
-        // Admission validation: a prompt the model cannot forward finishes
-        // here with a rejection reason instead of tripping the forward
-        // pass's asserts inside a worker — which would abort the engine
-        // and lose every in-flight request.
-        let reject = if req.tokens.len() > max_seq {
-            Some(FinishReason::PromptTooLong)
-        } else if req.tokens.is_empty() {
-            Some(FinishReason::EmptyPrompt)
-        } else if req.tokens.iter().any(|&t| t as usize >= vocab) {
-            Some(FinishReason::InvalidToken)
-        } else {
-            None
-        };
-        if let Some(reason) = reject {
-            finished.push(Response {
-                id: req.id,
-                next_token: 0,
-                generated: Vec::new(),
-                finish_reason: reason,
-                mean_logprob: 0.0,
-                queue_secs: req.arrival.elapsed().as_secs_f64(),
-                prefill_secs: 0.0,
-                decode_secs: 0.0,
-                e2e_secs: req.arrival.elapsed().as_secs_f64(),
-                prune_rate: 0.0,
-                decode_prune_rate: 0.0,
-            });
-            return;
-        }
-        prompt_tokens.fetch_add(req.tokens.len(), Ordering::Relaxed);
-        match prefill_request(model, prune, kv, &req) {
-            (mut resp, None) => {
-                resp.e2e_secs = req.arrival.elapsed().as_secs_f64();
-                finished.push(resp);
+/// One worker batch's mutable state: live decode rows (`caches` stays
+/// index-aligned with `active`), prompts mid-chunked-prefill, and
+/// completed responses.
+struct BatchState {
+    active: Vec<DecodeSeq>,
+    caches: Vec<KvCache>,
+    prefilling: Vec<PrefillingSeq>,
+    finished: Vec<Response>,
+    /// Round-robin cursor over `prefilling` so concurrent long prompts
+    /// share the interleaved chunk slots fairly.
+    pf_cursor: usize,
+}
+
+/// Emit the terminal stream event (if any) and record the response.
+fn finish_response(resp: Response, stream: Option<&StreamSink>, finished: &mut Vec<Response>) {
+    if let Some(s) = stream {
+        s.send(StreamEvent::Finished(Box::new(resp.clone())));
+    }
+    finished.push(resp);
+}
+
+/// A response for a request that never reached the model (admission
+/// rejection or deadline shed): empty output, zero compute timings.
+fn rejection_response(req: &Request, reason: FinishReason) -> Response {
+    Response {
+        id: req.id,
+        next_token: 0,
+        generated: Vec::new(),
+        finish_reason: reason,
+        mean_logprob: 0.0,
+        queue_secs: req.arrival.elapsed().as_secs_f64(),
+        prefill_secs: 0.0,
+        decode_secs: 0.0,
+        e2e_secs: req.arrival.elapsed().as_secs_f64(),
+        ttft_secs: 0.0,
+        itl_secs: Vec::new(),
+        prune_rate: 0.0,
+        decode_prune_rate: 0.0,
+    }
+}
+
+/// Admit one drained request into the batch: shed if its deadline already
+/// passed, reject if the model cannot forward it, otherwise start its
+/// prefill — chunked (queued into `st.prefilling`) when the engine is
+/// configured for it, else the monolithic single pass.
+fn admit(ctx: &WorkerCtx<'_>, req: Request, st: &mut BatchState) {
+    let max_seq = ctx.model.cfg().max_seq;
+    let vocab = ctx.model.cfg().vocab;
+    // Load shedding: a request whose SLO deadline lapsed while queued
+    // gets no prefill — its caller has already timed out, so the compute
+    // goes to requests that can still meet their deadline.
+    if req.expired(Instant::now()) {
+        let resp = rejection_response(&req, FinishReason::DeadlineExceeded);
+        finish_response(resp, req.stream.as_ref(), &mut st.finished);
+        return;
+    }
+    // Admission validation: a prompt the model cannot forward finishes
+    // here with a rejection reason instead of tripping the forward
+    // pass's asserts inside a worker — which would abort the engine
+    // and lose every in-flight request.
+    let reject = if req.tokens.len() > max_seq {
+        Some(FinishReason::PromptTooLong)
+    } else if req.tokens.is_empty() {
+        Some(FinishReason::EmptyPrompt)
+    } else if req.tokens.iter().any(|&t| t as usize >= vocab) {
+        Some(FinishReason::InvalidToken)
+    } else {
+        None
+    };
+    if let Some(reason) = reject {
+        let resp = rejection_response(&req, reason);
+        finish_response(resp, req.stream.as_ref(), &mut st.finished);
+        return;
+    }
+    ctx.prompt_tokens.fetch_add(req.tokens.len(), Ordering::Relaxed);
+    // Chunked prefill engages only where bit-identity to the monolithic
+    // pass holds (see module docs): no dynamic pruning (PESF's threshold
+    // is per-call sequence-length dependent) and f32 KV.
+    let chunkable = ctx.chunk > 0
+        && matches!(ctx.prune, PrunePolicy::None)
+        && ctx.kv == KvPrecision::F32;
+    if chunkable {
+        let queue_secs = req.arrival.elapsed().as_secs_f64();
+        let cache = KvCache::with_precision(ctx.model.cfg(), ctx.kv);
+        st.prefilling.push(PrefillingSeq {
+            req,
+            cache,
+            consumed: 0,
+            mean_lp_sum: 0.0,
+            prefill_secs: 0.0,
+            queue_secs,
+        });
+        return;
+    }
+    match prefill_request(ctx.model, ctx.prune, ctx.kv, &req) {
+        (mut resp, None) => {
+            let t_first = Instant::now();
+            resp.ttft_secs = (t_first - req.arrival).as_secs_f64();
+            if let Some(s) = &req.stream {
+                s.send(StreamEvent::Started {
+                    id: resp.id,
+                    next_token: resp.next_token,
+                    ttft_secs: resp.ttft_secs,
+                });
             }
-            (resp, Some(handoff)) => {
-                let mut seq = DecodeSeq {
-                    resp,
-                    decode_tokens: req.decode_tokens,
-                    cur: handoff.next,
-                    decode_secs: 0.0,
-                    arrival: req.arrival,
-                    pesf: handoff.pesf,
-                    decode_prune_sum: 0.0,
-                    decode_steps: 0,
-                };
-                // The first generated token (the prefill's greedy next) may
-                // already exhaust the budget or the cache.
-                match seq.commit_and_check(handoff.cache.len, max_seq) {
-                    Some(reason) => finished.push(seq.finish(reason)),
-                    None => {
-                        active.push(seq);
-                        caches.push(handoff.cache);
-                    }
+            resp.e2e_secs = req.arrival.elapsed().as_secs_f64();
+            finish_response(resp, req.stream.as_ref(), &mut st.finished);
+        }
+        (mut resp, Some(handoff)) => {
+            let t_first = Instant::now();
+            resp.ttft_secs = (t_first - req.arrival).as_secs_f64();
+            if let Some(s) = &req.stream {
+                s.send(StreamEvent::Started {
+                    id: resp.id,
+                    next_token: resp.next_token,
+                    ttft_secs: resp.ttft_secs,
+                });
+            }
+            let mut seq = DecodeSeq {
+                resp,
+                decode_tokens: req.decode_tokens,
+                cur: handoff.next,
+                decode_secs: 0.0,
+                arrival: req.arrival,
+                last_token_at: t_first,
+                stream: req.stream.clone(),
+                pesf: handoff.pesf,
+                decode_prune_sum: 0.0,
+                decode_steps: 0,
+            };
+            // The first generated token (the prefill's greedy next) may
+            // already exhaust the budget or the cache.
+            match seq.commit_and_check(handoff.cache.len, max_seq) {
+                Some(reason) => st.finished.push(seq.finish(reason)),
+                None => {
+                    st.active.push(seq);
+                    st.caches.push(handoff.cache);
                 }
             }
         }
+    }
+}
+
+/// Advance one chunked prefill by up to `ctx.chunk` tokens. Accumulates
+/// the next-token log-prob sum over the chunk's rows in ascending
+/// position order; returns the greedy next token once the final prompt
+/// position has been forwarded (prefill complete).
+fn advance_chunk(ctx: &WorkerCtx<'_>, ps: &mut PrefillingSeq) -> Option<u32> {
+    let tokens = &ps.req.tokens;
+    let len = tokens.len();
+    let start = ps.consumed;
+    let end = (start + ctx.chunk).min(len);
+    let t0 = Instant::now();
+    let logits =
+        ctx.model.prefill_chunk_into_cache(&tokens[start..end], &Hooks::none(), &mut ps.cache);
+    ps.prefill_secs += t0.elapsed().as_secs_f64();
+    let vocab = ctx.model.cfg().vocab;
+    let mut scratch = vec![0f32; vocab];
+    let mut next = None;
+    for (r, p) in (start..end).enumerate() {
+        if p + 1 < len {
+            // Same position order and f32 addition sequence as the
+            // monolithic diagnostic loop → bitwise-identical mean.
+            log_softmax_into(logits.row(r), &mut scratch);
+            ps.mean_lp_sum += scratch[tokens[p + 1] as usize];
+        } else {
+            next = Some(crate::tensor::ops::topk_indices(logits.row(r), 1)[0] as u32);
+        }
+    }
+    ps.consumed = end;
+    next
+}
+
+/// A chunked prefill just produced its final-position logits: assemble
+/// the response scaffold (TTFT stamps here — the first token commits
+/// now) and either finish (prefill-only) or enter the decode batch.
+fn finish_prefill(ctx: &WorkerCtx<'_>, ps: PrefillingSeq, next: u32, st: &mut BatchState) {
+    let max_seq = ctx.model.cfg().max_seq;
+    let len = ps.req.tokens.len();
+    let t_first = Instant::now();
+    let mean_lp = if len > 1 { ps.mean_lp_sum / (len - 1) as f32 } else { 0.0 };
+    let mut resp = Response {
+        id: ps.req.id,
+        next_token: next,
+        generated: Vec::with_capacity(ps.req.decode_tokens),
+        finish_reason: FinishReason::Length,
+        mean_logprob: mean_lp,
+        queue_secs: ps.queue_secs,
+        prefill_secs: ps.prefill_secs,
+        decode_secs: 0.0,
+        e2e_secs: 0.0, // stamped at completion
+        ttft_secs: (t_first - ps.req.arrival).as_secs_f64(),
+        itl_secs: Vec::new(),
+        prune_rate: 0.0,
+        decode_prune_rate: 0.0,
+    };
+    if let Some(s) = &ps.req.stream {
+        s.send(StreamEvent::Started {
+            id: resp.id,
+            next_token: next,
+            ttft_secs: resp.ttft_secs,
+        });
+    }
+    if ps.req.decode_tokens == 0 {
+        resp.e2e_secs = ps.req.arrival.elapsed().as_secs_f64();
+        finish_response(resp, ps.req.stream.as_ref(), &mut st.finished);
+        return;
+    }
+    let mut seq = DecodeSeq {
+        resp,
+        decode_tokens: ps.req.decode_tokens,
+        cur: next,
+        decode_secs: 0.0,
+        arrival: ps.req.arrival,
+        last_token_at: t_first,
+        stream: ps.req.stream.clone(),
+        pesf: None,
+        decode_prune_sum: 0.0,
+        decode_steps: 0,
+    };
+    match seq.commit_and_check(ps.cache.len, max_seq) {
+        Some(reason) => st.finished.push(seq.finish(reason)),
+        None => {
+            st.active.push(seq);
+            st.caches.push(ps.cache);
+        }
+    }
+}
+
+/// Process one drained batch as a unit: admit each request (starting its
+/// prefill — monolithic, or chunked and interleaved), then run the
+/// continuous batched decode loop, admitting queued requests into freed
+/// slots. With chunking, each loop iteration runs one decode step for
+/// every live sequence and one chunk for one prefilling prompt, so long
+/// prompts make progress without stalling token generation.
+fn process_batch(ctx: &WorkerCtx<'_>, batch: Vec<Request>, batcher: &Batcher, out: &Mutex<Vec<Response>>) {
+    let max_seq = ctx.model.cfg().max_seq;
+    let mut st = BatchState {
+        active: Vec::new(),
+        caches: Vec::new(),
+        prefilling: Vec::new(),
+        finished: Vec::new(),
+        pf_cursor: 0,
+    };
+    let note_kv = |st: &BatchState| {
+        let live: usize = st.caches.iter().map(|c| c.bytes()).sum::<usize>()
+            + st.prefilling.iter().map(|p| p.cache.bytes()).sum::<usize>();
+        ctx.peak_kv.fetch_max(live, Ordering::Relaxed);
     };
 
     for req in batch {
-        admit(req, &mut active, &mut caches, &mut finished);
+        admit(ctx, req, &mut st);
     }
-    note_kv(&caches);
+    note_kv(&st);
 
     // Continuous batched greedy decode: one token for every live sequence
     // per iteration, all through a single decode_step_batch call. Under
     // PESF each row carries its own sequence's expert mask, and the step's
     // routing record feeds every sequence's rolling frequency window.
-    let pesf_decode = matches!(prune, PrunePolicy::Pesf(_));
+    let pesf_decode = matches!(ctx.prune, PrunePolicy::Pesf(_));
     // Frozen-mask mode (refresh_every == 0) never reads the rolling
     // window, so skip the per-step routing record entirely — recording
     // (and the observe() it would feed) is pure hot-loop overhead there.
-    let pesf_refresh = matches!(prune, PrunePolicy::Pesf(pc) if pc.refresh_every > 0);
-    let n_layers = model.cfg().n_layers;
-    while !active.is_empty() {
-        let toks: Vec<u32> = active.iter().map(|s| s.cur).collect();
-        let step_hooks = if pesf_decode {
-            Hooks {
-                seq_expert_masks: Some(
-                    active.iter().map(|s| s.pesf.as_ref().map(|p| p.mask())).collect(),
-                ),
-                record_selections: pesf_refresh
-                    .then(|| RefCell::new(SelectionRecord::with_layers(n_layers))),
-                ..Default::default()
+    let pesf_refresh = matches!(ctx.prune, PrunePolicy::Pesf(pc) if pc.refresh_every > 0);
+    let n_layers = ctx.model.cfg().n_layers;
+    while !st.active.is_empty() || !st.prefilling.is_empty() {
+        if !st.active.is_empty() {
+            let toks: Vec<u32> = st.active.iter().map(|s| s.cur).collect();
+            let step_hooks = if pesf_decode {
+                Hooks {
+                    seq_expert_masks: Some(
+                        st.active.iter().map(|s| s.pesf.as_ref().map(|p| p.mask())).collect(),
+                    ),
+                    record_selections: pesf_refresh
+                        .then(|| RefCell::new(SelectionRecord::with_layers(n_layers))),
+                    ..Default::default()
+                }
+            } else {
+                Hooks::none()
+            };
+            let t_step = Instant::now();
+            let logits = ctx.model.decode_step_batch(&toks, &mut st.caches, &step_hooks);
+            // One shared timestamp per step: every row's token committed
+            // "now", so per-row ITL gaps and summed decode_secs derive
+            // from the same clock reads (no per-row skew).
+            let t_done = Instant::now();
+            let step_secs = (t_done - t_step).as_secs_f64();
+            let step_record = step_hooks.take_selections();
+            for (b, seq) in st.active.iter_mut().enumerate() {
+                seq.decode_secs += step_secs;
+                seq.resp.itl_secs.push((t_done - seq.last_token_at).as_secs_f64());
+                seq.last_token_at = t_done;
+                seq.cur = crate::tensor::ops::topk_indices(logits.row(b), 1)[0] as u32;
+                if let Some(p) = seq.pesf.as_mut() {
+                    // Account the mask that was in effect for this step,
+                    // then feed the step's routing into the window
+                    // (possibly refreshing the mask for the next step).
+                    seq.decode_prune_sum += p.prune_rate() as f64;
+                    seq.decode_steps += 1;
+                    if let Some(rec) = &step_record {
+                        p.observe(rec.token_experts(b));
+                    }
+                }
             }
-        } else {
-            Hooks::none()
-        };
-        let t_step = Instant::now();
-        let logits = model.decode_step_batch(&toks, &mut caches, &step_hooks);
-        let step_secs = t_step.elapsed().as_secs_f64();
-        note_kv(&caches);
-        let step_record = step_hooks.take_selections();
-        for (b, seq) in active.iter_mut().enumerate() {
-            seq.decode_secs += step_secs;
-            seq.cur = crate::tensor::ops::topk_indices(logits.row(b), 1)[0] as u32;
-            if let Some(p) = seq.pesf.as_mut() {
-                // Account the mask that was in effect for this step, then
-                // feed the step's routing into the window (possibly
-                // refreshing the mask for the next step).
-                seq.decode_prune_sum += p.prune_rate() as f64;
-                seq.decode_steps += 1;
-                if let Some(rec) = &step_record {
-                    p.observe(rec.token_experts(b));
+            // Commit and retire (swap_remove keeps `caches` aligned with
+            // `active`; per-row outputs are batch-order independent).
+            let mut b = 0;
+            while b < st.active.len() {
+                match st.active[b].commit_and_check(st.caches[b].len, max_seq) {
+                    Some(reason) => {
+                        let seq = st.active.swap_remove(b);
+                        st.caches.swap_remove(b);
+                        st.finished.push(seq.finish(reason));
+                    }
+                    None => b += 1,
                 }
             }
         }
-        // Commit and retire (swap_remove keeps `caches` aligned with
-        // `active`; per-row outputs are batch-order independent).
-        let mut b = 0;
-        while b < active.len() {
-            match active[b].commit_and_check(caches[b].len, max_seq) {
-                Some(reason) => {
-                    let seq = active.swap_remove(b);
-                    caches.swap_remove(b);
-                    finished.push(seq.finish(reason));
+        // Interleave one prefill chunk per loop iteration, round-robin
+        // across waiting prompts: a long prompt costs running decodes one
+        // chunk of latency per step, never its whole prefill.
+        if !st.prefilling.is_empty() {
+            let i = st.pf_cursor % st.prefilling.len();
+            match advance_chunk(ctx, &mut st.prefilling[i]) {
+                Some(next) => {
+                    let ps = st.prefilling.swap_remove(i);
+                    st.pf_cursor = i;
+                    finish_prefill(ctx, ps, next, &mut st);
                 }
-                None => b += 1,
+                None => st.pf_cursor = i + 1,
             }
         }
+        note_kv(&st);
         // Admit queued requests into freed slots so the decode batch stays
         // full (continuous batching) instead of draining to stragglers.
-        if active.len() < max_batch {
-            for req in batcher.try_take(max_batch - active.len()) {
-                admit(req, &mut active, &mut caches, &mut finished);
+        let live = st.active.len() + st.prefilling.len();
+        if live < ctx.max_batch {
+            for req in batcher.try_take(ctx.max_batch - live) {
+                admit(ctx, req, &mut st);
             }
         }
     }
 
-    let gen: usize = finished.iter().map(|r| r.generated.len()).sum();
-    generated_tokens.fetch_add(gen, Ordering::Relaxed);
-    out.lock().unwrap().extend(finished);
+    let gen: usize = st.finished.iter().map(|r| r.generated.len()).sum();
+    ctx.generated_tokens.fetch_add(gen, Ordering::Relaxed);
+    out.lock().unwrap().extend(st.finished);
 }
 
 /// What a decode-bound request carries out of its prefill: the KV cache
@@ -470,7 +800,8 @@ struct PrefillHandoff {
 
 /// Prefill one request (single forward pass — PESF/EES/ODP hooks applied
 /// per policy). Returns the response scaffold and, when the request wants
-/// decode, the [`PrefillHandoff`] produced by that same pass.
+/// decode, the [`PrefillHandoff`] produced by that same pass. TTFT is
+/// stamped by the caller (the token "commits" at admission, not here).
 fn prefill_request(
     model: &Model,
     prune: PrunePolicy,
@@ -554,6 +885,8 @@ fn prefill_request(
         prefill_secs,
         decode_secs: 0.0,
         e2e_secs: 0.0, // stamped at completion (finish / prefill-only admit)
+        ttft_secs: 0.0, // stamped by the caller when the first token commits
+        itl_secs: Vec::new(),
         prune_rate,
         decode_prune_rate: 0.0,
     };
@@ -951,5 +1284,160 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn chunked_prefill_serving_matches_monolithic() {
+        // Chunk size is a scheduling knob only: generated tokens,
+        // next_token and mean_logprob are bit-identical to the monolithic
+        // (chunk = 0) path at every chunk size, for dense and packed
+        // weights, including a prefill-only request in the mix.
+        let dense = tiny().weights;
+        let mut packed = dense.clone();
+        packed.pack_experts_rtn(4, 16);
+        for weights in [dense, packed] {
+            let run = |chunk: usize| {
+                let e = Engine::new(
+                    Model::new(weights.clone()),
+                    EngineConfig { workers: 1, prefill_chunk: chunk, ..Default::default() },
+                );
+                let mut rs: Vec<Request> =
+                    reqs(6, 11).into_iter().map(|r| r.with_decode(5)).collect();
+                rs.push(Request::new(50, (0..9u32).map(|t| (t * 5 + 2) % 64).collect()));
+                let (mut out, _) = e.serve(rs);
+                out.sort_by_key(|r| r.id);
+                out.into_iter()
+                    .map(|r| (r.id, r.generated, r.next_token, r.mean_logprob))
+                    .collect::<Vec<_>>()
+            };
+            let base = run(0);
+            assert_eq!(base.len(), 7);
+            for chunk in [1usize, 3, 5, 11, 64] {
+                assert_eq!(run(chunk), base, "chunk={chunk} must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn expired_requests_shed_without_prefill() {
+        let e = Engine::new(tiny(), EngineConfig { workers: 1, ..Default::default() });
+        let mut rs: Vec<Request> = reqs(3, 12).into_iter().map(|r| r.with_decode(2)).collect();
+        let mut expired = Request::new(90, vec![1, 2, 3]).with_decode(4);
+        // A deadline equal to arrival has always already passed by the
+        // time a worker picks the request up.
+        expired.deadline = Some(expired.arrival);
+        rs.push(expired);
+        let (resps, metrics) = e.serve(rs);
+        assert_eq!(resps.len(), 4, "shed requests still get a response");
+        let shed = resps.iter().find(|r| r.id == 90).unwrap();
+        assert_eq!(shed.finish_reason, FinishReason::DeadlineExceeded);
+        assert!(shed.finish_reason.is_rejection());
+        assert!(shed.generated.is_empty());
+        assert_eq!(shed.ttft_secs, 0.0);
+        assert_eq!(shed.prefill_secs, 0.0);
+        // Never forwarded: no prompt tokens counted, no prefill or TTFT
+        // sample recorded — only the shed counter.
+        assert_eq!(metrics.prompt_tokens, 3 * 12);
+        assert_eq!(metrics.prefill.count(), 3);
+        assert_eq!(metrics.ttft.count(), 3);
+        assert_eq!(metrics.deadline_shed, 1);
+        for r in resps.iter().filter(|r| r.id < 90) {
+            assert_eq!(r.generated.len(), 2);
+        }
+    }
+
+    #[test]
+    fn streaming_events_match_blocking_response() {
+        let e = Engine::new(tiny(), EngineConfig { workers: 1, ..Default::default() });
+        let (sink, rx) = StreamSink::channel();
+        let req = Request::new(7, vec![1, 2, 3, 4]).with_decode(4).with_stream(sink);
+        let (resps, _) = e.serve(vec![req]);
+        let resp = &resps[0];
+        assert_eq!(resp.generated.len(), 4);
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 2 + resp.generated.len(), "Started + Tokens + Finished");
+        match &events[0] {
+            StreamEvent::Started { id, next_token, ttft_secs } => {
+                assert_eq!(*id, 7);
+                assert_eq!(*next_token, resp.next_token);
+                assert_eq!(*ttft_secs, resp.ttft_secs);
+            }
+            other => panic!("expected Started first, got {other:?}"),
+        }
+        let toks: Vec<(u32, usize)> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                StreamEvent::Token { token, index, .. } => Some((*token, *index)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks.iter().map(|&(t, _)| t).collect::<Vec<_>>(), resp.generated);
+        assert_eq!(
+            toks.iter().map(|&(_, i)| i).collect::<Vec<_>>(),
+            (0..resp.generated.len()).collect::<Vec<_>>()
+        );
+        match events.last().unwrap() {
+            StreamEvent::Finished(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.generated, resp.generated);
+                assert_eq!(r.finish_reason, resp.finish_reason);
+                assert_eq!(r.itl_secs, resp.itl_secs);
+            }
+            other => panic!("expected Finished last, got {other:?}"),
+        }
+
+        // A rejected request emits only Finished.
+        let (sink, rx) = StreamSink::channel();
+        let (resps, _) = e.serve(vec![Request::new(8, vec![]).with_stream(sink)]);
+        assert_eq!(resps[0].finish_reason, FinishReason::EmptyPrompt);
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1);
+        assert!(matches!(&events[0], StreamEvent::Finished(r) if r.id == 8));
+    }
+
+    #[test]
+    fn step_timing_shared_across_rows() {
+        // Satellite fix: one Instant per decode step, shared by every row
+        // — TTFT/ITL derive from those shared stamps, and decode_secs
+        // stays consistent with the summed step times.
+        let e = Engine::new(
+            tiny(),
+            EngineConfig {
+                workers: 1,
+                batch: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_millis(200),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let rs: Vec<Request> = reqs(4, 8).into_iter().map(|r| r.with_decode(6)).collect();
+        let (resps, metrics) = e.serve(rs);
+        for r in &resps {
+            assert_eq!(r.generated.len(), 6);
+            assert_eq!(r.itl_secs.len(), 5, "one gap per decode step");
+            assert!(r.ttft_secs > 0.0);
+            assert!(r.itl_secs.iter().all(|&g| g >= 0.0));
+            // The gaps cover at least the batched step compute this row
+            // took part in (they also absorb inter-step overhead).
+            let itl_sum: f64 = r.itl_secs.iter().sum();
+            assert!(
+                itl_sum >= r.decode_secs - 1e-9,
+                "itl sum {itl_sum} < decode_secs {}",
+                r.decode_secs
+            );
+        }
+        // Equal-length batch-mates share every step timestamp: gaps after
+        // the first (whose start is each row's own prefill completion)
+        // are bit-identical f64s, as is the summed step time.
+        let first = &resps[0];
+        for r in &resps[1..] {
+            assert_eq!(r.itl_secs[1..], first.itl_secs[1..]);
+            assert_eq!(r.decode_secs, first.decode_secs);
+        }
+        assert_eq!(metrics.itl.count(), 4 * 5);
+        assert_eq!(metrics.ttft.count(), 4);
+        assert!(metrics.summary().contains("ttft"));
     }
 }

@@ -1,11 +1,14 @@
-//! Serving engine (L3): request queue, continuous batcher, PESF-integrated
-//! prefill executor, and latency/throughput metrics.
+//! Serving engine (L3): request queue, SLO-aware continuous batcher,
+//! PESF-integrated prefill executor, streaming, and latency/throughput
+//! metrics.
 //!
 //! The engine owns the request lifecycle: requests enter a bounded queue,
-//! the batcher forms batches under a max-size/max-wait policy, worker
-//! threads run prefill (native or PJRT-backed), and PESF masks are derived
-//! per sequence before the MoE layers execute — so pruned experts never run,
-//! which is where the Table-3/4 speedups come from.
+//! the batcher forms batches under a max-size/max-wait policy — draining
+//! by priority, then deadline, round-robin across tenants — worker
+//! threads run prefill (monolithic, or chunked and interleaved with
+//! decode steps via [`EngineConfig::prefill_chunk`]), and PESF masks are
+//! derived per sequence before the MoE layers execute — so pruned experts
+//! never run, which is where the Table-3/4 speedups come from.
 //!
 //! Decode is served from the prefill's own KV export
 //! ([`crate::model::Model::prefill_into_cache`]): the prompt is forwarded
@@ -18,13 +21,25 @@
 //! ([`crate::prune::pesf::PesfDecodeState`]), so the advertised prune
 //! rate is paid out where serving spends its time — `ServeMetrics`
 //! reports the prefill- and decode-phase rates separately.
+//!
+//! The streaming/SLO surface: each [`Request`] may carry a priority, a
+//! deadline (expired requests are shed as
+//! [`FinishReason::DeadlineExceeded`] without running prefill), a tenant
+//! (fairness domain), and a [`StreamSink`] emitting
+//! [`StreamEvent`]s per token. TTFT and inter-token gaps derive from one
+//! shared `Instant` per decode step and aggregate into p50/p95/p99 in
+//! [`ServeMetrics`]. `workload` builds open-loop Poisson arrival
+//! schedules (or replays JSON traces) for
+//! [`Engine::serve_timed`].
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
+pub mod workload;
 
 pub use batcher::{Batcher, BatchPolicy};
 pub use engine::{Engine, EngineConfig, PrunePolicy};
 pub use metrics::{LatencyStats, ServeMetrics};
-pub use request::{FinishReason, Request, RequestId, Response};
+pub use request::{FinishReason, Request, RequestId, Response, StreamEvent, StreamSink};
+pub use workload::{LenDist, TimedRequest, WorkloadSpec};

@@ -1,6 +1,9 @@
-//! Request / response types for the serving engine.
+//! Request / response types for the serving engine, including the
+//! streaming event surface and SLO (priority/deadline/tenant) fields.
 
-use std::time::Instant;
+use std::fmt;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
 
 pub type RequestId = u64;
 
@@ -15,16 +18,121 @@ pub struct Request {
     /// the paper, whose Limitations disable PESF during generation).
     pub decode_tokens: usize,
     pub arrival: Instant,
+    /// Scheduling priority: higher drains first within a tenant. Ties
+    /// fall back to deadline, then strict arrival order, so the default
+    /// (0) preserves exact FIFO behavior.
+    pub priority: u8,
+    /// Optional SLO deadline. The batcher drains tighter deadlines first
+    /// at equal priority, and the engine sheds requests whose deadline
+    /// has already passed at admission time
+    /// ([`FinishReason::DeadlineExceeded`]) instead of burning prefill
+    /// compute on a response nobody is waiting for.
+    pub deadline: Option<Instant>,
+    /// Fairness domain. The batcher round-robins across tenants when
+    /// forming batches so one tenant's burst cannot starve the others.
+    pub tenant: u32,
+    /// Optional per-token event sink. When set, the engine emits
+    /// [`StreamEvent::Started`] when the first token commits (end of
+    /// prefill), [`StreamEvent::Token`] per decoded token, and
+    /// [`StreamEvent::Finished`] with the full [`Response`]. When unset,
+    /// the blocking [`crate::serve::Engine::serve`] path collects whole
+    /// responses exactly as before.
+    pub stream: Option<StreamSink>,
 }
 
 impl Request {
     pub fn new(id: RequestId, tokens: Vec<u32>) -> Self {
-        Request { id, tokens, decode_tokens: 0, arrival: Instant::now() }
+        Request {
+            id,
+            tokens,
+            decode_tokens: 0,
+            arrival: Instant::now(),
+            priority: 0,
+            deadline: None,
+            tenant: 0,
+            stream: None,
+        }
     }
 
     pub fn with_decode(mut self, n: usize) -> Self {
         self.decode_tokens = n;
         self
+    }
+
+    pub fn with_priority(mut self, p: u8) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Set the deadline `budget` after this request's arrival timestamp.
+    pub fn with_deadline_in(mut self, budget: Duration) -> Self {
+        self.deadline = Some(self.arrival + budget);
+        self
+    }
+
+    pub fn with_tenant(mut self, t: u32) -> Self {
+        self.tenant = t;
+        self
+    }
+
+    pub fn with_stream(mut self, sink: StreamSink) -> Self {
+        self.stream = Some(sink);
+        self
+    }
+
+    /// True when the request carries a deadline that has already passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
+}
+
+/// Per-token streaming events, in emission order per request:
+/// `Started` → zero or more `Token` → `Finished`. Rejected/shed requests
+/// emit only `Finished`.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// The request's first token committed (prefill completed). `ttft_secs`
+    /// is arrival → this event, measured at the shared step timestamp.
+    Started { id: RequestId, next_token: u32, ttft_secs: f64 },
+    /// One greedily decoded token. `index` counts from 0 within
+    /// `generated`.
+    Token { id: RequestId, token: u32, index: usize },
+    /// Terminal event carrying the complete response (also how rejected
+    /// or deadline-shed requests surface: no `Started`, empty
+    /// `generated`).
+    Finished(Box<Response>),
+}
+
+/// Cloneable handle the engine uses to emit [`StreamEvent`]s for one
+/// request. A dropped receiver is fine: sends become no-ops, the request
+/// still completes through the blocking path.
+#[derive(Clone)]
+pub struct StreamSink {
+    tx: Sender<StreamEvent>,
+}
+
+impl StreamSink {
+    pub fn new(tx: Sender<StreamEvent>) -> Self {
+        StreamSink { tx }
+    }
+
+    /// Build a connected sink/receiver pair.
+    pub fn channel() -> (StreamSink, Receiver<StreamEvent>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (StreamSink { tx }, rx)
+    }
+
+    /// Emit one event. Errors (receiver hung up) are deliberately
+    /// swallowed: a consumer that stopped listening must not take the
+    /// serving worker down.
+    pub fn send(&self, ev: StreamEvent) {
+        let _ = self.tx.send(ev);
+    }
+}
+
+impl fmt::Debug for StreamSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("StreamSink")
     }
 }
 
@@ -50,15 +158,22 @@ pub enum FinishReason {
     /// vocabulary (would index the embedding table out of bounds). Same
     /// immediate-finish semantics as `PromptTooLong`.
     InvalidToken,
+    /// Shed at admission: the request's SLO deadline had already passed
+    /// when a worker picked it up, so no prefill ran (load shedding —
+    /// compute goes to requests that can still meet their deadline).
+    DeadlineExceeded,
 }
 
 impl FinishReason {
-    /// True for requests rejected at admission (never forwarded: no
-    /// prefill ran, no tokens were processed).
+    /// True for requests rejected or shed at admission (never forwarded:
+    /// no prefill ran, no tokens were processed).
     pub fn is_rejection(self) -> bool {
         matches!(
             self,
-            FinishReason::PromptTooLong | FinishReason::EmptyPrompt | FinishReason::InvalidToken
+            FinishReason::PromptTooLong
+                | FinishReason::EmptyPrompt
+                | FinishReason::InvalidToken
+                | FinishReason::DeadlineExceeded
         )
     }
 }
@@ -82,12 +197,23 @@ pub struct Response {
     /// Prefill execution time, in seconds.
     pub prefill_secs: f64,
     /// Time this request spent in the batched decode loop, in seconds
-    /// (0 for prefill-only requests).
+    /// (0 for prefill-only requests). Consistent with the sum of this
+    /// request's `itl_secs` step gaps by construction: both derive from
+    /// the same one-`Instant`-per-step timestamps.
     pub decode_secs: f64,
     /// True arrival-to-completion wall time, in seconds. Not the sum of
     /// queue + prefill + decode: it also covers time spent waiting on
     /// batch-mates (their prefills and admissions) inside the worker.
     pub e2e_secs: f64,
+    /// Time-to-first-token: arrival → first committed token (the prefill
+    /// output `next_token` counts as the first token). 0 for rejected or
+    /// shed requests.
+    pub ttft_secs: f64,
+    /// Inter-token gaps between consecutive decoded tokens, one per gap
+    /// (`generated.len() - 1` samples when at least two tokens were
+    /// generated; empty otherwise). Rows of a batched step share a single
+    /// step timestamp, so equal-length batch-mates report identical gaps.
+    pub itl_secs: Vec<f64>,
     /// Fraction of experts pruned for this sequence during **prefill**
     /// (PESF mask rate, or the EES/ODP selection-drop rate; 0 if
     /// disabled).

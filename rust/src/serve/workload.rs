@@ -1,0 +1,316 @@
+//! Open-loop serving workloads: Poisson arrival schedules with mixed
+//! prompt/output-length distributions, plus JSON trace replay.
+//!
+//! An *open-loop* generator decides arrival times independently of the
+//! engine's progress (unlike a closed loop, where the next request waits
+//! for the previous response) — which is what exposes queueing delay and
+//! tail latency under bursts. [`generate`] draws inter-arrival gaps from
+//! an exponential distribution (a Poisson process) using the repo's own
+//! seeded [`Pcg64`], so a workload is fully reproducible from its
+//! [`WorkloadSpec`]. [`load_trace`]/[`from_trace`] replay an explicit
+//! schedule from a JSON file instead.
+//!
+//! The schedules feed [`crate::serve::Engine::serve_timed`], which
+//! re-stamps each request's `arrival` at its actual push time and applies
+//! the deadline budget relative to that arrival.
+
+use super::request::Request;
+use crate::tensor::rng::Pcg64;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+/// One scheduled arrival: push `req` at `at_secs` after the run starts.
+/// `deadline_budget` (if any) is applied relative to the actual push time
+/// by [`crate::serve::Engine::serve_timed`].
+#[derive(Clone, Debug)]
+pub struct TimedRequest {
+    pub at_secs: f64,
+    pub req: Request,
+    pub deadline_budget: Option<Duration>,
+}
+
+/// A discrete length distribution for prompt / decode budgets.
+#[derive(Clone, Copy, Debug)]
+pub enum LenDist {
+    /// Every request gets exactly this length.
+    Fixed(usize),
+    /// Uniform over `[lo, hi]` (inclusive).
+    Uniform { lo: usize, hi: usize },
+    /// Short/long mixture: `short` with probability `p_short`, else
+    /// `long`. The canonical chunked-prefill stressor — a few long
+    /// prompts interleaved with many short ones.
+    Bimodal { short: usize, long: usize, p_short: f64 },
+}
+
+impl LenDist {
+    fn sample(&self, rng: &mut Pcg64) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform { lo, hi } => {
+                let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+                let span = (hi - lo) as u64 + 1;
+                lo + rng.below(span) as usize
+            }
+            LenDist::Bimodal { short, long, p_short } => {
+                if rng.next_f64() < p_short {
+                    short
+                } else {
+                    long
+                }
+            }
+        }
+    }
+}
+
+/// Parameters of a synthetic open-loop workload. Prompts are uniform
+/// random token ids in `[0, vocab)` (this layer is below `data`, so no
+/// corpus text — serving latency does not care what the tokens say).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    /// Mean arrival rate (requests/second) of the Poisson process. A
+    /// non-positive or non-finite rate degenerates to "all at t = 0"
+    /// (a single maximal burst).
+    pub rate_per_sec: f64,
+    pub prompt_len: LenDist,
+    /// Decode budget per request (0 = prefill-only scoring).
+    pub decode_len: LenDist,
+    /// Number of fairness domains; requests are assigned round-robin
+    /// (request i → tenant i mod tenants).
+    pub tenants: u32,
+    /// Token-id range for synthetic prompts (use the served model's
+    /// vocab).
+    pub vocab: usize,
+    pub seed: u64,
+    /// SLO budget applied to every request (arrival → deadline), if any.
+    pub deadline_budget: Option<Duration>,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            n_requests: 32,
+            rate_per_sec: 50.0,
+            prompt_len: LenDist::Uniform { lo: 8, hi: 64 },
+            decode_len: LenDist::Fixed(8),
+            tenants: 1,
+            vocab: 64,
+            seed: 0,
+            deadline_budget: None,
+        }
+    }
+}
+
+/// Generate a reproducible open-loop arrival schedule: exponential
+/// inter-arrival gaps (Poisson process at `rate_per_sec`), lengths drawn
+/// per request from the spec's distributions, request ids `0..n`.
+pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
+    let mut rng = Pcg64::new(spec.seed, 17);
+    let vocab = spec.vocab.max(1) as u64;
+    let tenants = spec.tenants.max(1);
+    let open_loop = spec.rate_per_sec.is_finite() && spec.rate_per_sec > 0.0;
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for i in 0..spec.n_requests {
+        if open_loop {
+            // Exponential gap via inverse CDF; next_f64 < 1 keeps the
+            // log argument strictly positive.
+            t += -(1.0 - rng.next_f64()).ln() / spec.rate_per_sec;
+        }
+        let prompt_len = spec.prompt_len.sample(&mut rng).max(1);
+        let decode_len = spec.decode_len.sample(&mut rng);
+        let tokens: Vec<u32> = (0..prompt_len).map(|_| rng.below(vocab) as u32).collect();
+        let req = Request::new(i as u64, tokens)
+            .with_decode(decode_len)
+            .with_tenant(i as u32 % tenants);
+        out.push(TimedRequest { at_secs: t, req, deadline_budget: spec.deadline_budget });
+    }
+    out
+}
+
+/// Parse a trace document into an arrival schedule. Expected shape:
+///
+/// ```json
+/// { "requests": [ { "at_secs": 0.0, "tokens": [1, 2, 3],
+///                   "decode_tokens": 8, "tenant": 0, "priority": 0,
+///                   "deadline_ms": 50.0 }, ... ] }
+/// ```
+///
+/// `at_secs` and `tokens` are required per entry; the rest default to
+/// zero / none. Malformed documents surface as errors naming the entry,
+/// never a panic (this runs behind the `serve --workload` CLI).
+pub fn from_trace(doc: &Json) -> Result<Vec<TimedRequest>> {
+    let entries = doc.req_arr("requests")?;
+    let mut out = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let ctx = || format!("trace request #{i}");
+        let at_secs = e.req_f64("at_secs").with_context(ctx)?;
+        if !(at_secs.is_finite() && at_secs >= 0.0) {
+            return Err(anyhow!("trace request #{i}: at_secs {at_secs} must be finite and >= 0"));
+        }
+        let toks = e.req_arr("tokens").with_context(ctx)?;
+        let mut tokens = Vec::with_capacity(toks.len());
+        for t in toks {
+            let v = t
+                .as_f64()
+                .ok_or_else(|| anyhow!("trace request #{i}: non-numeric token"))?;
+            if !(v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v <= u32::MAX as f64) {
+                return Err(anyhow!("trace request #{i}: token {v} is not a u32"));
+            }
+            tokens.push(v as u32);
+        }
+        let decode_tokens = match e.get("decode_tokens") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("trace request #{i}: decode_tokens is not an integer"))?,
+            None => 0,
+        };
+        let tenant = match e.get("tenant") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("trace request #{i}: tenant is not an integer"))?
+                as u32,
+            None => 0,
+        };
+        let priority = match e.get("priority") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("trace request #{i}: priority is not an integer"))?
+                .min(u8::MAX as usize) as u8,
+            None => 0,
+        };
+        let deadline_budget = match e.get("deadline_ms") {
+            Some(v) => {
+                let ms = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("trace request #{i}: deadline_ms is not a number"))?;
+                if !(ms.is_finite() && ms >= 0.0) {
+                    return Err(anyhow!(
+                        "trace request #{i}: deadline_ms {ms} must be finite and >= 0"
+                    ));
+                }
+                Some(Duration::from_secs_f64(ms / 1e3))
+            }
+            None => None,
+        };
+        let req = Request::new(i as u64, tokens)
+            .with_decode(decode_tokens)
+            .with_tenant(tenant)
+            .with_priority(priority);
+        out.push(TimedRequest { at_secs, req, deadline_budget });
+    }
+    Ok(out)
+}
+
+/// Load and parse a trace file (see [`from_trace`] for the format).
+pub fn load_trace(path: &Path) -> Result<Vec<TimedRequest>> {
+    let doc = crate::util::json::load(path)?;
+    from_trace(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_is_deterministic_and_monotone() {
+        let spec = WorkloadSpec { n_requests: 200, rate_per_sec: 100.0, ..Default::default() };
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_secs, y.at_secs, "same seed must replay identically");
+            assert_eq!(x.req.tokens, y.req.tokens);
+            assert_eq!(x.req.decode_tokens, y.req.decode_tokens);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].at_secs <= w[1].at_secs, "arrivals must be non-decreasing");
+        }
+        // Mean inter-arrival ≈ 1/rate (loose statistical bound).
+        let mean_gap = a.last().map(|t| t.at_secs).unwrap_or(0.0) / 199.0;
+        assert!((mean_gap - 0.01).abs() < 0.004, "mean gap {mean_gap} !~ 0.01");
+        // Different seeds give different schedules.
+        let c = generate(&WorkloadSpec { seed: 9, ..spec });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_secs != y.at_secs));
+    }
+
+    #[test]
+    fn degenerate_rate_is_one_burst() {
+        let spec =
+            WorkloadSpec { n_requests: 10, rate_per_sec: 0.0, ..Default::default() };
+        assert!(generate(&spec).iter().all(|t| t.at_secs == 0.0));
+    }
+
+    #[test]
+    fn length_distributions_sample_in_range() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..200 {
+            assert_eq!(LenDist::Fixed(7).sample(&mut rng), 7);
+            let u = LenDist::Uniform { lo: 4, hi: 9 }.sample(&mut rng);
+            assert!((4..=9).contains(&u));
+            let b = LenDist::Bimodal { short: 2, long: 50, p_short: 0.8 }.sample(&mut rng);
+            assert!(b == 2 || b == 50);
+        }
+        // Reversed bounds are tolerated, not a panic.
+        let r = LenDist::Uniform { lo: 9, hi: 4 }.sample(&mut rng);
+        assert!((4..=9).contains(&r));
+    }
+
+    #[test]
+    fn workload_respects_vocab_tenants_and_deadline() {
+        let spec = WorkloadSpec {
+            n_requests: 24,
+            vocab: 16,
+            tenants: 3,
+            deadline_budget: Some(Duration::from_millis(40)),
+            prompt_len: LenDist::Bimodal { short: 4, long: 32, p_short: 0.75 },
+            ..Default::default()
+        };
+        let w = generate(&spec);
+        for (i, t) in w.iter().enumerate() {
+            assert_eq!(t.req.id, i as u64);
+            assert!(t.req.tokens.iter().all(|&tok| tok < 16));
+            assert_eq!(t.req.tenant, i as u32 % 3);
+            assert_eq!(t.deadline_budget, Some(Duration::from_millis(40)));
+        }
+        let shorts = w.iter().filter(|t| t.req.tokens.len() == 4).count();
+        let longs = w.iter().filter(|t| t.req.tokens.len() == 32).count();
+        assert_eq!(shorts + longs, 24, "bimodal lengths only");
+        assert!(shorts > longs, "p_short=0.75 must skew short");
+    }
+
+    #[test]
+    fn trace_replay_parses_fields_and_rejects_malformed() {
+        let doc = Json::parse(
+            r#"{"requests": [
+                {"at_secs": 0.0, "tokens": [1, 2, 3], "decode_tokens": 4,
+                 "tenant": 2, "priority": 1, "deadline_ms": 50},
+                {"at_secs": 0.25, "tokens": [5]}
+            ]}"#,
+        )
+        .unwrap();
+        let w = from_trace(&doc).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].req.tokens, vec![1, 2, 3]);
+        assert_eq!(w[0].req.decode_tokens, 4);
+        assert_eq!(w[0].req.tenant, 2);
+        assert_eq!(w[0].req.priority, 1);
+        assert_eq!(w[0].deadline_budget, Some(Duration::from_millis(50)));
+        assert_eq!(w[1].at_secs, 0.25);
+        assert_eq!(w[1].req.decode_tokens, 0);
+        assert_eq!(w[1].deadline_budget, None);
+
+        let missing = Json::parse(r#"{"requests": [{"at_secs": 0.0}]}"#).unwrap();
+        let err = format!("{:#}", from_trace(&missing).unwrap_err());
+        assert!(err.contains("#0"), "error must name the entry: {err}");
+        let bad_tok =
+            Json::parse(r#"{"requests": [{"at_secs": 0.0, "tokens": [1.5]}]}"#).unwrap();
+        assert!(from_trace(&bad_tok).is_err());
+        let neg =
+            Json::parse(r#"{"requests": [{"at_secs": -1, "tokens": [1]}]}"#).unwrap();
+        assert!(from_trace(&neg).is_err());
+        assert!(from_trace(&Json::obj()).is_err(), "missing requests array");
+    }
+}

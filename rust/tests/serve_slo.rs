@@ -1,0 +1,230 @@
+//! Integration: the streaming/SLO serving surface — the chunked-prefill
+//! bit-identity acceptance matrix (chunk size x compute-pool size x
+//! dense/packed weights), deadline shedding under a timed burst, and the
+//! end-to-end streaming event contract.
+//!
+//! The matrix here is the PR's acceptance pin: chunked prefill is a
+//! *scheduling* change, so every served token, next-token prediction and
+//! mean logprob must be bit-identical to the monolithic path at any chunk
+//! size, at every pool size, on dense and packed expert weights.
+
+use eac_moe::model::{Model, ModelConfig, Weights};
+use eac_moe::serve::workload::{self, LenDist, WorkloadSpec};
+use eac_moe::serve::{
+    BatchPolicy, Engine, EngineConfig, FinishReason, PrunePolicy, Request, StreamEvent,
+    StreamSink, TimedRequest,
+};
+use std::time::Duration;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "slo-itest".into(),
+        n_layers: 2,
+        d_model: 32,
+        d_ff: 16,
+        n_experts: 16,
+        top_k: 2,
+        n_shared: 0,
+        n_heads: 4,
+        vocab: 128,
+        max_seq: 256,
+    }
+}
+
+fn dense_weights() -> Weights {
+    Weights::init(&cfg(), 7)
+}
+
+fn packed_weights() -> Weights {
+    let mut w = dense_weights();
+    w.pack_experts_rtn(4, 16);
+    w
+}
+
+/// Mixed-length request set: short prompts landing behind long ones is
+/// exactly the shape chunked prefill reschedules.
+fn mixed_reqs() -> Vec<Request> {
+    let lens = [23usize, 5, 17, 3, 29, 11];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &len)| {
+            Request::new(
+                i as u64,
+                (0..len as u32).map(|t| (t * 13 + i as u32 * 7) % 128).collect(),
+            )
+            .with_decode([4usize, 0, 6, 3, 2, 5][i])
+        })
+        .collect()
+}
+
+fn serve_sorted(
+    weights: Weights,
+    threads: Option<usize>,
+    prefill_chunk: usize,
+) -> Vec<(u64, u32, Vec<u32>, u32)> {
+    let engine = Engine::new(
+        Model::new(weights),
+        EngineConfig {
+            batch: BatchPolicy {
+                max_batch: 3,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
+            workers: 1,
+            prune: PrunePolicy::None,
+            threads,
+            prefill_chunk,
+            ..Default::default()
+        },
+    );
+    let (mut resps, metrics) = engine.serve(mixed_reqs());
+    assert_eq!(resps.len(), 6);
+    assert_eq!(metrics.prompt_tokens, 23 + 5 + 17 + 3 + 29 + 11);
+    assert_eq!(metrics.generated_tokens, 4 + 6 + 3 + 2 + 5);
+    resps.sort_by_key(|r| r.id);
+    resps
+        .into_iter()
+        .map(|r| (r.id, r.next_token, r.generated, r.mean_logprob.to_bits()))
+        .collect()
+}
+
+#[test]
+fn chunked_prefill_bit_identical_across_chunk_pool_and_weight_format() {
+    // The acceptance matrix: for each weight format and pool size, the
+    // monolithic run (chunk 0) is the reference and every chunk size must
+    // reproduce it exactly — same tokens, same logprob bits.
+    for (fmt, weights) in [("dense", dense_weights()), ("packed", packed_weights())] {
+        for threads in [Some(1usize), Some(4)] {
+            let reference = serve_sorted(weights.clone(), threads, 0);
+            for chunk in [1usize, 3, 7, 64] {
+                let got = serve_sorted(weights.clone(), threads, chunk);
+                assert_eq!(
+                    got, reference,
+                    "{fmt} weights, threads={threads:?}, chunk={chunk}: \
+                     chunked prefill must be scheduling-only"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn timed_burst_sheds_expired_and_serves_the_rest() {
+    // An open-loop burst where half the requests carry an impossible
+    // deadline (0 ns budget — already expired when a worker picks them
+    // up): the engine must shed exactly those as DeadlineExceeded without
+    // prefilling them, serve everything else to completion, and conserve
+    // every request.
+    let engine = Engine::new(
+        Model::new(dense_weights()),
+        EngineConfig {
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
+            workers: 2,
+            ..Default::default()
+        },
+    );
+    let arrivals: Vec<TimedRequest> = (0..12u64)
+        .map(|i| TimedRequest {
+            at_secs: i as f64 * 1e-4,
+            req: Request::new(i, (0..16u32).map(|t| (t * 13 + i as u32 * 7) % 128).collect())
+                .with_decode(2),
+            deadline_budget: if i % 2 == 1 { Some(Duration::from_secs(0)) } else { None },
+        })
+        .collect();
+    let (resps, metrics) = engine.serve_timed(arrivals);
+    assert_eq!(resps.len(), 12, "every request answered exactly once");
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 12);
+    for r in &resps {
+        if r.id % 2 == 1 {
+            assert_eq!(r.finish_reason, FinishReason::DeadlineExceeded, "id {}", r.id);
+            assert!(r.generated.is_empty());
+            assert_eq!(r.ttft_secs, 0.0, "shed requests never reach a first token");
+        } else {
+            assert_eq!(r.finish_reason, FinishReason::Length, "id {}", r.id);
+            assert_eq!(r.generated.len(), 2);
+            assert!(r.ttft_secs > 0.0);
+        }
+    }
+    // Shed requests never prefill: only the 6 served prompts count.
+    assert_eq!(metrics.prompt_tokens, 6 * 16);
+    assert_eq!(metrics.deadline_shed, 6);
+    assert_eq!(metrics.ttft.count(), 6);
+}
+
+#[test]
+fn workload_burst_streams_every_request_in_order() {
+    // Generator -> timed engine -> streaming consumers, end to end: every
+    // request's event stream is Started -> Token* -> Finished, token
+    // events replay `generated` exactly, and the finish responses match
+    // the blocking return values.
+    let spec = WorkloadSpec {
+        n_requests: 8,
+        rate_per_sec: 2000.0,
+        prompt_len: LenDist::Bimodal { short: 4, long: 40, p_short: 0.5 },
+        decode_len: LenDist::Uniform { lo: 1, hi: 4 },
+        tenants: 2,
+        vocab: 128,
+        seed: 5,
+        deadline_budget: None,
+    };
+    let mut arrivals = workload::generate(&spec);
+    let mut receivers = Vec::new();
+    for t in &mut arrivals {
+        let (sink, rx) = StreamSink::channel();
+        t.req.stream = Some(sink);
+        receivers.push((t.req.id, rx));
+    }
+    let engine = Engine::new(
+        Model::new(dense_weights()),
+        EngineConfig {
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
+            workers: 1,
+            prefill_chunk: 8,
+            ..Default::default()
+        },
+    );
+    let (resps, _) = engine.serve_timed(arrivals);
+    assert_eq!(resps.len(), 8);
+    for (id, rx) in receivers {
+        let resp = resps.iter().find(|r| r.id == id).unwrap();
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 2 + resp.generated.len(), "id {id}");
+        match &events[0] {
+            StreamEvent::Started { id: sid, next_token, ttft_secs } => {
+                assert_eq!(*sid, id);
+                assert_eq!(*next_token, resp.next_token);
+                assert_eq!(*ttft_secs, resp.ttft_secs);
+            }
+            other => panic!("id {id}: first event {other:?}, want Started"),
+        }
+        for (i, ev) in events[1..events.len() - 1].iter().enumerate() {
+            match ev {
+                StreamEvent::Token { id: sid, token, index } => {
+                    assert_eq!(*sid, id);
+                    assert_eq!(*index, i);
+                    assert_eq!(*token, resp.generated[i], "id {id} token {i}");
+                }
+                other => panic!("id {id}: event {i} is {other:?}, want Token"),
+            }
+        }
+        match events.last().unwrap() {
+            StreamEvent::Finished(r) => {
+                assert_eq!(r.id, id);
+                assert_eq!(r.generated, resp.generated);
+                assert_eq!(r.finish_reason, resp.finish_reason);
+            }
+            other => panic!("id {id}: last event {other:?}, want Finished"),
+        }
+    }
+}

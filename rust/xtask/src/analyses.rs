@@ -7,7 +7,10 @@
 //!
 //! - `serve-no-panic` — seeded at `Engine::serve`, `decode_step_batch`,
 //!   the public `ExpertStore` surface, and every public fn under
-//!   `rust/src/serve/`; any *reachable* non-test function containing a
+//!   `rust/src/serve/` (which picks up new serve surface automatically:
+//!   `Engine::serve_timed`, the streaming `StreamSink` API, the
+//!   `workload` generator/trace-replay fns); any *reachable* non-test
+//!   function containing a
 //!   panic-family op (`panic!`/`todo!`/`unreachable!`/`unimplemented!`,
 //!   `.expect(…)`, non-poison `.unwrap()`) is flagged, with the call
 //!   chain that reaches it. This replaces the old path-prefix heuristic:
